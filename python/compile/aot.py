@@ -1,0 +1,222 @@
+"""AOT lowering: every L2 program -> HLO *text* + artifacts/manifest.json.
+
+HLO text (NOT ``lowered.compiler_ir("hlo")``-proto serialization) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids, which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``). The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/gen_hlo.py.
+
+Usage (normally via ``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts [--profile std16]
+        [--arch gcn] [--no-pallas] [--force]
+
+Lowering is incremental: a program is re-lowered only if its spec fingerprint
+changed or the HLO file is missing. The manifest records, per program, the
+positional input/output signatures the Rust runtime binds to.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import exact
+from .archs import Arch
+from .spec import ARCH_NAMES, PROFILES, Profile
+from .step import Spec, StepSpec, build_step
+
+_DTYPES = {"f32": "float32", "i32": "int32"}
+
+
+def _shape_structs(specs: List[Spec]):
+    import jax.numpy as jnp
+
+    out = []
+    for _, shape, dt in specs:
+        out.append(jax.ShapeDtypeStruct(shape, getattr(jnp, _DTYPES[dt])))
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(fn: Callable, in_specs: List[Spec]) -> str:
+    # keep_unused: the manifest promises a positional signature; without it
+    # XLA prunes inputs a given arch ignores (e.g. GCN's H0_t) and the Rust
+    # runtime's buffer count no longer matches.
+    lowered = jax.jit(fn, keep_unused=True).lower(*_shape_structs(in_specs))
+    return to_hlo_text(lowered)
+
+
+_SRC_HASH: Optional[str] = None
+
+
+def _source_hash() -> str:
+    """Hash of every module that shapes lowered HLO — kernels included, so a
+    kernel change invalidates *all* cached programs (not just ones whose
+    shapes moved)."""
+    global _SRC_HASH
+    if _SRC_HASH is None:
+        h = hashlib.sha256()
+        base = os.path.dirname(os.path.abspath(__file__))
+        for rel in ["archs.py", "step.py", "exact.py", "spec.py",
+                    "kernels/agg.py", "kernels/ref.py"]:
+            with open(os.path.join(base, rel), "rb") as f:
+                h.update(f.read())
+        _SRC_HASH = h.hexdigest()[:16]
+    return _SRC_HASH
+
+
+def _fingerprint(kind: str, in_specs: List[Spec], out_specs: List[Spec], extra: str) -> str:
+    blob = json.dumps(
+        [kind, in_specs, out_specs, extra, jax.__version__, _source_hash()]
+    ).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+class Emitter:
+    def __init__(self, out_dir: str, force: bool, use_pallas: bool):
+        self.out_dir = out_dir
+        self.force = force
+        self.use_pallas = use_pallas
+        self.programs: List[dict] = []
+        self.old: Dict[str, dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+        mpath = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(mpath) and not force:
+            try:
+                with open(mpath) as f:
+                    for p in json.load(f).get("programs", []):
+                        self.old[p["name"]] = p
+            except (json.JSONDecodeError, KeyError):
+                pass
+
+    def emit(self, name: str, kind: str, meta: dict,
+             fn: Callable, in_specs: List[Spec], out_specs: List[Spec]) -> None:
+        fname = f"{name}.hlo.txt"
+        fpath = os.path.join(self.out_dir, fname)
+        fp = _fingerprint(kind, in_specs, out_specs, json.dumps(meta, sort_keys=True) + str(self.use_pallas))
+        prev = self.old.get(name)
+        entry = {
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "fingerprint": fp,
+            "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in in_specs],
+            "outputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in out_specs],
+            **meta,
+        }
+        if prev is not None and prev.get("fingerprint") == fp and os.path.exists(fpath):
+            self.programs.append(entry)
+            print(f"  [cached] {name}")
+            return
+        t0 = time.time()
+        text = lower_program(fn, in_specs)
+        with open(fpath, "w") as f:
+            f.write(text)
+        self.programs.append(entry)
+        print(f"  [lower ] {name}  ({time.time() - t0:.1f}s, {len(text)//1024} KiB)")
+
+    def write_manifest(self, profiles: Dict[str, Profile]) -> None:
+        manifest = {
+            "version": 1,
+            "use_pallas": self.use_pallas,
+            "profiles": {
+                p.name: {
+                    "d_x": p.d_x, "n_class": p.n_class, "hidden": p.hidden,
+                    "gcn_layers": p.gcn_layers, "gcnii_layers": p.gcnii_layers,
+                    "step_buckets": [list(b) for b in p.step_buckets],
+                    "exact_bucket": list(p.exact_bucket),
+                }
+                for p in profiles.values()
+            },
+            "archs": {},
+            "programs": self.programs,
+        }
+        # Record canonical parameter orderings per (profile, arch).
+        for p in profiles.values():
+            for an in ARCH_NAMES:
+                arch = p.arch(an)
+                manifest["archs"][f"{p.name}/{an}"] = {
+                    "L": arch.L,
+                    "dims": arch.dims,
+                    "params": [{"name": n, "shape": list(s)} for n, s in arch.param_specs()],
+                    "head_params": arch.head_param_names(),
+                    "layer_params": {str(l): exact.layer_param_names(arch, l) for l in range(1, arch.L + 1)},
+                }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"manifest: {len(self.programs)} programs")
+
+
+def emit_profile(em: Emitter, profile: Profile, arch_names) -> None:
+    for an in arch_names:
+        arch: Arch = profile.arch(an)
+        base = {"profile": profile.name, "arch": an}
+        # --- train steps, one per bucket --------------------------------
+        for (B, H) in profile.step_buckets:
+            sspec = StepSpec(arch=arch, B=B, H=H, use_pallas=em.use_pallas)
+            fn, ins, outs = build_step(sspec)
+            em.emit(f"{profile.name}_{sspec.name}", "train_step",
+                    {**base, "B": B, "H": H}, fn, ins, outs)
+        # --- exact tile programs ----------------------------------------
+        Bt, Ht = profile.exact_bucket
+        for l in range(1, arch.L + 1):
+            fn, ins, outs = exact.build_fwd_layer(arch, l, Bt, Ht, em.use_pallas)
+            em.emit(f"{profile.name}_fwd_{an}_l{l}", "fwd_layer",
+                    {**base, "layer": l, "B": Bt, "H": Ht}, fn, ins, outs)
+            fn, ins, outs = exact.build_bwd_layer(arch, l, Bt, Ht, em.use_pallas)
+            em.emit(f"{profile.name}_bwd_{an}_l{l}", "bwd_layer",
+                    {**base, "layer": l, "B": Bt, "H": Ht}, fn, ins, outs)
+        fn, ins, outs = exact.build_loss_grad(arch, Bt)
+        em.emit(f"{profile.name}_loss_{an}", "loss_grad",
+                {**base, "B": Bt}, fn, ins, outs)
+        if an == "gcnii":
+            fn, ins, outs = exact.build_embed0(arch, Bt)
+            em.emit(f"{profile.name}_embed0_{an}", "embed0",
+                    {**base, "B": Bt}, fn, ins, outs)
+            fn, ins, outs = exact.build_embed0_bwd(arch, Bt)
+            em.emit(f"{profile.name}_embed0bwd_{an}", "embed0_bwd",
+                    {**base, "B": Bt}, fn, ins, outs)
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profile", action="append", default=None,
+                    help="limit to profile(s); default all")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="limit to arch(es); default all")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the jnp reference kernels (debug only)")
+    ap.add_argument("--force", action="store_true", help="ignore fingerprint cache")
+    args = ap.parse_args(argv)
+
+    profiles = {k: v for k, v in PROFILES.items()
+                if args.profile is None or k in args.profile}
+    arch_names = args.arch or list(ARCH_NAMES)
+    em = Emitter(args.out, force=args.force, use_pallas=not args.no_pallas)
+    t0 = time.time()
+    for p in profiles.values():
+        print(f"profile {p.name}:")
+        emit_profile(em, p, arch_names)
+    em.write_manifest(PROFILES)
+    print(f"done in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

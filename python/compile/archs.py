@@ -1,0 +1,171 @@
+"""L2 architectures: GCN (Kipf & Welling 2017) and GCNII (Chen et al. 2020).
+
+Both are expressed in the paper's aggregate-and-update form (Eq. 2) so the LMC
+step builder (:mod:`.step`) can drive forward compensation (Eqs. 8-10) and the
+backward message-passing compensation (Eqs. 11-13) generically:
+
+  - ``embed0(params, X)``   — the per-node, neighbor-free layer-0 embedding
+    (identity for GCN; ``relu(X @ W0 + b0)`` for GCNII). Exact for halo nodes.
+  - ``layer(params, l, agg, h_prev, h0)`` — the update function
+    ``u_theta(h_prev, m, x)`` where ``agg`` is the GCN-normalized message
+    (self-loop folded into the adjacency diagonal).
+  - ``logits(params, h)``   — the output head ``ell_w`` (identity for GCN, an
+    affine classifier for GCNII; its params are the paper's ``w``).
+
+Parameters are a flat ``{name: array}`` dict with a canonical ordering
+(:meth:`Arch.param_names`) that the AOT manifest records so the Rust runtime
+can build inputs positionally.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[1]
+    scale = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+@dataclass(frozen=True)
+class Arch:
+    """Static description + callables for one GNN architecture."""
+
+    name: str
+    L: int                       # number of message passing layers
+    dims: List[int]              # layer output dims, index 0 = embed0 output
+    d_x: int                     # raw feature dim
+    n_class: int
+    hyper: Dict[str, float] = field(default_factory=dict)
+
+    # --- canonical parameter ordering -------------------------------------
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        raise NotImplementedError
+
+    def param_names(self) -> List[str]:
+        return [n for n, _ in self.param_specs()]
+
+    def init_params(self, key) -> Params:
+        raise NotImplementedError
+
+    # --- model pieces ------------------------------------------------------
+    def embed0(self, params: Params, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def layer(self, params: Params, l: int, agg: jax.Array, h_prev: jax.Array, h0: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def logits(self, params: Params, h: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def head_param_names(self) -> List[str]:
+        """Names of the output-head parameters (the paper's ``w``)."""
+        return []
+
+
+class GCN(Arch):
+    """Plain GCN: ``H^l = relu(Ahat H^{l-1} W^l + b^l)``, last layer linear.
+
+    ``dims`` = [d_x, hidden, ..., n_class]; embed0 is the identity.
+    """
+
+    def __init__(self, L: int, d_x: int, hidden: int, n_class: int):
+        dims = [d_x] + [hidden] * (L - 1) + [n_class]
+        super().__init__(name="gcn", L=L, dims=dims, d_x=d_x, n_class=n_class)
+
+    def param_specs(self):
+        specs = []
+        for l in range(1, self.L + 1):
+            specs.append((f"W{l}", (self.dims[l - 1], self.dims[l])))
+            specs.append((f"b{l}", (self.dims[l],)))
+        return specs
+
+    def init_params(self, key) -> Params:
+        params: Params = {}
+        keys = jax.random.split(key, self.L)
+        for l in range(1, self.L + 1):
+            params[f"W{l}"] = _glorot(keys[l - 1], (self.dims[l - 1], self.dims[l]))
+            params[f"b{l}"] = jnp.zeros((self.dims[l],), jnp.float32)
+        return params
+
+    def embed0(self, params, x):
+        return x
+
+    def layer(self, params, l, agg, h_prev, h0):
+        z = agg @ params[f"W{l}"] + params[f"b{l}"]
+        return z if l == self.L else jax.nn.relu(z)
+
+    def logits(self, params, h):
+        return h
+
+
+class GCNII(Arch):
+    """GCNII: initial residual + identity mapping (Chen et al. 2020).
+
+    ``h0 = relu(X @ W0 + b0)``;
+    ``s  = (1-alpha) * Ahat H^{l-1} + alpha * h0``;
+    ``H^l = relu((1-gamma_l) * s + gamma_l * s @ W^l)``, gamma_l = log(lam/l+1);
+    logits = ``H^L @ Wc + bc`` (the paper's output params ``w``).
+    """
+
+    def __init__(self, L: int, d_x: int, hidden: int, n_class: int,
+                 alpha: float = 0.1, lam: float = 0.5):
+        dims = [hidden] * (L + 1)
+        super().__init__(name="gcnii", L=L, dims=dims, d_x=d_x, n_class=n_class,
+                         hyper={"alpha": alpha, "lam": lam})
+
+    def param_specs(self):
+        d = self.dims[0]
+        specs = [("W0", (self.d_x, d)), ("b0", (d,))]
+        for l in range(1, self.L + 1):
+            specs.append((f"W{l}", (d, d)))
+        specs += [("Wc", (d, self.n_class)), ("bc", (self.n_class,))]
+        return specs
+
+    def head_param_names(self):
+        return ["Wc", "bc"]
+
+    def init_params(self, key) -> Params:
+        d = self.dims[0]
+        keys = jax.random.split(key, self.L + 2)
+        params: Params = {
+            "W0": _glorot(keys[0], (self.d_x, d)),
+            "b0": jnp.zeros((d,), jnp.float32),
+        }
+        for l in range(1, self.L + 1):
+            params[f"W{l}"] = _glorot(keys[l], (d, d))
+        params["Wc"] = _glorot(keys[-1], (d, self.n_class))
+        params["bc"] = jnp.zeros((self.n_class,), jnp.float32)
+        return params
+
+    def embed0(self, params, x):
+        return jax.nn.relu(x @ params["W0"] + params["b0"])
+
+    def gamma(self, l: int) -> float:
+        return math.log(self.hyper["lam"] / l + 1.0)
+
+    def layer(self, params, l, agg, h_prev, h0):
+        alpha = self.hyper["alpha"]
+        s = (1.0 - alpha) * agg + alpha * h0
+        g = self.gamma(l)
+        z = (1.0 - g) * s + g * (s @ params[f"W{l}"])
+        return jax.nn.relu(z)
+
+    def logits(self, params, h):
+        return h @ params["Wc"] + params["bc"]
+
+
+def make_arch(name: str, L: int, d_x: int, hidden: int, n_class: int, **hyper) -> Arch:
+    if name == "gcn":
+        return GCN(L=L, d_x=d_x, hidden=hidden, n_class=n_class)
+    if name == "gcnii":
+        return GCNII(L=L, d_x=d_x, hidden=hidden, n_class=n_class, **hyper)
+    raise ValueError(f"unknown arch {name!r}")

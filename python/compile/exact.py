@@ -1,0 +1,172 @@
+"""L2: exact layer-wise tile programs (no histories, no compensation).
+
+These implement full-graph computation tile-by-tile with *exact* halo values,
+which is simultaneously:
+
+  - the exact inference path used for evaluation (test/val accuracy),
+  - the full-batch gradient oracle (backward SGD over *all* tiles sums to the
+    full-batch gradient — paper Theorem 1 with V_B = V), used by the GD
+    baseline and by the gradient-error experiment (paper Fig. 3),
+  - the exact auxiliary-variable oracle (V^l for every node).
+
+Programs (per arch, per layer where applicable), all over a (B, H) tile
+bucket where B indexes tile rows and H their exact 1-hop halo:
+
+  embed0       (GCNII only)  X_t -> h0_t
+  fwd_layer_l  A_bb, A_bh, Hprev_t, Hprev_h, H0_t, params_l -> H_t
+  loss_grad    HL_t, y, mask, vscale, head_params
+                 -> loss_sum, correct, V_t [, g_head...]
+  bwd_layer_l  A_bb, A_bh, Hprev_t, Hprev_h, H0_t, V_t, params_l
+                 -> g_params_l..., Vprev_t, Vprev_h, Ch0_t
+               (Vprev_h and the per-tile grads are *contributions*; the Rust
+               coordinator scatter-adds them across tiles — each node's update
+               appears in exactly one tile, so the sums are exact.)
+  embed0_bwd   (GCNII only)  X_t, C_t -> gW0, gb0 contributions
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .archs import Arch, GCNII
+from .kernels import agg as k_agg
+from .kernels import ref as k_ref
+from .step import Spec, masked_ce, masked_correct
+
+
+def _agg_fn(use_pallas: bool):
+    return k_agg if use_pallas else k_ref.agg_ref
+
+
+def layer_param_names(arch: Arch, l: int) -> List[str]:
+    """Parameters used by MP layer ``l`` (the paper's theta^l)."""
+    if arch.name == "gcn":
+        return [f"W{l}", f"b{l}"]
+    if arch.name == "gcnii":
+        return [f"W{l}"]
+    raise ValueError(arch.name)
+
+
+def build_embed0(arch: Arch, B: int) -> Tuple[Callable, List[Spec], List[Spec]]:
+    assert isinstance(arch, GCNII)
+    in_specs: List[Spec] = [("X_t", (B, arch.d_x), "f32"), ("W0", (arch.d_x, arch.dims[0]), "f32"), ("b0", (arch.dims[0],), "f32")]
+    out_specs: List[Spec] = [("h0_t", (B, arch.dims[0]), "f32")]
+
+    def fn(X_t, W0, b0):
+        return (arch.embed0({"W0": W0, "b0": b0}, X_t),)
+
+    return fn, in_specs, out_specs
+
+
+def build_embed0_bwd(arch: Arch, B: int) -> Tuple[Callable, List[Spec], List[Spec]]:
+    assert isinstance(arch, GCNII)
+    d0 = arch.dims[0]
+    in_specs: List[Spec] = [
+        ("X_t", (B, arch.d_x), "f32"),
+        ("C_t", (B, d0), "f32"),
+        ("W0", (arch.d_x, d0), "f32"),
+        ("b0", (d0,), "f32"),
+    ]
+    out_specs: List[Spec] = [("gW0", (arch.d_x, d0), "f32"), ("gb0", (d0,), "f32")]
+
+    def fn(X_t, C_t, W0, b0):
+        def E(w0, b0_):
+            return arch.embed0({"W0": w0, "b0": b0_}, X_t)
+
+        _, e_vjp = jax.vjp(E, W0, b0)
+        gw0, gb0 = e_vjp(C_t)
+        return gw0, gb0
+
+    return fn, in_specs, out_specs
+
+
+def build_fwd_layer(arch: Arch, l: int, B: int, H: int, use_pallas: bool = True) -> Tuple[Callable, List[Spec], List[Spec]]:
+    agg_fn = _agg_fn(use_pallas)
+    d_prev, d_l, d0 = arch.dims[l - 1], arch.dims[l], arch.dims[0]
+    pnames = layer_param_names(arch, l)
+    pspecs = dict(arch.param_specs())
+    in_specs: List[Spec] = [
+        ("A_bb", (B, B), "f32"),
+        ("A_bh", (B, H), "f32"),
+        ("Hprev_t", (B, d_prev), "f32"),
+        ("Hprev_h", (H, d_prev), "f32"),
+        ("H0_t", (B, d0), "f32"),
+    ] + [(n, tuple(pspecs[n]), "f32") for n in pnames]
+    out_specs: List[Spec] = [("H_t", (B, d_l), "f32")]
+
+    def fn(A_bb, A_bh, Hprev_t, Hprev_h, H0_t, *pvals):
+        params = dict(zip(pnames, pvals))
+        a = agg_fn(A_bb, A_bh, Hprev_t, Hprev_h)
+        return (arch.layer(params, l, a, Hprev_t, H0_t),)
+
+    return fn, in_specs, out_specs
+
+
+def build_loss_grad(arch: Arch, B: int) -> Tuple[Callable, List[Spec], List[Spec]]:
+    dL = arch.dims[arch.L]
+    head = arch.head_param_names()
+    pspecs = dict(arch.param_specs())
+    in_specs: List[Spec] = [
+        ("HL_t", (B, dL), "f32"),
+        ("y_t", (B,), "i32"),
+        ("mask_t", (B,), "f32"),
+        ("vscale", (), "f32"),
+    ] + [(n, tuple(pspecs[n]), "f32") for n in head]
+    out_specs: List[Spec] = [
+        ("loss_sum", (), "f32"),
+        ("correct", (), "f32"),
+        ("V_t", (B, dL), "f32"),
+        ("logits_t", (B, arch.n_class), "f32"),
+    ] + [(f"g_{n}", tuple(pspecs[n]), "f32") for n in head]
+
+    def fn(HL_t, y_t, mask_t, vscale, *head_vals):
+        params = dict(zip(head, head_vals))
+
+        def f(p, h):
+            return masked_ce(arch.logits(p, h), y_t, mask_t)
+
+        loss_sum, f_vjp = jax.vjp(f, params, HL_t)
+        g_head, V_raw = f_vjp(jnp.float32(1.0))
+        logits = arch.logits(params, HL_t)
+        outs = [loss_sum, masked_correct(logits, y_t, mask_t), vscale * V_raw, logits]
+        outs += [vscale * g_head[n] for n in head]
+        return tuple(outs)
+
+    return fn, in_specs, out_specs
+
+
+def build_bwd_layer(arch: Arch, l: int, B: int, H: int, use_pallas: bool = True) -> Tuple[Callable, List[Spec], List[Spec]]:
+    agg_fn = _agg_fn(use_pallas)
+    d_prev, d_l, d0 = arch.dims[l - 1], arch.dims[l], arch.dims[0]
+    pnames = layer_param_names(arch, l)
+    pspecs = dict(arch.param_specs())
+    in_specs: List[Spec] = [
+        ("A_bb", (B, B), "f32"),
+        ("A_bh", (B, H), "f32"),
+        ("Hprev_t", (B, d_prev), "f32"),
+        ("Hprev_h", (H, d_prev), "f32"),
+        ("H0_t", (B, d0), "f32"),
+        ("V_t", (B, d_l), "f32"),
+    ] + [(n, tuple(pspecs[n]), "f32") for n in pnames]
+    out_specs: List[Spec] = [(f"g_{n}", tuple(pspecs[n]), "f32") for n in pnames] + [
+        ("Vprev_t", (B, d_prev), "f32"),
+        ("Vprev_h", (H, d_prev), "f32"),
+        ("Ch0_t", (B, d0), "f32"),
+    ]
+
+    def fn(A_bb, A_bh, Hprev_t, Hprev_h, H0_t, V_t, *pvals):
+        params = dict(zip(pnames, pvals))
+
+        def F(p, xt, xh, h0t):
+            a = agg_fn(A_bb, A_bh, xt, xh)
+            return arch.layer(p, l, a, xt, h0t)
+
+        _, f_vjp = jax.vjp(F, params, Hprev_t, Hprev_h, H0_t)
+        gp, vt, vh, ch0 = f_vjp(V_t)
+        outs = [gp[n] for n in pnames] + [vt, vh, ch0]
+        return tuple(outs)
+
+    return fn, in_specs, out_specs

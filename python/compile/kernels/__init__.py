@@ -1,0 +1,5 @@
+"""L1: Pallas kernels for the paper compute hot-spot (halo aggregation +
+compensation combine), with pure-jnp oracles in :mod:`.ref`."""
+
+from . import ref  # noqa: F401
+from .agg import agg, combine, pallas_matmul  # noqa: F401

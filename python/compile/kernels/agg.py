@@ -1,0 +1,162 @@
+"""L1 Pallas kernels: blocked halo aggregation and compensation combine.
+
+The paper's compute hot-spot is sparse neighborhood aggregation (PyG scatter on
+CUDA). Per DESIGN.md §6 we rethink it for TPU: the sampler densifies each
+mini-batch subgraph into normalized adjacency blocks, so aggregation becomes a
+blocked matmul feeding the MXU. `BlockSpec` expresses the HBM->VMEM schedule
+that the paper expressed with threadblocks.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU the same BlockSpecs drive the VMEM tiling.
+
+Kernels:
+  - :func:`pallas_matmul` — tiled ``A @ H`` with output-block accumulation over
+    the K grid axis (f32 accumulate via ``preferred_element_type``).
+  - :func:`agg` — ``A_bb @ H_b + A_bh @ H_h`` as one fused blocked matmul over
+    the concatenated K dimension, wrapped in a ``custom_vjp`` whose backward is
+    itself the Pallas kernel (``A^T @ g``), so both forward and backward
+    message passing (paper Eqs. 2 and 5) route through the kernel.
+  - :func:`combine` — the convex-combination compensation, paper Eqs. (9)/(12):
+    ``(1-beta) * hist + beta * fresh`` fused elementwise in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes: large M/N panels, K unblocked.
+#
+# PERF (EXPERIMENTS.md §Perf, L1): the interpret-mode grid is lowered to an
+# XLA scan whose per-step dynamic slice/update costs ~100-200ms on CPU; a
+# 3-D (i, j, k) grid of 128^3 tiles made one train_step ~67x slower than the
+# jnp reference. With full-K panels and large M/N blocks the grid collapses
+# to a handful of steps and the overhead disappears, while the BlockSpec
+# still expresses the HBM->VMEM M/N panel schedule. Interpret-mode profiling
+# (EXPERIMENTS.md §Perf) measured ~25-30ms of fixed cost *per grid step* on
+# this CPU substrate, so the defaults below cover every shipped shape bucket
+# with a single-step grid. A real-TPU build would set bm=bn=128 with a
+# bk=512 K axis + VMEM accumulator (the schedule DESIGN.md §6 costs out);
+# both are the same kernel under different block constants.
+DEFAULT_BM = 4096
+DEFAULT_BN = 4096
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One (i, j) grid step: an (bm, K) @ (K, bn) panel product (f32 acc)."""
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def pallas_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """Blocked ``a @ b`` via Pallas. Pads M/N up to the block grid."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"pallas_matmul shape mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, 0))) if mp != m else a
+    b_p = jnp.pad(b, ((0, 0), (0, np_ - n))) if np_ != n else b
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def _agg_cv(a: jax.Array, h: jax.Array) -> jax.Array:
+    return pallas_matmul(a, h)
+
+
+def _agg_fwd(a, h):
+    return pallas_matmul(a, h), a
+
+
+def _agg_bwd(a, g):
+    # Adjacency blocks are data, not parameters: their cotangent is never
+    # consumed by the step program (vjp closes over A), so return a symbolic
+    # zero that XLA DCEs. The embedding cotangent is the paper's backward
+    # message passing (Eq. 5): A^T @ g — again through the Pallas kernel.
+    return jnp.zeros_like(a), pallas_matmul(a.T, g)
+
+
+_agg_cv.defvjp(_agg_fwd, _agg_bwd)
+
+
+def agg2(a: jax.Array, h: jax.Array) -> jax.Array:
+    """Single-block aggregation ``a @ h`` through the Pallas kernel with the
+    message-passing custom VJP (used by the stacked-space train step)."""
+    return _agg_cv(a, h)
+
+
+def agg(a_self: jax.Array, a_halo: jax.Array, h_self: jax.Array, h_halo: jax.Array) -> jax.Array:
+    """Halo aggregation ``a_self @ h_self + a_halo @ h_halo`` (paper Eq. 8/10).
+
+    The two blocks are concatenated along K so the whole aggregation is one
+    blocked-matmul sweep (one HBM->VMEM pass over the adjacency row panel).
+    """
+    a = jnp.concatenate([a_self, a_halo], axis=1)
+    h = jnp.concatenate([h_self, h_halo], axis=0)
+    return _agg_cv(a, h)
+
+
+def _combine_kernel(beta_ref, hist_ref, fresh_ref, o_ref):
+    b = beta_ref[...]  # (bm, 1) broadcast over the feature axis
+    o_ref[...] = (1.0 - b) * hist_ref[...] + b * fresh_ref[...]
+
+
+def combine(beta: jax.Array, hist: jax.Array, fresh: jax.Array, *, bm: int = 4096) -> jax.Array:
+    """Per-node convex combination, paper Eqs. (9) and (12).
+
+    ``beta`` is a per-node coefficient vector [n]; hist/fresh are [n, d].
+    Fused elementwise in VMEM so history fetch -> compensation costs a single
+    HBM round trip.
+    """
+    if hist.shape != fresh.shape:
+        raise ValueError(f"combine shape mismatch: {hist.shape} vs {fresh.shape}")
+    n, d = hist.shape
+    if beta.shape != (n,):
+        raise ValueError(f"combine beta shape {beta.shape} != ({n},)")
+    bm = min(bm, _ceil_to(max(n, 1), 8))
+    npad = _ceil_to(max(n, 1), bm)
+    b2 = beta.astype(hist.dtype).reshape(n, 1)
+    if npad != n:
+        b2 = jnp.pad(b2, ((0, npad - n), (0, 0)))
+        hist = jnp.pad(hist, ((0, npad - n), (0, 0)))
+        fresh = jnp.pad(fresh, ((0, npad - n), (0, 0)))
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(npad // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, d), hist.dtype),
+        interpret=True,
+    )(b2, hist, fresh)
+    return out[:n]

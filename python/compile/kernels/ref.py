@@ -1,0 +1,31 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground-truth definitions the kernels are tested against
+(python/tests/test_kernel.py) and double as the ``use_pallas=False`` lowering
+path used when debugging HLO output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def agg2_ref(a: jax.Array, h: jax.Array) -> jax.Array:
+    """Reference single-block aggregation."""
+    return matmul_ref(a, h)
+
+
+def agg_ref(a_self: jax.Array, a_halo: jax.Array, h_self: jax.Array, h_halo: jax.Array) -> jax.Array:
+    """Reference halo aggregation: ``A_bb @ H_b + A_bh @ H_h`` (paper Eq. 8)."""
+    return matmul_ref(a_self, h_self) + matmul_ref(a_halo, h_halo)
+
+
+def combine_ref(beta: jax.Array, hist: jax.Array, fresh: jax.Array) -> jax.Array:
+    """Reference convex combination (paper Eqs. 9/12)."""
+    b = beta.astype(hist.dtype)[:, None]
+    return (1.0 - b) * hist + b * fresh

@@ -1,0 +1,21 @@
+"""L2 model package entry point.
+
+The actual model code lives in:
+  - :mod:`compile.archs`  — GCN / GCNII in aggregate-and-update form,
+  - :mod:`compile.step`   — the fused LMC train-step (fwd+bwd compensation),
+  - :mod:`compile.exact`  — exact layer-wise tile programs (eval / GD oracle).
+
+This module re-exports the builders so ``compile.model`` is the one import
+surface for tests and :mod:`compile.aot`.
+"""
+
+from .archs import GCN, GCNII, Arch, make_arch  # noqa: F401
+from .exact import (  # noqa: F401
+    build_bwd_layer,
+    build_embed0,
+    build_embed0_bwd,
+    build_fwd_layer,
+    build_loss_grad,
+    layer_param_names,
+)
+from .step import StepSpec, build_step, masked_ce, masked_correct  # noqa: F401

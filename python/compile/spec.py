@@ -1,0 +1,77 @@
+"""Artifact specification: dataset profiles, shape buckets, arch hyperparams.
+
+A *profile* fixes the tensor dimensions every compiled program for a dataset
+family shares (feature dim, class count, hidden width, depth). The Rust side
+maps each dataset to a profile (rust/src/graph/datasets.rs must agree with
+this file; the manifest is the source of truth at runtime).
+
+Buckets are (B, H) padded shapes: B = in-batch rows, H = halo rows. The
+sampler picks the smallest bucket that fits and pads with zero rows/cols
+(zero adjacency columns, beta = 0, mask = 0 — padded entries are exactly
+inert, see python/tests/test_step.py::test_padding_inert).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from .archs import Arch, make_arch
+
+
+@dataclass(frozen=True)
+class Profile:
+    name: str
+    d_x: int
+    n_class: int
+    hidden: int
+    gcn_layers: int
+    gcnii_layers: int
+    step_buckets: Tuple[Tuple[int, int], ...]
+    exact_bucket: Tuple[int, int]
+    gcnii_alpha: float = 0.1
+    gcnii_lam: float = 0.5
+
+    def arch(self, name: str) -> Arch:
+        if name == "gcn":
+            return make_arch("gcn", L=self.gcn_layers, d_x=self.d_x,
+                             hidden=self.hidden, n_class=self.n_class)
+        if name == "gcnii":
+            return make_arch("gcnii", L=self.gcnii_layers, d_x=self.d_x,
+                             hidden=self.hidden, n_class=self.n_class,
+                             alpha=self.gcnii_alpha, lam=self.gcnii_lam)
+        raise ValueError(name)
+
+
+PROFILES: Dict[str, Profile] = {
+    # arxiv-sim & reddit-sim (16 classes, 64-dim features)
+    "std16": Profile(
+        name="std16", d_x=64, n_class=16, hidden=64,
+        gcn_layers=3, gcnii_layers=4,
+        step_buckets=((192, 1024), (320, 1536), (768, 1792), (1408, 1792)),
+        exact_bucket=(256, 1792),
+    ),
+    # flickr-sim (7 classes)
+    "flickr": Profile(
+        name="flickr", d_x=64, n_class=7, hidden=64,
+        gcn_layers=3, gcnii_layers=4,
+        step_buckets=((160, 768), (320, 1024)),
+        exact_bucket=(256, 1024),
+    ),
+    # ppi-sim (12 classes, 48-dim features, multi-graph inductive)
+    "ppi": Profile(
+        name="ppi", d_x=48, n_class=12, hidden=64,
+        gcn_layers=3, gcnii_layers=4,
+        step_buckets=((160, 640), (320, 896)),
+        exact_bucket=(160, 640),
+    ),
+    # cora/citeseer/pubmed-sim (7 classes, 48-dim features)
+    "planetoid": Profile(
+        name="planetoid", d_x=48, n_class=7, hidden=64,
+        gcn_layers=3, gcnii_layers=4,
+        step_buckets=((256, 768), (640, 1024)),
+        exact_bucket=(256, 1024),
+    ),
+}
+
+ARCH_NAMES = ("gcn", "gcnii")

@@ -1,0 +1,244 @@
+"""L2: the fused LMC train-step program (forward + backward compensation).
+
+One compiled ``train_step`` covers LMC / GAS / FM / CLUSTER-GCN via runtime
+scalars (DESIGN.md §1):
+
+  - ``beta``       [H]  per-halo-node convex combination coefficient (Eq. 9/12);
+                        0 => pure historical values (GAS/FM/CLUSTER).
+  - ``bwd_scale``  []   1 => backward compensation C_b on (Eqs. 11-13, LMC);
+                        0 => halo auxiliary variables discarded (GAS/CLUSTER).
+  - ``vscale``     []   1/|V_L| — folds the full-loss normalization into V^L.
+  - ``grad_scale`` []   b/c — the cluster-sampling reweighting (Eqs. 14-15).
+
+Faithfulness to the paper:
+
+  * Forward: Eq. (8) for in-batch nodes, Eq. (10) for the *incomplete
+    up-to-date* halo values (only edges inside N(V_B) are present in A_hh),
+    Eq. (9) via the Pallas ``combine`` kernel.
+  * Backward: auxiliary variables V are propagated by ``jax.vjp`` of the
+    *local* per-layer map F_l : (hbar_b^{l-1}, hhat_h^{l-1}) -> (hbar_b^l,
+    htilde_h^l) with cotangents (Vbar_b^l, Vhat_h^l) — term-by-term identical
+    to Eqs. (11) and (13). Halo cotangents at layer l<L are compensated via
+    Eq. (12); at layer L they are the local loss gradients (Algorithm 1 line
+    11 initializes Vhat^L = grad_{H^L} L).
+  * Parameter gradients: Eq. (7) sums over in-batch nodes only, so g_theta^l
+    is the vjp w.r.t. params with cotangent (Vbar_b^l, 0) — a separate
+    cotangent evaluation from the propagation one (vjp residuals are shared).
+  * Mini-batch gradients for the output head ``w`` follow Eq. (6)/(14).
+
+Outputs include the updated in-batch histories (Hbar, Vbar per layer) and the
+halo temporary/incomplete values (Hhat, Htilde per layer) so the Rust
+coordinator can implement each method's write-back policy (LMC/GAS write
+in-batch only; FM additionally pushes a momentum update of Htilde to halo
+histories; CLUSTER writes nothing).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .archs import Arch
+from .kernels import agg as k_agg
+from .kernels import combine as k_combine
+from .kernels import ref as k_ref
+
+Spec = Tuple[str, Tuple[int, ...], str]  # (name, shape, dtype)
+
+
+def masked_ce(logits: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Sum of masked cross-entropy losses (numerically stable)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return jnp.sum(ce * mask)
+
+
+def masked_correct(logits: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32) * mask)
+
+
+@dataclass(frozen=True)
+class StepSpec:
+    arch: Arch
+    B: int  # padded in-batch size
+    H: int  # padded halo size
+    use_pallas: bool = True
+
+    @property
+    def name(self) -> str:
+        return f"train_step_{self.arch.name}_b{self.B}_h{self.H}"
+
+
+def _kernels(use_pallas: bool):
+    if use_pallas:
+        from .kernels.agg import agg2
+
+        return agg2, k_combine
+    return k_ref.agg2_ref, k_ref.combine_ref
+
+
+def build_step(spec: StepSpec) -> Tuple[Callable, List[Spec], List[Spec]]:
+    """Build the step function plus positional input/output specs."""
+    arch, B, H = spec.arch, spec.B, spec.H
+    L, dims, d_x = arch.L, arch.dims, arch.d_x
+    agg2_fn, combine_fn = _kernels(spec.use_pallas)
+    pnames = arch.param_names()
+    pspecs = dict(arch.param_specs())
+
+    in_specs: List[Spec] = [(n, tuple(pspecs[n]), "f32") for n in pnames]
+    in_specs += [
+        ("X_b", (B, d_x), "f32"),
+        ("X_h", (H, d_x), "f32"),
+        ("A_bb", (B, B), "f32"),
+        ("A_bh", (B, H), "f32"),
+        ("A_hh", (H, H), "f32"),
+    ]
+    for l in range(1, L):
+        in_specs.append((f"histH{l}", (H, dims[l]), "f32"))
+    for l in range(1, L):
+        in_specs.append((f"histV{l}", (H, dims[l]), "f32"))
+    in_specs += [
+        ("y_b", (B,), "i32"),
+        ("mask_b", (B,), "f32"),
+        ("y_h", (H,), "i32"),
+        ("mask_h", (H,), "f32"),
+        ("beta", (H,), "f32"),
+        ("bwd_scale", (), "f32"),
+        ("vscale", (), "f32"),
+        ("grad_scale", (), "f32"),
+    ]
+
+    out_specs: List[Spec] = [
+        ("loss_sum", (), "f32"),
+        ("correct", (), "f32"),
+        ("logits_b", (B, arch.n_class), "f32"),
+    ]
+    out_specs += [(f"g_{n}", tuple(pspecs[n]), "f32") for n in pnames]
+    for l in range(1, L):
+        out_specs.append((f"newH{l}", (B, dims[l]), "f32"))
+    for l in range(1, L):
+        out_specs.append((f"newV{l}", (B, dims[l]), "f32"))
+    for l in range(1, L):
+        out_specs.append((f"hhat{l}", (H, dims[l]), "f32"))
+    for l in range(1, L):
+        out_specs.append((f"htilde{l}", (H, dims[l]), "f32"))
+
+    n_params = len(pnames)
+
+    def step(*args):
+        params: Dict[str, jax.Array] = {n: a for n, a in zip(pnames, args[:n_params])}
+        rest = list(args[n_params:])
+        X_b, X_h, A_bb, A_bh, A_hh = rest[:5]
+        idx = 5
+        histH = rest[idx: idx + (L - 1)]
+        idx += L - 1
+        histV = rest[idx: idx + (L - 1)]
+        idx += L - 1
+        y_b, mask_b, y_h, mask_h, beta, bwd_scale, vscale, grad_scale = rest[idx: idx + 8]
+
+        # PERF (EXPERIMENTS.md §Perf, L2): the per-layer batch/halo updates
+        # are computed over the *stacked* node space [batch; halo] with one
+        # block adjacency — a single Pallas aggregation per layer direction
+        # instead of four, which matters under interpret-mode per-call cost.
+        # Row semantics are unchanged: rows :B aggregate Eq. (8)'s message,
+        # rows B: aggregate Eq. (10)'s incomplete message.
+        A_full = jnp.concatenate(
+            [
+                jnp.concatenate([A_bb, A_bh], axis=1),
+                jnp.concatenate([A_bh.T, A_hh], axis=1),
+            ],
+            axis=0,
+        )
+        def agg_full(x_full):
+            return agg2_fn(A_full, x_full)
+
+        h0_full = arch.embed0(params, jnp.concatenate([X_b, X_h], axis=0))
+
+        # ------------------------------ forward ---------------------------
+        h = h0_full                     # rows :B = hbar_b, rows B: = hhat_h
+        layer_inputs: List[jax.Array] = []
+        newH: List[jax.Array] = []      # Hbar_b^l, l = 1..L-1
+        hhat_out: List[jax.Array] = []
+        htilde_out: List[jax.Array] = []
+        for l in range(1, L + 1):
+            layer_inputs.append(h)
+            out = arch.layer(params, l, agg_full(h), h, h0_full)
+            hb_new, ht = out[:B], out[B:]
+            if l < L:
+                hh_new = combine_fn(beta, histH[l - 1], ht)  # Eq. (9)
+                newH.append(hb_new)
+                hhat_out.append(hh_new)
+                htilde_out.append(ht)
+            else:
+                hh_new = ht  # htilde^L: only used for the halo loss gradient
+            h = jnp.concatenate([hb_new, hh_new], axis=0)
+        hb, hh = h[:B], h[B:]
+
+        # ------------------------------ loss -------------------------------
+        def head_loss(p, hbv):
+            return masked_ce(arch.logits(p, hbv), y_b, mask_b)
+
+        loss_sum, head_vjp = jax.vjp(head_loss, params, hb)
+        g_head, VbL_raw = head_vjp(jnp.float32(1.0))
+        Vb = vscale * VbL_raw                                # Vbar_b^L
+        correct = masked_correct(arch.logits(params, hb), y_b, mask_b)
+
+        def halo_loss(hv):
+            return masked_ce(arch.logits(params, hv), y_h, mask_h)
+
+        VhL_raw = jax.grad(halo_loss)(hh)
+        Vh = bwd_scale * vscale * VhL_raw                    # Vhat_h^L (local init)
+
+        # ------------------------------ backward ---------------------------
+        grads = jax.tree_util.tree_map(lambda g: grad_scale * vscale * g, g_head)
+        newV: List[jax.Array] = [None] * (L - 1)             # Vbar_b^l, l = 1..L-1
+        acc_h0 = jnp.zeros_like(h0_full[:B])                 # cotangent into embed0 (GCNII)
+
+        for l in range(L, 0, -1):
+            h_prev = layer_inputs[l - 1]
+
+            def F(p, x_full, h0f, _l=l):
+                return arch.layer(p, _l, agg_full(x_full), x_full, h0f)
+
+            _, f_vjp = jax.vjp(F, params, h_prev, h0_full)
+            # Eq. (7): parameter gradients from in-batch cotangents only.
+            cot_b = jnp.concatenate([Vb, jnp.zeros((H, dims[l]), jnp.float32)], axis=0)
+            gp, _, ch0_p = f_vjp(cot_b)
+            grads = jax.tree_util.tree_map(lambda a, b: a + grad_scale * b, grads, gp)
+            acc_h0 = acc_h0 + ch0_p[:B]
+            # Eqs. (11) & (13): propagate with full (batch, halo) cotangents.
+            cot_full = jnp.concatenate([Vb, Vh], axis=0)
+            _, v_full, _ = f_vjp(cot_full)
+            if l > 1:
+                newV[l - 2] = v_full[:B]
+                # Eq. (12): compensate halo auxiliary variables with history.
+                Vh = bwd_scale * combine_fn(beta, histV[l - 2], v_full[B:])
+                Vb = v_full[:B]
+            else:
+                # Layer 1: V^0_b (the cotangent w.r.t. h0_b) feeds embed0's
+                # params, via the *compensated* propagation (Eq. 11) —
+                # batch-only misses out-of-batch neighbor terms and biases
+                # W0 even with exact histories.
+                acc_h0 = acc_h0 + v_full[:B]
+
+        # embed0 parameter gradients (GCNII's W0/b0; zero-paths DCE for GCN).
+        def E(p):
+            return arch.embed0(p, X_b)
+
+        _, e_vjp = jax.vjp(E, params)
+        (g_embed,) = e_vjp(acc_h0)
+        grads = jax.tree_util.tree_map(lambda a, b: a + grad_scale * b, grads, g_embed)
+
+        outs: List[jax.Array] = [loss_sum, correct, arch.logits(params, hb)]
+        outs += [grads[n] for n in pnames]
+        outs += newH
+        outs += list(newV)
+        outs += hhat_out
+        outs += htilde_out
+        return tuple(outs)
+
+    return step, in_specs, out_specs

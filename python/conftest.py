@@ -1,0 +1,8 @@
+import sys
+from pathlib import Path
+
+# Make `compile.*` and the shared test helpers importable from anywhere.
+root = Path(__file__).resolve().parent
+for p in (root, root / "tests"):
+    if str(p) not in sys.path:
+        sys.path.insert(0, str(p))

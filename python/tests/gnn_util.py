@@ -1,0 +1,127 @@
+"""Shared fixtures/helpers for L2 tests: tiny random graphs, full-batch
+reference computation, and step-input assembly mirroring the Rust sampler."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.archs import make_arch
+from compile.step import StepSpec, build_step, masked_ce
+
+
+def tiny_graph(n=24, dx=6, c=3, p=0.15, seed=0):
+    """Random undirected graph with GCN-normalized adjacency (self-loops)."""
+    rng = np.random.default_rng(seed)
+    A = (rng.uniform(size=(n, n)) < p).astype(np.float32)
+    A = np.maximum(A, A.T)
+    np.fill_diagonal(A, 1.0)
+    deg = A.sum(1)
+    Ahat = (A / np.sqrt(deg[:, None] * deg[None, :])).astype(np.float32)
+    X = rng.normal(size=(n, dx)).astype(np.float32)
+    y = rng.integers(0, c, size=n).astype(np.int32)
+    mask = (rng.uniform(size=n) < 0.6).astype(np.float32)
+    return Ahat, X, y, mask
+
+
+def full_loss_fn(arch, Ahat, X, y, mask):
+    nl = float(mask.sum())
+
+    def full_loss(p):
+        h = arch.embed0(p, jnp.asarray(X))
+        h0 = h
+        for l in range(1, arch.L + 1):
+            h = arch.layer(p, l, jnp.asarray(Ahat) @ h, h, h0)
+        return masked_ce(arch.logits(p, h), jnp.asarray(y), jnp.asarray(mask)) / nl
+
+    return full_loss
+
+
+def full_forward_all_layers(arch, params, Ahat, X):
+    """Exact H^l for l=0..L and exact V^l for l=1..L (via autodiff)."""
+    hs = [np.asarray(arch.embed0(params, jnp.asarray(X)))]
+    h0 = jnp.asarray(hs[0])
+    h = h0
+    for l in range(1, arch.L + 1):
+        h = arch.layer(params, l, jnp.asarray(Ahat) @ h, h, h0)
+        hs.append(np.asarray(h))
+    return hs
+
+
+def full_aux_vars(arch, params, Ahat, X, y, mask):
+    """Exact auxiliary variables V^l = dL/dH^l, l = 1..L (full loss)."""
+    nl = float(mask.sum())
+    L = arch.L
+    vs = {}
+    for l in range(1, L + 1):
+        def from_l(hl, _l=l):
+            h = hl
+            h0 = arch.embed0(params, jnp.asarray(X))
+            for k in range(_l + 1, L + 1):
+                h = arch.layer(params, k, jnp.asarray(Ahat) @ h, h, h0)
+            return masked_ce(arch.logits(params, h), jnp.asarray(y), jnp.asarray(mask)) / nl
+
+        hs = full_forward_all_layers(arch, params, Ahat, X)
+        vs[l] = np.asarray(jax.grad(from_l)(jnp.asarray(hs[l])))
+    return vs
+
+
+def make_step_inputs(arch, params, Ahat, X, y, mask, batch_idx, H_pad,
+                     histH, histV, beta_val, bwd_scale, vscale, grad_scale,
+                     B_pad=None):
+    """Assemble positional train_step inputs the way the Rust sampler does.
+
+    batch_idx: the in-batch nodes; halo = all neighbors outside the batch.
+    histH/histV: dicts layer -> full [n, d] arrays to gather halo rows from.
+    """
+    n = Ahat.shape[0]
+    batch = np.asarray(batch_idx)
+    in_batch = np.zeros(n, bool)
+    in_batch[batch] = True
+    nbr = (Ahat[batch] != 0).any(axis=0)
+    halo = np.where(nbr & ~in_batch)[0]
+    B = B_pad or len(batch)
+    assert len(batch) <= B and len(halo) <= H_pad
+    L = arch.L
+
+    def pad2(a, r, c):
+        out = np.zeros((r, c), np.float32)
+        out[: a.shape[0], : a.shape[1]] = a
+        return out
+
+    A_bb = pad2(Ahat[np.ix_(batch, batch)], B, B)
+    A_bh = pad2(Ahat[np.ix_(batch, halo)], B, H_pad)
+    A_hh = pad2(Ahat[np.ix_(halo, halo)], H_pad, H_pad)
+    X_b = pad2(X[batch], B, X.shape[1])
+    X_h = pad2(X[halo], H_pad, X.shape[1])
+    y_b = np.zeros(B, np.int32)
+    y_b[: len(batch)] = y[batch]
+    m_b = np.zeros(B, np.float32)
+    m_b[: len(batch)] = mask[batch]
+    y_h = np.zeros(H_pad, np.int32)
+    y_h[: len(halo)] = y[halo]
+    m_h = np.zeros(H_pad, np.float32)
+    m_h[: len(halo)] = mask[halo]
+    beta = np.zeros(H_pad, np.float32)
+    beta[: len(halo)] = beta_val
+
+    args = [params[nm] for nm in arch.param_names()]
+    args += [jnp.asarray(X_b), jnp.asarray(X_h), jnp.asarray(A_bb), jnp.asarray(A_bh), jnp.asarray(A_hh)]
+    for l in range(1, L):
+        args.append(jnp.asarray(pad2(histH[l][halo], H_pad, arch.dims[l])))
+    for l in range(1, L):
+        args.append(jnp.asarray(pad2(histV[l][halo], H_pad, arch.dims[l])))
+    args += [jnp.asarray(y_b), jnp.asarray(m_b), jnp.asarray(y_h), jnp.asarray(m_h), jnp.asarray(beta),
+             jnp.float32(bwd_scale), jnp.float32(vscale), jnp.float32(grad_scale)]
+    return args, batch, halo
+
+
+def run_step(arch, B, H, args):
+    step, ins, outs = build_step(StepSpec(arch=arch, B=B, H=H))
+    res = step(*args)
+    names = [o[0] for o in outs]
+    return {nm: res[i] for i, nm in enumerate(names)}

@@ -1,0 +1,61 @@
+"""AOT driver: HLO-text emission, manifest structure, fingerprint cache."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile import aot
+from compile.spec import PROFILES
+from compile.step import StepSpec, build_step
+
+
+def test_lower_emits_parseable_hlo_text():
+    arch = PROFILES["planetoid"].arch("gcn")
+    fn, ins, outs = build_step(StepSpec(arch=arch, B=16, H=32))
+    text = aot.lower_program(fn, ins)
+    # HLO text, not proto bytes: must start with the module header
+    assert text.lstrip().startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # keep_unused: every input must appear as a parameter
+    assert text.count("parameter(") >= len(ins)
+
+
+def test_emitter_manifest_and_cache(tmp_path):
+    out = str(tmp_path)
+    aot.main(["--out", out, "--profile", "planetoid", "--arch", "gcn"])
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["version"] == 1
+    names = {p["name"] for p in man["programs"]}
+    prof = PROFILES["planetoid"]
+    for b, h in prof.step_buckets:
+        assert f"planetoid_train_step_gcn_b{b}_h{h}" in names
+    for l in (1, 2, 3):
+        assert f"planetoid_fwd_gcn_l{l}" in names
+        assert f"planetoid_bwd_gcn_l{l}" in names
+    assert "planetoid_loss_gcn" in names
+    # arch metadata records the canonical param order
+    arch_info = man["archs"]["planetoid/gcn"]
+    assert [p["name"] for p in arch_info["params"]][:2] == ["W1", "b1"]
+    # every referenced file exists and is HLO text
+    for p in man["programs"]:
+        path = tmp_path / p["file"]
+        assert path.exists(), p["file"]
+        assert path.read_text().lstrip().startswith("HloModule")
+    # second run: everything cached (no re-lowering -> fast, same manifest)
+    aot.main(["--out", out, "--profile", "planetoid", "--arch", "gcn"])
+    man2 = json.loads((tmp_path / "manifest.json").read_text())
+    assert {p["name"]: p["fingerprint"] for p in man["programs"]} == {
+        p["name"]: p["fingerprint"] for p in man2["programs"]
+    }
+
+
+def test_fingerprint_includes_kernel_source():
+    # the fingerprint must change if kernel/model source changes — guards the
+    # stale-artifact failure mode we hit during development
+    fp1 = aot._fingerprint("k", [("x", (1,), "f32")], [("y", (1,), "f32")], "e")
+    aot._SRC_HASH = "deadbeef"
+    fp2 = aot._fingerprint("k", [("x", (1,), "f32")], [("y", (1,), "f32")], "e")
+    aot._SRC_HASH = None
+    assert fp1 != fp2

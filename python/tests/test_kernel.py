@@ -1,0 +1,127 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal).
+
+Sweeps shapes (including non-multiples of the block sizes) and dtypes with
+hypothesis, and checks the custom-vjp backward path (which itself routes
+through the Pallas kernel).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import agg, combine, pallas_matmul, ref
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (7, 13, 5), (128, 128, 128), (129, 130, 131), (64, 257, 40), (300, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matmul_matches_ref(m, k, n, dtype):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a, b = _rand(rng, (m, k), dtype), _rand(rng, (k, n), dtype)
+    got = pallas_matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("b,h,d", [(4, 4, 4), (13, 29, 8), (128, 512, 64), (100, 300, 17)])
+def test_agg_matches_ref(b, h, d):
+    rng = np.random.default_rng(b + h + d)
+    abb = _rand(rng, (b, b), jnp.float32)
+    abh = _rand(rng, (b, h), jnp.float32)
+    hb = _rand(rng, (b, d), jnp.float32)
+    hh = _rand(rng, (h, d), jnp.float32)
+    np.testing.assert_allclose(
+        agg(abb, abh, hb, hh), ref.agg_ref(abb, abh, hb, hh), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_agg_vjp_matches_ref_vjp():
+    rng = np.random.default_rng(0)
+    b, h, d = 24, 40, 16
+    abb = _rand(rng, (b, b), jnp.float32)
+    abh = _rand(rng, (b, h), jnp.float32)
+    hb = _rand(rng, (b, d), jnp.float32)
+    hh = _rand(rng, (h, d), jnp.float32)
+
+    f = lambda x, y: jnp.sum(jnp.sin(agg(abb, abh, x, y)))
+    fr = lambda x, y: jnp.sum(jnp.sin(ref.agg_ref(abb, abh, x, y)))
+    g = jax.grad(f, argnums=(0, 1))(hb, hh)
+    gr = jax.grad(fr, argnums=(0, 1))(hb, hh)
+    np.testing.assert_allclose(g[0], gr[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g[1], gr[1], rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,d", [(1, 1), (5, 3), (256, 64), (257, 63), (1000, 8)])
+def test_combine_matches_ref(n, d):
+    rng = np.random.default_rng(n * 7 + d)
+    beta = jnp.asarray(rng.uniform(size=n).astype(np.float32))
+    hist = _rand(rng, (n, d), jnp.float32)
+    fresh = _rand(rng, (n, d), jnp.float32)
+    np.testing.assert_allclose(
+        combine(beta, hist, fresh), ref.combine_ref(beta, hist, fresh), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_combine_endpoints():
+    """beta=0 returns history exactly (GAS mode); beta=1 returns fresh."""
+    rng = np.random.default_rng(3)
+    hist = _rand(rng, (33, 9), jnp.float32)
+    fresh = _rand(rng, (33, 9), jnp.float32)
+    np.testing.assert_array_equal(combine(jnp.zeros(33), hist, fresh), hist)
+    np.testing.assert_array_equal(combine(jnp.ones(33), hist, fresh), fresh)
+
+
+def test_matmul_zero_padding_exact():
+    """Padding rows/cols are exactly zero-preserving (sampler relies on it)."""
+    rng = np.random.default_rng(4)
+    a = np.zeros((70, 90), np.float32)
+    b = np.zeros((90, 30), np.float32)
+    a[:50, :60] = rng.normal(size=(50, 60))
+    b[:60, :20] = rng.normal(size=(60, 20))
+    out = np.asarray(pallas_matmul(jnp.asarray(a), jnp.asarray(b)))
+    assert np.all(out[50:] == 0) and np.all(out[:, 20:] == 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_matmul(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, k), jnp.float32)
+    b = _rand(rng, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        pallas_matmul(a, b), ref.matmul_ref(a, b), rtol=3e-5, atol=3e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    d=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_combine(n, d, seed):
+    rng = np.random.default_rng(seed)
+    beta = jnp.asarray(rng.uniform(size=n).astype(np.float32))
+    hist = _rand(rng, (n, d), jnp.float32)
+    fresh = _rand(rng, (n, d), jnp.float32)
+    np.testing.assert_allclose(
+        combine(beta, hist, fresh), ref.combine_ref(beta, hist, fresh), rtol=1e-6, atol=1e-6
+    )

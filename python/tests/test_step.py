@@ -1,0 +1,211 @@
+"""L2 train_step correctness.
+
+Key oracles:
+  1. Degenerate full-batch (whole graph in batch, empty halo): the step's
+     backward-SGD gradients must equal ``jax.grad`` of the full loss exactly
+     (paper Theorem 1 with V_B = V).
+  2. Exact histories: with beta=0, bwd_scale=1 and histories set to the exact
+     H/V values, LMC's gradients approach backward SGD's; the LMC gradient
+     error w.r.t. the full-batch gradient must not exceed GAS's under stale
+     histories (paper Theorem 2 / Fig. 3 mechanism).
+  3. Padding rows are inert: growing the pad changes nothing.
+  4. Method modes (GAS/CLUSTER) are exact specializations of the program.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.archs import make_arch
+from gnn_util import (
+    full_aux_vars,
+    full_forward_all_layers,
+    full_loss_fn,
+    make_step_inputs,
+    run_step,
+    tiny_graph,
+)
+
+ARCHS = ["gcn", "gcnii"]
+
+
+def _setup(arch_name, seed=0, n=24, dx=6, c=3):
+    Ahat, X, y, mask = tiny_graph(n=n, dx=dx, c=c, seed=seed)
+    arch = make_arch(arch_name, L=3, d_x=dx, hidden=8, n_class=c)
+    params = arch.init_params(jax.random.PRNGKey(seed + 1))
+    return arch, params, Ahat, X, y, mask
+
+
+@pytest.mark.parametrize("arch_name", ARCHS)
+def test_fullbatch_step_equals_autodiff(arch_name):
+    arch, params, Ahat, X, y, mask = _setup(arch_name)
+    n = Ahat.shape[0]
+    nl = float(mask.sum())
+    ref_grads = jax.grad(full_loss_fn(arch, Ahat, X, y, mask))(params)
+    zeroH = {l: np.zeros((n, arch.dims[l]), np.float32) for l in range(1, arch.L)}
+    args, _, halo = make_step_inputs(
+        arch, params, Ahat, X, y, mask, np.arange(n), H_pad=4,
+        histH=zeroH, histV=zeroH, beta_val=0.0, bwd_scale=1.0,
+        vscale=1.0 / nl, grad_scale=1.0,
+    )
+    assert len(halo) == 0
+    out = run_step(arch, n, 4, args)
+    for nm in arch.param_names():
+        np.testing.assert_allclose(
+            out[f"g_{nm}"], ref_grads[nm], rtol=3e-4, atol=3e-5, err_msg=f"g_{nm}"
+        )
+    # reported loss matches
+    np.testing.assert_allclose(float(out["loss_sum"]) / nl, float(full_loss_fn(arch, Ahat, X, y, mask)(params)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch_name", ARCHS)
+def test_lmc_beats_gas_under_stale_histories(arch_name):
+    """With stale histories, LMC's minibatch gradient is closer to the
+    full-batch gradient than GAS's (averaged over batches) — the Fig. 3
+    mechanism, and the reason LMC converges faster."""
+    arch, params, Ahat, X, y, mask = _setup(arch_name, seed=2, n=40)
+    n = Ahat.shape[0]
+    nl = float(mask.sum())
+    ref_grads = jax.grad(full_loss_fn(arch, Ahat, X, y, mask))(params)
+    hs = full_forward_all_layers(arch, params, Ahat, X)
+    vs = full_aux_vars(arch, params, Ahat, X, y, mask)
+    rng = np.random.default_rng(7)
+    # stale histories: exact values plus noise (simulating previous-iterate values)
+    histH = {l: hs[l] + 0.3 * rng.normal(size=hs[l].shape).astype(np.float32) for l in range(1, arch.L)}
+    histV = {l: vs[l] + 0.3 * np.abs(vs[l]).mean() * rng.normal(size=vs[l].shape).astype(np.float32) for l in range(1, arch.L)}
+
+    def err(bwd_scale, beta_val):
+        errs = []
+        for start in range(0, n, 10):
+            batch = np.arange(start, min(start + 10, n))
+            labeled = mask[batch].sum()
+            if labeled == 0:
+                continue
+            # grad_scale: 4 equal parts, 1 sampled -> b/c = 4 per Eq. 15
+            args, _, halo = make_step_inputs(
+                arch, params, Ahat, X, y, mask, batch, H_pad=40,
+                histH=histH, histV=histV, beta_val=beta_val,
+                bwd_scale=bwd_scale, vscale=1.0 / nl, grad_scale=4.0,
+            )
+            out = run_step(arch, 10, 40, args)
+            e = 0.0
+            r = 0.0
+            for nm in arch.param_names():
+                e += float(np.sum((np.asarray(out[f"g_{nm}"]) - np.asarray(ref_grads[nm])) ** 2))
+                r += float(np.sum(np.asarray(ref_grads[nm]) ** 2))
+            errs.append(np.sqrt(e / r))
+        return float(np.mean(errs))
+
+    err_gas = err(bwd_scale=0.0, beta_val=0.0)
+    err_lmc = err(bwd_scale=1.0, beta_val=0.5)
+    assert err_lmc < err_gas, f"LMC err {err_lmc} !< GAS err {err_gas}"
+
+
+@pytest.mark.parametrize("arch_name", ARCHS)
+def test_exact_histories_near_zero_bias(arch_name):
+    """With exact histories and the compensations on, the averaged (over a
+    uniform partition) LMC gradient is close to the full-batch gradient —
+    the bias term of Theorem 2 with zero staleness."""
+    arch, params, Ahat, X, y, mask = _setup(arch_name, seed=3, n=40)
+    n = Ahat.shape[0]
+    nl = float(mask.sum())
+    ref_grads = jax.grad(full_loss_fn(arch, Ahat, X, y, mask))(params)
+    hs = full_forward_all_layers(arch, params, Ahat, X)
+    vs = full_aux_vars(arch, params, Ahat, X, y, mask)
+    histH = {l: hs[l] for l in range(1, arch.L)}
+    histV = {l: vs[l] for l in range(1, arch.L)}
+    acc = {nm: 0.0 for nm in arch.param_names()}
+    nb = 0
+    for start in range(0, n, 10):
+        batch = np.arange(start, min(start + 10, n))
+        args, _, _ = make_step_inputs(
+            arch, params, Ahat, X, y, mask, batch, H_pad=40,
+            histH=histH, histV=histV, beta_val=0.0, bwd_scale=1.0,
+            vscale=1.0 / nl, grad_scale=1.0,
+        )
+        out = run_step(arch, 10, 40, args)
+        for nm in arch.param_names():
+            acc[nm] = acc[nm] + np.asarray(out[f"g_{nm}"])
+        nb += 1
+    # Sum over a full partition of backward-SGD gradients = full gradient
+    # (Theorem 1); with exact histories the compensated values equal the
+    # exact ones for in-batch nodes' updates, so the sum is near-exact.
+    for nm in arch.param_names():
+        denom = np.linalg.norm(np.asarray(ref_grads[nm]).ravel()) + 1e-8
+        rel = np.linalg.norm((acc[nm] - np.asarray(ref_grads[nm])).ravel()) / denom
+        assert rel < 0.08, f"{nm}: rel bias {rel}"
+
+
+@pytest.mark.parametrize("arch_name", ARCHS)
+def test_padding_inert(arch_name):
+    """Doubling the pad must not change any real output (bit-for-bit-ish)."""
+    arch, params, Ahat, X, y, mask = _setup(arch_name, seed=4, n=30)
+    n = Ahat.shape[0]
+    nl = float(mask.sum())
+    hs = full_forward_all_layers(arch, params, Ahat, X)
+    histH = {l: hs[l] for l in range(1, arch.L)}
+    batch = np.arange(0, 12)
+    outs = []
+    for B_pad, H_pad in [(16, 32), (24, 64)]:
+        args, b, halo = make_step_inputs(
+            arch, params, Ahat, X, y, mask, batch, H_pad=H_pad,
+            histH=histH, histV=histH, beta_val=0.4, bwd_scale=1.0,
+            vscale=1.0 / nl, grad_scale=1.0, B_pad=B_pad,
+        )
+        outs.append((run_step(arch, B_pad, H_pad, args), len(halo)))
+    (o1, nh), (o2, _) = outs
+    np.testing.assert_allclose(float(o1["loss_sum"]), float(o2["loss_sum"]), rtol=1e-6)
+    for nm in arch.param_names():
+        np.testing.assert_allclose(o1[f"g_{nm}"], o2[f"g_{nm}"], rtol=2e-5, atol=1e-6)
+    for l in range(1, arch.L):
+        np.testing.assert_allclose(
+            np.asarray(o1[f"newH{l}"])[:12], np.asarray(o2[f"newH{l}"])[:12], rtol=2e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(o1[f"hhat{l}"])[:nh], np.asarray(o2[f"hhat{l}"])[:nh], rtol=2e-5, atol=1e-6
+        )
+
+
+def test_cluster_mode_matches_isolated_subgraph():
+    """CLUSTER mode (no halo inputs) equals running the GNN on the isolated
+    re-normalized subgraph — the program specializes exactly."""
+    arch, params, Ahat, X, y, mask = _setup("gcn", seed=5, n=30)
+    n = 30
+    batch = np.arange(0, 12)
+    # re-normalized adjacency of the induced subgraph, as CLUSTER-GCN does
+    A = (Ahat[np.ix_(batch, batch)] != 0).astype(np.float32)
+    deg = A.sum(1)
+    A_local = (A / np.sqrt(deg[:, None] * deg[None, :])).astype(np.float32)
+    nl = float(mask[batch].sum())
+
+    def sub_loss(p):
+        h = jnp.asarray(X[batch])
+        h0 = h
+        for l in range(1, arch.L + 1):
+            h = arch.layer(p, l, jnp.asarray(A_local) @ h, h, h0)
+        from compile.step import masked_ce
+        return masked_ce(arch.logits(p, h), jnp.asarray(y[batch]), jnp.asarray(mask[batch])) / nl
+
+    ref_grads = jax.grad(sub_loss)(params)
+
+    B, H = 12, 24
+    zero = {l: np.zeros((n, arch.dims[l]), np.float32) for l in range(1, arch.L)}
+    args, _, _ = make_step_inputs(
+        arch, params, Ahat, X, y, mask, batch, H_pad=H,
+        histH=zero, histV=zero, beta_val=0.0, bwd_scale=0.0,
+        vscale=1.0 / nl, grad_scale=1.0,
+    )
+    # overwrite adjacency blocks with the CLUSTER policy: local renorm, no halo
+    pn = len(arch.param_names())
+    args[pn + 2] = jnp.asarray(A_local)            # A_bb
+    args[pn + 3] = jnp.zeros((B, H), jnp.float32)  # A_bh
+    args[pn + 4] = jnp.zeros((H, H), jnp.float32)  # A_hh
+    out = run_step(arch, B, H, args)
+    for nm in arch.param_names():
+        np.testing.assert_allclose(out[f"g_{nm}"], ref_grads[nm], rtol=3e-4, atol=3e-5, err_msg=nm)

@@ -1,0 +1,32 @@
+//! Bench: historical value store gather/scatter/momentum paths.
+
+use lmc::history::History;
+use lmc::util::bench::{black_box, Bencher};
+use lmc::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    println!("== history store ==");
+    let n = 3000;
+    let dims = [64usize, 64];
+    let mut h = History::new(n, &dims);
+    let mut rng = Rng::new(0);
+    for &k in &[256usize, 1024] {
+        let idx: Vec<u32> = {
+            let mut v: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|x| x as u32).collect();
+            v.sort_unstable();
+            v
+        };
+        let src: Vec<f32> = (0..k * 64).map(|_| rng.normal() as f32).collect();
+        b.run(&format!("gather_h/{k}x64"), || {
+            black_box(h.gather_h(1, &idx, k + 64));
+        });
+        b.run(&format!("scatter_h/{k}x64"), || {
+            h.scatter_h(1, &idx, &src);
+        });
+        b.run(&format!("momentum_h/{k}x64"), || {
+            h.momentum_h(1, &idx, &src, 0.3);
+        });
+    }
+    println!("store bytes: {:.1} MB", h.bytes() as f64 / 1e6);
+}

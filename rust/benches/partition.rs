@@ -1,0 +1,25 @@
+//! Bench: METIS-substitute multilevel partitioner on every dataset.
+
+use lmc::graph::{load, DatasetId};
+use lmc::partition::{partition, quality::quality, PartitionConfig};
+use lmc::util::bench::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::default();
+    println!("== partitioner ==");
+    for &id in DatasetId::all() {
+        let g = load(id, 0);
+        let k = id.default_parts();
+        let cfg = PartitionConfig::new(k, 0);
+        b.run(&format!("partition/{}/k{}", id.name(), k), || {
+            black_box(partition(&g.csr, &cfg));
+        });
+        let p = partition(&g.csr, &cfg);
+        let q = quality(&g.csr, &p.assign, k);
+        println!(
+            "    quality: cut {:.1}% balance {:.2}",
+            100.0 * q.cut_fraction,
+            q.balance
+        );
+    }
+}

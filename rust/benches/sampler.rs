@@ -1,0 +1,38 @@
+//! Bench: subgraph densification (the gather/pad hot loop feeding the step).
+
+use lmc::graph::{load, DatasetId};
+use lmc::partition::{partition, PartitionConfig};
+use lmc::sampler::{build_subgraph, gather_rows, AdjacencyPolicy, Buckets};
+use lmc::util::bench::{black_box, Bencher};
+use lmc::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    println!("== sampler ==");
+    for &id in &[DatasetId::ArxivSim, DatasetId::RedditSim] {
+        let g = load(id, 0);
+        let k = id.default_parts();
+        let part = partition(&g.csr, &PartitionConfig::new(k, 0));
+        let g = g.permute(&part.contiguous_perm());
+        let buckets = Buckets(vec![(192, 1024), (320, 1536), (768, 1792), (1408, 1792)]);
+        for nclusters in [1usize, 2, 5] {
+            let per = g.n() / k;
+            let batch: Vec<u32> = (0..(per * nclusters) as u32).collect();
+            let mut rng = Rng::new(1);
+            b.run(
+                &format!("subgraph/{}/c{}(B~{})", id.name(), nclusters, batch.len()),
+                || {
+                    black_box(
+                        build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets, &mut rng)
+                            .unwrap(),
+                    );
+                },
+            );
+        }
+        // feature gather throughput
+        let idx: Vec<u32> = (0..512u32.min(g.n() as u32)).collect();
+        b.run(&format!("gather_rows/{}/512xd{}", id.name(), g.d_x), || {
+            black_box(gather_rows(&g.features, g.d_x, &idx, 768));
+        });
+    }
+}

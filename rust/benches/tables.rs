@@ -1,0 +1,52 @@
+//! Bench: cheap analytic table regeneration — Table 7 message/memory
+//! accounting and the per-program active-byte model (no training).
+//! The full table/figure harness lives in `lmc experiment <id>`.
+
+use std::path::Path;
+
+use lmc::coordinator::memory::{gd_active_bytes, program_active_bytes, reserved_messages};
+use lmc::coordinator::Method;
+use lmc::graph::{load, DatasetId};
+use lmc::partition::{partition, PartitionConfig};
+use lmc::runtime::Runtime;
+use lmc::util::bench::{black_box, Bencher};
+
+fn main() {
+    let b = Bencher::default();
+    println!("== table 7 accounting (reserved messages, union per epoch) ==");
+    for &id in &[DatasetId::ArxivSim, DatasetId::RedditSim] {
+        let g = load(id, 0);
+        let k = id.default_parts();
+        let part = partition(&g.csr, &PartitionConfig::new(k, 0));
+        let g = g.permute(&part.contiguous_perm());
+        let per = g.n().div_ceil(k);
+        let batches: Vec<Vec<u32>> = (0..k)
+            .map(|p| ((p * per) as u32..((p + 1) * per).min(g.n()) as u32).collect())
+            .collect();
+        for method in [Method::Cluster, Method::Gas, Method::Lmc] {
+            let acct = reserved_messages(&g, &batches, method);
+            println!(
+                "  {:<10} {:<8} fwd {:>5.1}%  bwd {:>5.1}%",
+                id.name(),
+                method.name(),
+                100.0 * acct.fwd_frac,
+                100.0 * acct.bwd_frac
+            );
+            b.run(&format!("reserved_messages/{}/{}", id.name(), method.name()), || {
+                black_box(reserved_messages(&g, &batches, method));
+            });
+        }
+        let dims = vec![64usize, 64, 64, 16];
+        println!(
+            "  {:<10} GD active bytes: {:.1} MB",
+            id.name(),
+            gd_active_bytes(g.n(), &dims, g.d_x, g.csr.neighbors.len()) as f64 / 1e6
+        );
+    }
+    if let Ok(rt) = Runtime::new(Path::new("artifacts")) {
+        println!("== per-program active-byte model ==");
+        for (name, p) in rt.manifest.programs.iter().filter(|(_, p)| p.kind == "train_step") {
+            println!("  {:<44} {:>8.1} MB", name, program_active_bytes(p) as f64 / 1e6);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Run configuration: defaults, TOML file loading, CLI overrides.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::methods::{BetaConfig, Method};
+use crate::graph::DatasetId;
+use crate::sampler::{BatcherMode, BetaScore};
+use crate::util::cli::Args;
+use crate::util::toml::{parse as toml_parse, TomlDoc};
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetId,
+    pub arch: String, // "gcn" | "gcnii"
+    pub method: Method,
+    pub seed: u64,
+    /// Number of partition clusters (METIS parts).
+    pub parts: usize,
+    /// Clusters per mini-batch ("batch size" in the paper's Table 3 sense).
+    pub clusters_per_batch: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub beta: BetaConfig,
+    pub batcher_mode: BatcherMode,
+    /// Evaluate every this many epochs.
+    pub eval_every: usize,
+    /// Stop once test accuracy reaches this value (Table 2 protocol).
+    pub target_acc: Option<f64>,
+    pub artifact_dir: String,
+    /// Overlap next-batch assembly with execution (std::thread pipeline).
+    pub pipeline: bool,
+    /// SPIDER anchor period (LMC-SPIDER only).
+    pub spider_period: usize,
+    /// Ablation (Fig. 4): run LMC with only the forward compensation C_f by
+    /// forcing the backward compensation off.
+    pub force_bwd_off: bool,
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: DatasetId::ArxivSim,
+            arch: "gcn".into(),
+            method: Method::Lmc,
+            seed: 0,
+            parts: 0, // 0 = dataset default
+            clusters_per_batch: 2,
+            epochs: 60,
+            lr: 1e-2,
+            weight_decay: 0.0,
+            beta: BetaConfig::default(),
+            batcher_mode: BatcherMode::Stochastic,
+            eval_every: 2,
+            target_acc: None,
+            artifact_dir: "artifacts".into(),
+            pipeline: false,
+            spider_period: 10,
+            force_bwd_off: false,
+            verbose: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn parts_or_default(&self) -> usize {
+        if self.parts > 0 {
+            self.parts
+        } else {
+            self.dataset.default_parts()
+        }
+    }
+
+    pub fn from_toml_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = toml_parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        let get = |k: &str| doc.get(k).or_else(|| doc.get(&format!("train.{k}")));
+        if let Some(v) = get("dataset").and_then(|v| v.as_str()) {
+            self.dataset = DatasetId::parse(v).ok_or_else(|| anyhow!("unknown dataset {v}"))?;
+        }
+        if let Some(v) = get("arch").and_then(|v| v.as_str()) {
+            self.arch = v.to_string();
+        }
+        if let Some(v) = get("method").and_then(|v| v.as_str()) {
+            self.method = Method::parse(v).ok_or_else(|| anyhow!("unknown method {v}"))?;
+        }
+        if let Some(v) = get("seed").and_then(|v| v.as_i64()) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = get("parts").and_then(|v| v.as_i64()) {
+            self.parts = v as usize;
+        }
+        if let Some(v) = get("clusters_per_batch").and_then(|v| v.as_i64()) {
+            self.clusters_per_batch = v as usize;
+        }
+        if let Some(v) = get("epochs").and_then(|v| v.as_i64()) {
+            self.epochs = v as usize;
+        }
+        if let Some(v) = get("lr").and_then(|v| v.as_f64()) {
+            self.lr = v;
+        }
+        if let Some(v) = get("weight_decay").and_then(|v| v.as_f64()) {
+            self.weight_decay = v;
+        }
+        if let Some(v) = get("beta_alpha").and_then(|v| v.as_f64()) {
+            self.beta.alpha = v as f32;
+        }
+        if let Some(v) = get("beta_score").and_then(|v| v.as_str()) {
+            self.beta.score = BetaScore::parse(v).ok_or_else(|| anyhow!("unknown score {v}"))?;
+        }
+        if let Some(v) = get("fixed_batches").and_then(|v| v.as_bool()) {
+            self.batcher_mode = if v { BatcherMode::Fixed } else { BatcherMode::Stochastic };
+        }
+        if let Some(v) = get("eval_every").and_then(|v| v.as_i64()) {
+            self.eval_every = v as usize;
+        }
+        if let Some(v) = get("target_acc").and_then(|v| v.as_f64()) {
+            self.target_acc = Some(v);
+        }
+        if let Some(v) = get("artifact_dir").and_then(|v| v.as_str()) {
+            self.artifact_dir = v.to_string();
+        }
+        if let Some(v) = get("pipeline").and_then(|v| v.as_bool()) {
+            self.pipeline = v;
+        }
+        if let Some(v) = get("spider_period").and_then(|v| v.as_i64()) {
+            self.spider_period = v as usize;
+        }
+        Ok(())
+    }
+
+    pub fn apply_cli(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.opt("config") {
+            let text = std::fs::read_to_string(v)?;
+            let doc = toml_parse(&text).map_err(|e| anyhow!("{v}: {e}"))?;
+            self.apply_toml(&doc)?;
+        }
+        if let Some(v) = args.opt("dataset") {
+            self.dataset = DatasetId::parse(v).ok_or_else(|| anyhow!("unknown dataset {v}"))?;
+        }
+        if let Some(v) = args.opt("arch") {
+            self.arch = v.to_string();
+        }
+        if let Some(v) = args.opt("method") {
+            self.method = Method::parse(v).ok_or_else(|| anyhow!("unknown method {v}"))?;
+        }
+        if let Some(v) = args.opt_usize("seed") {
+            self.seed = v as u64;
+        }
+        if let Some(v) = args.opt_usize("parts") {
+            self.parts = v;
+        }
+        if let Some(v) = args.opt_usize("clusters-per-batch") {
+            self.clusters_per_batch = v;
+        }
+        if let Some(v) = args.opt_usize("epochs") {
+            self.epochs = v;
+        }
+        if let Some(v) = args.opt_f64("lr") {
+            self.lr = v;
+        }
+        if let Some(v) = args.opt_f64("beta-alpha") {
+            self.beta.alpha = v as f32;
+        }
+        if let Some(v) = args.opt("beta-score") {
+            self.beta.score = BetaScore::parse(v).ok_or_else(|| anyhow!("unknown score {v}"))?;
+        }
+        if let Some(v) = args.opt_f64("target-acc") {
+            self.target_acc = Some(v);
+        }
+        if let Some(v) = args.opt_usize("eval-every") {
+            self.eval_every = v;
+        }
+        if let Some(v) = args.opt("artifacts") {
+            self.artifact_dir = v.to_string();
+        }
+        if args.has_flag("fixed-batches") {
+            self.batcher_mode = BatcherMode::Fixed;
+        }
+        if args.has_flag("pipeline") {
+            self.pipeline = true;
+        }
+        if args.has_flag("verbose") {
+            self.verbose = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_overrides() {
+        let doc = toml_parse(
+            "[train]\nmethod = \"gas\"\ndataset = \"reddit-sim\"\nlr = 0.005\nepochs = 7\nbeta_score = \"2x-x2\"\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.method, Method::Gas);
+        assert_eq!(cfg.dataset, DatasetId::RedditSim);
+        assert_eq!(cfg.lr, 0.005);
+        assert_eq!(cfg.epochs, 7);
+        assert_eq!(cfg.beta.score, BetaScore::TwoXMinusXSquared);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            ["train", "--method", "cluster", "--epochs", "3", "--verbose"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut cfg = RunConfig::default();
+        cfg.apply_cli(&args).unwrap();
+        assert_eq!(cfg.method, Method::Cluster);
+        assert_eq!(cfg.epochs, 3);
+        assert!(cfg.verbose);
+    }
+}

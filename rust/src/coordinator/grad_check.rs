@@ -1,0 +1,128 @@
+//! Gradient-error measurement (paper Fig. 3): relative error of each
+//! method's mini-batch gradients against the exact full-batch gradient,
+//! per message-passing layer.
+
+use anyhow::Result;
+
+use super::exact::Evaluator;
+use super::params::{grad_rel_err, Params};
+use super::trainer::Trainer;
+use crate::runtime::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct GradErrorReport {
+    /// Relative error per MP layer (‖g~ - ∇L‖ / ‖∇L‖ over that layer's params),
+    /// averaged over the epoch's mini-batches with Eq. 15 weights applied.
+    pub per_layer: Vec<f64>,
+    /// Overall relative error of the epoch-summed mini-batch gradient.
+    pub overall: f64,
+}
+
+/// Measure mini-batch gradient errors at the trainer's current parameters.
+///
+/// Protocol (paper §7.2): full-batch gradient from the exact oracle; for
+/// each mini-batch in one epoch, the per-batch relative errors are averaged;
+/// dropout is absent by construction (deterministic programs).
+pub fn measure(trainer: &mut Trainer) -> Result<GradErrorReport> {
+    let eval = Evaluator::new(&trainer.rt, &trainer.graph, &trainer.profile, &trainer.cfg.arch)?;
+    let oracle = eval.full_grad(&trainer.graph, &trainer.params)?;
+    let arch = trainer
+        .rt
+        .manifest
+        .arch(&trainer.profile, &trainer.cfg.arch)?
+        .clone();
+    let l_total = arch.l;
+
+    // layer -> indices of its params (plus embed0/head assigned to layer 1/L)
+    let layer_of = |name: &str| -> usize {
+        for (l, names) in &arch.layer_params {
+            if names.iter().any(|n| n == name) {
+                return *l;
+            }
+        }
+        if name == "W0" || name == "b0" {
+            1
+        } else {
+            l_total
+        }
+    };
+
+    // Clone the batcher so (a) the trainer's sampling stream is untouched
+    // and (b) repeated measurements at the same state (e.g. toggling the
+    // method policy) see the *same* mini-batches — the sampling variance
+    // then cancels in method comparisons and only the bias differs.
+    let batches = trainer.batcher.clone().epoch_batches();
+    let nb = batches.len().max(1);
+    let mut per_layer_acc = vec![0f64; l_total];
+    let mut overall_acc = 0f64;
+    for batch in &batches {
+        let (_, grads) = trainer.compute_minibatch_grads(batch, None, false)?;
+        overall_acc += grad_rel_err(&grads, &oracle.grads);
+        for l in 1..=l_total {
+            let sel: Vec<usize> = trainer
+                .params
+                .names
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| layer_of(n) == l)
+                .map(|(i, _)| i)
+                .collect();
+            let g: Vec<Tensor> = sel.iter().map(|&i| grads[i].clone()).collect();
+            let r: Vec<Tensor> = sel.iter().map(|&i| oracle.grads[i].clone()).collect();
+            per_layer_acc[l - 1] += grad_rel_err(&g, &r);
+        }
+    }
+    Ok(GradErrorReport {
+        per_layer: per_layer_acc.iter().map(|x| x / nb as f64).collect(),
+        overall: overall_acc / nb as f64,
+    })
+}
+
+/// Convenience: measure errors after `warm_epochs` of training (histories
+/// need a few epochs to populate before the comparison is meaningful).
+pub fn measure_after_warmup(trainer: &mut Trainer, warm_epochs: usize) -> Result<GradErrorReport> {
+    for _ in 0..warm_epochs {
+        trainer.train_epoch()?;
+    }
+    measure(trainer)
+}
+
+/// Gradient *bias*: the relative error of the partition-summed mini-batch
+/// gradient (per-batch grads divided by the Eq. 15 weight b/c, summed over
+/// one epoch's batches) against the exact full-batch gradient. The cluster
+/// sampling variance cancels in the sum (Theorem 1), isolating the bias
+/// term of Theorem 2 that LMC's compensations shrink.
+pub fn measure_bias(trainer: &mut Trainer) -> Result<f64> {
+    let eval = Evaluator::new(&trainer.rt, &trainer.graph, &trainer.profile, &trainer.cfg.arch)?;
+    let oracle = eval.full_grad(&trainer.graph, &trainer.params)?;
+    let gs = trainer.batcher.grad_scale();
+    let batches = trainer.batcher.clone().epoch_batches();
+    let mut sum: Option<Vec<Tensor>> = None;
+    for batch in &batches {
+        let (_, grads) = trainer.compute_minibatch_grads(batch, None, false)?;
+        sum = Some(match sum {
+            None => grads,
+            Some(acc) => acc
+                .iter()
+                .zip(&grads)
+                .map(|(a, b)| {
+                    Tensor::from_vec(
+                        &a.shape,
+                        a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+                    )
+                })
+                .collect(),
+        });
+    }
+    let mean: Vec<Tensor> = sum
+        .unwrap_or_else(|| trainer.params.zeros_like())
+        .iter()
+        .map(|s| Tensor::from_vec(&s.shape, s.data.iter().map(|x| x / gs).collect()))
+        .collect();
+    Ok(grad_rel_err(&mean, &oracle.grads))
+}
+
+#[allow(dead_code)]
+fn _assert_params_api(p: &Params) -> usize {
+    p.num_scalars()
+}

@@ -1,0 +1,141 @@
+//! Per-run metrics trace: epoch records, curve export (Fig. 2/4/5 series),
+//! epochs/runtime-to-target (Table 2 protocol).
+
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub wall_secs: f64,
+    pub epoch_secs: f64,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub val_acc: f64,  // NaN if not evaluated this epoch
+    pub test_acc: f64, // NaN if not evaluated this epoch
+    pub active_bytes: usize,
+    pub staleness: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub records: Vec<EpochRecord>,
+    /// (epoch, wall seconds) at which target test accuracy was reached.
+    pub reached_target: Option<(usize, f64)>,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, r: EpochRecord) {
+        self.records.push(r);
+    }
+
+    pub fn best_val_test(&self) -> Option<(f64, f64)> {
+        // test accuracy at the best validation epoch (paper protocol)
+        let mut best: Option<(f64, f64)> = None;
+        for r in &self.records {
+            if r.val_acc.is_nan() {
+                continue;
+            }
+            if best.map(|(v, _)| r.val_acc > v).unwrap_or(true) {
+                best = Some((r.val_acc, r.test_acc));
+            }
+        }
+        best
+    }
+
+    pub fn final_test(&self) -> Option<f64> {
+        self.records.iter().rev().find(|r| !r.test_acc.is_nan()).map(|r| r.test_acc)
+    }
+
+    pub fn peak_active_bytes(&self) -> usize {
+        self.records.iter().map(|r| r.active_bytes).max().unwrap_or(0)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.records.last().map(|r| r.wall_secs).unwrap_or(0.0)
+    }
+
+    pub fn mean_epoch_secs(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.epoch_secs).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// Smoothed test-accuracy curve (sliding window, as in Fig. 2).
+    pub fn smoothed_test(&self, window: usize) -> Vec<(f64, f64)> {
+        let pts: Vec<(f64, f64)> = self
+            .records
+            .iter()
+            .filter(|r| !r.test_acc.is_nan())
+            .map(|r| (r.wall_secs, r.test_acc))
+            .collect();
+        let w = window.max(1);
+        (0..pts.len())
+            .map(|i| {
+                let s = i.saturating_sub(w - 1);
+                let slice = &pts[s..=i];
+                let mean = slice.iter().map(|&(_, a)| a).sum::<f64>() / slice.len() as f64;
+                (pts[i].0, mean)
+            })
+            .collect()
+    }
+
+    pub fn curve_table(&self, label: &str) -> Table {
+        let mut t = Table::new(
+            &format!("curve: {label}"),
+            &["epoch", "wall_secs", "train_loss", "val_acc", "test_acc", "staleness"],
+        );
+        for r in &self.records {
+            t.row(vec![
+                r.epoch.to_string(),
+                format!("{:.3}", r.wall_secs),
+                format!("{:.5}", r.train_loss),
+                format!("{:.4}", r.val_acc),
+                format!("{:.4}", r.test_acc),
+                format!("{:.2}", r.staleness),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, val: f64, test: f64, secs: f64) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            wall_secs: secs,
+            epoch_secs: 1.0,
+            train_loss: 1.0 / epoch as f64,
+            train_acc: 0.5,
+            val_acc: val,
+            test_acc: test,
+            active_bytes: 1000,
+            staleness: 1.0,
+        }
+    }
+
+    #[test]
+    fn best_val_picks_test_at_best_val() {
+        let mut m = RunMetrics::default();
+        m.push(rec(1, 0.5, 0.48, 1.0));
+        m.push(rec(2, 0.7, 0.66, 2.0));
+        m.push(rec(3, 0.6, 0.72, 3.0));
+        assert_eq!(m.best_val_test(), Some((0.7, 0.66)));
+        assert_eq!(m.final_test(), Some(0.72));
+    }
+
+    #[test]
+    fn smoothing_window() {
+        let mut m = RunMetrics::default();
+        for e in 1..=5 {
+            m.push(rec(e, 0.5, e as f64 / 10.0, e as f64));
+        }
+        let sm = m.smoothed_test(3);
+        assert_eq!(sm.len(), 5);
+        // last point = mean of 0.3, 0.4, 0.5
+        assert!((sm[4].1 - 0.4).abs() < 1e-9);
+    }
+}

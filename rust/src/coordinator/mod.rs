@@ -1,0 +1,16 @@
+//! L3 coordinator: the paper's training system as scheduling policies over
+//! the AOT-compiled compute (see DESIGN.md §1).
+
+pub mod exact;
+pub mod grad_check;
+pub mod memory;
+pub mod methods;
+pub mod metrics;
+pub mod params;
+pub mod trainer;
+
+pub use exact::{EvalResult, Evaluator, OracleResult};
+pub use methods::{BetaConfig, Method};
+pub use metrics::{EpochRecord, RunMetrics};
+pub use params::{Adam, AdamConfig, Params};
+pub use trainer::{StepStats, Trainer};

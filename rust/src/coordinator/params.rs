@@ -1,0 +1,202 @@
+//! Model parameters (host-resident, canonical manifest order) and the Adam
+//! optimizer (paper uses Adam across all experiments).
+
+use crate::runtime::{ArchInfo, Tensor};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Params {
+    /// Glorot-uniform matrices, zero vectors — same scheme as
+    /// `python/compile/archs.py` so Rust-initialized training matches the
+    /// Python-side tests' regime.
+    pub fn init(arch: &ArchInfo, rng: &mut Rng) -> Params {
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for (name, shape) in &arch.params {
+            let t = if shape.len() >= 2 {
+                let fan_in = shape[0] as f64;
+                let fan_out = shape[1] as f64;
+                let scale = (6.0 / (fan_in + fan_out)).sqrt();
+                let data: Vec<f32> = (0..shape.iter().product::<usize>())
+                    .map(|_| rng.uniform(-scale, scale) as f32)
+                    .collect();
+                Tensor::from_vec(shape, data)
+            } else {
+                Tensor::zeros(shape)
+            };
+            names.push(name.clone());
+            tensors.push(t);
+        }
+        Params { names, tensors }
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index_of(name).map(|i| &self.tensors[i])
+    }
+
+    pub fn num_scalars(&self) -> usize {
+        self.tensors.iter().map(|t| t.elems()).sum()
+    }
+
+    /// Zero gradients with matching shapes.
+    pub fn zeros_like(&self) -> Vec<Tensor> {
+        self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect()
+    }
+}
+
+/// Gradient norm helpers (Fig. 3 and convergence diagnostics).
+pub fn grad_l2(grads: &[Tensor]) -> f64 {
+    grads.iter().map(|g| g.norm().powi(2)).sum::<f64>().sqrt()
+}
+
+pub fn grad_rel_err(g: &[Tensor], reference: &[Tensor]) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (a, b) in g.iter().zip(reference) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            let d = (*x - *y) as f64;
+            num += d * d;
+            den += (*y as f64) * (*y as f64);
+        }
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[derive(Clone, Debug)]
+pub struct AdamConfig {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(params: &Params, cfg: AdamConfig) -> Adam {
+        Adam {
+            cfg,
+            m: params.tensors.iter().map(|t| vec![0f32; t.elems()]).collect(),
+            v: params.tensors.iter().map(|t| vec![0f32; t.elems()]).collect(),
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, params: &mut Params, grads: &[Tensor]) {
+        assert_eq!(grads.len(), params.tensors.len());
+        self.t += 1;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let lr = self.cfg.lr;
+        for (pi, g) in grads.iter().enumerate() {
+            let p = &mut params.tensors[pi].data;
+            let m = &mut self.m[pi];
+            let v = &mut self.v[pi];
+            for i in 0..p.len() {
+                let mut gi = g.data[i] as f64;
+                if self.cfg.weight_decay != 0.0 {
+                    gi += self.cfg.weight_decay * p[i] as f64;
+                }
+                let mi = b1 * m[i] as f64 + (1.0 - b1) * gi;
+                let vi = b2 * v[i] as f64 + (1.0 - b2) * gi * gi;
+                m[i] = mi as f32;
+                v[i] = vi as f32;
+                let mhat = mi / bc1;
+                let vhat = vi / bc2;
+                p[i] -= (lr * mhat / (vhat.sqrt() + self.cfg.eps)) as f32;
+            }
+        }
+    }
+}
+
+/// Plain SGD (used by the convergence-theory sanity tests; Theorems 2-3 are
+/// stated for SGD).
+pub fn sgd_step(params: &mut Params, grads: &[Tensor], lr: f64) {
+    for (pi, g) in grads.iter().enumerate() {
+        let p = &mut params.tensors[pi].data;
+        for i in 0..p.len() {
+            p[i] -= (lr * g.data[i] as f64) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_params() -> Params {
+        Params {
+            names: vec!["w".into()],
+            tensors: vec![Tensor::from_vec(&[2], vec![3.0, -2.0])],
+        }
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut p = quad_params();
+        let mut opt = Adam::new(&p, AdamConfig { lr: 0.1, ..Default::default() });
+        for _ in 0..500 {
+            let g = Tensor::from_vec(&[2], p.tensors[0].data.iter().map(|&x| 2.0 * x).collect());
+            opt.step(&mut p, &[g]);
+        }
+        assert!(p.tensors[0].data.iter().all(|&x| x.abs() < 1e-2), "{:?}", p.tensors[0].data);
+    }
+
+    #[test]
+    fn sgd_minimizes_quadratic() {
+        let mut p = quad_params();
+        for _ in 0..200 {
+            let g = Tensor::from_vec(&[2], p.tensors[0].data.iter().map(|&x| 2.0 * x).collect());
+            sgd_step(&mut p, &[g], 0.1);
+        }
+        assert!(p.tensors[0].data.iter().all(|&x| x.abs() < 1e-3));
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let arch = ArchInfo {
+            l: 1,
+            dims: vec![4, 8],
+            params: vec![("W1".into(), vec![4, 8]), ("b1".into(), vec![8])],
+            head_params: vec![],
+            layer_params: Default::default(),
+        };
+        let mut rng = Rng::new(0);
+        let p = Params::init(&arch, &mut rng);
+        let bound = (6.0f64 / 12.0).sqrt() as f32;
+        assert!(p.get("W1").unwrap().data.iter().all(|&x| x.abs() <= bound));
+        assert!(p.get("b1").unwrap().data.iter().all(|&x| x == 0.0));
+        assert_eq!(p.num_scalars(), 40);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let g = vec![Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0])];
+        assert!(grad_rel_err(&g, &g) < 1e-12);
+        assert!((grad_l2(&g) - (14f64).sqrt()).abs() < 1e-9);
+    }
+}

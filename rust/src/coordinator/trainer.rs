@@ -1,0 +1,499 @@
+//! The training coordinator: paper Algorithm 1 as an event loop over the
+//! compiled train_step program, with per-method policies for adjacency,
+//! compensation scalars, and history write-back.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::exact::{EvalResult, Evaluator};
+use super::memory;
+use super::methods::Method;
+use super::metrics::{EpochRecord, RunMetrics};
+use super::params::{Adam, AdamConfig, Params, sgd_step};
+use crate::config::RunConfig;
+use crate::graph::{load, Graph};
+use crate::history::History;
+use crate::partition::{partition, PartitionConfig};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_vec_f32, ProgramSpec, Runtime, Tensor};
+use crate::sampler::{beta_vector, build_subgraph, gather_rows, Batcher, Buckets, SubgraphBatch};
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+pub struct Trainer {
+    pub rt: Arc<Runtime>,
+    pub cfg: RunConfig,
+    pub graph: Arc<Graph>,
+    pub clusters: Vec<Vec<u32>>,
+    pub profile: String,
+    pub params: Params,
+    pub opt: Adam,
+    pub history: History,
+    pub batcher: Batcher,
+    pub rng: Rng,
+    pub n_train: usize,
+    pub buckets: Buckets,
+    pub metrics: RunMetrics,
+    /// SPIDER state (Appendix F): previous params + running estimator.
+    spider_prev: Option<(Params, Vec<Tensor>)>,
+    step_count: u64,
+}
+
+/// One mini-batch step's host-visible results.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub loss_mean: f64,
+    pub train_acc: f64,
+    pub labeled: usize,
+    pub active_bytes: usize,
+    pub dropped_halo: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: Arc<Runtime>, cfg: RunConfig) -> Result<Trainer> {
+        let raw = load(cfg.dataset, cfg.seed);
+        let profile = cfg.dataset.profile().to_string();
+        let arch = rt.manifest.arch(&profile, &cfg.arch)?.clone();
+        let prof = rt
+            .manifest
+            .profiles
+            .get(&profile)
+            .ok_or_else(|| anyhow!("profile {profile} missing from manifest"))?
+            .clone();
+        // cross-check dataset dims vs compiled artifacts
+        if raw.d_x != prof.d_x || raw.n_class != prof.n_class {
+            return Err(anyhow!(
+                "dataset {} dims (d_x={}, c={}) do not match manifest profile {} (d_x={}, c={})",
+                cfg.dataset.name(),
+                raw.d_x,
+                raw.n_class,
+                profile,
+                prof.d_x,
+                prof.n_class
+            ));
+        }
+
+        // METIS-substitute partition, then relabel nodes cluster-contiguously
+        let k = cfg.parts_or_default();
+        let part = partition(&raw.csr, &PartitionConfig::new(k, cfg.seed ^ 0x9A27));
+        let perm = part.contiguous_perm();
+        let graph = Arc::new(raw.permute(&perm));
+        // clusters in the permuted id space are contiguous ranges
+        let mut clusters: Vec<Vec<u32>> = Vec::with_capacity(k);
+        let mut base = 0u32;
+        for c in part.clusters() {
+            let len = c.len() as u32;
+            clusters.push((base..base + len).collect());
+            base += len;
+        }
+        clusters.retain(|c| !c.is_empty());
+
+        let mut rng = Rng::new(cfg.seed ^ 0x7E57);
+        let params = Params::init(&arch, &mut rng);
+        let opt = Adam::new(
+            &params,
+            AdamConfig { lr: cfg.lr, weight_decay: cfg.weight_decay, ..Default::default() },
+        );
+        let hist_dims: Vec<usize> = arch.dims[1..arch.l].to_vec();
+        let history = History::new(graph.n(), &hist_dims);
+        let batcher = Batcher::new(
+            clusters.clone(),
+            cfg.clusters_per_batch,
+            cfg.batcher_mode,
+            cfg.seed ^ 0xBA7C,
+        );
+        let n_train = graph.split.iter().filter(|&&s| s == 0).count();
+        let buckets = Buckets(prof.step_buckets.clone());
+        Ok(Trainer {
+            rt,
+            cfg,
+            graph,
+            clusters,
+            profile,
+            params,
+            opt,
+            history,
+            batcher,
+            rng,
+            n_train,
+            buckets,
+            metrics: RunMetrics::default(),
+            spider_prev: None,
+            step_count: 0,
+        })
+    }
+
+    pub fn arch_l(&self) -> usize {
+        self.rt.manifest.arch(&self.profile, &self.cfg.arch).unwrap().l
+    }
+
+    /// Assemble the positional input literals for the train_step program.
+    fn assemble_inputs(
+        &self,
+        spec: &ProgramSpec,
+        sb: &SubgraphBatch,
+        params: &Params,
+    ) -> Result<Vec<xla::Literal>> {
+        let g = &self.graph;
+        let (bb, bh) = (sb.bucket_b, sb.bucket_h);
+        let method = self.cfg.method;
+        let mut out = Vec::with_capacity(spec.inputs.len());
+        for ts in &spec.inputs {
+            let name = ts.name.as_str();
+            let lit = if let Some(pi) = params.index_of(name) {
+                params.tensors[pi].to_literal()?
+            } else if name == "X_b" {
+                lit_f32(&gather_rows(&g.features, g.d_x, &sb.batch, bb), &[bb, g.d_x])?
+            } else if name == "X_h" {
+                lit_f32(&gather_rows(&g.features, g.d_x, &sb.halo, bh), &[bh, g.d_x])?
+            } else if name == "A_bb" {
+                lit_f32(&sb.a_bb, &[bb, bb])?
+            } else if name == "A_bh" {
+                lit_f32(&sb.a_bh, &[bb, bh])?
+            } else if name == "A_hh" {
+                lit_f32(&sb.a_hh, &[bh, bh])?
+            } else if let Some(l) = name.strip_prefix("histH") {
+                let l: usize = l.parse()?;
+                if method.uses_history() {
+                    lit_f32(&self.history.gather_h(l, &sb.halo, bh), &[bh, ts.shape[1]])?
+                } else {
+                    lit_f32(&vec![0f32; bh * ts.shape[1]], &[bh, ts.shape[1]])?
+                }
+            } else if let Some(l) = name.strip_prefix("histV") {
+                let l: usize = l.parse()?;
+                if method.stores_aux() {
+                    lit_f32(&self.history.gather_v(l, &sb.halo, bh), &[bh, ts.shape[1]])?
+                } else {
+                    lit_f32(&vec![0f32; bh * ts.shape[1]], &[bh, ts.shape[1]])?
+                }
+            } else if name == "y_b" {
+                let y: Vec<i32> = padded_labels(g, &sb.batch, bb);
+                lit_i32(&y, &[bb])?
+            } else if name == "y_h" {
+                let y: Vec<i32> = padded_labels(g, &sb.halo, bh);
+                lit_i32(&y, &[bh])?
+            } else if name == "mask_b" {
+                lit_f32(&train_mask(g, &sb.batch, bb), &[bb])?
+            } else if name == "mask_h" {
+                lit_f32(&train_mask(g, &sb.halo, bh), &[bh])?
+            } else if name == "beta" {
+                let beta = if method.uses_beta() {
+                    beta_vector(sb, self.cfg.beta.alpha, self.cfg.beta.score)
+                } else {
+                    vec![0f32; bh]
+                };
+                lit_f32(&beta, &[bh])?
+            } else if name == "bwd_scale" {
+                let bs = if self.cfg.force_bwd_off { 0.0 } else { method.bwd_scale() };
+                lit_scalar(bs)
+            } else if name == "vscale" {
+                lit_scalar(1.0 / self.n_train.max(1) as f32)
+            } else if name == "grad_scale" {
+                lit_scalar(self.batcher.grad_scale())
+            } else {
+                return Err(anyhow!("unknown train_step input '{name}'"));
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// Run one mini-batch step end-to-end (sample -> execute -> write-back ->
+    /// optimize). Returns stats and the raw gradients (for diagnostics).
+    pub fn step(&mut self, batch: &[u32]) -> Result<(StepStats, Vec<Tensor>)> {
+        let (stats, grads) = self.compute_minibatch_grads(batch, None, true)?;
+        let grads_t = grads;
+        if self.cfg.method == Method::LmcSpider {
+            self.spider_step(batch, &stats, &grads_t)?;
+        } else {
+            self.opt.step(&mut self.params, &grads_t);
+        }
+        self.step_count += 1;
+        Ok((stats, grads_t))
+    }
+
+    /// Compute mini-batch gradients (optionally at explicitly-given params,
+    /// for SPIDER), with or without history write-back.
+    pub fn compute_minibatch_grads(
+        &mut self,
+        batch: &[u32],
+        at_params: Option<&Params>,
+        write_back: bool,
+    ) -> Result<(StepStats, Vec<Tensor>)> {
+        let sb = build_subgraph(
+            &self.graph,
+            batch,
+            self.cfg.method.adjacency_policy(),
+            &self.buckets,
+            &mut self.rng,
+        )?;
+        self.grads_for_subgraph(&sb, at_params, write_back)
+    }
+
+    /// Execute the train_step for a pre-built subgraph (the pipeline path
+    /// builds subgraphs on a prefetch thread; history gathers stay on this
+    /// thread at execute time, so results are identical to the serial path).
+    pub fn grads_for_subgraph(
+        &mut self,
+        sb: &SubgraphBatch,
+        at_params: Option<&Params>,
+        write_back: bool,
+    ) -> Result<(StepStats, Vec<Tensor>)> {
+        let method = self.cfg.method;
+        let spec = self
+            .rt
+            .manifest
+            .train_step(&self.profile, &self.cfg.arch, sb.bucket_b, sb.bucket_h)?
+            .clone();
+        let params_ref = at_params.unwrap_or(&self.params);
+        let inputs = self.assemble_inputs(&spec, sb, params_ref)?;
+        let active_bytes = memory::program_active_bytes(&spec);
+        let outs = self.rt.execute(&spec.name, &inputs)?;
+
+        let loss_sum = to_vec_f32(&outs[spec.output_index("loss_sum")?])?[0] as f64;
+        let correct = to_vec_f32(&outs[spec.output_index("correct")?])?[0] as f64;
+        let labeled = sb
+            .batch
+            .iter()
+            .filter(|&&u| self.graph.split[u as usize] == 0)
+            .count();
+
+        // gradients in canonical order
+        let mut grads = Vec::with_capacity(self.params.names.len());
+        for (pi, name) in self.params.names.iter().enumerate() {
+            let g = to_vec_f32(&outs[spec.output_index(&format!("g_{name}"))?])?;
+            grads.push(Tensor::from_vec(&self.params.tensors[pi].shape, g));
+        }
+
+        if write_back {
+            let l_total = self.arch_l();
+            if method.uses_history() {
+                for l in 1..l_total {
+                    let new_h = to_vec_f32(&outs[spec.output_index(&format!("newH{l}"))?])?;
+                    self.history.scatter_h(l, &sb.batch, &new_h);
+                }
+            }
+            if method.stores_aux() {
+                for l in 1..l_total {
+                    let new_v = to_vec_f32(&outs[spec.output_index(&format!("newV{l}"))?])?;
+                    self.history.scatter_v(l, &sb.batch, &new_v);
+                }
+            }
+            if let Some(m) = method.halo_momentum() {
+                for l in 1..l_total {
+                    let fresh = to_vec_f32(&outs[spec.output_index(&format!("htilde{l}"))?])?;
+                    self.history.momentum_h(l, &sb.halo, &fresh, m);
+                }
+            }
+            if method.uses_history() {
+                self.history.tick(&sb.batch);
+            }
+        }
+
+        let stats = StepStats {
+            loss_mean: loss_sum / labeled.max(1) as f64,
+            train_acc: correct / labeled.max(1) as f64,
+            labeled,
+            active_bytes,
+            dropped_halo: sb.dropped_halo,
+        };
+        Ok((stats, grads))
+    }
+
+    /// SPIDER update (Appendix F): periodic anchors via the exact oracle;
+    /// in between, v_k = g(W_k; B_k) - g(W_{k-1}; B_k) + v_{k-1}.
+    fn spider_step(&mut self, batch: &[u32], _stats: &StepStats, grads_now: &[Tensor]) -> Result<()> {
+        let anchor_due = self.step_count % self.cfg.spider_period as u64 == 0;
+        let estimator: Vec<Tensor> = if anchor_due || self.spider_prev.is_none() {
+            let eval = Evaluator::new(&self.rt, &self.graph, &self.profile, &self.cfg.arch)?;
+            eval.full_grad(&self.graph, &self.params)?.grads
+        } else {
+            let (prev_params, prev_est) = self.spider_prev.take().unwrap();
+            let (_, grads_prev) = self.compute_minibatch_grads(batch, Some(&prev_params), false)?;
+            grads_now
+                .iter()
+                .zip(&grads_prev)
+                .zip(&prev_est)
+                .map(|((gn, gp), pe)| {
+                    let data: Vec<f32> = gn
+                        .data
+                        .iter()
+                        .zip(&gp.data)
+                        .zip(&pe.data)
+                        .map(|((a, b), c)| a - b + c)
+                        .collect();
+                    Tensor::from_vec(&gn.shape, data)
+                })
+                .collect()
+        };
+        let prev_params = self.params.clone();
+        sgd_step(&mut self.params, &estimator, self.cfg.lr);
+        self.spider_prev = Some((prev_params, estimator));
+        Ok(())
+    }
+
+    /// One full training epoch; returns aggregate stats.
+    ///
+    /// With `cfg.pipeline`, subgraph densification for step i+1 overlaps the
+    /// PJRT execution of step i on a prefetch thread (GAS §E.2-style
+    /// concurrent mini-batch execution). Only graph *structure* is
+    /// prefetched; history gathers stay on this thread at execute time, so
+    /// results are bit-identical to the serial path.
+    pub fn train_epoch(&mut self) -> Result<StepStats> {
+        if self.cfg.method == Method::Gd {
+            return self.gd_epoch();
+        }
+        let batches = self.batcher.epoch_batches();
+        let mut agg = EpochAgg::default();
+        if self.cfg.pipeline && batches.len() > 1 {
+            let policy = self.cfg.method.adjacency_policy();
+            let graph = self.graph.clone();
+            let buckets = self.buckets.clone();
+            // per-batch deterministic rng streams
+            let mut rngs: Vec<Rng> =
+                (0..batches.len()).map(|i| self.rng.fork(i as u64)).collect();
+            let batches_bg = batches.clone();
+            let (tx, rx) = std::sync::mpsc::sync_channel::<Result<SubgraphBatch>>(2);
+            let handle = std::thread::spawn(move || {
+                for (i, b) in batches_bg.iter().enumerate() {
+                    let sb = build_subgraph(&graph, b, policy, &buckets, &mut rngs[i]);
+                    if tx.send(sb).is_err() {
+                        break;
+                    }
+                }
+            });
+            // densification of batches i+1, i+2 overlaps execution of batch i
+            // (channel capacity 2 bounds prefetch memory)
+            for _ in 0..batches.len() {
+                let sb = rx
+                    .recv()
+                    .map_err(|e| anyhow!("prefetch thread died: {e}"))??;
+                let (s, grads) = self.grads_for_subgraph(&sb, None, true)?;
+                self.opt.step(&mut self.params, &grads);
+                self.step_count += 1;
+                agg.add(&s);
+            }
+            handle.join().ok();
+        } else {
+            for b in &batches {
+                let (s, _) = self.step(b)?;
+                agg.add(&s);
+            }
+        }
+        Ok(agg.finish())
+    }
+
+    fn gd_epoch(&mut self) -> Result<StepStats> {
+        let eval = Evaluator::new(&self.rt, &self.graph, &self.profile, &self.cfg.arch)?;
+        let oracle = eval.full_grad(&self.graph, &self.params)?;
+        let bytes = memory::gd_active_bytes(
+            self.graph.n(),
+            &self.rt.manifest.arch(&self.profile, &self.cfg.arch)?.dims,
+            self.graph.d_x,
+            self.graph.csr.neighbors.len(),
+        );
+        self.opt.step(&mut self.params, &oracle.grads);
+        self.step_count += 1;
+        Ok(StepStats {
+            loss_mean: oracle.train_loss,
+            train_acc: 0.0,
+            labeled: self.n_train,
+            active_bytes: bytes,
+            dropped_halo: 0,
+        })
+    }
+
+    pub fn evaluate(&self) -> Result<EvalResult> {
+        let eval = Evaluator::new(&self.rt, &self.graph, &self.profile, &self.cfg.arch)?;
+        eval.evaluate(&self.graph, &self.params)
+    }
+
+    /// Full training run with periodic evaluation; honors `target_acc` early
+    /// stop (Table 2 protocol). Returns the metrics trace.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        let sw = Stopwatch::start();
+        for epoch in 1..=self.cfg.epochs {
+            let es = Stopwatch::start();
+            let stats = self.train_epoch()?;
+            let epoch_secs = es.secs();
+            let do_eval = epoch % self.cfg.eval_every.max(1) == 0 || epoch == self.cfg.epochs;
+            let eval = if do_eval { Some(self.evaluate()?) } else { None };
+            let rec = EpochRecord {
+                epoch,
+                wall_secs: sw.secs(),
+                epoch_secs,
+                train_loss: stats.loss_mean,
+                train_acc: stats.train_acc,
+                val_acc: eval.as_ref().map(|e| e.val_acc).unwrap_or(f64::NAN),
+                test_acc: eval.as_ref().map(|e| e.test_acc).unwrap_or(f64::NAN),
+                active_bytes: stats.active_bytes,
+                staleness: self.history.mean_staleness(),
+            };
+            if self.cfg.verbose {
+                println!(
+                    "epoch {:>4}  loss {:.4}  val {:.4}  test {:.4}  ({:.2}s)",
+                    epoch,
+                    rec.train_loss,
+                    rec.val_acc,
+                    rec.test_acc,
+                    rec.wall_secs
+                );
+            }
+            self.metrics.push(rec);
+            if let (Some(target), Some(e)) = (self.cfg.target_acc, eval.as_ref()) {
+                if e.test_acc >= target {
+                    self.metrics.reached_target = Some((epoch, sw.secs()));
+                    break;
+                }
+            }
+        }
+        Ok(self.metrics.clone())
+    }
+}
+
+fn padded_labels(g: &Graph, idx: &[u32], rows: usize) -> Vec<i32> {
+    let mut y = vec![0i32; rows];
+    for (i, &u) in idx.iter().enumerate() {
+        y[i] = g.labels[u as usize] as i32;
+    }
+    y
+}
+
+fn train_mask(g: &Graph, idx: &[u32], rows: usize) -> Vec<f32> {
+    let mut m = vec![0f32; rows];
+    for (i, &u) in idx.iter().enumerate() {
+        if g.split[u as usize] == 0 {
+            m[i] = 1.0;
+        }
+    }
+    m
+}
+
+#[derive(Default)]
+struct EpochAgg {
+    loss_w: f64,
+    acc_w: f64,
+    labeled: usize,
+    peak_bytes: usize,
+    dropped: usize,
+}
+
+impl EpochAgg {
+    fn add(&mut self, s: &StepStats) {
+        self.loss_w += s.loss_mean * s.labeled as f64;
+        self.acc_w += s.train_acc * s.labeled as f64;
+        self.labeled += s.labeled;
+        self.peak_bytes = self.peak_bytes.max(s.active_bytes);
+        self.dropped += s.dropped_halo;
+    }
+
+    fn finish(&self) -> StepStats {
+        StepStats {
+            loss_mean: self.loss_w / self.labeled.max(1) as f64,
+            train_acc: self.acc_w / self.labeled.max(1) as f64,
+            labeled: self.labeled,
+            active_bytes: self.peak_bytes,
+            dropped_halo: self.dropped,
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Figure 4 (compensation ablation: GAS vs C_f vs C_f & C_b) and
+//! Tables 8-9 (beta hyperparameter sweeps, paper §E.4).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::sampler::BetaScore;
+use crate::util::table::Table;
+
+/// Fig. 4: on arxiv-sim (GCN), small (1 cluster) and large (10 clusters)
+/// batches: GAS vs LMC-with-only-C_f vs full LMC.
+pub fn run_fig4(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Figure 4: improvement of the compensations (arxiv-sim, GCN)",
+        &["batch_size", "variant", "best_test_acc", "final_test_acc"],
+    );
+    for &bs in &[1usize, 10] {
+        for (variant, method, bwd_off, beta_alpha) in [
+            ("GAS", "gas", false, 0.0f32),
+            ("Cf", "lmc", true, 1.0),
+            ("Cf&Cb", "lmc", false, 1.0),
+        ] {
+            let mut cfg = ctx.base_cfg("arxiv-sim", "gcn", method)?;
+            cfg.clusters_per_batch = bs;
+            cfg.epochs = ctx.epochs(40);
+            cfg.force_bwd_off = bwd_off;
+            cfg.beta.alpha = beta_alpha;
+            if bs == 1 {
+                cfg.lr = 5e-3;
+            }
+            let (_, m) = ctx.run(cfg)?;
+            let best = m.best_val_test().map(|(_, a)| a).unwrap_or(f64::NAN);
+            let fin = m.final_test().unwrap_or(f64::NAN);
+            t.row(vec![
+                bs.to_string(),
+                variant.to_string(),
+                format!("{:.2}", 100.0 * best),
+                format!("{:.2}", 100.0 * fin),
+            ]);
+            println!("fig4: bs={bs} {variant} best={:.2}", 100.0 * best);
+        }
+    }
+    t.save(&ctx.out, "fig4")?;
+    println!("{}", t.to_markdown());
+    Ok(t)
+}
+
+/// Table 8: LMC accuracy vs alpha on arxiv-sim (GCN), batch sizes 1 and 10.
+pub fn run_table8(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 8: prediction performance under different alpha (arxiv-sim)",
+        &["batch_size", "alpha=0.0", "0.2", "0.4", "0.6", "0.8", "1.0"],
+    );
+    for &(bs, lr) in &[(1usize, 5e-3), (10usize, 1e-2)] {
+        let mut cells = vec![bs.to_string()];
+        for &alpha in &[0.0f32, 0.2, 0.4, 0.6, 0.8, 1.0] {
+            let mut cfg = ctx.base_cfg("arxiv-sim", "gcn", "lmc")?;
+            cfg.clusters_per_batch = bs;
+            cfg.lr = lr;
+            cfg.epochs = ctx.epochs(30);
+            cfg.beta.alpha = alpha;
+            cfg.beta.score = BetaScore::TwoXMinusXSquared;
+            let (_, m) = ctx.run(cfg)?;
+            let best = m.best_val_test().map(|(_, a)| a).unwrap_or(f64::NAN);
+            cells.push(format!("{:.2}", 100.0 * best));
+            println!("table8: bs={bs} alpha={alpha} -> {:.2}", 100.0 * best);
+        }
+        t.row(cells);
+    }
+    t.save(&ctx.out, "table8")?;
+    println!("{}", t.to_markdown());
+    Ok(t)
+}
+
+/// Table 9: LMC accuracy vs score function on arxiv-sim (GCN).
+pub fn run_table9(ctx: &Ctx) -> Result<Table> {
+    let scores = [
+        BetaScore::TwoXMinusXSquared,
+        BetaScore::One,
+        BetaScore::XSquared,
+        BetaScore::X,
+        BetaScore::SinX,
+    ];
+    let mut header = vec!["batch_size".to_string()];
+    header.extend(scores.iter().map(|s| s.name().to_string()));
+    let mut t = Table::new(
+        "Table 9: prediction performance under different score (arxiv-sim)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for &(bs, lr, alpha) in &[(1usize, 5e-3, 0.4f32), (10usize, 1e-2, 1.0)] {
+        let mut cells = vec![bs.to_string()];
+        for &score in &scores {
+            let mut cfg = ctx.base_cfg("arxiv-sim", "gcn", "lmc")?;
+            cfg.clusters_per_batch = bs;
+            cfg.lr = lr;
+            cfg.epochs = ctx.epochs(30);
+            cfg.beta.alpha = alpha;
+            cfg.beta.score = score;
+            let (_, m) = ctx.run(cfg)?;
+            let best = m.best_val_test().map(|(_, a)| a).unwrap_or(f64::NAN);
+            cells.push(format!("{:.2}", 100.0 * best));
+            println!("table9: bs={bs} score={} -> {:.2}", score.name(), 100.0 * best);
+        }
+        t.row(cells);
+    }
+    t.save(&ctx.out, "table9")?;
+    println!("{}", t.to_markdown());
+    Ok(t)
+}

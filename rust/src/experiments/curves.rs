@@ -1,0 +1,77 @@
+//! Figure 2 (test acc / train loss vs runtime, large datasets) and
+//! Figure 5 (small Planetoid-style datasets incl. full-batch GD).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::util::table::Table;
+
+fn curve_rows(t: &mut Table, label: &str, m: &crate::coordinator::RunMetrics, smooth: usize) {
+    let smoothed = m.smoothed_test(smooth);
+    let mut si = 0usize;
+    for r in &m.records {
+        let sm = if !r.test_acc.is_nan() && si < smoothed.len() {
+            let v = smoothed[si].1;
+            si += 1;
+            v
+        } else {
+            f64::NAN
+        };
+        t.row(vec![
+            label.to_string(),
+            r.epoch.to_string(),
+            format!("{:.3}", r.wall_secs),
+            format!("{:.5}", r.train_loss),
+            format!("{:.4}", r.test_acc),
+            format!("{:.4}", sm),
+        ]);
+    }
+}
+
+/// Fig. 2: convergence curves for CLUSTER/GAS/FM/LMC on arxiv-sim and
+/// reddit-sim (GCN) — runtime on the x axis, smoothed test accuracy and
+/// train loss as series.
+pub fn run_fig2(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Figure 2: test accuracy & training loss vs runtime",
+        &["series", "epoch", "wall_secs", "train_loss", "test_acc", "test_acc_smooth"],
+    );
+    for ds in ["arxiv-sim", "reddit-sim"] {
+        for method in ["cluster", "gas", "fm", "lmc"] {
+            let mut cfg = ctx.base_cfg(ds, "gcn", method)?;
+            cfg.epochs = ctx.epochs(40);
+            cfg.eval_every = 1;
+            let (_, m) = ctx.run(cfg)?;
+            curve_rows(&mut t, &format!("{ds}/{method}"), &m, 5);
+            println!(
+                "fig2: {ds}/{method} final test {:.4}",
+                m.final_test().unwrap_or(f64::NAN)
+            );
+        }
+    }
+    t.save(&ctx.out, "fig2")?;
+    Ok(t)
+}
+
+/// Fig. 5: GD vs GAS vs LMC on cora/citeseer/pubmed-sim (GCN).
+pub fn run_fig5(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Figure 5: small datasets — testing accuracy vs runtime",
+        &["series", "epoch", "wall_secs", "train_loss", "test_acc", "test_acc_smooth"],
+    );
+    for ds in ["cora-sim", "citeseer-sim", "pubmed-sim"] {
+        for method in ["gd", "gas", "lmc"] {
+            let mut cfg = ctx.base_cfg(ds, "gcn", method)?;
+            cfg.epochs = ctx.epochs(40);
+            cfg.eval_every = 1;
+            let (_, m) = ctx.run(cfg)?;
+            curve_rows(&mut t, &format!("{ds}/{method}"), &m, 5);
+            println!(
+                "fig5: {ds}/{method} final test {:.4}",
+                m.final_test().unwrap_or(f64::NAN)
+            );
+        }
+    }
+    t.save(&ctx.out, "fig5")?;
+    Ok(t)
+}

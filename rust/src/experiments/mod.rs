@@ -1,0 +1,117 @@
+//! Experiment harness: one runner per paper table/figure (DESIGN.md §4).
+//!
+//! Each runner regenerates the corresponding artifact as CSV + markdown in
+//! `--out` (default `results/`). Absolute numbers differ from the paper
+//! (simulated datasets, CPU PJRT substrate); the *shape* — method ordering,
+//! approximate speedup factors, crossovers — is the reproduction target and
+//! is asserted by `rust/tests/test_experiments.rs` on scaled-down settings.
+
+mod ablation;
+mod curves;
+mod efficiency;
+mod grad_error;
+mod prediction;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{RunMetrics, Trainer};
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+
+pub use ablation::{run_fig4, run_table8, run_table9};
+pub use curves::{run_fig2, run_fig5};
+pub use efficiency::{run_table2, run_table6, run_table7};
+pub use grad_error::run_fig3;
+pub use prediction::{run_table1, run_table3};
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub rt: Arc<Runtime>,
+    pub out: PathBuf,
+    /// Global epoch scale: 1.0 = paper-shaped defaults; tests use ~0.1.
+    pub epoch_scale: f64,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn new(artifact_dir: &str, out: &str, epoch_scale: f64, seed: u64) -> Result<Ctx> {
+        Ok(Ctx {
+            rt: Arc::new(Runtime::new(Path::new(artifact_dir))?),
+            out: PathBuf::from(out),
+            epoch_scale,
+            seed,
+        })
+    }
+
+    pub fn epochs(&self, base: usize) -> usize {
+        ((base as f64 * self.epoch_scale).round() as usize).max(2)
+    }
+
+    /// Build and run one training configuration; returns the metrics trace.
+    pub fn run(&self, mut cfg: RunConfig) -> Result<(Trainer, RunMetrics)> {
+        cfg.artifact_dir.clear(); // runtime already loaded; field unused here
+        let mut t = Trainer::new(self.rt.clone(), cfg)?;
+        let m = t.run()?;
+        Ok((t, m))
+    }
+
+    pub fn base_cfg(&self, dataset: &str, arch: &str, method: &str) -> Result<RunConfig> {
+        let mut cfg = RunConfig {
+            seed: self.seed,
+            ..RunConfig::default()
+        };
+        cfg.dataset = crate::graph::DatasetId::parse(dataset)
+            .ok_or_else(|| anyhow!("dataset {dataset}"))?;
+        cfg.arch = arch.to_string();
+        cfg.method = crate::coordinator::Method::parse(method)
+            .ok_or_else(|| anyhow!("method {method}"))?;
+        Ok(cfg)
+    }
+}
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("usage: lmc experiment <id> [--out DIR]"))?;
+    let ctx = Ctx::new(
+        args.opt_or("artifacts", "artifacts"),
+        args.opt_or("out", "results"),
+        args.opt_f64("epoch-scale").unwrap_or(1.0),
+        args.opt_usize("seed").unwrap_or(0) as u64,
+    )?;
+    std::fs::create_dir_all(&ctx.out)?;
+    match id {
+        "table1" => run_table1(&ctx).map(|_| ()),
+        "table2" => run_table2(&ctx).map(|_| ()),
+        "table3" => run_table3(&ctx).map(|_| ()),
+        "table6" => run_table6(&ctx).map(|_| ()),
+        "table7" => run_table7(&ctx).map(|_| ()),
+        "table8" => run_table8(&ctx).map(|_| ()),
+        "table9" => run_table9(&ctx).map(|_| ()),
+        "fig2" => run_fig2(&ctx).map(|_| ()),
+        "fig3" => run_fig3(&ctx).map(|_| ()),
+        "fig4" => run_fig4(&ctx).map(|_| ()),
+        "fig5" => run_fig5(&ctx).map(|_| ()),
+        "all" => {
+            run_table1(&ctx)?;
+            run_table2(&ctx)?;
+            run_table3(&ctx)?;
+            run_table6(&ctx)?;
+            run_table7(&ctx)?;
+            run_table8(&ctx)?;
+            run_table9(&ctx)?;
+            run_fig2(&ctx)?;
+            run_fig3(&ctx)?;
+            run_fig4(&ctx)?;
+            run_fig5(&ctx)?;
+            Ok(())
+        }
+        other => Err(anyhow!("unknown experiment '{other}'")),
+    }
+}

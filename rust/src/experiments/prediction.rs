@@ -1,0 +1,68 @@
+//! Table 1 (prediction performance) and Table 3 (batch-size robustness).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::util::table::Table;
+
+const T1_DATASETS: &[&str] = &["reddit-sim", "ppi-sim", "flickr-sim", "arxiv-sim"];
+const T1_METHODS: &[&str] = &["cluster", "gas", "fm", "lmc"];
+
+/// Table 1: test accuracy (at best validation epoch) per dataset x arch x
+/// method, plus the full-batch GD reference row.
+pub fn run_table1(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 1: prediction performance (test acc % at best val)",
+        &["method", "arch", "reddit-sim", "ppi-sim", "flickr-sim", "arxiv-sim"],
+    );
+    for arch in ["gcn", "gcnii"] {
+        for method in std::iter::once(&"gd").chain(T1_METHODS) {
+            let mut cells = vec![method.to_uppercase(), arch.to_string()];
+            for ds in T1_DATASETS {
+                let mut cfg = ctx.base_cfg(ds, arch, method)?;
+                cfg.epochs = ctx.epochs(if *method == "gd" { 80 } else { 40 });
+                cfg.eval_every = 2;
+                let (_, m) = ctx.run(cfg)?;
+                let acc = m.best_val_test().map(|(_, t)| t).unwrap_or(f64::NAN);
+                cells.push(format!("{:.2}", 100.0 * acc));
+                println!("table1: {method}/{arch}/{ds} -> {:.2}", 100.0 * acc);
+            }
+            t.row(cells);
+        }
+    }
+    t.save(&ctx.out, "table1")?;
+    println!("{}", t.to_markdown());
+    Ok(t)
+}
+
+/// Table 3: accuracy under batch sizes (clusters per batch) 1/2/5/10 on
+/// arxiv-sim, GAS vs LMC, GCN and GCNII.
+pub fn run_table3(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 3: performance under different batch sizes (arxiv-sim)",
+        &["batch_size", "gcn GAS", "gcn LMC", "gcnii GAS", "gcnii LMC"],
+    );
+    for &bs in &[1usize, 2, 5, 10] {
+        let mut cells = vec![bs.to_string()];
+        for arch in ["gcn", "gcnii"] {
+            for method in ["gas", "lmc"] {
+                let mut cfg = ctx.base_cfg("arxiv-sim", arch, method)?;
+                cfg.clusters_per_batch = bs;
+                cfg.epochs = ctx.epochs(40);
+                // paper: smaller lr works better at tiny batches
+                if bs <= 2 {
+                    cfg.lr = 5e-3;
+                }
+                let (_, m) = ctx.run(cfg)?;
+                let acc = m.best_val_test().map(|(_, t)| t).unwrap_or(f64::NAN);
+                cells.push(format!("{:.2}", 100.0 * acc));
+                println!("table3: bs={bs} {method}/{arch} -> {:.2}", 100.0 * acc);
+            }
+        }
+        // reorder: we generated gcn-gas, gcn-lmc, gcnii-gas, gcnii-lmc ✓
+        t.row(cells);
+    }
+    t.save(&ctx.out, "table3")?;
+    println!("{}", t.to_markdown());
+    Ok(t)
+}

@@ -1,0 +1,286 @@
+//! CSR graph with GCN symmetric normalization (paper §3.1-3.2 substrate).
+//!
+//! Edges are stored undirected (both directions present), without self-loops;
+//! the GCN normalization `Ahat = D~^{-1/2} (A + I) D~^{-1/2}` is precomputed
+//! as per-edge weights plus a per-node self-loop weight, so the sampler can
+//! densify any subgraph block by simple gathers.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n: usize,
+    pub offsets: Vec<u32>,   // len n+1
+    pub neighbors: Vec<u32>, // len 2|E|
+}
+
+impl Csr {
+    /// Build from an undirected edge list (u < v pairs or any mix;
+    /// deduplicates, drops self-loops, symmetrizes).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            let (u, v) = (u as usize, v as usize);
+            assert!(u < n && v < n, "edge ({u},{v}) out of range n={n}");
+            if u == v {
+                continue;
+            }
+            adj[u].push(v as u32);
+            adj[v].push(u as u32);
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut neighbors = Vec::new();
+        offsets.push(0u32);
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+            neighbors.extend_from_slice(l);
+            offsets.push(neighbors.len() as u32);
+        }
+        Csr { n, offsets, neighbors }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.neighbors[self.offsets[u] as usize..self.offsets[u + 1] as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        (self.offsets[u + 1] - self.offsets[u]) as usize
+    }
+
+    pub fn num_undirected_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.neighbors(u).binary_search(&(v as u32)).is_ok()
+    }
+
+    /// Symmetry check (every stored arc has its reverse).
+    pub fn is_symmetric(&self) -> bool {
+        (0..self.n).all(|u| self.neighbors(u).iter().all(|&v| self.has_edge(v as usize, u)))
+    }
+
+    /// Relabel nodes: `perm[new] = old`. Returns the relabeled graph.
+    pub fn permute(&self, perm: &[u32]) -> Csr {
+        assert_eq!(perm.len(), self.n);
+        let mut inv = vec![0u32; self.n];
+        for (newi, &old) in perm.iter().enumerate() {
+            inv[old as usize] = newi as u32;
+        }
+        let mut edges = Vec::with_capacity(self.neighbors.len() / 2);
+        for u in 0..self.n {
+            for &v in self.neighbors(u) {
+                if (v as usize) > u {
+                    edges.push((inv[u], inv[v as usize]));
+                }
+            }
+        }
+        Csr::from_edges(self.n, &edges)
+    }
+}
+
+/// A fully-attributed dataset graph (features, labels, splits, normalization).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub csr: Csr,
+    pub d_x: usize,
+    pub n_class: usize,
+    /// Row-major [n, d_x].
+    pub features: Vec<f32>,
+    pub labels: Vec<u16>,
+    /// 0 = train, 1 = val, 2 = test.
+    pub split: Vec<u8>,
+    /// GCN-normalized edge weight per stored arc, aligned with csr.neighbors.
+    pub edge_w: Vec<f32>,
+    /// GCN-normalized self-loop weight per node: 1/(deg+1).
+    pub self_w: Vec<f32>,
+    /// Connected-component / sub-graph id per node (PPI-style multi-graph).
+    pub graph_id: Vec<u16>,
+}
+
+impl Graph {
+    pub fn new(csr: Csr, d_x: usize, n_class: usize, features: Vec<f32>, labels: Vec<u16>, split: Vec<u8>) -> Graph {
+        let n = csr.n;
+        assert_eq!(features.len(), n * d_x);
+        assert_eq!(labels.len(), n);
+        assert_eq!(split.len(), n);
+        let (edge_w, self_w) = gcn_normalize(&csr);
+        Graph { csr, d_x, n_class, features, labels, split, edge_w, self_w, graph_id: vec![0; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.csr.n
+    }
+
+    pub fn feature_row(&self, u: usize) -> &[f32] {
+        &self.features[u * self.d_x..(u + 1) * self.d_x]
+    }
+
+    /// Normalized weight of arc index `e` (aligned with csr.neighbors).
+    #[inline]
+    pub fn arc_weight(&self, e: usize) -> f32 {
+        self.edge_w[e]
+    }
+
+    pub fn split_indices(&self, which: u8) -> Vec<u32> {
+        (0..self.n() as u32).filter(|&i| self.split[i as usize] == which).collect()
+    }
+
+    pub fn num_labeled_train(&self) -> usize {
+        self.split.iter().filter(|&&s| s == 0).count()
+    }
+
+    /// Permute node ids (used to lay clusters out contiguously for locality).
+    pub fn permute(&self, perm: &[u32]) -> Graph {
+        let n = self.n();
+        assert_eq!(perm.len(), n);
+        let csr = self.csr.permute(perm);
+        let mut features = vec![0f32; n * self.d_x];
+        let mut labels = vec![0u16; n];
+        let mut split = vec![0u8; n];
+        let mut graph_id = vec![0u16; n];
+        for (newi, &old) in perm.iter().enumerate() {
+            let old = old as usize;
+            features[newi * self.d_x..(newi + 1) * self.d_x]
+                .copy_from_slice(&self.features[old * self.d_x..(old + 1) * self.d_x]);
+            labels[newi] = self.labels[old];
+            split[newi] = self.split[old];
+            graph_id[newi] = self.graph_id[old];
+        }
+        let mut g = Graph::new(csr, self.d_x, self.n_class, features, labels, split);
+        g.graph_id = graph_id;
+        g
+    }
+}
+
+/// GCN symmetric normalization with self-loops: for arc (u, v),
+/// `w = 1/sqrt((deg(u)+1)(deg(v)+1))`; self weight `1/(deg(u)+1)`.
+pub fn gcn_normalize(csr: &Csr) -> (Vec<f32>, Vec<f32>) {
+    let n = csr.n;
+    let inv_sqrt: Vec<f32> = (0..n).map(|u| 1.0 / ((csr.degree(u) + 1) as f32).sqrt()).collect();
+    let mut edge_w = vec![0f32; csr.neighbors.len()];
+    for u in 0..n {
+        let (s, e) = (csr.offsets[u] as usize, csr.offsets[u + 1] as usize);
+        for i in s..e {
+            let v = csr.neighbors[i] as usize;
+            edge_w[i] = inv_sqrt[u] * inv_sqrt[v];
+        }
+    }
+    let self_w: Vec<f32> = (0..n).map(|u| inv_sqrt[u] * inv_sqrt[u]).collect();
+    (edge_w, self_w)
+}
+
+/// Local re-normalization of an induced subgraph (CLUSTER-GCN policy,
+/// paper §E.2): degrees counted inside the subgraph only. Returns the dense
+/// [b, b] row-major normalized adjacency including self-loops.
+pub fn local_normalized_dense(csr: &Csr, nodes: &[u32]) -> Vec<f32> {
+    let b = nodes.len();
+    let pos: std::collections::HashMap<u32, usize> =
+        nodes.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+    let mut adj = vec![false; b * b];
+    let mut deg = vec![1f32; b]; // +1 self-loop
+    for (i, &u) in nodes.iter().enumerate() {
+        for &v in csr.neighbors(u as usize) {
+            if let Some(&j) = pos.get(&v) {
+                adj[i * b + j] = true;
+                deg[i] += 1.0;
+            }
+        }
+    }
+    let inv: Vec<f32> = deg.iter().map(|d| 1.0 / d.sqrt()).collect();
+    let mut out = vec![0f32; b * b];
+    for i in 0..b {
+        out[i * b + i] = inv[i] * inv[i];
+        for j in 0..b {
+            if adj[i * b + j] {
+                out[i * b + j] = inv[i] * inv[j];
+            }
+        }
+    }
+    out
+}
+
+/// Random graph helper used by tests/benches: Erdos-Renyi G(n, p).
+pub fn random_graph(n: usize, p: f64, rng: &mut Rng) -> Csr {
+    let mut edges = Vec::new();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            if rng.next_f64() < p {
+                edges.push((u, v));
+            }
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_symmetric_dedup() {
+        let c = Csr::from_edges(4, &[(0, 1), (1, 0), (1, 2), (2, 3), (3, 3)]);
+        assert!(c.is_symmetric());
+        assert_eq!(c.num_undirected_edges(), 3);
+        assert_eq!(c.neighbors(1), &[0, 2]);
+        assert_eq!(c.degree(3), 1); // self-loop dropped
+    }
+
+    #[test]
+    fn normalization_matches_formula() {
+        // Ahat = D~^{-1/2}(A+I)D~^{-1/2}: arc (u,v) -> 1/sqrt(d~u d~v),
+        // self-loop -> 1/d~u. Symmetric by construction.
+        let mut rng = Rng::new(1);
+        let c = random_graph(30, 0.2, &mut rng);
+        let (ew, sw) = gcn_normalize(&c);
+        for u in 0..c.n {
+            let du = (c.degree(u) + 1) as f32;
+            assert!((sw[u] - 1.0 / du).abs() < 1e-6);
+            for i in c.offsets[u] as usize..c.offsets[u + 1] as usize {
+                let v = c.neighbors[i] as usize;
+                let dv = (c.degree(v) + 1) as f32;
+                assert!((ew[i] - 1.0 / (du * dv).sqrt()).abs() < 1e-6);
+                // symmetry: find reverse arc weight
+                let j = c.offsets[v] as usize
+                    + c.neighbors(v).binary_search(&(u as u32)).unwrap();
+                assert_eq!(ew[i], ew[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn permute_preserves_structure() {
+        let mut rng = Rng::new(2);
+        let c = random_graph(20, 0.2, &mut rng);
+        let mut perm: Vec<u32> = (0..20).collect();
+        rng.shuffle(&mut perm);
+        let p = c.permute(&perm);
+        assert_eq!(p.num_undirected_edges(), c.num_undirected_edges());
+        // spot check: edge (perm-mapped) preserved
+        let mut inv = vec![0u32; 20];
+        for (newi, &old) in perm.iter().enumerate() {
+            inv[old as usize] = newi as u32;
+        }
+        for u in 0..20usize {
+            for &v in c.neighbors(u) {
+                assert!(p.has_edge(inv[u] as usize, inv[v as usize] as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn local_normalization_dense() {
+        let c = Csr::from_edges(5, &[(0, 1), (1, 2), (3, 4), (0, 4)]);
+        let nodes = [0u32, 1, 2];
+        let d = local_normalized_dense(&c, &nodes);
+        // node 0 in-subgraph degree 1 (+1 self) -> self weight 1/2
+        assert!((d[0] - 0.5).abs() < 1e-6);
+        // (0,1): 1/sqrt(2*3)
+        assert!((d[1] - 1.0 / (6f32).sqrt()).abs() < 1e-6);
+        // no (0,2) edge
+        assert_eq!(d[2], 0.0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Dataset registry: scaled-down, statistic-matched analogues of the paper's
+//! benchmarks (DESIGN.md §5 documents the substitution). Dimensions must
+//! agree with `python/compile/spec.py` profiles — the runtime cross-checks
+//! them against the artifact manifest at load time.
+
+use super::csr::Graph;
+use super::gen::{disjoint_union, sbm, SbmSpec};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetId {
+    ArxivSim,
+    FlickrSim,
+    RedditSim,
+    PpiSim,
+    CoraSim,
+    CiteseerSim,
+    PubmedSim,
+}
+
+impl DatasetId {
+    pub fn parse(name: &str) -> Option<DatasetId> {
+        Some(match name {
+            "arxiv-sim" | "arxiv" => DatasetId::ArxivSim,
+            "flickr-sim" | "flickr" => DatasetId::FlickrSim,
+            "reddit-sim" | "reddit" => DatasetId::RedditSim,
+            "ppi-sim" | "ppi" => DatasetId::PpiSim,
+            "cora-sim" | "cora" => DatasetId::CoraSim,
+            "citeseer-sim" | "citeseer" => DatasetId::CiteseerSim,
+            "pubmed-sim" | "pubmed" => DatasetId::PubmedSim,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetId::ArxivSim => "arxiv-sim",
+            DatasetId::FlickrSim => "flickr-sim",
+            DatasetId::RedditSim => "reddit-sim",
+            DatasetId::PpiSim => "ppi-sim",
+            DatasetId::CoraSim => "cora-sim",
+            DatasetId::CiteseerSim => "citeseer-sim",
+            DatasetId::PubmedSim => "pubmed-sim",
+        }
+    }
+
+    /// Artifact profile this dataset's programs were compiled for
+    /// (must match python/compile/spec.py).
+    pub fn profile(&self) -> &'static str {
+        match self {
+            DatasetId::ArxivSim | DatasetId::RedditSim => "std16",
+            DatasetId::FlickrSim => "flickr",
+            DatasetId::PpiSim => "ppi",
+            DatasetId::CoraSim | DatasetId::CiteseerSim | DatasetId::PubmedSim => "planetoid",
+        }
+    }
+
+    /// Default METIS-substitute partition count (paper uses 40-150 parts on
+    /// the full-size datasets; scaled proportionally here).
+    pub fn default_parts(&self) -> usize {
+        match self {
+            DatasetId::ArxivSim => 20,
+            DatasetId::FlickrSim => 16,
+            DatasetId::RedditSim => 24,
+            DatasetId::PpiSim => 24,
+            DatasetId::CoraSim | DatasetId::CiteseerSim | DatasetId::PubmedSim => 8,
+        }
+    }
+
+    pub fn all() -> &'static [DatasetId] {
+        &[
+            DatasetId::ArxivSim,
+            DatasetId::FlickrSim,
+            DatasetId::RedditSim,
+            DatasetId::PpiSim,
+            DatasetId::CoraSim,
+            DatasetId::CiteseerSim,
+            DatasetId::PubmedSim,
+        ]
+    }
+}
+
+/// Build a dataset. Deterministic in (dataset, seed).
+pub fn load(id: DatasetId, seed: u64) -> Graph {
+    match id {
+        // ogbn-arxiv: 169k nodes, 40 classes, deg ~13, 54/18/28 split
+        // -> 2400 nodes, 16 classes, deg ~10.
+        DatasetId::ArxivSim => sbm(&SbmSpec {
+            n: 2400,
+            n_class: 16,
+            d_x: 64,
+            avg_deg_in: 5.5,
+            avg_deg_out: 4.5,
+            signal: 0.08,
+            train_frac: 0.54,
+            val_frac: 0.18,
+            seed: seed ^ 0xA12F,
+            mu_seed: None,
+        }),
+        // Flickr: 89k nodes, 7 classes, deg ~10, 50/25/25 split
+        // -> 1800 nodes, 7 classes, low signal (Flickr is the hard one).
+        DatasetId::FlickrSim => sbm(&SbmSpec {
+            n: 1800,
+            n_class: 7,
+            d_x: 64,
+            avg_deg_in: 5.0,
+            avg_deg_out: 5.0,
+            signal: 0.07,
+            train_frac: 0.5,
+            val_frac: 0.25,
+            seed: seed ^ 0xF11C,
+            mu_seed: None,
+        }),
+        // Reddit: 233k nodes, 41 classes, deg ~100 (dense!), 66/10/24 split
+        // -> 3000 nodes, 16 classes, deg ~24: the dense workload where
+        // discarded messages (and hence LMC's compensation) matter most.
+        DatasetId::RedditSim => sbm(&SbmSpec {
+            n: 3000,
+            n_class: 16,
+            d_x: 64,
+            avg_deg_in: 13.0,
+            avg_deg_out: 11.0,
+            signal: 0.09,
+            train_frac: 0.66,
+            val_frac: 0.10,
+            seed: seed ^ 0x9EDD,
+            mu_seed: None,
+        }),
+        // PPI: 24 graphs, 121 targets, deg ~28, inductive (20/2/2 graphs)
+        // -> 6 graphs x 400 nodes, 12 classes, train 4 / val 1 / test 1.
+        DatasetId::PpiSim => {
+            let mut parts = Vec::new();
+            for gi in 0..6u64 {
+                parts.push(sbm(&SbmSpec {
+                    n: 400,
+                    n_class: 12,
+                    d_x: 48,
+                    avg_deg_in: 8.0,
+                    avg_deg_out: 6.0,
+                    signal: 0.12,
+                    // intra-graph split irrelevant; overridden by union
+                    train_frac: 1.0,
+                    val_frac: 0.0,
+                    seed: seed ^ (0x99A0 + gi),
+                    // shared class means: inductive transfer requires it
+                    mu_seed: Some(seed ^ 0x99A0),
+                }));
+            }
+            disjoint_union(parts, &[0, 0, 0, 0, 1, 2])
+        }
+        // Planetoid trio: small citation graphs, deg ~4, low label rate.
+        DatasetId::CoraSim => sbm(&SbmSpec {
+            n: 900,
+            n_class: 7,
+            d_x: 48,
+            avg_deg_in: 2.6,
+            avg_deg_out: 1.6,
+            signal: 0.14,
+            train_frac: 0.15,
+            val_frac: 0.25,
+            seed: seed ^ 0xC02A,
+            mu_seed: None,
+        }),
+        DatasetId::CiteseerSim => sbm(&SbmSpec {
+            n: 1100,
+            n_class: 7,
+            d_x: 48,
+            avg_deg_in: 2.2,
+            avg_deg_out: 1.5,
+            signal: 0.12,
+            train_frac: 0.15,
+            val_frac: 0.25,
+            seed: seed ^ 0xC17E,
+            mu_seed: None,
+        }),
+        DatasetId::PubmedSim => sbm(&SbmSpec {
+            n: 1500,
+            n_class: 7,
+            d_x: 48,
+            avg_deg_in: 3.0,
+            avg_deg_out: 1.8,
+            signal: 0.13,
+            train_frac: 0.15,
+            val_frac: 0.25,
+            seed: seed ^ 0x90BE,
+            mu_seed: None,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_datasets_load_and_match_profiles() {
+        for &id in DatasetId::all() {
+            let g = load(id, 0);
+            assert!(g.n() > 0, "{}", id.name());
+            match id.profile() {
+                "std16" => {
+                    assert_eq!(g.d_x, 64);
+                    assert_eq!(g.n_class, 16);
+                }
+                "flickr" => {
+                    assert_eq!(g.d_x, 64);
+                    assert_eq!(g.n_class, 7);
+                }
+                "ppi" => {
+                    assert_eq!(g.d_x, 48);
+                    assert_eq!(g.n_class, 12);
+                }
+                "planetoid" => {
+                    assert_eq!(g.d_x, 48);
+                    assert_eq!(g.n_class, 7);
+                }
+                other => panic!("unknown profile {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for &id in DatasetId::all() {
+            assert_eq!(DatasetId::parse(id.name()), Some(id));
+        }
+        assert_eq!(DatasetId::parse("nope"), None);
+    }
+
+    #[test]
+    fn ppi_is_inductive() {
+        let g = load(DatasetId::PpiSim, 1);
+        // split constant within each graph id
+        for u in 0..g.n() {
+            let gid = g.graph_id[u] as usize;
+            let expect = [0u8, 0, 0, 0, 1, 2][gid];
+            assert_eq!(g.split[u], expect);
+        }
+    }
+}

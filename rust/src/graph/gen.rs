@@ -1,0 +1,259 @@
+//! Synthetic dataset substrate (DESIGN.md §5 substitution).
+//!
+//! Stochastic block model with class-homophilous communities plus
+//! Gaussian-mixture node features. Every mechanism LMC exercises — cluster
+//! locality, halo-vs-batch ratios, message discarding, history staleness —
+//! is a function of structure/homophily, which the SBM reproduces at a scale
+//! where the CPU interpret-mode PJRT substrate can run full experiment
+//! suites.
+
+use super::csr::{Csr, Graph};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SbmSpec {
+    pub n: usize,
+    pub n_class: usize,
+    pub d_x: usize,
+    /// Average intra-class degree contribution.
+    pub avg_deg_in: f64,
+    /// Average inter-class degree contribution.
+    pub avg_deg_out: f64,
+    /// Feature signal strength: x_i = signal * mu_class + noise.
+    pub signal: f32,
+    /// Fractions (train, val); test is the rest.
+    pub train_frac: f64,
+    pub val_frac: f64,
+    pub seed: u64,
+    /// Seed for the class feature means. Defaults to `seed`; multi-graph
+    /// inductive datasets (ppi-sim) share it across graphs so class
+    /// signatures transfer between train and test graphs.
+    pub mu_seed: Option<u64>,
+}
+
+/// Sample an SBM graph with features. Communities are assigned uniformly.
+pub fn sbm(spec: &SbmSpec) -> Graph {
+    let mut rng = Rng::new(spec.seed);
+    let n = spec.n;
+    let k = spec.n_class;
+
+    // class assignment: balanced, then shuffled
+    let mut labels: Vec<u16> = (0..n).map(|i| (i % k) as u16).collect();
+    rng.shuffle(&mut labels);
+
+    // pairwise probabilities from target degrees
+    let per_class = n as f64 / k as f64;
+    let p_in = (spec.avg_deg_in / per_class).min(1.0);
+    let p_out = (spec.avg_deg_out / (n as f64 - per_class)).min(1.0);
+
+    // geometric skipping over the upper triangle for O(E) sampling
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let sample_pairs = |p: f64, same: bool, rng: &mut Rng, edges: &mut Vec<(u32, u32)>| {
+        if p <= 0.0 {
+            return;
+        }
+        // iterate pairs (u < v) with a skip distribution
+        let logq = (1.0 - p).ln();
+        let total = n * (n - 1) / 2;
+        let mut idx: f64 = 0.0;
+        loop {
+            let r = rng.next_f64().max(1e-300);
+            idx += 1.0 + (r.ln() / logq).floor();
+            if idx >= total as f64 {
+                break;
+            }
+            let t = idx as usize;
+            // unrank pair index -> (u, v)
+            let u = pair_row(t, n);
+            let v = t - row_start(u, n) + u + 1;
+            let same_class = labels[u] == labels[v];
+            if same_class == same {
+                edges.push((u as u32, v as u32));
+            }
+        }
+    };
+    // Sample candidate edges at the max rate, then thin per class relation.
+    // (Simpler: sample p_in over all pairs keeping same-class hits, then
+    // p_out keeping cross-class hits; correct marginal probabilities.)
+    sample_pairs(p_in, true, &mut rng, &mut edges);
+    sample_pairs(p_out, false, &mut rng, &mut edges);
+
+    let csr = Csr::from_edges(n, &edges);
+
+    // Gaussian mixture features: one random unit mean per class
+    let mut mu_rng = Rng::new(spec.mu_seed.unwrap_or(spec.seed) ^ 0x5EED);
+    let mut mu = vec![0f32; k * spec.d_x];
+    for c in 0..k {
+        let mut norm = 0f32;
+        for d in 0..spec.d_x {
+            let g = mu_rng.normal() as f32;
+            mu[c * spec.d_x + d] = g;
+            norm += g * g;
+        }
+        let norm = norm.sqrt().max(1e-6);
+        for d in 0..spec.d_x {
+            mu[c * spec.d_x + d] /= norm;
+        }
+    }
+    let mut features = vec![0f32; n * spec.d_x];
+    for i in 0..n {
+        let c = labels[i] as usize;
+        for d in 0..spec.d_x {
+            features[i * spec.d_x + d] =
+                spec.signal * mu[c * spec.d_x + d] * (spec.d_x as f32).sqrt() + rng.normal() as f32;
+        }
+    }
+
+    // stratified split
+    let mut split = vec![2u8; n];
+    for c in 0..k as u16 {
+        let mut idx: Vec<usize> = (0..n).filter(|&i| labels[i] == c).collect();
+        rng.shuffle(&mut idx);
+        let ntr = (idx.len() as f64 * spec.train_frac).round() as usize;
+        let nva = (idx.len() as f64 * spec.val_frac).round() as usize;
+        for (j, &i) in idx.iter().enumerate() {
+            split[i] = if j < ntr {
+                0
+            } else if j < ntr + nva {
+                1
+            } else {
+                2
+            };
+        }
+    }
+
+    Graph::new(csr, spec.d_x, k, features, labels, split)
+}
+
+#[inline]
+fn row_start(u: usize, n: usize) -> usize {
+    // index of pair (u, u+1) in the linearized upper triangle
+    u * n - u * (u + 1) / 2
+}
+
+fn pair_row(t: usize, n: usize) -> usize {
+    // binary search largest u with row_start(u) <= t
+    let (mut lo, mut hi) = (0usize, n - 1);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if row_start(mid, n) <= t {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Disjoint union of graphs (PPI-style multi-graph), tagging graph_id and
+/// overriding the split to be *inductive*: whole graphs are train/val/test.
+pub fn disjoint_union(parts: Vec<Graph>, split_per_graph: &[u8]) -> Graph {
+    assert_eq!(parts.len(), split_per_graph.len());
+    let d_x = parts[0].d_x;
+    let n_class = parts[0].n_class;
+    let total: usize = parts.iter().map(|g| g.n()).sum();
+    let mut edges = Vec::new();
+    let mut features = Vec::with_capacity(total * d_x);
+    let mut labels = Vec::with_capacity(total);
+    let mut split = Vec::with_capacity(total);
+    let mut graph_id = Vec::with_capacity(total);
+    let mut base = 0u32;
+    for (gi, g) in parts.iter().enumerate() {
+        assert_eq!(g.d_x, d_x);
+        assert_eq!(g.n_class, n_class);
+        for u in 0..g.n() {
+            for &v in g.csr.neighbors(u) {
+                if (v as usize) > u {
+                    edges.push((base + u as u32, base + v));
+                }
+            }
+        }
+        features.extend_from_slice(&g.features);
+        labels.extend_from_slice(&g.labels);
+        split.extend(std::iter::repeat(split_per_graph[gi]).take(g.n()));
+        graph_id.extend(std::iter::repeat(gi as u16).take(g.n()));
+        base += g.n() as u32;
+    }
+    let csr = Csr::from_edges(total, &edges);
+    let mut out = Graph::new(csr, d_x, n_class, features, labels, split);
+    out.graph_id = graph_id;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SbmSpec {
+        SbmSpec {
+            n: 600,
+            n_class: 6,
+            d_x: 16,
+            avg_deg_in: 6.0,
+            avg_deg_out: 2.0,
+            signal: 0.5,
+            train_frac: 0.3,
+            val_frac: 0.2,
+            seed: 5,
+            mu_seed: None,
+        }
+    }
+
+    #[test]
+    fn sbm_degree_and_homophily() {
+        let g = sbm(&small_spec());
+        assert_eq!(g.n(), 600);
+        let avg_deg = 2.0 * g.csr.num_undirected_edges() as f64 / g.n() as f64;
+        assert!((avg_deg - 8.0).abs() < 2.0, "avg degree {avg_deg}");
+        // homophily: most edges intra-class
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for u in 0..g.n() {
+            for &v in g.csr.neighbors(u) {
+                total += 1;
+                if g.labels[u] == g.labels[v as usize] {
+                    intra += 1;
+                }
+            }
+        }
+        let h = intra as f64 / total as f64;
+        assert!(h > 0.6, "homophily {h}");
+    }
+
+    #[test]
+    fn sbm_split_stratified() {
+        let g = sbm(&small_spec());
+        let ntr = g.split.iter().filter(|&&s| s == 0).count();
+        let nva = g.split.iter().filter(|&&s| s == 1).count();
+        assert!((ntr as f64 / 600.0 - 0.3).abs() < 0.05);
+        assert!((nva as f64 / 600.0 - 0.2).abs() < 0.05);
+    }
+
+    #[test]
+    fn sbm_deterministic() {
+        let a = sbm(&small_spec());
+        let b = sbm(&small_spec());
+        assert_eq!(a.csr, b.csr);
+        assert_eq!(a.features, b.features);
+    }
+
+    #[test]
+    fn union_is_disjoint_and_inductive() {
+        let mut s = small_spec();
+        s.n = 100;
+        let g1 = sbm(&s);
+        s.seed = 6;
+        let g2 = sbm(&s);
+        let u = disjoint_union(vec![g1.clone(), g2], &[0, 2]);
+        assert_eq!(u.n(), 200);
+        assert!(u.split[..100].iter().all(|&s| s == 0));
+        assert!(u.split[100..].iter().all(|&s| s == 2));
+        // no cross edges
+        for a in 0..100usize {
+            for &b in u.csr.neighbors(a) {
+                assert!((b as usize) < 100);
+            }
+        }
+        assert_eq!(u.graph_id[150], 1);
+    }
+}

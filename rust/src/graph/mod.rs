@@ -1,0 +1,10 @@
+//! Graph substrate: CSR storage, GCN normalization, synthetic dataset
+//! generators, and the dataset registry (paper §3 + §7.1 substitutes).
+
+pub mod csr;
+pub mod datasets;
+pub mod gen;
+
+pub use csr::{gcn_normalize, local_normalized_dense, random_graph, Csr, Graph};
+pub use datasets::{load, DatasetId};
+pub use gen::{disjoint_union, sbm, SbmSpec};

@@ -1,0 +1,166 @@
+//! Historical value store (paper §5): per-layer embeddings `Hbar^l` and
+//! auxiliary variables `Vbar^l` for l = 1..L-1, with staleness tracking and
+//! the per-method write-back policies:
+//!
+//!   - LMC / GAS: scatter in-batch rows after each step (Algorithm 1).
+//!   - FM (GraphFM-OB): additionally push a momentum update of the incomplete
+//!     up-to-date halo values into halo rows.
+//!   - CLUSTER: store unused.
+//!
+//! As in GAS, the store lives in host memory ("RAM or hard drive storage"),
+//! so its footprint does not count against the simulated accelerator memory
+//! (see coordinator::memory).
+
+use crate::sampler::gather_rows;
+
+#[derive(Clone, Debug)]
+pub struct LayerStore {
+    pub d: usize,
+    pub data: Vec<f32>, // [n, d] row-major
+}
+
+impl LayerStore {
+    fn new(n: usize, d: usize) -> Self {
+        LayerStore { d, data: vec![0f32; n * d] }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct History {
+    pub n: usize,
+    /// Hbar^l for l = 1..L-1 (index 0 = layer 1).
+    pub h: Vec<LayerStore>,
+    /// Vbar^l for l = 1..L-1.
+    pub v: Vec<LayerStore>,
+    /// Iteration at which each node's histories were last written.
+    pub last_update: Vec<u64>,
+    pub iter: u64,
+}
+
+impl History {
+    pub fn new(n: usize, layer_dims: &[usize]) -> History {
+        History {
+            n,
+            h: layer_dims.iter().map(|&d| LayerStore::new(n, d)).collect(),
+            v: layer_dims.iter().map(|&d| LayerStore::new(n, d)).collect(),
+            last_update: vec![0; n],
+            iter: 0,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.h.len()
+    }
+
+    /// Gather halo rows of layer `l` (1-based) into a padded [rows, d] buffer.
+    pub fn gather_h(&self, l: usize, idx: &[u32], rows: usize) -> Vec<f32> {
+        let s = &self.h[l - 1];
+        gather_rows(&s.data, s.d, idx, rows)
+    }
+
+    pub fn gather_v(&self, l: usize, idx: &[u32], rows: usize) -> Vec<f32> {
+        let s = &self.v[l - 1];
+        gather_rows(&s.data, s.d, idx, rows)
+    }
+
+    /// Scatter the first `idx.len()` rows of `src` (padded buffer) into
+    /// layer `l`'s H store.
+    pub fn scatter_h(&mut self, l: usize, idx: &[u32], src: &[f32]) {
+        scatter(&mut self.h[l - 1], idx, src);
+    }
+
+    pub fn scatter_v(&mut self, l: usize, idx: &[u32], src: &[f32]) {
+        scatter(&mut self.v[l - 1], idx, src);
+    }
+
+    /// FM momentum push: hist <- (1-m) * hist + m * fresh for halo rows.
+    pub fn momentum_h(&mut self, l: usize, idx: &[u32], fresh: &[f32], m: f32) {
+        let store = &mut self.h[l - 1];
+        let d = store.d;
+        for (i, &u) in idx.iter().enumerate() {
+            let row = &mut store.data[u as usize * d..(u as usize + 1) * d];
+            let f = &fresh[i * d..(i + 1) * d];
+            for (r, &x) in row.iter_mut().zip(f) {
+                *r = (1.0 - m) * *r + m * x;
+            }
+        }
+    }
+
+    /// Mark in-batch nodes updated at the current iteration, then advance.
+    pub fn tick(&mut self, batch: &[u32]) {
+        self.iter += 1;
+        for &u in batch {
+            self.last_update[u as usize] = self.iter;
+        }
+    }
+
+    /// Mean staleness (iterations since last write) over all nodes.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let total: u64 = self.last_update.iter().map(|&t| self.iter - t).sum();
+        total as f64 / self.n as f64
+    }
+
+    /// Total host bytes held by the store.
+    pub fn bytes(&self) -> usize {
+        self.h
+            .iter()
+            .chain(self.v.iter())
+            .map(|s| s.data.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
+
+fn scatter(store: &mut LayerStore, idx: &[u32], src: &[f32]) {
+    let d = store.d;
+    debug_assert!(src.len() >= idx.len() * d, "scatter src too small");
+    for (i, &u) in idx.iter().enumerate() {
+        store.data[u as usize * d..(u as usize + 1) * d]
+            .copy_from_slice(&src[i * d..(i + 1) * d]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut h = History::new(10, &[3, 4]);
+        let idx = [2u32, 5, 7];
+        let src: Vec<f32> = (0..12).map(|x| x as f32).collect(); // 3 rows of d=3 + pad
+        h.scatter_h(1, &idx, &src);
+        let back = h.gather_h(1, &idx, 5);
+        assert_eq!(&back[..9], &src[..9]);
+        assert!(back[9..].iter().all(|&x| x == 0.0)); // padding
+        // untouched rows stay zero
+        let other = h.gather_h(1, &[0, 1], 2);
+        assert!(other.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn momentum_push() {
+        let mut h = History::new(4, &[2]);
+        h.scatter_h(1, &[1], &[1.0, 1.0]);
+        h.momentum_h(1, &[1], &[3.0, 5.0], 0.5);
+        let row = h.gather_h(1, &[1], 1);
+        assert_eq!(row, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn staleness_tracks() {
+        let mut h = History::new(4, &[2]);
+        h.tick(&[0, 1]);
+        h.tick(&[2]);
+        // iter=2: node0,1 age 1; node2 age 0; node3 age 2
+        assert!((h.mean_staleness() - (1.0 + 1.0 + 0.0 + 2.0) / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let h = History::new(100, &[8, 8]);
+        assert_eq!(h.bytes(), 2 * 2 * 100 * 8 * 4);
+    }
+}

@@ -1,0 +1,22 @@
+//! LMC: Fast Training of GNNs via Subgraph-Wise Sampling with Provable
+//! Convergence (Shi, Liang, Wang — ICLR 2023), reproduced as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! Layer map (see DESIGN.md):
+//!   - L3 (this crate): graph substrate, METIS-substitute partitioner,
+//!     subgraph sampler, historical value store, PJRT runtime, training
+//!     coordinator, experiment harness.
+//!   - L2 (`python/compile`): GCN/GCNII forward + explicit backward message
+//!     passing with LMC compensation, AOT-lowered to HLO text.
+//!   - L1 (`python/compile/kernels`): Pallas halo-aggregation and
+//!     compensation kernels.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod history;
+pub mod partition;
+pub mod runtime;
+pub mod sampler;
+pub mod util;

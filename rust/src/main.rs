@@ -1,0 +1,205 @@
+//! `lmc` — leader entrypoint + CLI.
+//!
+//! Subcommands:
+//!   train             train one configuration (flags or --config file)
+//!   eval              exact full-graph evaluation of a fresh model
+//!   partition-stats   METIS-substitute quality report for a dataset
+//!   datasets          list datasets and their stats
+//!   programs          list compiled artifact programs
+//!   grad-error        per-layer mini-batch gradient error (Fig. 3 point)
+//!   experiment <id>   regenerate a paper table/figure (table1, table2,
+//!                     table3, table6, table7, table8, table9, fig2, fig3,
+//!                     fig4, fig5, all)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use lmc::config::RunConfig;
+use lmc::coordinator::{grad_check, Trainer};
+use lmc::graph::{load, DatasetId};
+use lmc::partition::{partition, quality::quality, PartitionConfig};
+use lmc::runtime::Runtime;
+use lmc::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "partition-stats" => cmd_partition_stats(args),
+        "datasets" => cmd_datasets(),
+        "programs" => cmd_programs(args),
+        "grad-error" => cmd_grad_error(args),
+        "experiment" => lmc::experiments::dispatch(args),
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}' (try `lmc help`)")),
+    }
+}
+
+const HELP: &str = "\
+lmc — LMC (ICLR 2023) reproduction: subgraph-wise GNN training with local
+message compensation. rust coordinator + JAX/Pallas AOT compute.
+
+usage: lmc <subcommand> [--flags]
+
+subcommands:
+  train            --dataset D --arch gcn|gcnii --method lmc|gas|fm|cluster|gd
+                   [--epochs N] [--lr F] [--clusters-per-batch C] [--parts K]
+                   [--beta-alpha F] [--beta-score x2|2x-x2|x|1|sinx]
+                   [--target-acc F] [--config file.toml] [--seed N] [--verbose]
+  eval             exact inference with fresh params (pipeline smoke test)
+  partition-stats  --dataset D [--parts K] [--seed N]
+  datasets         list registered datasets
+  programs         list artifact programs (--artifacts DIR)
+  grad-error       --dataset D --method M [--warm-epochs N]
+  experiment ID    table1|table2|table3|table6|table7|table8|table9|
+                   fig2|fig3|fig4|fig5|all   [--out results/]
+";
+
+fn make_trainer(args: &Args) -> Result<Trainer> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_cli(args)?;
+    let rt = Arc::new(Runtime::new(Path::new(&cfg.artifact_dir))?);
+    Trainer::new(rt, cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut trainer = make_trainer(args)?;
+    println!(
+        "training {} / {} / {} — {} nodes, {} clusters, {} epochs",
+        trainer.cfg.dataset.name(),
+        trainer.cfg.arch,
+        trainer.cfg.method.name(),
+        trainer.graph.n(),
+        trainer.clusters.len(),
+        trainer.cfg.epochs
+    );
+    let metrics = trainer.run()?;
+    let (bv, bt) = metrics.best_val_test().unwrap_or((f64::NAN, f64::NAN));
+    println!(
+        "done in {:.1}s — best val {:.4}, test@best-val {:.4}, final test {:.4}",
+        metrics.total_secs(),
+        bv,
+        bt,
+        metrics.final_test().unwrap_or(f64::NAN)
+    );
+    if let Some((ep, secs)) = metrics.reached_target {
+        println!("target accuracy reached at epoch {ep} ({secs:.1}s)");
+    }
+    if let Some(out) = args.opt("out") {
+        let label = format!(
+            "{}_{}_{}",
+            trainer.cfg.dataset.name(),
+            trainer.cfg.arch,
+            trainer.cfg.method.name()
+        );
+        metrics.curve_table(&label).save(Path::new(out), &label)?;
+        println!("curve saved to {out}/{label}.csv");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let trainer = make_trainer(args)?;
+    let e = trainer.evaluate()?;
+    println!(
+        "fresh-params exact eval: train_loss {:.4} train {:.4} val {:.4} test {:.4}",
+        e.train_loss, e.train_acc, e.val_acc, e.test_acc
+    );
+    Ok(())
+}
+
+fn cmd_partition_stats(args: &Args) -> Result<()> {
+    let id = DatasetId::parse(args.opt_or("dataset", "arxiv-sim"))
+        .ok_or_else(|| anyhow!("unknown dataset"))?;
+    let seed = args.opt_usize("seed").unwrap_or(0) as u64;
+    let g = load(id, seed);
+    let k = args.opt_usize("parts").unwrap_or_else(|| id.default_parts());
+    let p = partition(&g.csr, &PartitionConfig::new(k, seed));
+    let q = quality(&g.csr, &p.assign, k);
+    println!(
+        "{}: n={} |E|={} k={} edge_cut={} ({:.1}%) balance={:.3} part sizes [{}, {}]",
+        id.name(),
+        g.n(),
+        g.csr.num_undirected_edges(),
+        k,
+        q.edge_cut,
+        100.0 * q.cut_fraction,
+        q.balance,
+        q.min_part,
+        q.max_part
+    );
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<14} {:>7} {:>9} {:>5} {:>4} {:>8} profile", "dataset", "nodes", "edges", "dx", "cls", "avg_deg");
+    for &id in DatasetId::all() {
+        let g = load(id, 0);
+        println!(
+            "{:<14} {:>7} {:>9} {:>5} {:>4} {:>8.1} {}",
+            id.name(),
+            g.n(),
+            g.csr.num_undirected_edges(),
+            g.d_x,
+            g.n_class,
+            2.0 * g.csr.num_undirected_edges() as f64 / g.n() as f64,
+            id.profile()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_programs(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let rt = Runtime::new(Path::new(dir))?;
+    println!("{} programs in {}", rt.manifest.programs.len(), dir);
+    for (name, p) in &rt.manifest.programs {
+        println!(
+            "  {:<44} kind={:<10} profile={:<9} arch={:<5} B={} H={} in={} out={}",
+            name,
+            p.kind,
+            p.profile,
+            p.arch,
+            p.b,
+            p.h,
+            p.inputs.len(),
+            p.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_grad_error(args: &Args) -> Result<()> {
+    let mut trainer = make_trainer(args)?;
+    let warm = args.opt_usize("warm-epochs").unwrap_or(3);
+    let rep = grad_check::measure_after_warmup(&mut trainer, warm)?;
+    println!(
+        "{} / {} / {} after {} warm epochs:",
+        trainer.cfg.dataset.name(),
+        trainer.cfg.arch,
+        trainer.cfg.method.name(),
+        warm
+    );
+    for (l, e) in rep.per_layer.iter().enumerate() {
+        println!("  layer {}: rel err {:.4}", l + 1, e);
+    }
+    println!("  overall: {:.4}", rep.overall);
+    Ok(())
+}

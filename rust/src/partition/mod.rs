@@ -1,0 +1,368 @@
+//! METIS substitute: multilevel k-way graph partitioning (DESIGN.md §5).
+//!
+//! The paper (and CLUSTER-GCN / GAS) relies on METIS to produce clusters
+//! with few cut edges; LMC only needs that property, not METIS itself.
+//! Pipeline: heavy-edge-matching coarsening -> greedy region-growing initial
+//! partition on the coarsest graph -> uncoarsening with boundary
+//! Kernighan-Lin/FM refinement under a balance constraint.
+
+pub mod quality;
+pub mod refine;
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+pub use quality::{balance, edge_cut, PartitionQuality};
+
+/// A k-way node assignment.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub k: usize,
+    pub assign: Vec<u32>,
+}
+
+impl Partition {
+    /// Cluster membership lists, index = part id.
+    pub fn clusters(&self) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.k];
+        for (u, &p) in self.assign.iter().enumerate() {
+            out[p as usize].push(u as u32);
+        }
+        out
+    }
+
+    /// Permutation laying parts out contiguously: perm[new] = old.
+    pub fn contiguous_perm(&self) -> Vec<u32> {
+        let mut perm = Vec::with_capacity(self.assign.len());
+        for c in self.clusters() {
+            perm.extend(c);
+        }
+        perm
+    }
+}
+
+/// Internal weighted graph used across coarsening levels.
+#[derive(Clone, Debug)]
+pub(crate) struct WGraph {
+    pub n: usize,
+    pub offsets: Vec<u32>,
+    pub nbr: Vec<u32>,
+    pub ew: Vec<u32>, // edge weights (contracted multiplicity)
+    pub nw: Vec<u32>, // node weights (contracted original nodes)
+}
+
+impl WGraph {
+    fn from_csr(csr: &Csr) -> WGraph {
+        WGraph {
+            n: csr.n,
+            offsets: csr.offsets.clone(),
+            nbr: csr.neighbors.clone(),
+            ew: vec![1; csr.neighbors.len()],
+            nw: vec![1; csr.n],
+        }
+    }
+
+    #[inline]
+    pub fn adj(&self, u: usize) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let (s, e) = (self.offsets[u] as usize, self.offsets[u + 1] as usize);
+        self.nbr[s..e].iter().copied().zip(self.ew[s..e].iter().copied())
+    }
+
+    pub fn total_node_weight(&self) -> u64 {
+        self.nw.iter().map(|&w| w as u64).sum()
+    }
+}
+
+/// Heavy-edge matching: each unmatched node matches its heaviest unmatched
+/// neighbor. Returns (coarse graph, map fine -> coarse).
+pub(crate) fn coarsen(g: &WGraph, rng: &mut Rng) -> (WGraph, Vec<u32>) {
+    let n = g.n;
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut matched = vec![u32::MAX; n];
+    let mut coarse_id = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for &u in &order {
+        let u = u as usize;
+        if matched[u] != u32::MAX {
+            continue;
+        }
+        let mut best = u32::MAX;
+        let mut best_w = 0u32;
+        for (v, w) in g.adj(u) {
+            if matched[v as usize] == u32::MAX && v as usize != u && w >= best_w {
+                best = v;
+                best_w = w;
+            }
+        }
+        if best != u32::MAX {
+            matched[u] = best;
+            matched[best as usize] = u as u32;
+            coarse_id[u] = next;
+            coarse_id[best as usize] = next;
+        } else {
+            matched[u] = u as u32;
+            coarse_id[u] = next;
+        }
+        next += 1;
+    }
+    let cn = next as usize;
+    // aggregate edges
+    let mut agg: Vec<std::collections::HashMap<u32, u32>> =
+        vec![std::collections::HashMap::new(); cn];
+    let mut nw = vec![0u32; cn];
+    for u in 0..n {
+        let cu = coarse_id[u];
+        nw[cu as usize] += g.nw[u];
+        for (v, w) in g.adj(u) {
+            let cv = coarse_id[v as usize];
+            if cv != cu {
+                *agg[cu as usize].entry(cv).or_insert(0) += w;
+            }
+        }
+    }
+    let mut offsets = Vec::with_capacity(cn + 1);
+    let mut nbr = Vec::new();
+    let mut ew = Vec::new();
+    offsets.push(0u32);
+    for m in agg.iter() {
+        let mut items: Vec<(u32, u32)> = m.iter().map(|(&v, &w)| (v, w)).collect();
+        items.sort_unstable();
+        for (v, w) in items {
+            nbr.push(v);
+            ew.push(w);
+        }
+        offsets.push(nbr.len() as u32);
+    }
+    (WGraph { n: cn, offsets, nbr, ew, nw }, coarse_id)
+}
+
+/// Greedy region growing: multi-source BFS growing all k regions
+/// round-robin (lightest part grows next), so no part is starved. Growth is
+/// capped at (1+imb)·target so a single region cannot swallow a whole
+/// connected component (disconnected multi-graphs like ppi-sim); when every
+/// reachable frontier is exhausted, the lightest part is re-seeded in
+/// unassigned territory.
+pub(crate) fn initial_partition(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = g.n;
+    let k = k.min(n.max(1));
+    let total = g.total_node_weight();
+    let cap = ((total as f64 / k as f64) * 1.1).ceil() as u64;
+    let mut assign = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    // k distinct seeds
+    let mut queues: Vec<std::collections::VecDeque<u32>> = Vec::with_capacity(k);
+    let mut weights = vec![0u64; k];
+    for (part, &seed) in order.iter().take(k).enumerate() {
+        assign[seed as usize] = part as u32;
+        weights[part] += g.nw[seed as usize] as u64;
+        let mut q = std::collections::VecDeque::new();
+        for (v, _) in g.adj(seed as usize) {
+            q.push_back(v);
+        }
+        queues.push(q);
+    }
+    let mut fallback = k; // cursor into `order` for disconnected leftovers
+    let mut assigned = k.min(n);
+    while assigned < n {
+        // grow the lightest part that can still grow
+        let mut grew = false;
+        let mut by_weight: Vec<usize> = (0..k).collect();
+        by_weight.sort_by_key(|&p| weights[p]);
+        'parts: for &p in &by_weight {
+            if weights[p] >= cap {
+                continue;
+            }
+            while let Some(u) = queues[p].pop_front() {
+                let u = u as usize;
+                if assign[u] != u32::MAX {
+                    continue;
+                }
+                assign[u] = p as u32;
+                weights[p] += g.nw[u] as u64;
+                assigned += 1;
+                for (v, _) in g.adj(u) {
+                    if assign[v as usize] == u32::MAX {
+                        queues[p].push_back(v);
+                    }
+                }
+                grew = true;
+                break 'parts;
+            }
+        }
+        if !grew {
+            // disconnected remainder: seed the lightest part somewhere new
+            while fallback < n && assign[order[fallback] as usize] != u32::MAX {
+                fallback += 1;
+            }
+            if fallback >= n {
+                break;
+            }
+            let u = order[fallback] as usize;
+            let p = (0..k).min_by_key(|&p| weights[p]).unwrap();
+            assign[u] = p as u32;
+            weights[p] += g.nw[u] as u64;
+            assigned += 1;
+            for (v, _) in g.adj(u) {
+                if assign[v as usize] == u32::MAX {
+                    queues[p].push_back(v);
+                }
+            }
+        }
+    }
+    // leftovers: attach to the lightest adjacent part (or globally lightest)
+    let mut weights = vec![0u64; k];
+    for u in 0..n {
+        if assign[u] != u32::MAX {
+            weights[assign[u] as usize] += g.nw[u] as u64;
+        }
+    }
+    for u in 0..n {
+        if assign[u] == u32::MAX {
+            let mut best = u32::MAX;
+            let mut best_w = u64::MAX;
+            for (v, _) in g.adj(u) {
+                let p = assign[v as usize];
+                if p != u32::MAX && weights[p as usize] < best_w {
+                    best = p;
+                    best_w = weights[p as usize];
+                }
+            }
+            if best == u32::MAX {
+                best = weights
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &w)| w)
+                    .map(|(i, _)| i as u32)
+                    .unwrap_or(0);
+            }
+            assign[u] = best;
+            weights[best as usize] += g.nw[u] as u64;
+        }
+    }
+    assign
+}
+
+#[derive(Clone, Debug)]
+pub struct PartitionConfig {
+    pub k: usize,
+    /// Coarsening stops at this many nodes (>= 4k).
+    pub coarsest: usize,
+    /// Allowed imbalance, e.g. 0.1 = parts up to 1.1x average weight.
+    pub imbalance: f64,
+    /// Refinement passes per level.
+    pub refine_passes: usize,
+    pub seed: u64,
+}
+
+impl PartitionConfig {
+    pub fn new(k: usize, seed: u64) -> Self {
+        PartitionConfig {
+            k,
+            coarsest: (8 * k).max(64),
+            imbalance: 0.15,
+            refine_passes: 4,
+            seed,
+        }
+    }
+}
+
+/// Multilevel k-way partition of `csr`.
+pub fn partition(csr: &Csr, cfg: &PartitionConfig) -> Partition {
+    let mut rng = Rng::new(cfg.seed);
+    let k = cfg.k.max(1).min(csr.n.max(1));
+    let mut levels: Vec<(WGraph, Vec<u32>)> = Vec::new(); // (fine graph, map fine->coarse)
+    let mut g = WGraph::from_csr(csr);
+    while g.n > cfg.coarsest {
+        let (coarse, map) = coarsen(&g, &mut rng);
+        // stop if coarsening stalls (e.g. star graphs)
+        if coarse.n as f64 > g.n as f64 * 0.95 {
+            break;
+        }
+        levels.push((g, map));
+        g = coarse;
+    }
+    let mut assign = initial_partition(&g, k, &mut rng);
+    refine::refine(&g, &mut assign, k, cfg.imbalance, cfg.refine_passes, &mut rng);
+    // uncoarsen with refinement at every level
+    while let Some((fine, map)) = levels.pop() {
+        let mut fine_assign = vec![0u32; fine.n];
+        for u in 0..fine.n {
+            fine_assign[u] = assign[map[u] as usize];
+        }
+        assign = fine_assign;
+        refine::refine(&fine, &mut assign, k, cfg.imbalance, cfg.refine_passes, &mut rng);
+    }
+    Partition { k, assign }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{random_graph, sbm, SbmSpec};
+
+    #[test]
+    fn partition_covers_all_nodes_balanced() {
+        let mut rng = Rng::new(1);
+        let csr = random_graph(500, 0.02, &mut rng);
+        let p = partition(&csr, &PartitionConfig::new(8, 3));
+        assert_eq!(p.assign.len(), 500);
+        assert!(p.assign.iter().all(|&a| (a as usize) < 8));
+        let sizes: Vec<usize> = p.clusters().iter().map(|c| c.len()).collect();
+        let max = *sizes.iter().max().unwrap() as f64;
+        let avg = 500.0 / 8.0;
+        assert!(max <= avg * 1.6, "max part size {max} vs avg {avg}");
+        assert!(sizes.iter().all(|&s| s > 0), "empty part: {sizes:?}");
+    }
+
+    #[test]
+    fn partition_beats_random_on_sbm() {
+        // On a homophilous SBM, multilevel partitioning must cut far fewer
+        // edges than a random assignment (the property LMC needs).
+        let g = sbm(&SbmSpec {
+            n: 800,
+            n_class: 8,
+            d_x: 4,
+            avg_deg_in: 8.0,
+            avg_deg_out: 2.0,
+            signal: 0.3,
+            train_frac: 0.3,
+            val_frac: 0.2,
+            seed: 11,
+            mu_seed: None,
+        });
+        let p = partition(&g.csr, &PartitionConfig::new(8, 5));
+        let cut = edge_cut(&g.csr, &p.assign);
+        let mut rng = Rng::new(7);
+        let rand_assign: Vec<u32> = (0..g.n()).map(|_| rng.below(8) as u32).collect();
+        let rand_cut = edge_cut(&g.csr, &rand_assign);
+        assert!(
+            (cut as f64) < 0.7 * rand_cut as f64,
+            "cut {cut} vs random {rand_cut}"
+        );
+    }
+
+    #[test]
+    fn contiguous_perm_is_permutation() {
+        let mut rng = Rng::new(2);
+        let csr = random_graph(200, 0.03, &mut rng);
+        let p = partition(&csr, &PartitionConfig::new(5, 1));
+        let mut perm = p.contiguous_perm();
+        perm.sort_unstable();
+        assert_eq!(perm, (0..200u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_degenerate_graphs() {
+        // empty graph
+        let csr = Csr::from_edges(10, &[]);
+        let p = partition(&csr, &PartitionConfig::new(3, 0));
+        assert_eq!(p.assign.len(), 10);
+        // k = 1
+        let mut rng = Rng::new(3);
+        let csr = random_graph(50, 0.1, &mut rng);
+        let p = partition(&csr, &PartitionConfig::new(1, 0));
+        assert!(p.assign.iter().all(|&a| a == 0));
+    }
+}

@@ -1,0 +1,74 @@
+//! Partition quality metrics: edge cut, balance, cluster-locality stats.
+
+use crate::graph::Csr;
+
+/// Number of undirected edges crossing parts.
+pub fn edge_cut(csr: &Csr, assign: &[u32]) -> usize {
+    let mut cut = 0usize;
+    for u in 0..csr.n {
+        for &v in csr.neighbors(u) {
+            if (v as usize) > u && assign[u] != assign[v as usize] {
+                cut += 1;
+            }
+        }
+    }
+    cut
+}
+
+/// max part size / average part size (1.0 = perfectly balanced).
+pub fn balance(assign: &[u32], k: usize) -> f64 {
+    if assign.is_empty() || k == 0 {
+        return 1.0;
+    }
+    let mut sizes = vec![0usize; k];
+    for &a in assign {
+        sizes[a as usize] += 1;
+    }
+    let max = *sizes.iter().max().unwrap() as f64;
+    max / (assign.len() as f64 / k as f64)
+}
+
+#[derive(Debug, Clone)]
+pub struct PartitionQuality {
+    pub k: usize,
+    pub edge_cut: usize,
+    pub total_edges: usize,
+    pub cut_fraction: f64,
+    pub balance: f64,
+    pub min_part: usize,
+    pub max_part: usize,
+}
+
+pub fn quality(csr: &Csr, assign: &[u32], k: usize) -> PartitionQuality {
+    let cut = edge_cut(csr, assign);
+    let total = csr.num_undirected_edges();
+    let mut sizes = vec![0usize; k];
+    for &a in assign {
+        sizes[a as usize] += 1;
+    }
+    PartitionQuality {
+        k,
+        edge_cut: cut,
+        total_edges: total,
+        cut_fraction: if total > 0 { cut as f64 / total as f64 } else { 0.0 },
+        balance: balance(assign, k),
+        min_part: sizes.iter().copied().min().unwrap_or(0),
+        max_part: sizes.iter().copied().max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cut_and_balance() {
+        let csr = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let assign = vec![0u32, 0, 1, 1];
+        assert_eq!(edge_cut(&csr, &assign), 1);
+        assert!((balance(&assign, 2) - 1.0).abs() < 1e-9);
+        let q = quality(&csr, &assign, 2);
+        assert_eq!(q.edge_cut, 1);
+        assert!((q.cut_fraction - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,138 @@
+//! Boundary FM/KL refinement: greedily move boundary nodes to the adjacent
+//! part with the largest edge-cut gain, subject to a balance constraint.
+
+use super::WGraph;
+use crate::util::rng::Rng;
+
+/// One refinement driver: `passes` sweeps over boundary nodes.
+pub(crate) fn refine(
+    g: &WGraph,
+    assign: &mut [u32],
+    k: usize,
+    imbalance: f64,
+    passes: usize,
+    rng: &mut Rng,
+) {
+    if k <= 1 || g.n == 0 {
+        return;
+    }
+    let total = g.total_node_weight();
+    let max_w = ((total as f64 / k as f64) * (1.0 + imbalance)).ceil() as u64;
+    let mut weights = vec![0u64; k];
+    for u in 0..g.n {
+        weights[assign[u] as usize] += g.nw[u] as u64;
+    }
+    let mut order: Vec<u32> = (0..g.n as u32).collect();
+    // reusable per-part connectivity scratch
+    let mut conn = vec![0i64; k];
+    let mut touched: Vec<u32> = Vec::new();
+    for _ in 0..passes {
+        rng.shuffle(&mut order);
+        let mut moved = 0usize;
+        for &u32u in &order {
+            let u = u32u as usize;
+            let from = assign[u] as usize;
+            // connectivity to each adjacent part
+            touched.clear();
+            let mut is_boundary = false;
+            for (v, w) in g.adj(u) {
+                let p = assign[v as usize] as usize;
+                if conn[p] == 0 {
+                    touched.push(p as u32);
+                }
+                conn[p] += w as i64;
+                if p != from {
+                    is_boundary = true;
+                }
+            }
+            if is_boundary {
+                let here = conn[from];
+                let mut best_part = from;
+                let mut best_gain = 0i64;
+                for &p in &touched {
+                    let p = p as usize;
+                    if p == from {
+                        continue;
+                    }
+                    let gain = conn[p] - here;
+                    // never empty the source part
+                    let fits = weights[p] + g.nw[u] as u64 <= max_w
+                        && weights[from] > g.nw[u] as u64;
+                    // strictly positive gain, or zero-gain move that improves balance
+                    let improves_balance = gain == 0 && weights[p] + (g.nw[u] as u64) < weights[from];
+                    if fits && (gain > best_gain || (improves_balance && best_gain <= 0 && best_part == from)) {
+                        best_part = p;
+                        best_gain = gain.max(best_gain);
+                    }
+                }
+                if best_part != from {
+                    assign[u] = best_part as u32;
+                    weights[from] -= g.nw[u] as u64;
+                    weights[best_part] += g.nw[u] as u64;
+                    moved += 1;
+                }
+            }
+            for &p in &touched {
+                conn[p as usize] = 0;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+    use crate::partition::quality::edge_cut;
+
+    fn wgraph(csr: &Csr) -> WGraph {
+        WGraph {
+            n: csr.n,
+            offsets: csr.offsets.clone(),
+            nbr: csr.neighbors.clone(),
+            ew: vec![1; csr.neighbors.len()],
+            nw: vec![1; csr.n],
+        }
+    }
+
+    #[test]
+    fn refine_reduces_cut_on_two_cliques() {
+        // two 6-cliques joined by one edge; a scrambled assignment must
+        // refine to (nearly) the natural split.
+        let mut edges = Vec::new();
+        for a in 0..6u32 {
+            for b in (a + 1)..6 {
+                edges.push((a, b));
+                edges.push((a + 6, b + 6));
+            }
+        }
+        edges.push((0, 6));
+        let csr = Csr::from_edges(12, &edges);
+        let g = wgraph(&csr);
+        let mut assign: Vec<u32> = vec![0, 1, 0, 1, 0, 1, 1, 0, 1, 0, 1, 0];
+        let before = edge_cut(&csr, &assign);
+        let mut rng = Rng::new(4);
+        refine(&g, &mut assign, 2, 0.2, 8, &mut rng);
+        let after = edge_cut(&csr, &assign);
+        assert!(after < before, "cut {before} -> {after}");
+        assert!(after <= 3, "cut after refine: {after}");
+    }
+
+    #[test]
+    fn refine_respects_balance() {
+        let mut rng = Rng::new(5);
+        let csr = crate::graph::random_graph(100, 0.1, &mut rng);
+        let g = wgraph(&csr);
+        let mut assign: Vec<u32> = (0..100).map(|i| (i % 4) as u32).collect();
+        refine(&g, &mut assign, 4, 0.1, 6, &mut rng);
+        let mut w = [0u64; 4];
+        for &a in &assign {
+            w[a as usize] += 1;
+        }
+        let max = *w.iter().max().unwrap() as f64;
+        assert!(max <= 25.0 * 1.1 + 1.0, "weights {w:?}");
+    }
+}

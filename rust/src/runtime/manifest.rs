@@ -1,0 +1,286 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed with the in-repo JSON parser; every program's
+//! positional input/output signature is validated before execution.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub profile: String,
+    pub arch: String,
+    pub b: usize,
+    pub h: usize,
+    pub layer: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ProgramSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("program {} has no output {name}", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArchInfo {
+    pub l: usize,
+    pub dims: Vec<usize>,
+    /// Canonical parameter order: (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+    pub head_params: Vec<String>,
+    /// layer index (1-based, as string key in json) -> param names.
+    pub layer_params: BTreeMap<usize, Vec<String>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProfileInfo {
+    pub d_x: usize,
+    pub n_class: usize,
+    pub hidden: usize,
+    pub gcn_layers: usize,
+    pub gcnii_layers: usize,
+    pub step_buckets: Vec<(usize, usize)>,
+    pub exact_bucket: (usize, usize),
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub use_pallas: bool,
+    pub profiles: BTreeMap<String, ProfileInfo>,
+    /// key: "profile/arch"
+    pub archs: BTreeMap<String, ArchInfo>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+fn tensors_of(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("tensor list not an array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("tensor missing name"))?
+                    .to_string(),
+                shape: shape_of(t.get("shape").ok_or_else(|| anyhow!("tensor missing shape"))?)?,
+                dtype: DType::parse(t.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut profiles = BTreeMap::new();
+        for (name, p) in root
+            .get("profiles")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing profiles"))?
+        {
+            let buckets = p
+                .get("step_buckets")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("profile {name} missing step_buckets"))?
+                .iter()
+                .map(|b| {
+                    let s = shape_of(b)?;
+                    Ok((s[0], s[1]))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let eb = shape_of(p.get("exact_bucket").ok_or_else(|| anyhow!("missing exact_bucket"))?)?;
+            profiles.insert(
+                name.clone(),
+                ProfileInfo {
+                    d_x: p.get("d_x").and_then(Json::as_usize).unwrap_or(0),
+                    n_class: p.get("n_class").and_then(Json::as_usize).unwrap_or(0),
+                    hidden: p.get("hidden").and_then(Json::as_usize).unwrap_or(0),
+                    gcn_layers: p.get("gcn_layers").and_then(Json::as_usize).unwrap_or(0),
+                    gcnii_layers: p.get("gcnii_layers").and_then(Json::as_usize).unwrap_or(0),
+                    step_buckets: buckets,
+                    exact_bucket: (eb[0], eb[1]),
+                },
+            );
+        }
+
+        let mut archs = BTreeMap::new();
+        for (key, a) in root
+            .get("archs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing archs"))?
+        {
+            let params = a
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("arch {key} missing params"))?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape_of(p.get("shape").ok_or_else(|| anyhow!("param missing shape"))?)?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let head_params = a
+                .get("head_params")
+                .and_then(Json::as_arr)
+                .map(|v| v.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            let mut layer_params = BTreeMap::new();
+            if let Some(lp) = a.get("layer_params").and_then(Json::as_obj) {
+                for (l, names) in lp {
+                    let l: usize = l.parse().context("layer_params key")?;
+                    let names = names
+                        .as_arr()
+                        .map(|v| v.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                        .unwrap_or_default();
+                    layer_params.insert(l, names);
+                }
+            }
+            archs.insert(
+                key.clone(),
+                ArchInfo {
+                    l: a.get("L").and_then(Json::as_usize).unwrap_or(0),
+                    dims: shape_of(a.get("dims").ok_or_else(|| anyhow!("arch missing dims"))?)?,
+                    params,
+                    head_params,
+                    layer_params,
+                },
+            );
+        }
+
+        let mut programs = BTreeMap::new();
+        for p in root
+            .get("programs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing programs"))?
+        {
+            let name = p
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("program missing name"))?
+                .to_string();
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name,
+                    file: p.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    kind: p.get("kind").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    profile: p.get("profile").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    arch: p.get("arch").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    b: p.get("B").and_then(Json::as_usize).unwrap_or(0),
+                    h: p.get("H").and_then(Json::as_usize).unwrap_or(0),
+                    layer: p.get("layer").and_then(Json::as_usize).unwrap_or(0),
+                    inputs: tensors_of(p.get("inputs").ok_or_else(|| anyhow!("program missing inputs"))?)?,
+                    outputs: tensors_of(p.get("outputs").ok_or_else(|| anyhow!("program missing outputs"))?)?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            use_pallas: root.get("use_pallas").and_then(Json::as_bool).unwrap_or(true),
+            profiles,
+            archs,
+            programs,
+        })
+    }
+
+    pub fn arch(&self, profile: &str, arch: &str) -> Result<&ArchInfo> {
+        self.archs
+            .get(&format!("{profile}/{arch}"))
+            .ok_or_else(|| anyhow!("manifest has no arch {profile}/{arch}"))
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no program {name} (re-run `make artifacts`)"))
+    }
+
+    /// Find the train_step program for (profile, arch, bucket).
+    pub fn train_step(&self, profile: &str, arch: &str, b: usize, h: usize) -> Result<&ProgramSpec> {
+        self.program(&format!("{profile}_train_step_{arch}_b{b}_h{h}"))
+    }
+
+    pub fn fwd_layer(&self, profile: &str, arch: &str, l: usize) -> Result<&ProgramSpec> {
+        self.program(&format!("{profile}_fwd_{arch}_l{l}"))
+    }
+
+    pub fn bwd_layer(&self, profile: &str, arch: &str, l: usize) -> Result<&ProgramSpec> {
+        self.program(&format!("{profile}_bwd_{arch}_l{l}"))
+    }
+
+    pub fn loss_grad(&self, profile: &str, arch: &str) -> Result<&ProgramSpec> {
+        self.program(&format!("{profile}_loss_{arch}"))
+    }
+
+    pub fn embed0(&self, profile: &str, arch: &str) -> Result<&ProgramSpec> {
+        self.program(&format!("{profile}_embed0_{arch}"))
+    }
+
+    pub fn embed0_bwd(&self, profile: &str, arch: &str) -> Result<&ProgramSpec> {
+        self.program(&format!("{profile}_embed0bwd_{arch}"))
+    }
+}

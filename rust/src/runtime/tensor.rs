@@ -1,0 +1,72 @@
+//! Literal construction/extraction helpers + a tiny host tensor type.
+
+use anyhow::Result;
+
+/// Host-side f32 tensor (row-major) used by the coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0f32; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        lit_f32(&self.data, &self.shape)
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if shape.is_empty() {
+        // rank-0 scalar
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {shape:?}: {e}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    l.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {shape:?}: {e}"))
+}
+
+/// Rank-0 f32 scalar.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract an f32 literal's data (any rank).
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to_vec<f32>: {e}"))
+}
+
+/// Extract a rank-0 f32.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(to_vec_f32(lit)?[0])
+}

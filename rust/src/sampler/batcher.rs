@@ -1,0 +1,149 @@
+//! Mini-batch scheduling over partition clusters (paper Algorithm 1 line 4
+//! and §E.2).
+//!
+//! Two modes:
+//!   - `Stochastic`: each epoch reshuffles clusters and groups `c` of them
+//!     per step (CLUSTER-GCN style stochastic subgraph construction) — the
+//!     default, matching the paper's main experiments.
+//!   - `Fixed`: groups are formed once at preprocessing and reused every
+//!     epoch (paper §E.2: avoids per-step sampling cost; LMC's convergence
+//!     analysis covers this too).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatcherMode {
+    Stochastic,
+    Fixed,
+}
+
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    clusters: Vec<Vec<u32>>,
+    clusters_per_batch: usize,
+    mode: BatcherMode,
+    fixed_groups: Vec<Vec<u32>>,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(
+        clusters: Vec<Vec<u32>>,
+        clusters_per_batch: usize,
+        mode: BatcherMode,
+        seed: u64,
+    ) -> Batcher {
+        let mut rng = Rng::new(seed);
+        let c = clusters_per_batch.max(1).min(clusters.len().max(1));
+        let fixed_groups = if mode == BatcherMode::Fixed {
+            group_once(&clusters, c, &mut rng)
+        } else {
+            Vec::new()
+        };
+        Batcher { clusters, clusters_per_batch: c, mode, fixed_groups, rng }
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn steps_per_epoch(&self) -> usize {
+        match self.mode {
+            BatcherMode::Fixed => self.fixed_groups.len(),
+            BatcherMode::Stochastic => {
+                let b = self.clusters.len();
+                b.div_ceil(self.clusters_per_batch)
+            }
+        }
+    }
+
+    /// Normalization factor b/c of Eqs. (14)-(15): #parts / #parts-per-batch.
+    pub fn grad_scale(&self) -> f32 {
+        self.clusters.len() as f32 / self.clusters_per_batch as f32
+    }
+
+    /// Mini-batches (node-id lists) for one epoch.
+    pub fn epoch_batches(&mut self) -> Vec<Vec<u32>> {
+        match self.mode {
+            BatcherMode::Fixed => self.fixed_groups.clone(),
+            BatcherMode::Stochastic => {
+                let mut order: Vec<usize> = (0..self.clusters.len()).collect();
+                self.rng.shuffle(&mut order);
+                order
+                    .chunks(self.clusters_per_batch)
+                    .map(|ids| {
+                        let mut nodes = Vec::new();
+                        for &ci in ids {
+                            nodes.extend_from_slice(&self.clusters[ci]);
+                        }
+                        nodes.sort_unstable();
+                        nodes
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+fn group_once(clusters: &[Vec<u32>], c: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let mut order: Vec<usize> = (0..clusters.len()).collect();
+    rng.shuffle(&mut order);
+    order
+        .chunks(c)
+        .map(|ids| {
+            let mut nodes = Vec::new();
+            for &ci in ids {
+                nodes.extend_from_slice(&clusters[ci]);
+            }
+            nodes.sort_unstable();
+            nodes
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clusters(n: usize, k: usize) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); k];
+        for u in 0..n as u32 {
+            out[u as usize % k].push(u);
+        }
+        out
+    }
+
+    #[test]
+    fn stochastic_epoch_covers_every_node_once() {
+        let mut b = Batcher::new(clusters(100, 10), 3, BatcherMode::Stochastic, 7);
+        assert_eq!(b.steps_per_epoch(), 4);
+        let mut seen: Vec<u32> = b.epoch_batches().into_iter().flatten().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stochastic_epochs_differ() {
+        let mut b = Batcher::new(clusters(100, 10), 2, BatcherMode::Stochastic, 7);
+        let e1 = b.epoch_batches();
+        let e2 = b.epoch_batches();
+        assert_ne!(e1, e2);
+    }
+
+    #[test]
+    fn fixed_epochs_identical() {
+        let mut b = Batcher::new(clusters(90, 9), 2, BatcherMode::Fixed, 7);
+        let e1 = b.epoch_batches();
+        let e2 = b.epoch_batches();
+        assert_eq!(e1, e2);
+        let mut seen: Vec<u32> = e1.into_iter().flatten().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..90u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn grad_scale_is_b_over_c() {
+        let b = Batcher::new(clusters(100, 20), 5, BatcherMode::Stochastic, 0);
+        assert!((b.grad_scale() - 4.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,443 @@
+//! Subgraph sampler: mini-batch construction with 1-hop halos, densified
+//! into the padded adjacency blocks the AOT train_step programs consume
+//! (DESIGN.md §1 step 2-3, paper Algorithm 1 lines 4-5).
+//!
+//! Per method:
+//!   - LMC / GAS / FM: blocks over `Nbar(V_B)` with *global* GCN
+//!     normalization; `A_hh` holds only halo-halo edges visible inside
+//!     `N(V_B)` — the paper's "incomplete" messages (Eq. 10).
+//!   - CLUSTER: no halo; `A_bb` re-normalized with subgraph-local degrees
+//!     (paper §E.2 footnote).
+
+pub mod batcher;
+
+use crate::graph::{local_normalized_dense, Graph};
+use crate::util::rng::Rng;
+
+pub use batcher::{Batcher, BatcherMode};
+
+/// Shape buckets available for a profile, from the artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Buckets(pub Vec<(usize, usize)>);
+
+impl Buckets {
+    /// Smallest bucket with B >= nb; among those, the one whose H fits nh if
+    /// possible, else the largest-H bucket at that B (halo then capped).
+    pub fn pick(&self, nb: usize, nh: usize) -> Option<(usize, usize)> {
+        let mut fitting: Vec<(usize, usize)> = self
+            .0
+            .iter()
+            .copied()
+            .filter(|&(b, _)| b >= nb)
+            .collect();
+        if fitting.is_empty() {
+            return None;
+        }
+        let min_b = fitting.iter().map(|&(b, _)| b).min().unwrap();
+        fitting.retain(|&(b, _)| b == min_b);
+        fitting.sort_by_key(|&(_, h)| h);
+        if let Some(&(b, h)) = fitting.iter().find(|&&(_, h)| h >= nh) {
+            return Some((b, h));
+        }
+        fitting.last().copied()
+    }
+}
+
+/// How the sampler should build adjacency blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdjacencyPolicy {
+    /// Global normalization + halo blocks (LMC / GAS / FM).
+    GlobalWithHalo,
+    /// Local re-normalization, halo discarded (CLUSTER-GCN).
+    LocalNoHalo,
+}
+
+/// A densified mini-batch subgraph ready for the train_step program.
+#[derive(Clone, Debug)]
+pub struct SubgraphBatch {
+    /// In-batch node ids (unpadded; `batch.len() <= bucket_b`).
+    pub batch: Vec<u32>,
+    /// Halo node ids (out-of-batch 1-hop neighbors, possibly capped).
+    pub halo: Vec<u32>,
+    pub bucket_b: usize,
+    pub bucket_h: usize,
+    /// Row-major dense blocks, padded with zeros to the bucket shape.
+    pub a_bb: Vec<f32>,
+    pub a_bh: Vec<f32>,
+    pub a_hh: Vec<f32>,
+    /// Halo neighbors dropped by the bucket cap (0 in normal operation).
+    pub dropped_halo: usize,
+    /// Degree of each halo node inside the sampled subgraph (for beta
+    /// scores, paper §A.4) and in the full graph.
+    pub halo_deg_local: Vec<u32>,
+    pub halo_deg_global: Vec<u32>,
+    /// Count of directed messages (adjacency nonzeros incl. self-loops)
+    /// reserved by this subgraph in forward passes (Table 7 accounting).
+    pub nnz_fwd: usize,
+}
+
+/// Build the densified subgraph for `batch` under `policy`.
+pub fn build_subgraph(
+    g: &Graph,
+    batch: &[u32],
+    policy: AdjacencyPolicy,
+    buckets: &Buckets,
+    rng: &mut Rng,
+) -> anyhow::Result<SubgraphBatch> {
+    let n = g.n();
+    let nb = batch.len();
+    // membership: 0 = outside, 1 = batch, 2 = halo
+    let mut mark = vec![0u8; n];
+    for &u in batch {
+        mark[u as usize] = 1;
+    }
+    let mut halo: Vec<u32> = Vec::new();
+    if policy == AdjacencyPolicy::GlobalWithHalo {
+        for &u in batch {
+            for &v in g.csr.neighbors(u as usize) {
+                if mark[v as usize] == 0 {
+                    mark[v as usize] = 2;
+                    halo.push(v);
+                }
+            }
+        }
+        halo.sort_unstable();
+    }
+
+    let (bucket_b, bucket_h) = buckets.pick(nb, halo.len()).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no artifact bucket fits batch of {nb} nodes (buckets: {:?}); \
+             re-run `make artifacts` with a larger step bucket",
+            buckets.0
+        )
+    })?;
+    let mut dropped = 0usize;
+    if halo.len() > bucket_h {
+        // cap halo by uniform subsampling (GAS-style buffer cap); dropped
+        // nodes' messages fall back to being discarded, like CLUSTER.
+        dropped = halo.len() - bucket_h;
+        let keep = rng.sample_indices(halo.len(), bucket_h);
+        let mut kept: Vec<u32> = keep.iter().map(|&i| halo[i]).collect();
+        kept.sort_unstable();
+        for &h in &halo {
+            mark[h as usize] = 0;
+        }
+        for &h in &kept {
+            mark[h as usize] = 2;
+        }
+        halo = kept;
+    }
+
+    // position maps
+    let mut pos = vec![u32::MAX; n];
+    for (i, &u) in batch.iter().enumerate() {
+        pos[u as usize] = i as u32;
+    }
+    for (i, &u) in halo.iter().enumerate() {
+        pos[u as usize] = i as u32;
+    }
+
+    let nh = halo.len();
+    let mut a_bb = vec![0f32; bucket_b * bucket_b];
+    let mut a_bh = vec![0f32; bucket_b * bucket_h];
+    let mut a_hh = vec![0f32; bucket_h * bucket_h];
+    let mut nnz = 0usize;
+
+    match policy {
+        AdjacencyPolicy::LocalNoHalo => {
+            let local = local_normalized_dense(&g.csr, batch);
+            for i in 0..nb {
+                a_bb[i * bucket_b..i * bucket_b + nb]
+                    .copy_from_slice(&local[i * nb..(i + 1) * nb]);
+            }
+            nnz += local.iter().filter(|&&w| w != 0.0).count();
+        }
+        AdjacencyPolicy::GlobalWithHalo => {
+            for (i, &u) in batch.iter().enumerate() {
+                let u = u as usize;
+                a_bb[i * bucket_b + i] = g.self_w[u];
+                nnz += 1;
+                let (s, e) = (g.csr.offsets[u] as usize, g.csr.offsets[u + 1] as usize);
+                for ei in s..e {
+                    let v = g.csr.neighbors[ei] as usize;
+                    let w = g.edge_w[ei];
+                    match mark[v] {
+                        1 => {
+                            a_bb[i * bucket_b + pos[v] as usize] = w;
+                            nnz += 1;
+                        }
+                        2 => {
+                            a_bh[i * bucket_h + pos[v] as usize] = w;
+                            nnz += 1;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            for (i, &u) in halo.iter().enumerate() {
+                let u = u as usize;
+                a_hh[i * bucket_h + i] = g.self_w[u];
+                nnz += 1;
+                let (s, e) = (g.csr.offsets[u] as usize, g.csr.offsets[u + 1] as usize);
+                for ei in s..e {
+                    let v = g.csr.neighbors[ei] as usize;
+                    if mark[v] == 2 {
+                        a_hh[i * bucket_h + pos[v] as usize] = g.edge_w[ei];
+                        nnz += 1;
+                    }
+                    // halo -> batch arcs are A_bh^T; the program transposes,
+                    // so count them (they are used) but don't store twice.
+                    if mark[v] == 1 {
+                        nnz += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // halo degree stats for beta scores
+    let mut halo_deg_local = vec![0u32; nh];
+    let mut halo_deg_global = vec![0u32; nh];
+    for (i, &u) in halo.iter().enumerate() {
+        let u = u as usize;
+        halo_deg_global[i] = g.csr.degree(u) as u32;
+        let mut dl = 0u32;
+        for &v in g.csr.neighbors(u) {
+            if mark[v as usize] != 0 {
+                dl += 1;
+            }
+        }
+        halo_deg_local[i] = dl;
+    }
+
+    Ok(SubgraphBatch {
+        batch: batch.to_vec(),
+        halo,
+        bucket_b,
+        bucket_h,
+        a_bb,
+        a_bh,
+        a_hh,
+        dropped_halo: dropped,
+        halo_deg_local,
+        halo_deg_global,
+        nnz_fwd: nnz,
+    })
+}
+
+/// Beta score functions from the paper's Appendix A.4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BetaScore {
+    XSquared,
+    TwoXMinusXSquared,
+    X,
+    One,
+    SinX,
+}
+
+impl BetaScore {
+    pub fn parse(s: &str) -> Option<BetaScore> {
+        Some(match s {
+            "x2" | "x^2" => BetaScore::XSquared,
+            "2x-x2" | "2x-x^2" => BetaScore::TwoXMinusXSquared,
+            "x" => BetaScore::X,
+            "1" | "one" => BetaScore::One,
+            "sinx" | "sin" => BetaScore::SinX,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BetaScore::XSquared => "x^2",
+            BetaScore::TwoXMinusXSquared => "2x-x^2",
+            BetaScore::X => "x",
+            BetaScore::One => "1",
+            BetaScore::SinX => "sin(x)",
+        }
+    }
+
+    #[inline]
+    pub fn eval(&self, x: f32) -> f32 {
+        match self {
+            BetaScore::XSquared => x * x,
+            BetaScore::TwoXMinusXSquared => 2.0 * x - x * x,
+            BetaScore::X => x,
+            BetaScore::One => 1.0,
+            BetaScore::SinX => x.sin(),
+        }
+    }
+}
+
+/// beta_i = alpha * score(deg_local(i) / deg_global(i)), padded to bucket_h.
+pub fn beta_vector(sb: &SubgraphBatch, alpha: f32, score: BetaScore) -> Vec<f32> {
+    let mut beta = vec![0f32; sb.bucket_h];
+    for i in 0..sb.halo.len() {
+        let x = if sb.halo_deg_global[i] > 0 {
+            sb.halo_deg_local[i] as f32 / sb.halo_deg_global[i] as f32
+        } else {
+            0.0
+        };
+        beta[i] = (alpha * score.eval(x)).clamp(0.0, 1.0);
+    }
+    beta
+}
+
+/// Gather rows of a [n, d] row-major array into a zero-padded [rows, d] buffer.
+pub fn gather_rows(src: &[f32], d: usize, idx: &[u32], rows: usize) -> Vec<f32> {
+    debug_assert!(idx.len() <= rows);
+    let mut out = vec![0f32; rows * d];
+    for (i, &u) in idx.iter().enumerate() {
+        out[i * d..(i + 1) * d].copy_from_slice(&src[u as usize * d..(u as usize + 1) * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{load, DatasetId};
+
+    fn test_graph() -> Graph {
+        load(DatasetId::CoraSim, 3)
+    }
+
+    fn buckets() -> Buckets {
+        Buckets(vec![(128, 512), (256, 768)])
+    }
+
+    #[test]
+    fn halo_is_exactly_one_hop() {
+        let g = test_graph();
+        let mut rng = Rng::new(0);
+        let batch: Vec<u32> = (0..100u32).collect();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let batch_set: std::collections::HashSet<u32> = batch.iter().copied().collect();
+        // every halo node neighbors the batch and is not in it
+        for &h in &sb.halo {
+            assert!(!batch_set.contains(&h));
+            assert!(g.csr.neighbors(h as usize).iter().any(|v| batch_set.contains(v)));
+        }
+        // every out-of-batch neighbor is in the halo (nothing dropped here)
+        assert_eq!(sb.dropped_halo, 0);
+        let halo_set: std::collections::HashSet<u32> = sb.halo.iter().copied().collect();
+        for &u in &batch {
+            for &v in g.csr.neighbors(u as usize) {
+                assert!(batch_set.contains(&v) || halo_set.contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_match_graph_weights() {
+        let g = test_graph();
+        let mut rng = Rng::new(1);
+        let batch: Vec<u32> = (40..160u32).collect();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let (bb, bh) = (sb.bucket_b, sb.bucket_h);
+        for (i, &u) in sb.batch.iter().enumerate() {
+            // diagonal self weight
+            assert_eq!(sb.a_bb[i * bb + i], g.self_w[u as usize]);
+            for (j, &v) in sb.batch.iter().enumerate() {
+                if i != j {
+                    let w = sb.a_bb[i * bb + j];
+                    assert_eq!(w != 0.0, g.csr.has_edge(u as usize, v as usize));
+                }
+            }
+            for (j, &v) in sb.halo.iter().enumerate() {
+                let w = sb.a_bh[i * bh + j];
+                assert_eq!(w != 0.0, g.csr.has_edge(u as usize, v as usize));
+            }
+        }
+        // A_hh symmetric where defined
+        for i in 0..sb.halo.len() {
+            for j in 0..sb.halo.len() {
+                assert_eq!(sb.a_hh[i * bh + j], sb.a_hh[j * bh + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let g = test_graph();
+        let mut rng = Rng::new(2);
+        let batch: Vec<u32> = (0..50u32).collect();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let (bb, bh, nb, nh) = (sb.bucket_b, sb.bucket_h, sb.batch.len(), sb.halo.len());
+        for i in 0..bb {
+            for j in 0..bb {
+                if i >= nb || j >= nb {
+                    assert_eq!(sb.a_bb[i * bb + j], 0.0);
+                }
+            }
+        }
+        for i in 0..bb {
+            for j in 0..bh {
+                if i >= nb || j >= nh {
+                    assert_eq!(sb.a_bh[i * bh + j], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_policy_has_no_halo() {
+        let g = test_graph();
+        let mut rng = Rng::new(3);
+        let batch: Vec<u32> = (0..80u32).collect();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::LocalNoHalo, &buckets(), &mut rng).unwrap();
+        assert!(sb.halo.is_empty());
+        assert!(sb.a_bh.iter().all(|&w| w == 0.0));
+        assert!(sb.a_hh.iter().all(|&w| w == 0.0));
+        // local normalization rows: positive diagonal, finite weights
+        for i in 0..sb.batch.len() {
+            assert!(sb.a_bb[i * sb.bucket_b + i] > 0.0);
+            let row: f32 = sb.a_bb[i * sb.bucket_b..(i + 1) * sb.bucket_b].iter().sum();
+            assert!(row.is_finite() && row > 0.0);
+        }
+    }
+
+    #[test]
+    fn halo_cap_drops_and_reports() {
+        let g = test_graph();
+        let mut rng = Rng::new(4);
+        let batch: Vec<u32> = (0..100u32).collect();
+        let tiny = Buckets(vec![(128, 16)]);
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &tiny, &mut rng).unwrap();
+        assert_eq!(sb.halo.len(), 16);
+        assert!(sb.dropped_halo > 0);
+    }
+
+    #[test]
+    fn beta_scores_bounded() {
+        let g = test_graph();
+        let mut rng = Rng::new(5);
+        let batch: Vec<u32> = (0..120u32).collect();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        for score in [
+            BetaScore::XSquared,
+            BetaScore::TwoXMinusXSquared,
+            BetaScore::X,
+            BetaScore::One,
+            BetaScore::SinX,
+        ] {
+            let beta = beta_vector(&sb, 0.8, score);
+            assert_eq!(beta.len(), sb.bucket_h);
+            assert!(beta.iter().all(|&b| (0.0..=1.0).contains(&b)));
+            // padding entries must be zero
+            for i in sb.halo.len()..sb.bucket_h {
+                assert_eq!(beta[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_pick_logic() {
+        let b = Buckets(vec![(128, 512), (128, 1024), (256, 768)]);
+        assert_eq!(b.pick(100, 400), Some((128, 512)));
+        assert_eq!(b.pick(100, 600), Some((128, 1024)));
+        assert_eq!(b.pick(100, 2000), Some((128, 1024))); // cap
+        assert_eq!(b.pick(200, 100), Some((256, 768)));
+        assert_eq!(b.pick(300, 100), None);
+    }
+}

@@ -1,0 +1,114 @@
+//! Micro-benchmark harness (no `criterion` in the offline registry).
+//!
+//! Criterion-style flow: warmup, then timed iterations until both a minimum
+//! iteration count and a minimum measurement window are reached; reports
+//! mean / p50 / p95 and throughput. Used by the `[[bench]]` targets
+//! (`harness = false`) and the Table 6 / §Perf experiments.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}",
+            self.name,
+            self.iters,
+            fmt_secs(self.mean_s),
+            fmt_secs(self.p50_s),
+            fmt_secs(self.p95_s),
+            fmt_secs(self.min_s),
+        )
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_window_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, min_iters: 10, max_iters: 1000, min_window_s: 1.0 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, min_iters: 5, max_iters: 100, min_window_s: 0.3 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+            let done_window = start.elapsed().as_secs_f64() >= self.min_window_s;
+            if (samples.len() >= self.min_iters && done_window) || samples.len() >= self.max_iters {
+                break;
+            }
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50_s: sorted[sorted.len() / 2],
+            p95_s: sorted[(sorted.len() as f64 * 0.95) as usize % sorted.len()],
+            min_s: sorted[0],
+        };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+/// `black_box` stand-in: defeat const-propagation of benched values.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { warmup_iters: 1, min_iters: 3, max_iters: 5, min_window_s: 0.0 };
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_s >= 0.0);
+    }
+}

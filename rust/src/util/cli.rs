@@ -1,0 +1,95 @@
+//! Tiny CLI argument parser (no `clap` in the offline registry).
+//!
+//! Grammar: `lmc <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut out = Args::default();
+        if let Some(sub) = it.peek() {
+            if !sub.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.opt(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Option<f64> {
+        self.opt(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // NOTE: a bare `--flag` followed by a non-dash token consumes it as
+        // a value (`--key value` form); positionals go before flags.
+        let a = Args::parse(v(&[
+            "train", "extra", "--dataset", "arxiv-sim", "--lr=0.01", "--verbose",
+        ]));
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.opt("dataset"), Some("arxiv-sim"));
+        assert_eq!(a.opt_f64("lr"), Some(0.01));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = Args::parse(v(&["x", "--flag", "--k", "v"]));
+        assert!(a.has_flag("flag"));
+        assert_eq!(a.opt("k"), Some("v"));
+    }
+}

@@ -1,0 +1,31 @@
+//! In-repo replacements for crates absent from the offline registry:
+//! RNG (`rand`), JSON (`serde_json`), TOML (`toml`), CLI args (`clap`),
+//! bench timing (`criterion`), CSV/markdown table emission.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod toml;
+
+/// Wall-clock stopwatch returning seconds.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}

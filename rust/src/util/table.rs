@@ -1,0 +1,109 @@
+//! CSV + aligned-markdown table emission for the experiment harness.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch in '{}'", self.title);
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        writeln!(s, "{}", self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")).unwrap();
+        for r in &self.rows {
+            writeln!(s, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")).unwrap();
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                write!(s, " {:<width$} |", c, width = w[i]).unwrap();
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            writeln!(out, "### {}\n", self.title).unwrap();
+        }
+        writeln!(out, "{}", fmt_row(&self.header)).unwrap();
+        let sep: Vec<String> = w.iter().map(|&x| "-".repeat(x)).collect();
+        writeln!(out, "{}", fmt_row(&sep)).unwrap();
+        for r in &self.rows {
+            writeln!(out, "{}", fmt_row(r)).unwrap();
+        }
+        out
+    }
+
+    pub fn save(&self, dir: &Path, stem: &str) -> std::io::Result<()> {
+        fs::create_dir_all(dir)?;
+        fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        Ok(())
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{:.*}", prec, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_markdown() {
+        let mut t = Table::new("Demo", &["method", "acc"]);
+        t.row(vec!["lmc".into(), "71.5".into()]);
+        t.row(vec!["gas, inc".into(), "70.1".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"gas, inc\""));
+        let md = t.to_markdown();
+        assert!(md.contains("| method"));
+        assert!(md.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal TOML-subset parser for the config system (no `toml` crate in the
+//! offline registry).
+//!
+//! Supported: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / homogeneous inline arrays, `#` comments. That covers all
+//! of `configs/*.toml`. Unsupported syntax fails loudly with a line number.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value`; keys before any section header live under `""`.
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (ln, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(ln, "unterminated section header"))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(ln, "expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(ln, "empty key"));
+        }
+        let val = parse_value(line[eq + 1..].trim(), ln)?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.insert(full, val);
+    }
+    Ok(doc)
+}
+
+fn err(ln: usize, msg: &str) -> TomlError {
+    TomlError { line: ln + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(ln, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(ln, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(ln, "unsupported embedded quote"));
+        }
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(ln, "unterminated array"))?
+            .trim();
+        let mut out = Vec::new();
+        if !inner.is_empty() {
+            for item in inner.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    continue; // allow trailing comma
+                }
+                out.push(parse_value(item, ln)?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(ln, &format!("cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config_shape() {
+        let doc = parse(
+            r#"
+# experiment config
+seed = 7
+[train]
+method = "lmc"   # the paper's method
+lr = 1e-2
+epochs = 200
+betas = [0.4, 0.6]
+fixed = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc["seed"].as_i64(), Some(7));
+        assert_eq!(doc["train.method"].as_str(), Some("lmc"));
+        assert_eq!(doc["train.lr"].as_f64(), Some(1e-2));
+        assert_eq!(doc["train.epochs"].as_i64(), Some(200));
+        assert_eq!(doc["train.fixed"].as_bool(), Some(true));
+        assert_eq!(doc["train.betas"].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[oops").is_err());
+        assert!(parse("key").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"abc").is_err());
+    }
+}

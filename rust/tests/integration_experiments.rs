@@ -1,0 +1,49 @@
+//! Integration: the experiment harness runs end-to-end at reduced scale and
+//! reproduces the paper's qualitative shapes. Requires `make artifacts`.
+//! Heavier checks are behind `--ignored` (run via `cargo test --release
+//! -- --ignored` or the `make experiments` full harness).
+
+use lmc::experiments::{run_fig4, run_table7};
+use lmc::experiments::Ctx;
+
+fn ctx() -> Ctx {
+    let out = std::env::temp_dir().join("lmc_test_results");
+    Ctx::new("artifacts", out.to_str().unwrap(), 0.08, 3).expect("run `make artifacts` first")
+}
+
+#[test]
+fn table7_shapes_hold() {
+    // Cheap (accounting only + 1 epoch per cell): GAS fwd 100%/bwd <100%,
+    // LMC 100%/100%, CLUSTER symmetric and smallest.
+    let t = run_table7(&ctx()).unwrap();
+    let md = t.to_markdown();
+    // every LMC row is 100% / 100%
+    for row in t.rows.iter().filter(|r| r[1] == "LMC") {
+        for cell in &row[2..] {
+            assert!(cell.contains("100% / 100%"), "LMC row {cell} in\n{md}");
+        }
+    }
+    for row in t.rows.iter().filter(|r| r[1] == "GAS") {
+        for cell in &row[2..] {
+            let parts: Vec<&str> = cell.split('/').collect();
+            assert!(parts[1].trim().starts_with("100%"), "GAS fwd {cell}");
+            let bwd: f64 = parts[2].trim().trim_end_matches('%').parse().unwrap();
+            assert!(bwd < 100.0, "GAS bwd should discard messages: {cell}");
+        }
+    }
+}
+
+#[test]
+#[ignore = "several minutes: trains 6 configurations"]
+fn fig4_ablation_shape() {
+    // C_f & C_b should not lose to GAS at small batch (paper Fig. 4a).
+    let t = run_fig4(&ctx()).unwrap();
+    let get = |bs: &str, variant: &str| -> f64 {
+        t.rows
+            .iter()
+            .find(|r| r[0] == bs && r[1] == variant)
+            .map(|r| r[2].parse().unwrap())
+            .unwrap()
+    };
+    assert!(get("1", "Cf&Cb") + 1.5 >= get("1", "GAS"));
+}

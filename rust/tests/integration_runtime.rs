@@ -1,0 +1,155 @@
+//! Integration: manifest + PJRT runtime + numeric cross-check of a compiled
+//! layer program against a host-side reference. Requires `make artifacts`.
+
+use std::path::Path;
+
+use lmc::runtime::{lit_f32, to_vec_f32, Runtime};
+use lmc::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new(Path::new("artifacts")).expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn manifest_has_all_programs_per_profile() {
+    let rt = runtime();
+    for (pname, prof) in &rt.manifest.profiles {
+        for arch in ["gcn", "gcnii"] {
+            let info = rt.manifest.arch(pname, arch).unwrap();
+            for (b, h) in &prof.step_buckets {
+                rt.manifest.train_step(pname, arch, *b, *h).unwrap();
+            }
+            for l in 1..=info.l {
+                rt.manifest.fwd_layer(pname, arch, l).unwrap();
+                rt.manifest.bwd_layer(pname, arch, l).unwrap();
+            }
+            rt.manifest.loss_grad(pname, arch).unwrap();
+            if arch == "gcnii" {
+                rt.manifest.embed0(pname, arch).unwrap();
+                rt.manifest.embed0_bwd(pname, arch).unwrap();
+            }
+            // canonical params exist with consistent dims
+            assert_eq!(info.dims.len(), info.l + 1);
+            assert!(!info.params.is_empty());
+        }
+    }
+}
+
+/// fwd_layer numerics: relu(Ahat @ H @ W + b) for layer 1 of planetoid GCN,
+/// computed host-side, must match the compiled program (which routes the
+/// aggregation through the Pallas kernel).
+#[test]
+fn fwd_layer_matches_host_reference() {
+    let rt = runtime();
+    let spec = rt.manifest.fwd_layer("planetoid", "gcn", 1).unwrap().clone();
+    let (bt, ht) = (spec.b, spec.h);
+    let arch = rt.manifest.arch("planetoid", "gcn").unwrap().clone();
+    let d_x = 48;
+    let d1 = arch.dims[1];
+
+    let mut rng = Rng::new(9);
+    let mut r = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32 * 0.3).collect() };
+    // small active region inside the padded buffers
+    let (nb, nh) = (13usize, 21usize);
+    let mut abb = vec![0f32; bt * bt];
+    let mut abh = vec![0f32; bt * ht];
+    for i in 0..nb {
+        for j in 0..nb {
+            abb[i * bt + j] = if (i + j) % 3 == 0 { 0.2 } else { 0.0 };
+        }
+        for j in 0..nh {
+            abh[i * ht + j] = if (i * 7 + j) % 5 == 0 { 0.1 } else { 0.0 };
+        }
+    }
+    let hp_t = {
+        let mut v = vec![0f32; bt * d_x];
+        v[..nb * d_x].copy_from_slice(&r(nb * d_x));
+        v
+    };
+    let hp_h = {
+        let mut v = vec![0f32; ht * d_x];
+        v[..nh * d_x].copy_from_slice(&r(nh * d_x));
+        v
+    };
+    let w1 = r(d_x * d1);
+    let b1 = r(d1);
+
+    let inputs = vec![
+        lit_f32(&abb, &[bt, bt]).unwrap(),
+        lit_f32(&abh, &[bt, ht]).unwrap(),
+        lit_f32(&hp_t, &[bt, d_x]).unwrap(),
+        lit_f32(&hp_h, &[ht, d_x]).unwrap(),
+        lit_f32(&vec![0f32; bt * d_x], &[bt, d_x]).unwrap(), // H0_t unused by GCN
+        lit_f32(&w1, &[d_x, d1]).unwrap(),
+        lit_f32(&b1, &[d1]).unwrap(),
+    ];
+    let out = rt.execute(&spec.name, &inputs).unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+
+    // host reference
+    let mut agg = vec![0f32; nb * d_x];
+    for i in 0..nb {
+        for j in 0..nb {
+            let w = abb[i * bt + j];
+            if w != 0.0 {
+                for d in 0..d_x {
+                    agg[i * d_x + d] += w * hp_t[j * d_x + d];
+                }
+            }
+        }
+        for j in 0..nh {
+            let w = abh[i * ht + j];
+            if w != 0.0 {
+                for d in 0..d_x {
+                    agg[i * d_x + d] += w * hp_h[j * d_x + d];
+                }
+            }
+        }
+    }
+    for i in 0..nb {
+        for o in 0..d1 {
+            let mut z = b1[o];
+            for d in 0..d_x {
+                z += agg[i * d_x + d] * w1[d * d1 + o];
+            }
+            let want = z.max(0.0); // layer 1 of 3 -> relu
+            let gotv = got[i * d1 + o];
+            assert!(
+                (want - gotv).abs() <= 1e-4 * (1.0 + want.abs()),
+                "mismatch at ({i},{o}): want {want}, got {gotv}"
+            );
+        }
+    }
+}
+
+#[test]
+fn execute_validates_input_arity_and_shape() {
+    let rt = runtime();
+    let spec = rt.manifest.loss_grad("planetoid", "gcn").unwrap().clone();
+    // wrong arity
+    let err = match rt.execute(&spec.name, &[]) {
+        Err(e) => e,
+        Ok(_) => panic!("empty inputs accepted"),
+    };
+    assert!(err.to_string().contains("inputs"), "{err}");
+    // wrong shape
+    let bad: Vec<xla::Literal> = spec
+        .inputs
+        .iter()
+        .map(|_| lit_f32(&[0.0], &[1]).unwrap())
+        .collect();
+    let err = match rt.execute(&spec.name, &bad) {
+        Err(e) => e,
+        Ok(_) => panic!("bad shapes accepted"),
+    };
+    assert!(err.to_string().contains("elements"), "{err}");
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let rt = runtime();
+    let name = &rt.manifest.loss_grad("planetoid", "gcn").unwrap().name.clone();
+    let a = rt.executable(name).unwrap();
+    let b = rt.executable(name).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}

@@ -1,0 +1,176 @@
+//! Property-based tests (randomized, seeded — in-repo substitute for the
+//! proptest crate): coordinator invariants over random graphs and
+//! configurations. No artifacts/PJRT required.
+
+use lmc::graph::{gcn_normalize, load, random_graph, Csr, DatasetId, Graph};
+use lmc::history::History;
+use lmc::partition::{edge_cut, partition, quality::quality, PartitionConfig};
+use lmc::sampler::{
+    beta_vector, build_subgraph, AdjacencyPolicy, Batcher, BatcherMode, BetaScore, Buckets,
+};
+use lmc::util::rng::Rng;
+
+fn random_cases(n_cases: usize) -> impl Iterator<Item = (u64, Csr)> {
+    (0..n_cases as u64).map(|seed| {
+        let mut rng = Rng::new(seed * 77 + 1);
+        let n = 40 + rng.below(400);
+        let p = rng.uniform(0.005, 0.08);
+        (seed, random_graph(n, p, &mut rng))
+    })
+}
+
+#[test]
+fn prop_partition_is_total_balanced_and_nonempty() {
+    for (seed, csr) in random_cases(25) {
+        let k = 2 + (seed as usize % 9);
+        let p = partition(&csr, &PartitionConfig::new(k, seed));
+        assert_eq!(p.assign.len(), csr.n);
+        assert!(p.assign.iter().all(|&a| (a as usize) < k), "seed {seed}");
+        let q = quality(&csr, &p.assign, k);
+        assert!(q.min_part > 0, "seed {seed}: empty part {q:?}");
+        assert!(q.balance <= 2.5, "seed {seed}: balance {q:?}");
+        // cut is consistent with a direct recount
+        assert_eq!(q.edge_cut, edge_cut(&csr, &p.assign));
+    }
+}
+
+#[test]
+fn prop_partition_never_worse_than_random_on_average() {
+    let mut better = 0;
+    let mut total = 0;
+    for (seed, csr) in random_cases(12) {
+        if csr.num_undirected_edges() < 20 {
+            continue;
+        }
+        let k = 4;
+        let p = partition(&csr, &PartitionConfig::new(k, seed));
+        let mut rng = Rng::new(seed + 1000);
+        let rand_assign: Vec<u32> = (0..csr.n).map(|_| rng.below(k) as u32).collect();
+        if edge_cut(&csr, &p.assign) <= edge_cut(&csr, &rand_assign) {
+            better += 1;
+        }
+        total += 1;
+    }
+    assert!(better * 10 >= total * 9, "partitioner lost to random: {better}/{total}");
+}
+
+fn attr_graph(csr: Csr, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let n = csr.n;
+    let d_x = 8;
+    let features: Vec<f32> = (0..n * d_x).map(|_| rng.normal() as f32).collect();
+    let labels: Vec<u16> = (0..n).map(|_| rng.below(4) as u16).collect();
+    let split: Vec<u8> = (0..n).map(|_| rng.below(3) as u8).collect();
+    Graph::new(csr, d_x, 4, features, labels, split)
+}
+
+#[test]
+fn prop_subgraph_blocks_are_exact_adjacency_gathers() {
+    for (seed, csr) in random_cases(15) {
+        let g = attr_graph(csr, seed);
+        let mut rng = Rng::new(seed + 5);
+        let nb = 1 + rng.below(g.n() / 2);
+        let mut batch: Vec<u32> = rng.sample_indices(g.n(), nb).into_iter().map(|x| x as u32).collect();
+        batch.sort_unstable();
+        let buckets = Buckets(vec![(g.n(), g.n())]);
+        let sb =
+            build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets, &mut rng).unwrap();
+        assert_eq!(sb.dropped_halo, 0);
+        let (ew, sw) = gcn_normalize(&g.csr);
+        // every nonzero in A_bb/A_bh/A_hh equals the global normalization
+        for (i, &u) in sb.batch.iter().enumerate() {
+            let u = u as usize;
+            assert_eq!(sb.a_bb[i * sb.bucket_b + i], sw[u]);
+            for (j, &v) in sb.batch.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let w = sb.a_bb[i * sb.bucket_b + j];
+                match g.csr.neighbors(u).binary_search(&v) {
+                    Ok(e) => assert_eq!(w, ew[g.csr.offsets[u] as usize + e]),
+                    Err(_) => assert_eq!(w, 0.0),
+                }
+            }
+            for (j, &v) in sb.halo.iter().enumerate() {
+                let w = sb.a_bh[i * sb.bucket_h + j];
+                match g.csr.neighbors(u).binary_search(&v) {
+                    Ok(e) => assert_eq!(w, ew[g.csr.offsets[u] as usize + e]),
+                    Err(_) => assert_eq!(w, 0.0),
+                }
+            }
+        }
+        // beta padding + range invariants under every score fn
+        for score in [BetaScore::XSquared, BetaScore::TwoXMinusXSquared, BetaScore::X, BetaScore::One, BetaScore::SinX] {
+            let beta = beta_vector(&sb, 0.7, score);
+            assert!(beta.iter().all(|&b| (0.0..=1.0).contains(&b)));
+            assert!(beta[sb.halo.len()..].iter().all(|&b| b == 0.0));
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_every_epoch_is_a_partition_of_nodes() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let n = 50 + rng.below(300);
+        let k = 2 + rng.below(12);
+        let mut clusters = vec![Vec::new(); k];
+        for u in 0..n as u32 {
+            clusters[rng.below(k)].push(u);
+        }
+        clusters.retain(|c| !c.is_empty());
+        let c_per = 1 + rng.below(clusters.len());
+        for mode in [BatcherMode::Stochastic, BatcherMode::Fixed] {
+            let mut b = Batcher::new(clusters.clone(), c_per, mode, seed);
+            for _ in 0..3 {
+                let mut seen: Vec<u32> = b.epoch_batches().into_iter().flatten().collect();
+                seen.sort_unstable();
+                seen.dedup();
+                let expect: usize = clusters.iter().map(|c| c.len()).sum();
+                assert_eq!(seen.len(), expect, "seed {seed} mode {mode:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_history_scatter_gather_roundtrip() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let n = 20 + rng.below(200);
+        let dims = vec![1 + rng.below(16), 1 + rng.below(16)];
+        let mut h = History::new(n, &dims);
+        for l in 1..=2usize {
+            let k = 1 + rng.below(n);
+            let idx: Vec<u32> = {
+                let mut v: Vec<u32> =
+                    rng.sample_indices(n, k).into_iter().map(|x| x as u32).collect();
+                v.sort_unstable();
+                v
+            };
+            let d = dims[l - 1];
+            let src: Vec<f32> = (0..k * d).map(|_| rng.normal() as f32).collect();
+            h.scatter_h(l, &idx, &src);
+            h.scatter_v(l, &idx, &src);
+            let rows = k + rng.below(8);
+            let back = h.gather_h(l, &idx, rows);
+            assert_eq!(&back[..k * d], &src[..]);
+            assert!(back[k * d..].iter().all(|&x| x == 0.0));
+            let backv = h.gather_v(l, &idx, rows);
+            assert_eq!(&backv[..k * d], &src[..]);
+        }
+    }
+}
+
+#[test]
+fn prop_datasets_deterministic_across_loads() {
+    for &id in DatasetId::all() {
+        let a = load(id, 3);
+        let b = load(id, 3);
+        assert_eq!(a.csr, b.csr, "{}", id.name());
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.split, b.split);
+        let c = load(id, 4);
+        assert_ne!(a.csr, c.csr, "{} should vary with seed", id.name());
+    }
+}
