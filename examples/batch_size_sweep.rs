@@ -3,19 +3,18 @@
 //! at small batches, where more messages are discarded.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example batch_size_sweep
+//! cargo run --release --example batch_size_sweep
 //! ```
 
-use std::path::Path;
 use std::sync::Arc;
 
+use lmc::backend::{Executor, NativeExecutor};
 use lmc::config::RunConfig;
 use lmc::coordinator::{Method, Trainer};
 use lmc::graph::DatasetId;
-use lmc::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
+    let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new());
     println!("{:<12} {:>10} {:>10}", "batch_size", "GAS", "LMC");
     for bs in [1usize, 5] {
         let mut row = format!("{bs:<12}");
@@ -30,7 +29,7 @@ fn main() -> anyhow::Result<()> {
                 eval_every: 2,
                 ..Default::default()
             };
-            let mut t = Trainer::new(rt.clone(), cfg)?;
+            let mut t = Trainer::new(exec.clone(), cfg)?;
             let m = t.run()?;
             let acc = m.best_val_test().map(|(_, a)| a).unwrap_or(f64::NAN);
             row += &format!(" {:>9.2}%", 100.0 * acc);

@@ -4,19 +4,18 @@
 //! quantity Theorem 2 bounds and LMC's compensations shrink.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example gradient_error
+//! cargo run --release --example gradient_error
 //! ```
 
-use std::path::Path;
 use std::sync::Arc;
 
+use lmc::backend::{Executor, NativeExecutor};
 use lmc::config::RunConfig;
 use lmc::coordinator::{grad_check, Method, Trainer};
 use lmc::graph::DatasetId;
-use lmc::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
+    let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new());
     let cfg = RunConfig {
         dataset: DatasetId::ArxivSim,
         arch: "gcn".into(),
@@ -26,7 +25,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 99,
         ..Default::default()
     };
-    let mut t = Trainer::new(rt, cfg)?;
+    let mut t = Trainer::new(exec, cfg)?;
     for _ in 0..3 {
         t.train_epoch()?;
     }

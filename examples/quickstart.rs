@@ -1,19 +1,18 @@
 //! Quickstart: train a 3-layer GCN on cora-sim with LMC and print accuracy.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
-use std::path::Path;
 use std::sync::Arc;
 
+use lmc::backend::{Executor, NativeExecutor};
 use lmc::config::RunConfig;
 use lmc::coordinator::{Method, Trainer};
 use lmc::graph::DatasetId;
-use lmc::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
+    let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new());
     let cfg = RunConfig {
         dataset: DatasetId::CoraSim,
         arch: "gcn".into(),
@@ -23,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         verbose: true,
         ..Default::default()
     };
-    let mut trainer = Trainer::new(rt, cfg)?;
+    let mut trainer = Trainer::new(exec, cfg)?;
     println!(
         "quickstart: {} nodes, {} clusters, LMC + GCN",
         trainer.graph.n(),

@@ -5,19 +5,19 @@
 //! `results/train_arxiv_*.csv` and are recorded in EXPERIMENTS.md.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example train_arxiv
+//! cargo run --release --example train_arxiv
 //! ```
 
 use std::path::Path;
 use std::sync::Arc;
 
+use lmc::backend::{Executor, NativeExecutor};
 use lmc::config::RunConfig;
 use lmc::coordinator::{Method, Trainer};
 use lmc::graph::DatasetId;
-use lmc::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
+    let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new());
     let out = Path::new("results");
     std::fs::create_dir_all(out)?;
 
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     gd_cfg.lr = 2e-2;
-    let mut gd = Trainer::new(rt.clone(), gd_cfg)?;
+    let mut gd = Trainer::new(exec.clone(), gd_cfg)?;
     let gd_metrics = gd.run()?;
     let (gd_val, gd_test) = gd_metrics.best_val_test().unwrap();
     println!(
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
             verbose: true,
             ..Default::default()
         };
-        let mut t = Trainer::new(rt.clone(), cfg)?;
+        let mut t = Trainer::new(exec.clone(), cfg)?;
         println!(
             "\n=== {} on arxiv-sim ({} nodes, {} clusters, target test {:.2}%) ===",
             method.name(),

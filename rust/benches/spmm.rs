@@ -1,0 +1,152 @@
+//! Bench: dense padded-block aggregation vs CSR sparse aggregation — the
+//! core trade the sparse-subgraph refactor makes. Dense cost is
+//! O(bucket² · d) regardless of how many edges the subgraph actually has;
+//! CSR cost is O(nnz · d). Emits `BENCH_spmm.json` with the measured
+//! speedups per bucket size.
+
+use std::fmt::Write as _;
+
+use lmc::graph::{load, DatasetId};
+use lmc::partition::{partition, PartitionConfig};
+use lmc::sampler::{build_subgraph, AdjacencyPolicy, Buckets};
+use lmc::util::bench::{black_box, Bencher};
+use lmc::util::rng::Rng;
+
+/// Dense aggregation over the padded stacked blocks, exactly as the padded
+/// step programs compute it: out = [A_bb A_bh; A_bh^T A_hh] @ x.
+fn dense_agg(
+    abb: &[f32],
+    abh: &[f32],
+    ahh: &[f32],
+    bb: usize,
+    bh: usize,
+    x: &[f32],
+    d: usize,
+) -> Vec<f32> {
+    let m = bb + bh;
+    let mut out = vec![0f32; m * d];
+    for i in 0..bb {
+        let row = &mut out[i * d..(i + 1) * d];
+        for j in 0..bb {
+            let w = abb[i * bb + j];
+            if w != 0.0 {
+                for (r, &s) in row.iter_mut().zip(&x[j * d..(j + 1) * d]) {
+                    *r += w * s;
+                }
+            }
+        }
+        for j in 0..bh {
+            let w = abh[i * bh + j];
+            if w != 0.0 {
+                for (r, &s) in row.iter_mut().zip(&x[(bb + j) * d..(bb + j + 1) * d]) {
+                    *r += w * s;
+                }
+            }
+        }
+    }
+    for i in 0..bh {
+        let row = &mut out[(bb + i) * d..(bb + i + 1) * d];
+        for j in 0..bb {
+            // A_bh^T
+            let w = abh[j * bh + i];
+            if w != 0.0 {
+                for (r, &s) in row.iter_mut().zip(&x[j * d..(j + 1) * d]) {
+                    *r += w * s;
+                }
+            }
+        }
+        for j in 0..bh {
+            let w = ahh[i * bh + j];
+            if w != 0.0 {
+                for (r, &s) in row.iter_mut().zip(&x[(bb + j) * d..(bb + j + 1) * d]) {
+                    *r += w * s;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let b = Bencher::quick();
+    let d = 64usize;
+    let id = DatasetId::ArxivSim;
+    let g = load(id, 0);
+    let k = id.default_parts();
+    let part = partition(&g.csr, &PartitionConfig::new(k, 0));
+    let g = g.permute(&part.contiguous_perm());
+    let per = g.n() / k;
+
+    // the std16 profile's compiled buckets, smallest to largest
+    let cases: [(usize, (usize, usize)); 4] =
+        [(1, (192, 1024)), (2, (320, 1536)), (5, (768, 1792)), (10, (1408, 1792))];
+    let mut rows = Vec::new();
+    println!("== dense padded blocks vs CSR sparse aggregation (d = {d}) ==");
+    for &(nclusters, (bb, bh)) in &cases {
+        let batch: Vec<u32> = (0..((per * nclusters).min(g.n())) as u32).collect();
+        let mut rng = Rng::new(7);
+        let sb = build_subgraph(
+            &g,
+            &batch,
+            AdjacencyPolicy::GlobalWithHalo,
+            &Buckets(vec![(bb, bh)]),
+            &mut rng,
+        )
+        .expect("bucket fits");
+        let m_pad = bb + bh;
+        let m = sb.batch.len() + sb.halo.len();
+        let x_pad: Vec<f32> = (0..m_pad * d).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+        let (abb, abh, ahh) = sb.to_dense();
+        let a_hb = sb.a_bh.transpose();
+
+        let dense = b.run(&format!("dense/b{bb}_h{bh}"), || {
+            black_box(dense_agg(&abb, &abh, &ahh, bb, bh, &x_pad, d));
+        });
+        let csr = b.run(&format!("csr/b{bb}_h{bh}(nnz={})", sb.nnz()), || {
+            // batch rows then halo rows over the sparse blocks
+            let mut out = vec![0f32; m * d];
+            let (bpart, hpart) = out.split_at_mut(sb.batch.len() * d);
+            sb.a_bb.spmm_acc(&x_pad[..sb.batch.len() * d], d, bpart);
+            sb.a_bh.spmm_acc(&x_pad[bb * d..(bb + sb.halo.len()) * d], d, bpart);
+            a_hb.spmm_acc(&x_pad[..sb.batch.len() * d], d, hpart);
+            sb.a_hh.spmm_acc(&x_pad[bb * d..(bb + sb.halo.len()) * d], d, hpart);
+            black_box(&out);
+        });
+        let par = b.run(&format!("csr-par/b{bb}_h{bh}"), || {
+            // same four block products as the serial csr case
+            black_box(sb.a_bb.par_spmm(&x_pad[..sb.batch.len() * d], d));
+            black_box(sb.a_bh.par_spmm(&x_pad[bb * d..(bb + sb.halo.len()) * d], d));
+            black_box(a_hb.par_spmm(&x_pad[..sb.batch.len() * d], d));
+            black_box(sb.a_hh.par_spmm(&x_pad[bb * d..(bb + sb.halo.len()) * d], d));
+        });
+        let speedup = dense.mean_s / csr.mean_s;
+        println!(
+            "    bucket ({bb},{bh}) actual ({}, {}) nnz {}  dense/csr speedup {speedup:.1}x",
+            sb.batch.len(),
+            sb.halo.len(),
+            sb.nnz()
+        );
+        rows.push((bb, bh, sb.batch.len(), sb.halo.len(), sb.nnz(), dense.mean_s, csr.mean_s, par.mean_s, speedup));
+    }
+
+    // emit BENCH_spmm.json
+    let mut json = String::from("{\n  \"bench\": \"spmm_dense_vs_csr\",\n  \"d\": 64,\n  \"cases\": [\n");
+    for (i, &(bb, bh, nb, nh, nnz, dense_s, csr_s, par_s, speedup)) in rows.iter().enumerate() {
+        let _ = write!(
+            json,
+            "    {{\"bucket_b\": {bb}, \"bucket_h\": {bh}, \"batch\": {nb}, \"halo\": {nh}, \
+             \"nnz\": {nnz}, \"dense_mean_s\": {dense_s:.6e}, \"csr_mean_s\": {csr_s:.6e}, \
+             \"csr_par_mean_s\": {par_s:.6e}, \"speedup_dense_over_csr\": {speedup:.2}}}{}",
+            if i + 1 < rows.len() { ",\n" } else { "\n" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_spmm.json", &json).expect("write BENCH_spmm.json");
+    println!("wrote BENCH_spmm.json");
+    let largest = rows.last().unwrap();
+    assert!(
+        largest.8 > 1.0,
+        "CSR aggregation should beat dense blocks at the largest bucket (got {:.2}x)",
+        largest.8
+    );
+}

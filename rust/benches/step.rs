@@ -1,26 +1,19 @@
 //! Bench: end-to-end train-step latency per method (the Table 6 shape) and
-//! the breakdown between host assembly and PJRT execution.
-//! Requires `make artifacts`.
+//! the breakdown between host assembly/write-back and backend execution.
+//! Runs on the native backend — no artifacts required.
 
-use std::path::Path;
 use std::sync::Arc;
 
+use lmc::backend::{Executor, NativeExecutor};
 use lmc::config::RunConfig;
 use lmc::coordinator::{Method, Trainer};
 use lmc::graph::DatasetId;
-use lmc::runtime::Runtime;
 use lmc::util::bench::Bencher;
 
 fn main() {
-    let rt = match Runtime::new(Path::new("artifacts")) {
-        Ok(r) => Arc::new(r),
-        Err(e) => {
-            eprintln!("skipping step bench (no artifacts): {e}");
-            return;
-        }
-    };
+    let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new());
     let b = Bencher::quick();
-    println!("== train step (per mini-batch, warm executable) ==");
+    println!("== train step (per mini-batch, native backend) ==");
     for &id in &[DatasetId::ArxivSim, DatasetId::RedditSim, DatasetId::CoraSim] {
         for method in [Method::Cluster, Method::Gas, Method::Fm, Method::Lmc] {
             let cfg = RunConfig {
@@ -30,30 +23,30 @@ fn main() {
                 epochs: 1,
                 ..Default::default()
             };
-            let mut t = Trainer::new(rt.clone(), cfg).unwrap();
+            let mut t = Trainer::new(exec.clone(), cfg).unwrap();
             let batches = t.batcher.epoch_batches();
             let batch = batches[0].clone();
-            let exec_before = t.rt.total_exec_secs();
+            let exec_before = t.exec.exec_secs();
             let stats = b.run(
                 &format!("step/{}/{}", id.name(), method.name()),
                 || {
                     t.step(&batch).unwrap();
                 },
             );
-            let exec_after = t.rt.total_exec_secs();
+            let exec_after = t.exec.exec_secs();
             let exec_frac =
                 (exec_after - exec_before) / (stats.mean_s * stats.iters as f64).max(1e-12);
             println!(
-                "    PJRT-execute share of step: {:.0}%  (host assembly+writeback: {:.0}%)",
+                "    backend-execute share of step: {:.0}%  (sampling+writeback: {:.0}%)",
                 100.0 * exec_frac,
                 100.0 * (1.0 - exec_frac)
             );
         }
     }
-    println!("== exact evaluation (full-graph tile-wise forward) ==");
+    println!("== exact evaluation (full-graph forward) ==");
     for &id in &[DatasetId::ArxivSim, DatasetId::CoraSim] {
         let cfg = RunConfig { dataset: id, arch: "gcn".into(), method: Method::Lmc, epochs: 1, ..Default::default() };
-        let t = Trainer::new(rt.clone(), cfg).unwrap();
+        let t = Trainer::new(exec.clone(), cfg).unwrap();
         b.run(&format!("evaluate/{}", id.name()), || {
             t.evaluate().unwrap();
         });

@@ -1,14 +1,11 @@
 //! Bench: cheap analytic table regeneration — Table 7 message/memory
-//! accounting and the per-program active-byte model (no training).
-//! The full table/figure harness lives in `lmc experiment <id>`.
+//! accounting (no training). The full table/figure harness lives in
+//! `lmc experiment <id>`.
 
-use std::path::Path;
-
-use lmc::coordinator::memory::{gd_active_bytes, program_active_bytes, reserved_messages};
+use lmc::coordinator::memory::{gd_active_bytes, reserved_messages};
 use lmc::coordinator::Method;
 use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, PartitionConfig};
-use lmc::runtime::Runtime;
 use lmc::util::bench::{black_box, Bencher};
 
 fn main() {
@@ -42,11 +39,5 @@ fn main() {
             id.name(),
             gd_active_bytes(g.n(), &dims, g.d_x, g.csr.neighbors.len()) as f64 / 1e6
         );
-    }
-    if let Ok(rt) = Runtime::new(Path::new("artifacts")) {
-        println!("== per-program active-byte model ==");
-        for (name, p) in rt.manifest.programs.iter().filter(|(_, p)| p.kind == "train_step") {
-            println!("  {:<44} {:>8.1} MB", name, program_active_bytes(p) as f64 / 1e6);
-        }
     }
 }

@@ -1,0 +1,163 @@
+//! Pluggable execution backends (DESIGN.md layer L2').
+//!
+//! The coordinator is written against the [`Executor`] trait: one fused
+//! `forward_backward` over a sampled [`SubgraphBatch`] plus the exact
+//! full-graph oracle operations (evaluation / full-batch gradients). Two
+//! implementations exist:
+//!
+//!   * [`NativeExecutor`] — pure-Rust CPU math over the sparse CSR blocks
+//!     with rayon-parallel row-wise SpMM. O(nnz · d) per step, no padding,
+//!     no AOT artifacts, runs everywhere. The default.
+//!   * `PjrtExecutor` (`--features pjrt`) — the original AOT/HLO path: the
+//!     blocks are densified on demand to the compiled bucket shapes and the
+//!     PJRT `Runtime` executes the train_step / layer programs.
+//!
+//! Both backends implement the same LMC semantics (paper Algorithm 1):
+//! forward compensation via convex combination with historical embeddings
+//! (Eqs. 8-10), backward compensation of the auxiliary variables
+//! (Eqs. 11-13), Eq. 7 parameter gradients from in-batch cotangents only.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::exact::{EvalResult, OracleResult};
+use crate::coordinator::params::Params;
+use crate::graph::Graph;
+use crate::runtime::{ArchInfo, ProfileInfo, Tensor};
+use crate::sampler::{Buckets, SubgraphBatch};
+
+pub use native::NativeExecutor;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtExecutor;
+
+/// Which executor a run uses (`backend = "native" | "pjrt"` in RunConfig).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Native,
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "native" | "cpu" | "rust" => Backend::Native,
+            "pjrt" | "xla" => Backend::Pjrt,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// The (profile, arch) pair a trainer executes, with resolved metadata.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub profile: String,
+    pub arch_name: String,
+    pub arch: ArchInfo,
+}
+
+/// Everything one fused train step consumes. History rows are gathered by
+/// the caller (padded to `sb.bucket_h` rows per layer) so backends never
+/// touch the mutable history store.
+pub struct StepInputs<'a> {
+    pub graph: &'a Graph,
+    pub sb: &'a SubgraphBatch,
+    pub model: &'a ModelSpec,
+    pub params: &'a Params,
+    /// Historical halo embeddings Hbar^l, l = 1..L-1 (`[bucket_h * d_l]`).
+    pub hist_h: Vec<Vec<f32>>,
+    /// Historical auxiliary variables Vbar^l, l = 1..L-1.
+    pub hist_v: Vec<Vec<f32>>,
+    /// Per-halo-node convex combination coefficients (`[bucket_h]`).
+    pub beta: Vec<f32>,
+    /// 1 = backward compensation C_b on (LMC), 0 = off (GAS/CLUSTER).
+    pub bwd_scale: f32,
+    /// 1/|V_train| — folds the loss normalization into V^L.
+    pub vscale: f32,
+    /// Cluster-sampling reweighting b/c (Eqs. 14-15).
+    pub grad_scale: f32,
+}
+
+/// Host-visible results of one fused train step.
+pub struct StepOutputs {
+    /// Sum of masked training CE over in-batch nodes (unnormalized).
+    pub loss_sum: f64,
+    /// Count of correct training predictions over in-batch nodes.
+    pub correct: f64,
+    /// Parameter gradients in canonical manifest order.
+    pub grads: Vec<Tensor>,
+    /// Updated in-batch histories Hbar^l, l = 1..L-1 (first
+    /// `batch.len()` rows are valid).
+    pub new_h: Vec<Vec<f32>>,
+    /// Updated in-batch auxiliary variables Vbar^l, l = 1..L-1.
+    pub new_v: Vec<Vec<f32>>,
+    /// Incomplete up-to-date halo values Htilde^l, l = 1..L-1 (for FM's
+    /// momentum push; first `halo.len()` rows are valid).
+    pub htilde: Vec<Vec<f32>>,
+    /// Simulated accelerator-resident bytes for this step.
+    pub active_bytes: usize,
+}
+
+/// A pluggable execution backend: the fused subgraph train step plus the
+/// exact full-graph oracle operations the coordinator needs.
+pub trait Executor: Send + Sync {
+    fn backend_name(&self) -> &'static str;
+
+    /// Profile metadata (dims every program of a dataset family shares).
+    fn resolve_profile(&self, profile: &str) -> Result<ProfileInfo>;
+
+    /// Arch metadata (canonical parameter order, layer dims).
+    fn resolve_arch(&self, profile: &str, arch_name: &str) -> Result<ArchInfo>;
+
+    /// Shape buckets the sampler must pad to. Unbounded (exact fit) for
+    /// backends without compiled shapes.
+    fn buckets(&self, profile: &str) -> Result<Buckets>;
+
+    /// One fused train step (forward + LMC-compensated backward) over a
+    /// sampled subgraph.
+    fn forward_backward(&self, inp: &StepInputs) -> Result<StepOutputs>;
+
+    /// Exact full-graph forward: H^l for all nodes, l = 0..L (index 0 is
+    /// the embed0 output).
+    fn full_forward(&self, g: &Graph, params: &Params, model: &ModelSpec)
+        -> Result<Vec<Vec<f32>>>;
+
+    /// Exact full-batch gradient oracle (paper Theorem 1 with V_B = V).
+    fn full_grad(&self, g: &Graph, params: &Params, model: &ModelSpec) -> Result<OracleResult>;
+
+    /// Exact evaluation: per-split accuracy + mean training loss.
+    fn evaluate(&self, g: &Graph, params: &Params, model: &ModelSpec) -> Result<EvalResult>;
+
+    /// Cumulative seconds spent inside backend execution (telemetry).
+    fn exec_secs(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Build the executor selected by `cfg.backend`.
+pub fn make_executor(cfg: &crate::config::RunConfig) -> Result<Arc<dyn Executor>> {
+    match cfg.backend {
+        Backend::Native => Ok(Arc::new(NativeExecutor::new())),
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt => Ok(Arc::new(PjrtExecutor::new(std::path::Path::new(
+            &cfg.artifact_dir,
+        ))?)),
+        #[cfg(not(feature = "pjrt"))]
+        Backend::Pjrt => anyhow::bail!(
+            "backend = \"pjrt\" requires building with `--features pjrt` \
+             (and AOT artifacts from `make artifacts`); the default build \
+             ships the native backend only"
+        ),
+    }
+}

@@ -1,0 +1,856 @@
+//! Native CPU executor: the GCN / GCNII forward + LMC-compensated backward
+//! of `python/compile/step.py`, re-implemented directly over the sampler's
+//! sparse CSR blocks with rayon-parallel row-wise SpMM.
+//!
+//! No buckets, no padding, no AOT artifacts: per-step cost is
+//! O(nnz · d + m · d²) for m = |V_B| + |halo| instead of the padded
+//! O(bucket² · d) the dense path pays. Semantics follow the paper exactly:
+//!
+//!   * forward: Eq. (8) for in-batch rows, Eq. (10) for the incomplete
+//!     up-to-date halo rows, Eq. (9) convex combination with the
+//!     historical embeddings (`combine`);
+//!   * backward: auxiliary variables propagated through the local layer
+//!     map (Eqs. 11 & 13), halo cotangents compensated with historical
+//!     auxiliary variables (Eq. 12), parameter gradients from in-batch
+//!     cotangents only (Eq. 7);
+//!   * full-graph oracle (Theorem 1 with V_B = V): exact forward,
+//!     evaluation and full-batch gradients over the global CSR.
+//!
+//! Aggregation operates on the *stacked* `[batch; halo]` node space with
+//! the symmetric block operator `[[A_bb, A_bh], [A_bh^T, A_hh]]`, so the
+//! backward aggregation reuses the forward one.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use rayon::prelude::*;
+
+use crate::coordinator::exact::{acc, argmax, EvalResult, OracleResult};
+use crate::coordinator::memory;
+use crate::coordinator::params::Params;
+use crate::graph::Graph;
+use crate::runtime::{ArchInfo, ProfileInfo, Tensor};
+use crate::sampler::{Buckets, CsrBlock, SubgraphBatch};
+
+use super::{Executor, ModelSpec, StepInputs, StepOutputs};
+
+/// GCNII hyperparameters (python/compile/spec.py profile defaults).
+const GCNII_ALPHA: f32 = 0.1;
+const GCNII_LAM: f64 = 0.5;
+
+#[inline]
+fn gcnii_gamma(l: usize) -> f32 {
+    (GCNII_LAM / l as f64 + 1.0).ln() as f32
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Gcn,
+    Gcnii,
+}
+
+fn kind_of(arch_name: &str) -> Result<Kind> {
+    match arch_name {
+        "gcn" => Ok(Kind::Gcn),
+        "gcnii" => Ok(Kind::Gcnii),
+        other => bail!("native backend: unknown arch '{other}' (expected gcn|gcnii)"),
+    }
+}
+
+/// Pure-Rust CPU backend (the default): sparse-block train steps + exact
+/// full-graph oracle, no artifacts required.
+pub struct NativeExecutor {
+    exec_secs: Mutex<f64>,
+}
+
+impl NativeExecutor {
+    pub fn new() -> NativeExecutor {
+        NativeExecutor { exec_secs: Mutex::new(0.0) }
+    }
+
+    fn time<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        let t0 = Instant::now();
+        let out = f();
+        *self.exec_secs.lock().unwrap() += t0.elapsed().as_secs_f64();
+        out
+    }
+}
+
+impl Default for NativeExecutor {
+    fn default() -> Self {
+        NativeExecutor::new()
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn resolve_profile(&self, profile: &str) -> Result<ProfileInfo> {
+        ProfileInfo::builtin(profile)
+            .ok_or_else(|| anyhow!("native backend: unknown profile '{profile}'"))
+    }
+
+    fn resolve_arch(&self, profile: &str, arch_name: &str) -> Result<ArchInfo> {
+        ArchInfo::for_profile(&self.resolve_profile(profile)?, arch_name)
+    }
+
+    fn buckets(&self, _profile: &str) -> Result<Buckets> {
+        Ok(Buckets::unbounded())
+    }
+
+    fn forward_backward(&self, inp: &StepInputs) -> Result<StepOutputs> {
+        self.time(|| step_native(inp))
+    }
+
+    fn full_forward(&self, g: &Graph, params: &Params, model: &ModelSpec) -> Result<Vec<Vec<f32>>> {
+        self.time(|| Ok(full_forward_cached(g, params, model, false)?.hs))
+    }
+
+    fn full_grad(&self, g: &Graph, params: &Params, model: &ModelSpec) -> Result<OracleResult> {
+        self.time(|| full_grad_native(g, params, model))
+    }
+
+    fn evaluate(&self, g: &Graph, params: &Params, model: &ModelSpec) -> Result<EvalResult> {
+        self.time(|| evaluate_native(g, params, model))
+    }
+
+    fn exec_secs(&self) -> f64 {
+        *self.exec_secs.lock().unwrap()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dense kernels (rayon-parallel over output rows; deterministic per row)
+// ---------------------------------------------------------------------------
+
+/// `a[m, k] @ b[k, n]` row-major.
+fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n);
+    let mut out = vec![0f32; m * n];
+    out.par_chunks_mut(n).enumerate().for_each(|(i, row)| {
+        let ar = &a[i * k..(i + 1) * k];
+        for (kk, &av) in ar.iter().enumerate() {
+            if av != 0.0 {
+                let br = &b[kk * n..(kk + 1) * n];
+                for (r, &bv) in row.iter_mut().zip(br) {
+                    *r += av * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `a[m, n] @ b[p, n]^T` → `[m, p]`.
+fn matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], p: usize) -> Vec<f32> {
+    debug_assert!(a.len() >= m * n && b.len() >= p * n);
+    let mut out = vec![0f32; m * p];
+    out.par_chunks_mut(p).enumerate().for_each(|(i, row)| {
+        let ar = &a[i * n..(i + 1) * n];
+        for (j, r) in row.iter_mut().enumerate() {
+            let br = &b[j * n..(j + 1) * n];
+            let mut acc = 0f32;
+            for (&x, &y) in ar.iter().zip(br) {
+                acc += x * y;
+            }
+            *r = acc;
+        }
+    });
+    out
+}
+
+/// `a[m, k]^T @ c[m, n]` → `[k, n]`.
+fn matmul_tn(a: &[f32], m: usize, k: usize, c: &[f32], n: usize) -> Vec<f32> {
+    debug_assert!(a.len() >= m * k && c.len() >= m * n);
+    let mut out = vec![0f32; k * n];
+    out.par_chunks_mut(n).enumerate().for_each(|(kk, row)| {
+        for i in 0..m {
+            let av = a[i * k + kk];
+            if av != 0.0 {
+                let cr = &c[i * n..(i + 1) * n];
+                for (r, &cv) in row.iter_mut().zip(cr) {
+                    *r += av * cv;
+                }
+            }
+        }
+    });
+    out
+}
+
+fn add_bias_rows(z: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    for row in z.chunks_mut(n) {
+        for (r, &b) in row.iter_mut().zip(bias) {
+            *r += b;
+        }
+    }
+}
+
+fn colsum(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n];
+    for i in 0..m {
+        for (o, &v) in out.iter_mut().zip(&a[i * n..(i + 1) * n]) {
+            *o += v;
+        }
+    }
+    out
+}
+
+fn relu_inplace(z: &mut [f32]) {
+    for v in z.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// dz ⊙= relu'(z) (JAX convention: relu'(0) = 0).
+fn relu_bwd_mask(dz: &mut [f32], z: &[f32]) {
+    for (d, &v) in dz.iter_mut().zip(z) {
+        if v <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// dst += scale * src.
+fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += scale * s;
+    }
+}
+
+/// Eq. (9)/(12): out[i, :] = (1 - beta[i]) * hist[i, :] + beta[i] * fresh[i, :].
+fn combine(beta: &[f32], hist: &[f32], fresh: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    debug_assert!(beta.len() >= rows && hist.len() >= rows * d && fresh.len() >= rows * d);
+    let mut out = vec![0f32; rows * d];
+    for i in 0..rows {
+        let b = beta[i];
+        let (o, h, f) =
+            (&mut out[i * d..(i + 1) * d], &hist[i * d..(i + 1) * d], &fresh[i * d..(i + 1) * d]);
+        for ((ov, &hv), &fv) in o.iter_mut().zip(h).zip(f) {
+            *ov = (1.0 - b) * hv + b * fv;
+        }
+    }
+    out
+}
+
+/// Numerically-stable masked softmax cross-entropy over `[rows, c]` logits.
+/// Returns (loss_sum, correct, dlogits) with dlogits = (softmax - onehot) ⊙ mask
+/// (unscaled — callers fold in vscale / bwd_scale).
+fn masked_ce(logits: &[f32], rows: usize, c: usize, y: &[u16], mask: &[f32]) -> (f64, f64, Vec<f32>) {
+    let mut loss = 0f64;
+    let mut correct = 0f64;
+    let mut dl = vec![0f32; rows * c];
+    for i in 0..rows {
+        let row = &logits[i * c..(i + 1) * c];
+        let mk = mask[i];
+        let mut mx = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                arg = j;
+            }
+        }
+        let mut denom = 0f64;
+        for &v in row {
+            denom += ((v - mx) as f64).exp();
+        }
+        let yi = y[i] as usize;
+        if mk != 0.0 {
+            let logp = (row[yi] - mx) as f64 - denom.ln();
+            loss -= mk as f64 * logp;
+            if arg == yi {
+                correct += mk as f64;
+            }
+            let drow = &mut dl[i * c..(i + 1) * c];
+            for (j, d) in drow.iter_mut().enumerate() {
+                let p = (((row[j] - mx) as f64).exp() / denom) as f32;
+                *d = mk * (p - if j == yi { 1.0 } else { 0.0 });
+            }
+        }
+    }
+    (loss, correct, dl)
+}
+
+// ---------------------------------------------------------------------------
+// subgraph step
+// ---------------------------------------------------------------------------
+
+/// Gather feature rows for the stacked `[batch; halo]` node space.
+fn gather_stacked(src: &[f32], d: usize, batch: &[u32], halo: &[u32]) -> Vec<f32> {
+    let mut out = vec![0f32; (batch.len() + halo.len()) * d];
+    for (i, &u) in batch.iter().chain(halo.iter()).enumerate() {
+        out[i * d..(i + 1) * d].copy_from_slice(&src[u as usize * d..(u as usize + 1) * d]);
+    }
+    out
+}
+
+/// `[[A_bb, A_bh], [A_bh^T, A_hh]] @ x` over the stacked node space,
+/// rayon-parallel per output row — the backend's SpMM hot path.
+fn agg_full(sb: &SubgraphBatch, a_hb: &CsrBlock, x: &[f32], d: usize) -> Vec<f32> {
+    let nb = sb.batch.len();
+    let nh = sb.halo.len();
+    let m = nb + nh;
+    debug_assert!(x.len() >= m * d);
+    let mut out = vec![0f32; m * d];
+    out.par_chunks_mut(d).enumerate().for_each(|(r, row)| {
+        let (lo, hi) = if r < nb {
+            (sb.a_bb.row(r), sb.a_bh.row(r))
+        } else {
+            (a_hb.row(r - nb), sb.a_hh.row(r - nb))
+        };
+        let (cols, vals) = lo;
+        for (&j, &w) in cols.iter().zip(vals) {
+            let src = &x[j as usize * d..(j as usize + 1) * d];
+            for (o, &s) in row.iter_mut().zip(src) {
+                *o += w * s;
+            }
+        }
+        let (cols, vals) = hi;
+        for (&j, &w) in cols.iter().zip(vals) {
+            let src = &x[(nb + j as usize) * d..(nb + j as usize + 1) * d];
+            for (o, &s) in row.iter_mut().zip(src) {
+                *o += w * s;
+            }
+        }
+    });
+    out
+}
+
+fn labels_of(g: &Graph, idx: &[u32]) -> Vec<u16> {
+    idx.iter().map(|&u| g.labels[u as usize]).collect()
+}
+
+fn train_mask_of(g: &Graph, idx: &[u32]) -> Vec<f32> {
+    idx.iter().map(|&u| if g.split[u as usize] == 0 { 1.0 } else { 0.0 }).collect()
+}
+
+fn param<'p>(params: &'p Params, name: &str) -> Result<&'p Tensor> {
+    params.get(name).ok_or_else(|| anyhow!("missing parameter {name}"))
+}
+
+fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
+    let g = inp.graph;
+    let sb = inp.sb;
+    let arch = &inp.model.arch;
+    let kind = kind_of(&inp.model.arch_name)?;
+    let l_total = arch.l;
+    let dims = &arch.dims;
+    let nb = sb.batch.len();
+    let nh = sb.halo.len();
+    let m = nb + nh;
+    let a_hb = sb.a_bh.transpose();
+
+    // ---- embed0 ----------------------------------------------------------
+    // For GCN the features flow straight into layer 1 (embed0 = identity),
+    // so `x_full` is moved, not copied; GCNII keeps `x_full` for the W0
+    // gradient and `h0_full` for the initial-residual connection.
+    let x_full = gather_stacked(&g.features, g.d_x, &sb.batch, &sb.halo);
+    let (mut h, h0_full, z0_full, x_embed0) = match kind {
+        Kind::Gcn => (x_full, Vec::new(), Vec::new(), Vec::new()),
+        Kind::Gcnii => {
+            let w0 = param(inp.params, "W0")?;
+            let b0 = param(inp.params, "b0")?;
+            let mut z0 = matmul(&x_full, m, g.d_x, &w0.data, dims[0]);
+            add_bias_rows(&mut z0, &b0.data);
+            let mut h0 = z0.clone();
+            relu_inplace(&mut h0);
+            (h0.clone(), h0, z0, x_full)
+        }
+    };
+
+    // ---- forward ---------------------------------------------------------
+    // caches: per layer the stacked pre-activation `pre` (relu mask) and the
+    // linearized input `lin` (GCN: aggregated messages, the dW operand;
+    // GCNII: the residual-mixed s).
+    let mut pre: Vec<Vec<f32>> = Vec::with_capacity(l_total);
+    let mut lin: Vec<Vec<f32>> = Vec::with_capacity(l_total);
+    let mut new_h: Vec<Vec<f32>> = Vec::new();
+    let mut htilde: Vec<Vec<f32>> = Vec::new();
+    for l in 1..=l_total {
+        let d_prev = dims[l - 1];
+        let d_l = dims[l];
+        let agg = agg_full(sb, &a_hb, &h, d_prev);
+        let z = match kind {
+            Kind::Gcn => {
+                let w = param(inp.params, &format!("W{l}"))?;
+                let b = param(inp.params, &format!("b{l}"))?;
+                let mut z = matmul(&agg, m, d_prev, &w.data, d_l);
+                add_bias_rows(&mut z, &b.data);
+                lin.push(agg);
+                z
+            }
+            Kind::Gcnii => {
+                let w = param(inp.params, &format!("W{l}"))?;
+                let gam = gcnii_gamma(l);
+                let mut s = agg;
+                for (sv, &h0v) in s.iter_mut().zip(&h0_full) {
+                    *sv = (1.0 - GCNII_ALPHA) * *sv + GCNII_ALPHA * h0v;
+                }
+                let sw = matmul(&s, m, d_prev, &w.data, d_l);
+                let mut z = vec![0f32; m * d_l];
+                for ((zv, &sv), &swv) in z.iter_mut().zip(&s).zip(&sw) {
+                    *zv = (1.0 - gam) * sv + gam * swv;
+                }
+                lin.push(s);
+                z
+            }
+        };
+        let mut act = z.clone();
+        if l < l_total || kind == Kind::Gcnii {
+            relu_inplace(&mut act);
+        }
+        pre.push(z);
+        if l < l_total {
+            // Eq. (9): halo rows become a convex combination of the fresh
+            // incomplete value and the historical embedding.
+            let ht = act[nb * d_l..].to_vec();
+            let hh_new = combine(&inp.beta[..nh], &inp.hist_h[l - 1], &ht, nh, d_l);
+            act.truncate(nb * d_l);
+            new_h.push(act.clone());
+            htilde.push(ht);
+            act.extend_from_slice(&hh_new);
+        }
+        h = act;
+    }
+
+    // ---- loss head (Vbar^L and Vhat^L initialization, Alg. 1 line 11) ----
+    let d_last = dims[l_total];
+    let hb = &h[..nb * d_last];
+    let hh = &h[nb * d_last..];
+    let y_b = labels_of(g, &sb.batch);
+    let mask_b = train_mask_of(g, &sb.batch);
+    let y_h = labels_of(g, &sb.halo);
+    let mask_h = train_mask_of(g, &sb.halo);
+
+    let mut grads: Vec<Tensor> = arch.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+    let gidx: HashMap<&str, usize> =
+        arch.params.iter().enumerate().map(|(i, (n, _))| (n.as_str(), i)).collect();
+
+    let (loss_sum, correct, mut vb, mut vh) = match kind {
+        Kind::Gcn => {
+            let c = d_last;
+            let (ls, cor, mut dlb) = masked_ce(hb, nb, c, &y_b, &mask_b);
+            for v in dlb.iter_mut() {
+                *v *= inp.vscale;
+            }
+            let (_, _, mut dlh) = masked_ce(hh, nh, c, &y_h, &mask_h);
+            let s = inp.bwd_scale * inp.vscale;
+            for v in dlh.iter_mut() {
+                *v *= s;
+            }
+            (ls, cor, dlb, dlh)
+        }
+        Kind::Gcnii => {
+            let wc = param(inp.params, "Wc")?;
+            let bc = param(inp.params, "bc")?;
+            let c = wc.shape[1];
+            let mut logit_b = matmul(hb, nb, d_last, &wc.data, c);
+            add_bias_rows(&mut logit_b, &bc.data);
+            let (ls, cor, dlb) = masked_ce(&logit_b, nb, c, &y_b, &mask_b);
+            axpy(&mut grads[gidx["Wc"]].data, &matmul_tn(hb, nb, d_last, &dlb, c), inp.grad_scale * inp.vscale);
+            axpy(&mut grads[gidx["bc"]].data, &colsum(&dlb, nb, c), inp.grad_scale * inp.vscale);
+            let mut vbv = matmul_nt(&dlb, nb, c, &wc.data, d_last);
+            for v in vbv.iter_mut() {
+                *v *= inp.vscale;
+            }
+            let mut logit_h = matmul(hh, nh, d_last, &wc.data, c);
+            add_bias_rows(&mut logit_h, &bc.data);
+            let (_, _, dlh) = masked_ce(&logit_h, nh, c, &y_h, &mask_h);
+            let mut vhv = matmul_nt(&dlh, nh, c, &wc.data, d_last);
+            let s = inp.bwd_scale * inp.vscale;
+            for v in vhv.iter_mut() {
+                *v *= s;
+            }
+            (ls, cor, vbv, vhv)
+        }
+    };
+
+    // ---- backward (Eqs. 11-13 propagation, Eq. 7 parameter grads) --------
+    let mut new_v: Vec<Vec<f32>> = vec![Vec::new(); l_total.saturating_sub(1)];
+    let mut acc_h0 = vec![0f32; nb * dims[0]];
+    for l in (1..=l_total).rev() {
+        let d_prev = dims[l - 1];
+        let d_l = dims[l];
+        let mut dz = Vec::with_capacity(m * d_l);
+        dz.extend_from_slice(&vb);
+        dz.extend_from_slice(&vh);
+        if l < l_total || kind == Kind::Gcnii {
+            relu_bwd_mask(&mut dz, &pre[l - 1]);
+        }
+        let v_full = match kind {
+            Kind::Gcn => {
+                let w = param(inp.params, &format!("W{l}"))?;
+                // Eq. (7): in-batch cotangents only feed parameter grads.
+                let gw = matmul_tn(&lin[l - 1], nb, d_prev, &dz, d_l);
+                axpy(&mut grads[gidx[format!("W{l}").as_str()]].data, &gw, inp.grad_scale);
+                let gb = colsum(&dz[..nb * d_l], nb, d_l);
+                axpy(&mut grads[gidx[format!("b{l}").as_str()]].data, &gb, inp.grad_scale);
+                // Eqs. (11) & (13): propagate with full (batch, halo) rows.
+                let dagg = matmul_nt(&dz, m, d_l, &w.data, d_prev);
+                agg_full(sb, &a_hb, &dagg, d_prev)
+            }
+            Kind::Gcnii => {
+                let w = param(inp.params, &format!("W{l}"))?;
+                let gam = gcnii_gamma(l);
+                let gw = matmul_tn(&lin[l - 1], nb, d_prev, &dz, d_l);
+                axpy(&mut grads[gidx[format!("W{l}").as_str()]].data, &gw, inp.grad_scale * gam);
+                let dzw = matmul_nt(&dz, m, d_l, &w.data, d_prev);
+                let mut ds = vec![0f32; m * d_prev];
+                for ((dv, &zv), &zwv) in ds.iter_mut().zip(&dz).zip(&dzw) {
+                    *dv = (1.0 - gam) * zv + gam * zwv;
+                }
+                // initial-residual cotangent into embed0, batch rows (Eq. 7)
+                axpy(&mut acc_h0, &ds[..nb * d_prev], GCNII_ALPHA);
+                for v in ds.iter_mut() {
+                    *v *= 1.0 - GCNII_ALPHA;
+                }
+                agg_full(sb, &a_hb, &ds, d_prev)
+            }
+        };
+        if l > 1 {
+            // Eq. (12): compensate halo auxiliary variables with history.
+            let mut vh_next =
+                combine(&inp.beta[..nh], &inp.hist_v[l - 2], &v_full[nb * d_prev..], nh, d_prev);
+            for v in vh_next.iter_mut() {
+                *v *= inp.bwd_scale;
+            }
+            vh = vh_next;
+            vb = v_full[..nb * d_prev].to_vec();
+            new_v[l - 2] = vb.clone(); // Vbar^{l-1} write-back equals the propagated Vb
+        } else {
+            // V^0 feeds embed0 through the compensated propagation
+            axpy(&mut acc_h0, &v_full[..nb * d_prev], 1.0);
+        }
+    }
+
+    // ---- embed0 parameter gradients (GCNII's W0/b0; no-op for GCN) -------
+    if kind == Kind::Gcnii {
+        let mut dz0 = acc_h0;
+        relu_bwd_mask(&mut dz0, &z0_full[..nb * dims[0]]);
+        let gw0 = matmul_tn(&x_embed0, nb, g.d_x, &dz0, dims[0]);
+        axpy(&mut grads[gidx["W0"]].data, &gw0, inp.grad_scale);
+        axpy(&mut grads[gidx["b0"]].data, &colsum(&dz0, nb, dims[0]), inp.grad_scale);
+    }
+
+    let active_bytes = memory::sparse_step_active_bytes(sb, arch, g.d_x);
+    Ok(StepOutputs { loss_sum, correct, grads, new_h, new_v, htilde, active_bytes })
+}
+
+// ---------------------------------------------------------------------------
+// exact full-graph oracle
+// ---------------------------------------------------------------------------
+
+/// `Ahat @ x` over the global normalized adjacency (self-loops folded in).
+fn full_aggregate(g: &Graph, x: &[f32], d: usize) -> Vec<f32> {
+    let n = g.n();
+    debug_assert!(x.len() >= n * d);
+    let mut out = vec![0f32; n * d];
+    out.par_chunks_mut(d).enumerate().for_each(|(u, row)| {
+        let sw = g.self_w[u];
+        let src = &x[u * d..(u + 1) * d];
+        for (o, &s) in row.iter_mut().zip(src) {
+            *o = sw * s;
+        }
+        for ei in g.csr.offsets[u] as usize..g.csr.offsets[u + 1] as usize {
+            let v = g.csr.neighbors[ei] as usize;
+            let w = g.edge_w[ei];
+            let src = &x[v * d..(v + 1) * d];
+            for (o, &s) in row.iter_mut().zip(src) {
+                *o += w * s;
+            }
+        }
+    });
+    out
+}
+
+struct FullFwd {
+    /// H^l for l = 0..L (index 0 = embed0 output).
+    hs: Vec<Vec<f32>>,
+    /// Pre-activations z_l, l = 1..L (index l-1).
+    pre: Vec<Vec<f32>>,
+    /// GCN: aggregated messages; GCNII: residual-mixed s (index l-1).
+    lin: Vec<Vec<f32>>,
+    /// GCNII embed0 pre-activation (empty for GCN).
+    z0: Vec<f32>,
+}
+
+/// Exact full-graph forward. With `keep_caches` the per-layer backward
+/// operands (`pre`, `lin`, `z0`) are retained for `full_grad_native`;
+/// evaluation-only callers skip them to keep peak memory at one activation
+/// per layer.
+fn full_forward_cached(g: &Graph, params: &Params, model: &ModelSpec, keep_caches: bool) -> Result<FullFwd> {
+    let arch = &model.arch;
+    let kind = kind_of(&model.arch_name)?;
+    let n = g.n();
+    let dims = &arch.dims;
+    let (h0, z0) = match kind {
+        Kind::Gcn => (g.features.clone(), Vec::new()),
+        Kind::Gcnii => {
+            let w0 = param(params, "W0")?;
+            let b0 = param(params, "b0")?;
+            let mut z0 = matmul(&g.features, n, g.d_x, &w0.data, dims[0]);
+            add_bias_rows(&mut z0, &b0.data);
+            let mut h0 = z0.clone();
+            relu_inplace(&mut h0);
+            (h0, z0)
+        }
+    };
+    let mut hs = vec![h0.clone()];
+    let mut pre = Vec::with_capacity(arch.l);
+    let mut lin = Vec::with_capacity(arch.l);
+    let mut h = h0;
+    for l in 1..=arch.l {
+        let d_prev = dims[l - 1];
+        let d_l = dims[l];
+        let agg = full_aggregate(g, &h, d_prev);
+        let z = match kind {
+            Kind::Gcn => {
+                let w = param(params, &format!("W{l}"))?;
+                let b = param(params, &format!("b{l}"))?;
+                let mut z = matmul(&agg, n, d_prev, &w.data, d_l);
+                add_bias_rows(&mut z, &b.data);
+                lin.push(agg);
+                z
+            }
+            Kind::Gcnii => {
+                let w = param(params, &format!("W{l}"))?;
+                let gam = gcnii_gamma(l);
+                let mut s = agg;
+                for (sv, &h0v) in s.iter_mut().zip(&hs[0]) {
+                    *sv = (1.0 - GCNII_ALPHA) * *sv + GCNII_ALPHA * h0v;
+                }
+                let sw = matmul(&s, n, d_prev, &w.data, d_l);
+                let mut z = vec![0f32; n * d_l];
+                for ((zv, &sv), &swv) in z.iter_mut().zip(&s).zip(&sw) {
+                    *zv = (1.0 - gam) * sv + gam * swv;
+                }
+                lin.push(s);
+                z
+            }
+        };
+        let act = if keep_caches {
+            let mut act = z.clone();
+            if l < arch.l || kind == Kind::Gcnii {
+                relu_inplace(&mut act);
+            }
+            pre.push(z);
+            act
+        } else {
+            lin.clear();
+            let mut act = z;
+            if l < arch.l || kind == Kind::Gcnii {
+                relu_inplace(&mut act);
+            }
+            act
+        };
+        hs.push(act.clone());
+        h = act;
+    }
+    if !keep_caches {
+        return Ok(FullFwd { hs, pre: Vec::new(), lin: Vec::new(), z0: Vec::new() });
+    }
+    Ok(FullFwd { hs, pre, lin, z0 })
+}
+
+/// Output-head logits for a `[rows, d_last]` representation.
+fn logits_of(kind: Kind, params: &Params, h: &[f32], rows: usize, d_last: usize) -> Result<Vec<f32>> {
+    match kind {
+        Kind::Gcn => Ok(h[..rows * d_last].to_vec()),
+        Kind::Gcnii => {
+            let wc = param(params, "Wc")?;
+            let bc = param(params, "bc")?;
+            let mut l = matmul(h, rows, d_last, &wc.data, wc.shape[1]);
+            add_bias_rows(&mut l, &bc.data);
+            Ok(l)
+        }
+    }
+}
+
+/// Full-graph train mask straight from the split labels.
+fn full_train_mask(g: &Graph) -> Vec<f32> {
+    g.split.iter().map(|&s| if s == 0 { 1.0 } else { 0.0 }).collect()
+}
+
+fn evaluate_native(g: &Graph, params: &Params, model: &ModelSpec) -> Result<EvalResult> {
+    let kind = kind_of(&model.arch_name)?;
+    let fwd = full_forward_cached(g, params, model, false)?;
+    let n = g.n();
+    let d_last = model.arch.dims[model.arch.l];
+    let logits = logits_of(kind, params, &fwd.hs[model.arch.l], n, d_last)?;
+    let c = logits.len() / n;
+    let mask = full_train_mask(g);
+    let (loss_sum, _, _) = masked_ce(&logits, n, c, &g.labels, &mask);
+    let n_train = g.split.iter().filter(|&&s| s == 0).count().max(1);
+    let mut correct = [0usize; 3];
+    let mut total = [0usize; 3];
+    for u in 0..n {
+        let pred = argmax(&logits[u * c..(u + 1) * c]);
+        let split = g.split[u] as usize;
+        total[split] += 1;
+        if pred == g.labels[u] as usize {
+            correct[split] += 1;
+        }
+    }
+    Ok(EvalResult {
+        train_loss: loss_sum / n_train as f64,
+        train_acc: acc(correct[0], total[0]),
+        val_acc: acc(correct[1], total[1]),
+        test_acc: acc(correct[2], total[2]),
+    })
+}
+
+fn full_grad_native(g: &Graph, params: &Params, model: &ModelSpec) -> Result<OracleResult> {
+    let arch = &model.arch;
+    let kind = kind_of(&model.arch_name)?;
+    let fwd = full_forward_cached(g, params, model, true)?;
+    let n = g.n();
+    let dims = &arch.dims;
+    let l_total = arch.l;
+    let d_last = dims[l_total];
+    let n_train = g.split.iter().filter(|&&s| s == 0).count().max(1);
+    let vscale = 1.0 / n_train as f32;
+
+    let mut grads: Vec<Tensor> = arch.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
+    let gidx: HashMap<&str, usize> =
+        arch.params.iter().enumerate().map(|(i, (nm, _))| (nm.as_str(), i)).collect();
+
+    let mask = full_train_mask(g);
+
+    // V^L from the loss head
+    let logits = logits_of(kind, params, &fwd.hs[l_total], n, d_last)?;
+    let c = logits.len() / n;
+    let (loss_sum, _, dlogits) = masked_ce(&logits, n, c, &g.labels, &mask);
+    let mut v: Vec<f32> = match kind {
+        Kind::Gcn => dlogits.iter().map(|&x| x * vscale).collect(),
+        Kind::Gcnii => {
+            let wc = param(params, "Wc")?;
+            axpy(&mut grads[gidx["Wc"]].data, &matmul_tn(&fwd.hs[l_total], n, d_last, &dlogits, c), vscale);
+            axpy(&mut grads[gidx["bc"]].data, &colsum(&dlogits, n, c), vscale);
+            let mut vv = matmul_nt(&dlogits, n, c, &wc.data, d_last);
+            for x in vv.iter_mut() {
+                *x *= vscale;
+            }
+            vv
+        }
+    };
+
+    let mut v_layers: Vec<Vec<f32>> = vec![Vec::new(); l_total + 1];
+    v_layers[l_total] = v.clone();
+    let mut acc_h0 = vec![0f32; n * dims[0]];
+    for l in (1..=l_total).rev() {
+        let d_prev = dims[l - 1];
+        let d_l = dims[l];
+        let mut dz = v;
+        if l < l_total || kind == Kind::Gcnii {
+            relu_bwd_mask(&mut dz, &fwd.pre[l - 1]);
+        }
+        let vprev = match kind {
+            Kind::Gcn => {
+                let w = param(params, &format!("W{l}"))?;
+                axpy(
+                    &mut grads[gidx[format!("W{l}").as_str()]].data,
+                    &matmul_tn(&fwd.lin[l - 1], n, d_prev, &dz, d_l),
+                    1.0,
+                );
+                axpy(&mut grads[gidx[format!("b{l}").as_str()]].data, &colsum(&dz, n, d_l), 1.0);
+                let dagg = matmul_nt(&dz, n, d_l, &w.data, d_prev);
+                full_aggregate(g, &dagg, d_prev)
+            }
+            Kind::Gcnii => {
+                let w = param(params, &format!("W{l}"))?;
+                let gam = gcnii_gamma(l);
+                axpy(
+                    &mut grads[gidx[format!("W{l}").as_str()]].data,
+                    &matmul_tn(&fwd.lin[l - 1], n, d_prev, &dz, d_l),
+                    gam,
+                );
+                let dzw = matmul_nt(&dz, n, d_l, &w.data, d_prev);
+                let mut ds = vec![0f32; n * d_prev];
+                for ((dv, &zv), &zwv) in ds.iter_mut().zip(&dz).zip(&dzw) {
+                    *dv = (1.0 - gam) * zv + gam * zwv;
+                }
+                axpy(&mut acc_h0, &ds, GCNII_ALPHA);
+                for x in ds.iter_mut() {
+                    *x *= 1.0 - GCNII_ALPHA;
+                }
+                full_aggregate(g, &ds, d_prev)
+            }
+        };
+        v = vprev;
+        if l >= 2 {
+            v_layers[l - 1] = v.clone();
+        }
+    }
+    axpy(&mut acc_h0, &v, 1.0);
+
+    if kind == Kind::Gcnii {
+        let mut dz0 = acc_h0;
+        relu_bwd_mask(&mut dz0, &fwd.z0);
+        axpy(&mut grads[gidx["W0"]].data, &matmul_tn(&g.features, n, g.d_x, &dz0, dims[0]), 1.0);
+        axpy(&mut grads[gidx["b0"]].data, &colsum(&dz0, n, dims[0]), 1.0);
+    }
+
+    Ok(OracleResult {
+        grads,
+        train_loss: loss_sum / n_train as f64,
+        h_layers: fwd.hs,
+        v_layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_shapes_and_values() {
+        // a = [[1,2],[3,4],[5,6]] (3x2), b = [[1,0,2],[0,1,3]] (2x3)
+        let a = vec![1., 2., 3., 4., 5., 6.];
+        let b = vec![1., 0., 2., 0., 1., 3.];
+        let c = matmul(&a, 3, 2, &b, 3);
+        assert_eq!(c, vec![1., 2., 8., 3., 4., 18., 5., 6., 28.]);
+        // a @ bT where bT rows are b's columns
+        let bt = vec![1., 0., 0., 1., 2., 3.]; // (3x2): rows of b^T
+        let c2 = matmul_nt(&a, 3, 2, &bt, 3);
+        assert_eq!(c2, c);
+        // aT @ c: (2x3) @ (3x3)
+        let atc = matmul_tn(&a, 3, 2, &c, 3);
+        // column 0 of a = [1,3,5]; aT@c row 0 = 1*c0 + 3*c1 + 5*c2
+        let want0: Vec<f32> = (0..3).map(|j| c[j] + 3. * c[3 + j] + 5. * c[6 + j]).collect();
+        assert_eq!(&atc[..3], &want0[..]);
+    }
+
+    #[test]
+    fn masked_ce_grads_sum_to_zero_per_masked_row() {
+        let logits = vec![0.3, -0.2, 1.0, 0.5, 0.1, -0.4];
+        let (loss, correct, dl) = masked_ce(&logits, 2, 3, &[2, 0], &[1.0, 0.0]);
+        assert!(loss > 0.0);
+        assert_eq!(correct, 1.0); // row 0 argmax = 2 = label
+        // masked row: gradient rows sum to 0 (softmax - onehot)
+        let s0: f32 = dl[..3].iter().sum();
+        assert!(s0.abs() < 1e-6);
+        // unmasked row: zero gradient
+        assert!(dl[3..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn combine_is_convex() {
+        let out = combine(&[0.25], &[4.0, 8.0], &[0.0, 0.0], 1, 2);
+        assert_eq!(out, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn gamma_matches_archs_py() {
+        // gamma_l = log(lam / l + 1), lam = 0.5
+        assert!((gcnii_gamma(1) - (1.5f64).ln() as f32).abs() < 1e-6);
+        assert!((gcnii_gamma(4) - (1.125f64).ln() as f32).abs() < 1e-6);
+    }
+}

@@ -4,6 +4,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::Backend;
 use crate::coordinator::methods::{BetaConfig, Method};
 use crate::graph::DatasetId;
 use crate::sampler::{BatcherMode, BetaScore};
@@ -15,6 +16,9 @@ pub struct RunConfig {
     pub dataset: DatasetId,
     pub arch: String, // "gcn" | "gcnii"
     pub method: Method,
+    /// Execution backend: "native" (pure-Rust CPU over sparse blocks, the
+    /// default — no artifacts needed) or "pjrt" (AOT/HLO, `--features pjrt`).
+    pub backend: Backend,
     pub seed: u64,
     /// Number of partition clusters (METIS parts).
     pub parts: usize,
@@ -46,6 +50,7 @@ impl Default for RunConfig {
             dataset: DatasetId::ArxivSim,
             arch: "gcn".into(),
             method: Method::Lmc,
+            backend: Backend::Native,
             seed: 0,
             parts: 0, // 0 = dataset default
             clusters_per_batch: 2,
@@ -92,6 +97,9 @@ impl RunConfig {
         }
         if let Some(v) = get("method").and_then(|v| v.as_str()) {
             self.method = Method::parse(v).ok_or_else(|| anyhow!("unknown method {v}"))?;
+        }
+        if let Some(v) = get("backend").and_then(|v| v.as_str()) {
+            self.backend = Backend::parse(v).ok_or_else(|| anyhow!("unknown backend {v}"))?;
         }
         if let Some(v) = get("seed").and_then(|v| v.as_i64()) {
             self.seed = v as u64;
@@ -153,6 +161,9 @@ impl RunConfig {
         if let Some(v) = args.opt("method") {
             self.method = Method::parse(v).ok_or_else(|| anyhow!("unknown method {v}"))?;
         }
+        if let Some(v) = args.opt("backend") {
+            self.backend = Backend::parse(v).ok_or_else(|| anyhow!("unknown backend {v}"))?;
+        }
         if let Some(v) = args.opt_usize("seed") {
             self.seed = v as u64;
         }
@@ -209,6 +220,7 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.apply_toml(&doc).unwrap();
         assert_eq!(cfg.method, Method::Gas);
+        assert_eq!(cfg.backend, Backend::Native); // default
         assert_eq!(cfg.dataset, DatasetId::RedditSim);
         assert_eq!(cfg.lr, 0.005);
         assert_eq!(cfg.epochs, 7);
@@ -218,7 +230,7 @@ mod tests {
     #[test]
     fn cli_overrides() {
         let args = Args::parse(
-            ["train", "--method", "cluster", "--epochs", "3", "--verbose"]
+            ["train", "--method", "cluster", "--epochs", "3", "--backend", "native", "--verbose"]
                 .iter()
                 .map(|s| s.to_string()),
         );
@@ -226,6 +238,17 @@ mod tests {
         cfg.apply_cli(&args).unwrap();
         assert_eq!(cfg.method, Method::Cluster);
         assert_eq!(cfg.epochs, 3);
+        assert_eq!(cfg.backend, Backend::Native);
         assert!(cfg.verbose);
+    }
+
+    #[test]
+    fn backend_parses_from_toml() {
+        let doc = toml_parse("backend = \"pjrt\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.backend, Backend::Pjrt);
+        assert!(Backend::parse("nope").is_none());
+        assert_eq!(Backend::Native.name(), "native");
     }
 }

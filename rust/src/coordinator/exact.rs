@@ -1,361 +1,17 @@
-//! Exact tile-wise computation over the full graph (paper Theorem 1 with
-//! V_B = V): evaluation, the GD baseline, and the full-batch gradient
-//! oracle behind the Fig. 3 gradient-error experiment.
+//! Exact full-graph computation (paper Theorem 1 with V_B = V): the result
+//! types of the evaluation / full-batch-gradient oracle, shared by every
+//! backend.
 //!
-//! Tiles are contiguous node ranges (the trainer permutes the graph so
-//! partition clusters are contiguous, giving tiles locality and small exact
-//! halos). Per-tile adjacency blocks are densified once and cached.
+//! The implementations live behind the [`crate::backend::Executor`] trait:
+//! the native backend computes the oracle directly over the global CSR
+//! (`backend/native.rs`); the PJRT backend runs the tile-wise compiled
+//! programs (`backend/pjrt.rs`, which also hosts the tile partitioner that
+//! used to live here).
 
-use anyhow::{bail, Result};
-
-use super::params::Params;
 use crate::graph::Graph;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_vec_f32, Runtime, Tensor};
+use crate::runtime::Tensor;
 
-pub struct Evaluator<'a> {
-    pub rt: &'a Runtime,
-    pub profile: String,
-    pub arch_name: String,
-    pub l: usize,
-    pub dims: Vec<usize>,
-    pub bt: usize,
-    pub ht: usize,
-    tiles: Vec<(usize, usize)>,
-    halos: Vec<Vec<u32>>,
-    /// cached (A_bb, A_bh) dense padded blocks per tile
-    blocks: Vec<(Vec<f32>, Vec<f32>)>,
-}
-
-impl<'a> Evaluator<'a> {
-    pub fn new(rt: &'a Runtime, g: &Graph, profile: &str, arch_name: &str) -> Result<Evaluator<'a>> {
-        let arch = rt.manifest.arch(profile, arch_name)?.clone();
-        let prof = rt
-            .manifest
-            .profiles
-            .get(profile)
-            .ok_or_else(|| anyhow::anyhow!("no profile {profile}"))?;
-        let (bt, ht) = prof.exact_bucket;
-        let n = g.n();
-
-        // contiguous tiles whose exact halo fits the bucket
-        let mut tiles = Vec::new();
-        let mut s = 0usize;
-        while s < n {
-            let mut e = (s + bt).min(n);
-            loop {
-                let halo = exact_halo(g, s, e);
-                if halo.len() <= ht {
-                    tiles.push((s, e));
-                    break;
-                }
-                let new_e = s + (e - s) / 2;
-                if new_e <= s {
-                    bail!(
-                        "exact halo of single-node tile exceeds bucket H={ht}; \
-                         rebuild artifacts with a larger exact_bucket"
-                    );
-                }
-                e = new_e;
-            }
-            s = e;
-        }
-
-        let halos: Vec<Vec<u32>> = tiles.iter().map(|&(s, e)| exact_halo(g, s, e)).collect();
-        let mut blocks = Vec::with_capacity(tiles.len());
-        for (ti, &(s, e)) in tiles.iter().enumerate() {
-            blocks.push(dense_blocks(g, s, e, &halos[ti], bt, ht));
-        }
-        Ok(Evaluator {
-            rt,
-            profile: profile.to_string(),
-            arch_name: arch_name.to_string(),
-            l: arch.l,
-            dims: arch.dims,
-            bt,
-            ht,
-            tiles,
-            halos,
-            blocks,
-        })
-    }
-
-    pub fn num_tiles(&self) -> usize {
-        self.tiles.len()
-    }
-
-    fn layer_param_lits(&self, params: &Params, l: usize) -> Result<Vec<xla::Literal>> {
-        let arch = self.rt.manifest.arch(&self.profile, &self.arch_name)?;
-        let names = arch
-            .layer_params
-            .get(&l)
-            .ok_or_else(|| anyhow::anyhow!("no layer_params for layer {l}"))?;
-        names
-            .iter()
-            .map(|n| {
-                params
-                    .get(n)
-                    .ok_or_else(|| anyhow::anyhow!("missing param {n}"))?
-                    .to_literal()
-            })
-            .collect()
-    }
-
-    /// h0 (embed0 output) for all nodes. Identity for GCN.
-    pub fn embed0_full(&self, g: &Graph, params: &Params) -> Result<Vec<f32>> {
-        if self.arch_name == "gcn" {
-            return Ok(g.features.clone());
-        }
-        let prog = self.rt.manifest.embed0(&self.profile, &self.arch_name)?.name.clone();
-        let d0 = self.dims[0];
-        let mut out = vec![0f32; g.n() * d0];
-        let w0 = params.get("W0").unwrap().to_literal()?;
-        let b0 = params.get("b0").unwrap().to_literal()?;
-        for &(s, e) in &self.tiles {
-            let xt = gather_range(&g.features, g.d_x, s, e, self.bt);
-            let res = self.rt.execute(
-                &prog,
-                &[lit_f32(&xt, &[self.bt, g.d_x])?, w0.clone(), b0.clone()],
-            )?;
-            let h0 = to_vec_f32(&res[0])?;
-            out[s * d0..e * d0].copy_from_slice(&h0[..(e - s) * d0]);
-        }
-        Ok(out)
-    }
-
-    /// Exact forward: H^l for all nodes, l = 0..L.
-    pub fn forward(&self, g: &Graph, params: &Params) -> Result<Vec<Vec<f32>>> {
-        let h0 = self.embed0_full(g, params)?;
-        let mut hs = vec![h0.clone()];
-        let mut cur = h0.clone();
-        for l in 1..=self.l {
-            let d_prev = self.dims[l - 1];
-            let d_l = self.dims[l];
-            let prog = self.rt.manifest.fwd_layer(&self.profile, &self.arch_name, l)?.name.clone();
-            let pl = self.layer_param_lits(params, l)?;
-            let mut next = vec![0f32; g.n() * d_l];
-            for (ti, &(s, e)) in self.tiles.iter().enumerate() {
-                let (abb, abh) = &self.blocks[ti];
-                let hp_t = gather_range(&cur, d_prev, s, e, self.bt);
-                let hp_h = gather_idx(&cur, d_prev, &self.halos[ti], self.ht);
-                let h0_t = gather_range(&h0, self.dims[0], s, e, self.bt);
-                let mut inputs = vec![
-                    lit_f32(abb, &[self.bt, self.bt])?,
-                    lit_f32(abh, &[self.bt, self.ht])?,
-                    lit_f32(&hp_t, &[self.bt, d_prev])?,
-                    lit_f32(&hp_h, &[self.ht, d_prev])?,
-                    lit_f32(&h0_t, &[self.bt, self.dims[0]])?,
-                ];
-                inputs.extend(pl.iter().cloned());
-                let res = self.rt.execute(&prog, &inputs)?;
-                let ht_out = to_vec_f32(&res[0])?;
-                next[s * d_l..e * d_l].copy_from_slice(&ht_out[..(e - s) * d_l]);
-            }
-            hs.push(next.clone());
-            cur = next;
-        }
-        Ok(hs)
-    }
-
-    /// Evaluation: logits for all nodes, plus accuracy per split and the
-    /// mean training loss.
-    pub fn evaluate(&self, g: &Graph, params: &Params) -> Result<EvalResult> {
-        let hs = self.forward(g, params)?;
-        let hl = &hs[self.l];
-        let d_l = self.dims[self.l];
-        let prog = self.rt.manifest.loss_grad(&self.profile, &self.arch_name)?.clone();
-        let arch = self.rt.manifest.arch(&self.profile, &self.arch_name)?;
-        let head_lits: Vec<xla::Literal> = arch
-            .head_params
-            .iter()
-            .map(|n| params.get(n).unwrap().to_literal().unwrap())
-            .collect();
-        let n_train = g.split.iter().filter(|&&s| s == 0).count().max(1);
-        let mut loss_sum = 0f64;
-        let mut correct = [0usize; 3];
-        let mut total = [0usize; 3];
-        let nc = g.n_class;
-        let logits_idx = prog.output_index("logits_t")?;
-        for &(s, e) in &self.tiles {
-            let hl_t = gather_range(hl, d_l, s, e, self.bt);
-            let y: Vec<i32> = (s..e)
-                .map(|u| g.labels[u] as i32)
-                .chain(std::iter::repeat(0).take(self.bt - (e - s)))
-                .collect();
-            let mask: Vec<f32> = (s..e)
-                .map(|u| if g.split[u] == 0 { 1.0 } else { 0.0 })
-                .chain(std::iter::repeat(0.0).take(self.bt - (e - s)))
-                .collect();
-            let mut inputs = vec![
-                lit_f32(&hl_t, &[self.bt, d_l])?,
-                lit_i32(&y, &[self.bt])?,
-                lit_f32(&mask, &[self.bt])?,
-                lit_scalar(1.0 / n_train as f32),
-            ];
-            inputs.extend(head_lits.iter().cloned());
-            let res = self.rt.execute(&prog.name, &inputs)?;
-            loss_sum += to_vec_f32(&res[0])?[0] as f64;
-            let logits = to_vec_f32(&res[logits_idx])?;
-            for u in s..e {
-                let row = &logits[(u - s) * nc..(u - s + 1) * nc];
-                let pred = argmax(row);
-                let split = g.split[u] as usize;
-                total[split] += 1;
-                if pred == g.labels[u] as usize {
-                    correct[split] += 1;
-                }
-            }
-        }
-        Ok(EvalResult {
-            train_loss: loss_sum / n_train as f64,
-            train_acc: acc(correct[0], total[0]),
-            val_acc: acc(correct[1], total[1]),
-            test_acc: acc(correct[2], total[2]),
-        })
-    }
-
-    /// Full-batch gradient via backward SGD over all tiles (exact).
-    pub fn full_grad(&self, g: &Graph, params: &Params) -> Result<OracleResult> {
-        let hs = self.forward(g, params)?;
-        let arch = self.rt.manifest.arch(&self.profile, &self.arch_name)?.clone();
-        let n = g.n();
-        let n_train = g.split.iter().filter(|&&s| s == 0).count().max(1);
-        let vscale = 1.0 / n_train as f32;
-        let mut grads: Vec<Tensor> =
-            arch.params.iter().map(|(_, s)| Tensor::zeros(s)).collect();
-        let pidx: std::collections::HashMap<&str, usize> = arch
-            .params
-            .iter()
-            .enumerate()
-            .map(|(i, (n, _))| (n.as_str(), i))
-            .collect();
-
-        // V^L from the loss head, tile by tile
-        let d_l = self.dims[self.l];
-        let mut v = vec![0f32; n * d_l];
-        let mut loss_sum = 0f64;
-        {
-            let prog = self.rt.manifest.loss_grad(&self.profile, &self.arch_name)?.clone();
-            let head_lits: Vec<xla::Literal> = arch
-                .head_params
-                .iter()
-                .map(|nm| params.get(nm).unwrap().to_literal().unwrap())
-                .collect();
-            for &(s, e) in &self.tiles {
-                let hl_t = gather_range(&hs[self.l], d_l, s, e, self.bt);
-                let y: Vec<i32> = (s..e)
-                    .map(|u| g.labels[u] as i32)
-                    .chain(std::iter::repeat(0).take(self.bt - (e - s)))
-                    .collect();
-                let mask: Vec<f32> = (s..e)
-                    .map(|u| if g.split[u] == 0 { 1.0 } else { 0.0 })
-                    .chain(std::iter::repeat(0.0).take(self.bt - (e - s)))
-                    .collect();
-                let mut inputs = vec![
-                    lit_f32(&hl_t, &[self.bt, d_l])?,
-                    lit_i32(&y, &[self.bt])?,
-                    lit_f32(&mask, &[self.bt])?,
-                    lit_scalar(vscale),
-                ];
-                inputs.extend(head_lits.iter().cloned());
-                let res = self.rt.execute(&prog.name, &inputs)?;
-                loss_sum += to_vec_f32(&res[0])?[0] as f64;
-                let vt = to_vec_f32(&res[prog.output_index("V_t")?])?;
-                v[s * d_l..e * d_l].copy_from_slice(&vt[..(e - s) * d_l]);
-                for nm in arch.head_params.iter() {
-                    let gh = to_vec_f32(&res[prog.output_index(&format!("g_{nm}"))?])?;
-                    add_into(&mut grads[pidx[nm.as_str()]].data, &gh);
-                }
-            }
-        }
-
-        // backward layer by layer, scatter-adding contributions
-        let mut c0 = vec![0f32; n * self.dims[0]];
-        let mut v_layers: Vec<Vec<f32>> = vec![Vec::new(); self.l + 1]; // [l] = V^l
-        v_layers[self.l] = v.clone();
-        let h0 = &hs[0];
-        for l in (1..=self.l).rev() {
-            let d_prev = self.dims[l - 1];
-            let d_cur = self.dims[l];
-            let prog = self.rt.manifest.bwd_layer(&self.profile, &self.arch_name, l)?.clone();
-            let lp = arch.layer_params.get(&l).unwrap().clone();
-            let pl = self.layer_param_lits(params, l)?;
-            let mut vprev = vec![0f32; n * d_prev];
-            for (ti, &(s, e)) in self.tiles.iter().enumerate() {
-                let (abb, abh) = &self.blocks[ti];
-                let hp_t = gather_range(&hs[l - 1], d_prev, s, e, self.bt);
-                let hp_h = gather_idx(&hs[l - 1], d_prev, &self.halos[ti], self.ht);
-                let h0_t = gather_range(h0, self.dims[0], s, e, self.bt);
-                let v_t = gather_range(&v, d_cur, s, e, self.bt);
-                let mut inputs = vec![
-                    lit_f32(abb, &[self.bt, self.bt])?,
-                    lit_f32(abh, &[self.bt, self.ht])?,
-                    lit_f32(&hp_t, &[self.bt, d_prev])?,
-                    lit_f32(&hp_h, &[self.ht, d_prev])?,
-                    lit_f32(&h0_t, &[self.bt, self.dims[0]])?,
-                    lit_f32(&v_t, &[self.bt, d_cur])?,
-                ];
-                inputs.extend(pl.iter().cloned());
-                let res = self.rt.execute(&prog.name, &inputs)?;
-                for (gi, nm) in lp.iter().enumerate() {
-                    let gv = to_vec_f32(&res[gi])?;
-                    add_into(&mut grads[pidx[nm.as_str()]].data, &gv);
-                }
-                let vt = to_vec_f32(&res[prog.output_index("Vprev_t")?])?;
-                for u in s..e {
-                    add_into(
-                        &mut vprev[u * d_prev..(u + 1) * d_prev],
-                        &vt[(u - s) * d_prev..(u - s + 1) * d_prev],
-                    );
-                }
-                let vh = to_vec_f32(&res[prog.output_index("Vprev_h")?])?;
-                for (hi, &u) in self.halos[ti].iter().enumerate() {
-                    let u = u as usize;
-                    add_into(
-                        &mut vprev[u * d_prev..(u + 1) * d_prev],
-                        &vh[hi * d_prev..(hi + 1) * d_prev],
-                    );
-                }
-                let ch = to_vec_f32(&res[prog.output_index("Ch0_t")?])?;
-                for u in s..e {
-                    add_into(
-                        &mut c0[u * self.dims[0]..(u + 1) * self.dims[0]],
-                        &ch[(u - s) * self.dims[0]..(u - s + 1) * self.dims[0]],
-                    );
-                }
-            }
-            v = vprev;
-            if l >= 2 {
-                v_layers[l - 1] = v.clone();
-            }
-        }
-        // V^0 is the h0 cotangent via the h_prev path
-        add_into(&mut c0, &v);
-
-        if self.arch_name == "gcnii" {
-            let prog = self.rt.manifest.embed0_bwd(&self.profile, &self.arch_name)?.clone();
-            let w0 = params.get("W0").unwrap().to_literal()?;
-            let b0 = params.get("b0").unwrap().to_literal()?;
-            for &(s, e) in &self.tiles {
-                let xt = gather_range(&g.features, g.d_x, s, e, self.bt);
-                let ct = gather_range(&c0, self.dims[0], s, e, self.bt);
-                let res = self.rt.execute(
-                    &prog.name,
-                    &[
-                        lit_f32(&xt, &[self.bt, g.d_x])?,
-                        lit_f32(&ct, &[self.bt, self.dims[0]])?,
-                        w0.clone(),
-                        b0.clone(),
-                    ],
-                )?;
-                add_into(&mut grads[pidx["W0"]].data, &to_vec_f32(&res[0])?);
-                add_into(&mut grads[pidx["b0"]].data, &to_vec_f32(&res[1])?);
-            }
-        }
-
-        Ok(OracleResult { grads, train_loss: loss_sum / n_train as f64, h_layers: hs, v_layers })
-    }
-}
-
+/// Per-split accuracy + mean training loss of an exact forward pass.
 #[derive(Debug, Clone)]
 pub struct EvalResult {
     pub train_loss: f64,
@@ -364,6 +20,7 @@ pub struct EvalResult {
     pub test_acc: f64,
 }
 
+/// Exact full-batch gradient oracle output.
 #[derive(Debug)]
 pub struct OracleResult {
     /// Full-batch gradients in canonical param order.
@@ -375,15 +32,17 @@ pub struct OracleResult {
     pub v_layers: Vec<Vec<f32>>,
 }
 
-fn acc(c: usize, t: usize) -> f64 {
-    if t == 0 {
+/// Accuracy ratio, 0 for an empty split (shared by both backends).
+pub fn acc(correct: usize, total: usize) -> f64 {
+    if total == 0 {
         0.0
     } else {
-        c as f64 / t as f64
+        correct as f64 / total as f64
     }
 }
 
-fn argmax(row: &[f32]) -> usize {
+/// First index of the row maximum (ties break low, like `jnp.argmax`).
+pub fn argmax(row: &[f32]) -> usize {
     let mut bi = 0;
     let mut bv = f32::NEG_INFINITY;
     for (i, &v) in row.iter().enumerate() {
@@ -393,12 +52,6 @@ fn argmax(row: &[f32]) -> usize {
         }
     }
     bi
-}
-
-fn add_into(dst: &mut [f32], src: &[f32]) {
-    for (d, s) in dst.iter_mut().zip(src) {
-        *d += s;
-    }
 }
 
 /// Out-of-tile neighbors of the contiguous range [s, e).
@@ -417,40 +70,34 @@ pub fn exact_halo(g: &Graph, s: usize, e: usize) -> Vec<u32> {
     halo
 }
 
-/// Dense padded (A_bb, A_bh) for a contiguous tile + halo list, with global
-/// GCN normalization and self-loops on the diagonal.
-fn dense_blocks(g: &Graph, s: usize, e: usize, halo: &[u32], bt: usize, ht: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut abb = vec![0f32; bt * bt];
-    let mut abh = vec![0f32; bt * ht];
-    let hpos: std::collections::HashMap<u32, usize> =
-        halo.iter().enumerate().map(|(i, &v)| (v, i)).collect();
-    for u in s..e {
-        let i = u - s;
-        abb[i * bt + i] = g.self_w[u];
-        let (es, ee) = (g.csr.offsets[u] as usize, g.csr.offsets[u + 1] as usize);
-        for ei in es..ee {
-            let v = g.csr.neighbors[ei] as usize;
-            let w = g.edge_w[ei];
-            if v >= s && v < e {
-                abb[i * bt + (v - s)] = w;
-            } else {
-                abh[i * ht + hpos[&(v as u32)]] = w;
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{random_graph, Csr, Graph};
+    use crate::util::rng::Rng;
+
+    fn graph_of(csr: Csr) -> Graph {
+        let n = csr.n;
+        Graph::new(csr, 4, 2, vec![0.0; n * 4], vec![0; n], vec![0; n])
+    }
+
+    #[test]
+    fn exact_halo_is_out_of_range_neighbors() {
+        let mut rng = Rng::new(5);
+        let g = graph_of(random_graph(60, 0.1, &mut rng));
+        let (s, e) = (10usize, 30usize);
+        let halo = exact_halo(&g, s, e);
+        // sorted, unique, disjoint from [s, e)
+        assert!(halo.windows(2).all(|w| w[0] < w[1]));
+        assert!(halo.iter().all(|&v| (v as usize) < s || (v as usize) >= e));
+        // complete: every out-of-range neighbor present
+        for u in s..e {
+            for &v in g.csr.neighbors(u) {
+                let vu = v as usize;
+                if vu < s || vu >= e {
+                    assert!(halo.binary_search(&v).is_ok());
+                }
             }
         }
     }
-    (abb, abh)
-}
-
-fn gather_range(src: &[f32], d: usize, s: usize, e: usize, rows: usize) -> Vec<f32> {
-    let mut out = vec![0f32; rows * d];
-    out[..(e - s) * d].copy_from_slice(&src[s * d..e * d]);
-    out
-}
-
-fn gather_idx(src: &[f32], d: usize, idx: &[u32], rows: usize) -> Vec<f32> {
-    let mut out = vec![0f32; rows * d];
-    for (i, &u) in idx.iter().enumerate() {
-        out[i * d..(i + 1) * d].copy_from_slice(&src[u as usize * d..(u as usize + 1) * d]);
-    }
-    out
 }

@@ -4,7 +4,6 @@
 
 use anyhow::Result;
 
-use super::exact::Evaluator;
 use super::params::{grad_rel_err, Params};
 use super::trainer::Trainer;
 use crate::runtime::Tensor;
@@ -24,13 +23,10 @@ pub struct GradErrorReport {
 /// each mini-batch in one epoch, the per-batch relative errors are averaged;
 /// dropout is absent by construction (deterministic programs).
 pub fn measure(trainer: &mut Trainer) -> Result<GradErrorReport> {
-    let eval = Evaluator::new(&trainer.rt, &trainer.graph, &trainer.profile, &trainer.cfg.arch)?;
-    let oracle = eval.full_grad(&trainer.graph, &trainer.params)?;
-    let arch = trainer
-        .rt
-        .manifest
-        .arch(&trainer.profile, &trainer.cfg.arch)?
-        .clone();
+    let oracle = trainer
+        .exec
+        .full_grad(trainer.graph.as_ref(), &trainer.params, &trainer.model)?;
+    let arch = trainer.model.arch.clone();
     let l_total = arch.l;
 
     // layer -> indices of its params (plus embed0/head assigned to layer 1/L)
@@ -93,8 +89,9 @@ pub fn measure_after_warmup(trainer: &mut Trainer, warm_epochs: usize) -> Result
 /// sampling variance cancels in the sum (Theorem 1), isolating the bias
 /// term of Theorem 2 that LMC's compensations shrink.
 pub fn measure_bias(trainer: &mut Trainer) -> Result<f64> {
-    let eval = Evaluator::new(&trainer.rt, &trainer.graph, &trainer.profile, &trainer.cfg.arch)?;
-    let oracle = eval.full_grad(&trainer.graph, &trainer.params)?;
+    let oracle = trainer
+        .exec
+        .full_grad(trainer.graph.as_ref(), &trainer.params, &trainer.model)?;
     let gs = trainer.batcher.grad_scale();
     let batches = trainer.batcher.clone().epoch_batches();
     let mut sum: Option<Vec<Tensor>> = None;

@@ -10,7 +10,8 @@
 
 use crate::coordinator::methods::Method;
 use crate::graph::Graph;
-use crate::runtime::ProgramSpec;
+use crate::runtime::{ArchInfo, ProgramSpec};
+use crate::sampler::SubgraphBatch;
 
 /// Bytes held by one execution of a program: inputs + outputs.
 pub fn program_active_bytes(spec: &ProgramSpec) -> usize {
@@ -21,6 +22,30 @@ pub fn program_active_bytes(spec: &ProgramSpec) -> usize {
         .chain(spec.outputs.iter().map(|t| t.elems()))
         .sum();
     elems * 4
+}
+
+/// Bytes held by one native sparse-block step: adjacency nonzeros (col
+/// index + value + row offsets), node tensors (features, per-layer
+/// aggregate/pre-activation/activation, histories and their updates) and
+/// params + grads. Unlike [`program_active_bytes`] this scales with the
+/// *actual* subgraph (O(nnz + m·d)) rather than the padded bucket area —
+/// the Table 5 complexity row the sparse refactor buys.
+pub fn sparse_step_active_bytes(sb: &SubgraphBatch, arch: &ArchInfo, d_x: usize) -> usize {
+    let nb = sb.batch.len();
+    let nh = sb.halo.len();
+    let m = nb + nh;
+    let block_bytes = sb.nnz() * 8
+        + (sb.a_bb.offsets.len() + sb.a_bh.offsets.len() + sb.a_hh.offsets.len()) * 4;
+    let mut elems = m * d_x;
+    for l in 1..=arch.l {
+        elems += 3 * m * arch.dims[l]; // agg, pre-activation, activation
+    }
+    for l in 1..arch.l {
+        elems += 2 * nh * arch.dims[l]; // histH, histV gathers
+        elems += 2 * nb * arch.dims[l]; // newH, newV write-backs
+    }
+    let params: usize = arch.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    (elems + 2 * params) * 4 + block_bytes
 }
 
 /// Full-batch GD: all layer activations + gradients + the adjacency.

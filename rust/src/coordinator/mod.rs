@@ -1,5 +1,5 @@
 //! L3 coordinator: the paper's training system as scheduling policies over
-//! the AOT-compiled compute (see DESIGN.md §1).
+//! a pluggable execution backend (see DESIGN.md §1 and `crate::backend`).
 
 pub mod exact;
 pub mod grad_check;
@@ -9,7 +9,7 @@ pub mod metrics;
 pub mod params;
 pub mod trainer;
 
-pub use exact::{EvalResult, Evaluator, OracleResult};
+pub use exact::{EvalResult, OracleResult};
 pub use methods::{BetaConfig, Method};
 pub use metrics::{EpochRecord, RunMetrics};
 pub use params::{Adam, AdamConfig, Params};

@@ -1,31 +1,33 @@
-//! The training coordinator: paper Algorithm 1 as an event loop over the
-//! compiled train_step program, with per-method policies for adjacency,
+//! The training coordinator: paper Algorithm 1 as an event loop over a
+//! pluggable [`Executor`] backend, with per-method policies for adjacency,
 //! compensation scalars, and history write-back.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use super::exact::{EvalResult, Evaluator};
+use super::exact::EvalResult;
 use super::memory;
 use super::methods::Method;
 use super::metrics::{EpochRecord, RunMetrics};
-use super::params::{Adam, AdamConfig, Params, sgd_step};
+use super::params::{sgd_step, Adam, AdamConfig, Params};
+use crate::backend::{Executor, ModelSpec, StepInputs};
 use crate::config::RunConfig;
 use crate::graph::{load, Graph};
 use crate::history::History;
 use crate::partition::{partition, PartitionConfig};
-use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_vec_f32, ProgramSpec, Runtime, Tensor};
-use crate::sampler::{beta_vector, build_subgraph, gather_rows, Batcher, Buckets, SubgraphBatch};
+use crate::runtime::Tensor;
+use crate::sampler::{beta_vector, build_subgraph, Batcher, Buckets, SubgraphBatch};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 pub struct Trainer {
-    pub rt: Arc<Runtime>,
+    pub exec: Arc<dyn Executor>,
     pub cfg: RunConfig,
     pub graph: Arc<Graph>,
     pub clusters: Vec<Vec<u32>>,
-    pub profile: String,
+    /// Resolved (profile, arch) the executor runs.
+    pub model: ModelSpec,
     pub params: Params,
     pub opt: Adam,
     pub history: History,
@@ -50,20 +52,15 @@ pub struct StepStats {
 }
 
 impl Trainer {
-    pub fn new(rt: Arc<Runtime>, cfg: RunConfig) -> Result<Trainer> {
+    pub fn new(exec: Arc<dyn Executor>, cfg: RunConfig) -> Result<Trainer> {
         let raw = load(cfg.dataset, cfg.seed);
         let profile = cfg.dataset.profile().to_string();
-        let arch = rt.manifest.arch(&profile, &cfg.arch)?.clone();
-        let prof = rt
-            .manifest
-            .profiles
-            .get(&profile)
-            .ok_or_else(|| anyhow!("profile {profile} missing from manifest"))?
-            .clone();
-        // cross-check dataset dims vs compiled artifacts
+        let arch = exec.resolve_arch(&profile, &cfg.arch)?;
+        let prof = exec.resolve_profile(&profile)?;
+        // cross-check dataset dims vs the executor's model metadata
         if raw.d_x != prof.d_x || raw.n_class != prof.n_class {
             return Err(anyhow!(
-                "dataset {} dims (d_x={}, c={}) do not match manifest profile {} (d_x={}, c={})",
+                "dataset {} dims (d_x={}, c={}) do not match profile {} (d_x={}, c={})",
                 cfg.dataset.name(),
                 raw.d_x,
                 raw.n_class,
@@ -103,13 +100,14 @@ impl Trainer {
             cfg.seed ^ 0xBA7C,
         );
         let n_train = graph.split.iter().filter(|&&s| s == 0).count();
-        let buckets = Buckets(prof.step_buckets.clone());
+        let buckets = exec.buckets(&profile)?;
+        let model = ModelSpec { profile, arch_name: cfg.arch.clone(), arch };
         Ok(Trainer {
-            rt,
+            exec,
             cfg,
             graph,
             clusters,
-            profile,
+            model,
             params,
             opt,
             history,
@@ -124,92 +122,33 @@ impl Trainer {
     }
 
     pub fn arch_l(&self) -> usize {
-        self.rt.manifest.arch(&self.profile, &self.cfg.arch).unwrap().l
-    }
-
-    /// Assemble the positional input literals for the train_step program.
-    fn assemble_inputs(
-        &self,
-        spec: &ProgramSpec,
-        sb: &SubgraphBatch,
-        params: &Params,
-    ) -> Result<Vec<xla::Literal>> {
-        let g = &self.graph;
-        let (bb, bh) = (sb.bucket_b, sb.bucket_h);
-        let method = self.cfg.method;
-        let mut out = Vec::with_capacity(spec.inputs.len());
-        for ts in &spec.inputs {
-            let name = ts.name.as_str();
-            let lit = if let Some(pi) = params.index_of(name) {
-                params.tensors[pi].to_literal()?
-            } else if name == "X_b" {
-                lit_f32(&gather_rows(&g.features, g.d_x, &sb.batch, bb), &[bb, g.d_x])?
-            } else if name == "X_h" {
-                lit_f32(&gather_rows(&g.features, g.d_x, &sb.halo, bh), &[bh, g.d_x])?
-            } else if name == "A_bb" {
-                lit_f32(&sb.a_bb, &[bb, bb])?
-            } else if name == "A_bh" {
-                lit_f32(&sb.a_bh, &[bb, bh])?
-            } else if name == "A_hh" {
-                lit_f32(&sb.a_hh, &[bh, bh])?
-            } else if let Some(l) = name.strip_prefix("histH") {
-                let l: usize = l.parse()?;
-                if method.uses_history() {
-                    lit_f32(&self.history.gather_h(l, &sb.halo, bh), &[bh, ts.shape[1]])?
-                } else {
-                    lit_f32(&vec![0f32; bh * ts.shape[1]], &[bh, ts.shape[1]])?
-                }
-            } else if let Some(l) = name.strip_prefix("histV") {
-                let l: usize = l.parse()?;
-                if method.stores_aux() {
-                    lit_f32(&self.history.gather_v(l, &sb.halo, bh), &[bh, ts.shape[1]])?
-                } else {
-                    lit_f32(&vec![0f32; bh * ts.shape[1]], &[bh, ts.shape[1]])?
-                }
-            } else if name == "y_b" {
-                let y: Vec<i32> = padded_labels(g, &sb.batch, bb);
-                lit_i32(&y, &[bb])?
-            } else if name == "y_h" {
-                let y: Vec<i32> = padded_labels(g, &sb.halo, bh);
-                lit_i32(&y, &[bh])?
-            } else if name == "mask_b" {
-                lit_f32(&train_mask(g, &sb.batch, bb), &[bb])?
-            } else if name == "mask_h" {
-                lit_f32(&train_mask(g, &sb.halo, bh), &[bh])?
-            } else if name == "beta" {
-                let beta = if method.uses_beta() {
-                    beta_vector(sb, self.cfg.beta.alpha, self.cfg.beta.score)
-                } else {
-                    vec![0f32; bh]
-                };
-                lit_f32(&beta, &[bh])?
-            } else if name == "bwd_scale" {
-                let bs = if self.cfg.force_bwd_off { 0.0 } else { method.bwd_scale() };
-                lit_scalar(bs)
-            } else if name == "vscale" {
-                lit_scalar(1.0 / self.n_train.max(1) as f32)
-            } else if name == "grad_scale" {
-                lit_scalar(self.batcher.grad_scale())
-            } else {
-                return Err(anyhow!("unknown train_step input '{name}'"));
-            };
-            out.push(lit);
-        }
-        Ok(out)
+        self.model.arch.l
     }
 
     /// Run one mini-batch step end-to-end (sample -> execute -> write-back ->
     /// optimize). Returns stats and the raw gradients (for diagnostics).
     pub fn step(&mut self, batch: &[u32]) -> Result<(StepStats, Vec<Tensor>)> {
-        let (stats, grads) = self.compute_minibatch_grads(batch, None, true)?;
-        let grads_t = grads;
+        let sb = build_subgraph(
+            &self.graph,
+            batch,
+            self.cfg.method.adjacency_policy(),
+            &self.buckets,
+            &mut self.rng,
+        )?;
+        self.step_on(&sb)
+    }
+
+    /// Step on a pre-built subgraph: gradients, then the method's optimizer
+    /// update (Adam, or the SPIDER estimator for LMC-SPIDER).
+    fn step_on(&mut self, sb: &SubgraphBatch) -> Result<(StepStats, Vec<Tensor>)> {
+        let (stats, grads) = self.grads_for_subgraph(sb, None, true)?;
         if self.cfg.method == Method::LmcSpider {
-            self.spider_step(batch, &stats, &grads_t)?;
+            self.spider_step(sb, &grads)?;
         } else {
-            self.opt.step(&mut self.params, &grads_t);
+            self.opt.step(&mut self.params, &grads);
         }
         self.step_count += 1;
-        Ok((stats, grads_t))
+        Ok((stats, grads))
     }
 
     /// Compute mini-batch gradients (optionally at explicitly-given params,
@@ -230,9 +169,10 @@ impl Trainer {
         self.grads_for_subgraph(&sb, at_params, write_back)
     }
 
-    /// Execute the train_step for a pre-built subgraph (the pipeline path
-    /// builds subgraphs on a prefetch thread; history gathers stay on this
-    /// thread at execute time, so results are identical to the serial path).
+    /// Execute the fused train step for a pre-built subgraph through the
+    /// backend (the pipeline path builds subgraphs on a prefetch thread;
+    /// history gathers stay on this thread at execute time, so results are
+    /// identical to the serial path).
     pub fn grads_for_subgraph(
         &mut self,
         sb: &SubgraphBatch,
@@ -240,49 +180,61 @@ impl Trainer {
         write_back: bool,
     ) -> Result<(StepStats, Vec<Tensor>)> {
         let method = self.cfg.method;
-        let spec = self
-            .rt
-            .manifest
-            .train_step(&self.profile, &self.cfg.arch, sb.bucket_b, sb.bucket_h)?
-            .clone();
-        let params_ref = at_params.unwrap_or(&self.params);
-        let inputs = self.assemble_inputs(&spec, sb, params_ref)?;
-        let active_bytes = memory::program_active_bytes(&spec);
-        let outs = self.rt.execute(&spec.name, &inputs)?;
+        let l_total = self.model.arch.l;
+        let dims = self.model.arch.dims.clone();
 
-        let loss_sum = to_vec_f32(&outs[spec.output_index("loss_sum")?])?[0] as f64;
-        let correct = to_vec_f32(&outs[spec.output_index("correct")?])?[0] as f64;
-        let labeled = sb
-            .batch
-            .iter()
-            .filter(|&&u| self.graph.split[u as usize] == 0)
-            .count();
+        let beta = if method.uses_beta() {
+            beta_vector(sb, self.cfg.beta.alpha, self.cfg.beta.score)
+        } else {
+            vec![0f32; sb.bucket_h]
+        };
+        let hist_h: Vec<Vec<f32>> = (1..l_total)
+            .map(|l| {
+                if method.uses_history() {
+                    self.history.gather_h(l, &sb.halo, sb.bucket_h)
+                } else {
+                    vec![0f32; sb.bucket_h * dims[l]]
+                }
+            })
+            .collect();
+        let hist_v: Vec<Vec<f32>> = (1..l_total)
+            .map(|l| {
+                if method.stores_aux() {
+                    self.history.gather_v(l, &sb.halo, sb.bucket_h)
+                } else {
+                    vec![0f32; sb.bucket_h * dims[l]]
+                }
+            })
+            .collect();
 
-        // gradients in canonical order
-        let mut grads = Vec::with_capacity(self.params.names.len());
-        for (pi, name) in self.params.names.iter().enumerate() {
-            let g = to_vec_f32(&outs[spec.output_index(&format!("g_{name}"))?])?;
-            grads.push(Tensor::from_vec(&self.params.tensors[pi].shape, g));
-        }
+        let inputs = StepInputs {
+            graph: self.graph.as_ref(),
+            sb,
+            model: &self.model,
+            params: at_params.unwrap_or(&self.params),
+            hist_h,
+            hist_v,
+            beta,
+            bwd_scale: if self.cfg.force_bwd_off { 0.0 } else { method.bwd_scale() },
+            vscale: 1.0 / self.n_train.max(1) as f32,
+            grad_scale: self.batcher.grad_scale(),
+        };
+        let outs = self.exec.forward_backward(&inputs)?;
 
         if write_back {
-            let l_total = self.arch_l();
             if method.uses_history() {
                 for l in 1..l_total {
-                    let new_h = to_vec_f32(&outs[spec.output_index(&format!("newH{l}"))?])?;
-                    self.history.scatter_h(l, &sb.batch, &new_h);
+                    self.history.scatter_h(l, &sb.batch, &outs.new_h[l - 1]);
                 }
             }
             if method.stores_aux() {
                 for l in 1..l_total {
-                    let new_v = to_vec_f32(&outs[spec.output_index(&format!("newV{l}"))?])?;
-                    self.history.scatter_v(l, &sb.batch, &new_v);
+                    self.history.scatter_v(l, &sb.batch, &outs.new_v[l - 1]);
                 }
             }
             if let Some(m) = method.halo_momentum() {
                 for l in 1..l_total {
-                    let fresh = to_vec_f32(&outs[spec.output_index(&format!("htilde{l}"))?])?;
-                    self.history.momentum_h(l, &sb.halo, &fresh, m);
+                    self.history.momentum_h(l, &sb.halo, &outs.htilde[l - 1], m);
                 }
             }
             if method.uses_history() {
@@ -290,26 +242,31 @@ impl Trainer {
             }
         }
 
+        let labeled = sb
+            .batch
+            .iter()
+            .filter(|&&u| self.graph.split[u as usize] == 0)
+            .count();
         let stats = StepStats {
-            loss_mean: loss_sum / labeled.max(1) as f64,
-            train_acc: correct / labeled.max(1) as f64,
+            loss_mean: outs.loss_sum / labeled.max(1) as f64,
+            train_acc: outs.correct / labeled.max(1) as f64,
             labeled,
-            active_bytes,
+            active_bytes: outs.active_bytes,
             dropped_halo: sb.dropped_halo,
         };
-        Ok((stats, grads))
+        Ok((stats, outs.grads))
     }
 
     /// SPIDER update (Appendix F): periodic anchors via the exact oracle;
-    /// in between, v_k = g(W_k; B_k) - g(W_{k-1}; B_k) + v_{k-1}.
-    fn spider_step(&mut self, batch: &[u32], _stats: &StepStats, grads_now: &[Tensor]) -> Result<()> {
+    /// in between, v_k = g(W_k; B_k) - g(W_{k-1}; B_k) + v_{k-1}, evaluated
+    /// on the *same* sampled subgraph B_k at both parameter points.
+    fn spider_step(&mut self, sb: &SubgraphBatch, grads_now: &[Tensor]) -> Result<()> {
         let anchor_due = self.step_count % self.cfg.spider_period as u64 == 0;
         let estimator: Vec<Tensor> = if anchor_due || self.spider_prev.is_none() {
-            let eval = Evaluator::new(&self.rt, &self.graph, &self.profile, &self.cfg.arch)?;
-            eval.full_grad(&self.graph, &self.params)?.grads
+            self.exec.full_grad(self.graph.as_ref(), &self.params, &self.model)?.grads
         } else {
             let (prev_params, prev_est) = self.spider_prev.take().unwrap();
-            let (_, grads_prev) = self.compute_minibatch_grads(batch, Some(&prev_params), false)?;
+            let (_, grads_prev) = self.grads_for_subgraph(sb, Some(&prev_params), false)?;
             grads_now
                 .iter()
                 .zip(&grads_prev)
@@ -334,49 +291,57 @@ impl Trainer {
 
     /// One full training epoch; returns aggregate stats.
     ///
-    /// With `cfg.pipeline`, subgraph densification for step i+1 overlaps the
-    /// PJRT execution of step i on a prefetch thread (GAS §E.2-style
-    /// concurrent mini-batch execution). Only graph *structure* is
-    /// prefetched; history gathers stay on this thread at execute time, so
-    /// results are bit-identical to the serial path.
+    /// With `cfg.pipeline`, subgraph construction for step i+1 overlaps the
+    /// backend execution of step i on a prefetch thread (GAS §E.2-style
+    /// concurrent mini-batch execution). Each batch draws from its own
+    /// forked RNG stream — derived identically in both modes — so the
+    /// pipelined and serial paths sample the same halo subsets and produce
+    /// identical results; prefetch-thread panics surface as errors.
     pub fn train_epoch(&mut self) -> Result<StepStats> {
         if self.cfg.method == Method::Gd {
             return self.gd_epoch();
         }
         let batches = self.batcher.epoch_batches();
         let mut agg = EpochAgg::default();
+        let policy = self.cfg.method.adjacency_policy();
+        // per-batch deterministic rng streams, forked regardless of mode so
+        // `pipeline = true/false` leave self.rng in the same state
+        let mut rngs: Vec<Rng> =
+            (0..batches.len()).map(|i| self.rng.fork(i as u64)).collect();
         if self.cfg.pipeline && batches.len() > 1 {
-            let policy = self.cfg.method.adjacency_policy();
             let graph = self.graph.clone();
             let buckets = self.buckets.clone();
-            // per-batch deterministic rng streams
-            let mut rngs: Vec<Rng> =
-                (0..batches.len()).map(|i| self.rng.fork(i as u64)).collect();
             let batches_bg = batches.clone();
             let (tx, rx) = std::sync::mpsc::sync_channel::<Result<SubgraphBatch>>(2);
-            let handle = std::thread::spawn(move || {
+            let mut handle = Some(std::thread::spawn(move || {
                 for (i, b) in batches_bg.iter().enumerate() {
                     let sb = build_subgraph(&graph, b, policy, &buckets, &mut rngs[i]);
                     if tx.send(sb).is_err() {
                         break;
                     }
                 }
-            });
-            // densification of batches i+1, i+2 overlaps execution of batch i
+            }));
+            // construction of batches i+1, i+2 overlaps execution of batch i
             // (channel capacity 2 bounds prefetch memory)
             for _ in 0..batches.len() {
-                let sb = rx
-                    .recv()
-                    .map_err(|e| anyhow!("prefetch thread died: {e}"))??;
-                let (s, grads) = self.grads_for_subgraph(&sb, None, true)?;
-                self.opt.step(&mut self.params, &grads);
-                self.step_count += 1;
+                let sb = match rx.recv() {
+                    Ok(built) => built?,
+                    Err(_) => {
+                        // channel closed early — surface the prefetch panic
+                        join_prefetch(handle.take())?;
+                        return Err(anyhow!(
+                            "prefetch channel closed before all batches arrived"
+                        ));
+                    }
+                };
+                let (s, _) = self.step_on(&sb)?;
                 agg.add(&s);
             }
-            handle.join().ok();
+            join_prefetch(handle.take())?;
         } else {
-            for b in &batches {
-                let (s, _) = self.step(b)?;
+            for (i, b) in batches.iter().enumerate() {
+                let sb = build_subgraph(&self.graph, b, policy, &self.buckets, &mut rngs[i])?;
+                let (s, _) = self.step_on(&sb)?;
                 agg.add(&s);
             }
         }
@@ -384,11 +349,10 @@ impl Trainer {
     }
 
     fn gd_epoch(&mut self) -> Result<StepStats> {
-        let eval = Evaluator::new(&self.rt, &self.graph, &self.profile, &self.cfg.arch)?;
-        let oracle = eval.full_grad(&self.graph, &self.params)?;
+        let oracle = self.exec.full_grad(self.graph.as_ref(), &self.params, &self.model)?;
         let bytes = memory::gd_active_bytes(
             self.graph.n(),
-            &self.rt.manifest.arch(&self.profile, &self.cfg.arch)?.dims,
+            &self.model.arch.dims,
             self.graph.d_x,
             self.graph.csr.neighbors.len(),
         );
@@ -404,8 +368,7 @@ impl Trainer {
     }
 
     pub fn evaluate(&self) -> Result<EvalResult> {
-        let eval = Evaluator::new(&self.rt, &self.graph, &self.profile, &self.cfg.arch)?;
-        eval.evaluate(&self.graph, &self.params)
+        self.exec.evaluate(self.graph.as_ref(), &self.params, &self.model)
     }
 
     /// Full training run with periodic evaluation; honors `target_acc` early
@@ -451,22 +414,23 @@ impl Trainer {
     }
 }
 
-fn padded_labels(g: &Graph, idx: &[u32], rows: usize) -> Vec<i32> {
-    let mut y = vec![0i32; rows];
-    for (i, &u) in idx.iter().enumerate() {
-        y[i] = g.labels[u as usize] as i32;
-    }
-    y
-}
-
-fn train_mask(g: &Graph, idx: &[u32], rows: usize) -> Vec<f32> {
-    let mut m = vec![0f32; rows];
-    for (i, &u) in idx.iter().enumerate() {
-        if g.split[u as usize] == 0 {
-            m[i] = 1.0;
+/// Join the prefetch thread, converting a panic into a readable error
+/// instead of swallowing it.
+fn join_prefetch(handle: Option<std::thread::JoinHandle<()>>) -> Result<()> {
+    let Some(h) = handle else {
+        return Ok(());
+    };
+    match h.join() {
+        Ok(()) => Ok(()),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(anyhow!("subgraph prefetch thread panicked: {msg}"))
         }
     }
-    m
 }
 
 #[derive(Default)]

@@ -108,7 +108,7 @@ pub fn run_table7(ctx: &Ctx) -> Result<Table> {
         for ds in datasets {
             let id = crate::graph::DatasetId::parse(ds).unwrap();
             let g = load(id, ctx.seed);
-            let arch = ctx.rt.manifest.arch(id.profile(), "gcn")?;
+            let arch = ctx.exec.resolve_arch(id.profile(), "gcn")?;
             let mb = gd_active_bytes(g.n(), &arch.dims, g.d_x, g.csr.neighbors.len()) as f64 / 1e6;
             cells.push(format!("{mb:.1} / 100% / 100%"));
         }

@@ -23,7 +23,7 @@ pub fn run_fig3(ctx: &Ctx) -> Result<Table> {
             c.lr = 3e-3; // Theorem 2 regime: moderate staleness
             c
         };
-        let mut trainer = crate::coordinator::Trainer::new(ctx.rt.clone(), cfg)?;
+        let mut trainer = crate::coordinator::Trainer::new(ctx.exec.clone(), cfg)?;
         for epoch in 1..=epochs {
             trainer.train_epoch()?;
             let rep = grad_check::measure(&mut trainer)?;

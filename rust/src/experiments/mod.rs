@@ -12,14 +12,14 @@ mod efficiency;
 mod grad_error;
 mod prediction;
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::{make_executor, Backend, Executor};
 use crate::config::RunConfig;
 use crate::coordinator::{RunMetrics, Trainer};
-use crate::runtime::Runtime;
 use crate::util::cli::Args;
 
 pub use ablation::{run_fig4, run_table8, run_table9};
@@ -30,7 +30,8 @@ pub use prediction::{run_table1, run_table3};
 
 /// Shared experiment context.
 pub struct Ctx {
-    pub rt: Arc<Runtime>,
+    pub exec: Arc<dyn Executor>,
+    pub backend: Backend,
     pub out: PathBuf,
     /// Global epoch scale: 1.0 = paper-shaped defaults; tests use ~0.1.
     pub epoch_scale: f64,
@@ -38,9 +39,21 @@ pub struct Ctx {
 }
 
 impl Ctx {
-    pub fn new(artifact_dir: &str, out: &str, epoch_scale: f64, seed: u64) -> Result<Ctx> {
+    pub fn new(
+        backend: Backend,
+        artifact_dir: &str,
+        out: &str,
+        epoch_scale: f64,
+        seed: u64,
+    ) -> Result<Ctx> {
+        let cfg = RunConfig {
+            backend,
+            artifact_dir: artifact_dir.to_string(),
+            ..RunConfig::default()
+        };
         Ok(Ctx {
-            rt: Arc::new(Runtime::new(Path::new(artifact_dir))?),
+            exec: make_executor(&cfg)?,
+            backend,
             out: PathBuf::from(out),
             epoch_scale,
             seed,
@@ -53,8 +66,8 @@ impl Ctx {
 
     /// Build and run one training configuration; returns the metrics trace.
     pub fn run(&self, mut cfg: RunConfig) -> Result<(Trainer, RunMetrics)> {
-        cfg.artifact_dir.clear(); // runtime already loaded; field unused here
-        let mut t = Trainer::new(self.rt.clone(), cfg)?;
+        cfg.backend = self.backend; // executor already built; keep cfg honest
+        let mut t = Trainer::new(self.exec.clone(), cfg)?;
         let m = t.run()?;
         Ok((t, m))
     }
@@ -62,6 +75,7 @@ impl Ctx {
     pub fn base_cfg(&self, dataset: &str, arch: &str, method: &str) -> Result<RunConfig> {
         let mut cfg = RunConfig {
             seed: self.seed,
+            backend: self.backend,
             ..RunConfig::default()
         };
         cfg.dataset = crate::graph::DatasetId::parse(dataset)
@@ -79,7 +93,10 @@ pub fn dispatch(args: &Args) -> Result<()> {
         .first()
         .map(|s| s.as_str())
         .ok_or_else(|| anyhow!("usage: lmc experiment <id> [--out DIR]"))?;
+    let backend = Backend::parse(args.opt_or("backend", "native"))
+        .ok_or_else(|| anyhow!("unknown backend"))?;
     let ctx = Ctx::new(
+        backend,
         args.opt_or("artifacts", "artifacts"),
         args.opt_or("out", "results"),
         args.opt_f64("epoch-scale").unwrap_or(1.0),

@@ -1,16 +1,20 @@
 //! LMC: Fast Training of GNNs via Subgraph-Wise Sampling with Provable
-//! Convergence (Shi, Liang, Wang — ICLR 2023), reproduced as a three-layer
-//! Rust + JAX + Pallas system.
+//! Convergence (Shi, Liang, Wang — ICLR 2023), reproduced as a layered
+//! Rust (+ optional JAX/Pallas AOT) system.
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see DESIGN.md and rust/README.md):
 //!   - L3 (this crate): graph substrate, METIS-substitute partitioner,
-//!     subgraph sampler, historical value store, PJRT runtime, training
-//!     coordinator, experiment harness.
+//!     sparse subgraph sampler (CSR blocks), historical value store,
+//!     training coordinator, experiment harness.
+//!   - L2' (`backend`): pluggable execution — the default native Rust CPU
+//!     backend (rayon row-wise SpMM over the sparse blocks, no artifacts)
+//!     and the PJRT backend (`--features pjrt`) that executes AOT HLO.
 //!   - L2 (`python/compile`): GCN/GCNII forward + explicit backward message
 //!     passing with LMC compensation, AOT-lowered to HLO text.
 //!   - L1 (`python/compile/kernels`): Pallas halo-aggregation and
 //!     compensation kernels.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

@@ -5,22 +5,21 @@
 //!   eval              exact full-graph evaluation of a fresh model
 //!   partition-stats   METIS-substitute quality report for a dataset
 //!   datasets          list datasets and their stats
-//!   programs          list compiled artifact programs
+//!   programs          list compiled artifact programs (pjrt builds)
 //!   grad-error        per-layer mini-batch gradient error (Fig. 3 point)
 //!   experiment <id>   regenerate a paper table/figure (table1, table2,
 //!                     table3, table6, table7, table8, table9, fig2, fig3,
 //!                     fig4, fig5, all)
 
 use std::path::Path;
-use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use lmc::backend::make_executor;
 use lmc::config::RunConfig;
 use lmc::coordinator::{grad_check, Trainer};
 use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, quality::quality, PartitionConfig};
-use lmc::runtime::Runtime;
 use lmc::util::cli::Args;
 
 fn main() {
@@ -54,19 +53,21 @@ fn run(args: &Args) -> Result<()> {
 
 const HELP: &str = "\
 lmc — LMC (ICLR 2023) reproduction: subgraph-wise GNN training with local
-message compensation. rust coordinator + JAX/Pallas AOT compute.
+message compensation. rust coordinator + pluggable execution backends
+(native sparse CPU by default; AOT JAX/Pallas PJRT with --features pjrt).
 
 usage: lmc <subcommand> [--flags]
 
 subcommands:
   train            --dataset D --arch gcn|gcnii --method lmc|gas|fm|cluster|gd
-                   [--epochs N] [--lr F] [--clusters-per-batch C] [--parts K]
+                   [--backend native|pjrt] [--epochs N] [--lr F]
+                   [--clusters-per-batch C] [--parts K]
                    [--beta-alpha F] [--beta-score x2|2x-x2|x|1|sinx]
                    [--target-acc F] [--config file.toml] [--seed N] [--verbose]
   eval             exact inference with fresh params (pipeline smoke test)
   partition-stats  --dataset D [--parts K] [--seed N]
   datasets         list registered datasets
-  programs         list artifact programs (--artifacts DIR)
+  programs         list artifact programs (--artifacts DIR; pjrt builds only)
   grad-error       --dataset D --method M [--warm-epochs N]
   experiment ID    table1|table2|table3|table6|table7|table8|table9|
                    fig2|fig3|fig4|fig5|all   [--out results/]
@@ -75,17 +76,18 @@ subcommands:
 fn make_trainer(args: &Args) -> Result<Trainer> {
     let mut cfg = RunConfig::default();
     cfg.apply_cli(args)?;
-    let rt = Arc::new(Runtime::new(Path::new(&cfg.artifact_dir))?);
-    Trainer::new(rt, cfg)
+    let exec = make_executor(&cfg)?;
+    Trainer::new(exec, cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let mut trainer = make_trainer(args)?;
     println!(
-        "training {} / {} / {} — {} nodes, {} clusters, {} epochs",
+        "training {} / {} / {} on {} backend — {} nodes, {} clusters, {} epochs",
         trainer.cfg.dataset.name(),
         trainer.cfg.arch,
         trainer.cfg.method.name(),
+        trainer.exec.backend_name(),
         trainer.graph.n(),
         trainer.clusters.len(),
         trainer.cfg.epochs
@@ -166,9 +168,10 @@ fn cmd_datasets() -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_programs(args: &Args) -> Result<()> {
     let dir = args.opt_or("artifacts", "artifacts");
-    let rt = Runtime::new(Path::new(dir))?;
+    let rt = lmc::runtime::Runtime::new(Path::new(dir))?;
     println!("{} programs in {}", rt.manifest.programs.len(), dir);
     for (name, p) in &rt.manifest.programs {
         println!(
@@ -184,6 +187,14 @@ fn cmd_programs(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_programs(_args: &Args) -> Result<()> {
+    Err(anyhow!(
+        "`lmc programs` lists compiled PJRT artifacts; this build ships the \
+         native backend only (rebuild with `--features pjrt`)"
+    ))
 }
 
 fn cmd_grad_error(args: &Args) -> Result<()> {

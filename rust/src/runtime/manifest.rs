@@ -76,6 +76,55 @@ pub struct ArchInfo {
     pub layer_params: BTreeMap<usize, Vec<String>>,
 }
 
+impl ArchInfo {
+    /// GCN metadata mirroring `python/compile/archs.py::GCN` — same
+    /// canonical parameter order (`W1, b1, ..., WL, bL`) so the native
+    /// backend and the AOT manifest agree on gradient layout.
+    pub fn gcn(l: usize, d_x: usize, hidden: usize, n_class: usize) -> ArchInfo {
+        let mut dims = vec![d_x];
+        dims.extend(std::iter::repeat(hidden).take(l - 1));
+        dims.push(n_class);
+        let mut params = Vec::new();
+        let mut layer_params = BTreeMap::new();
+        for li in 1..=l {
+            params.push((format!("W{li}"), vec![dims[li - 1], dims[li]]));
+            params.push((format!("b{li}"), vec![dims[li]]));
+            layer_params.insert(li, vec![format!("W{li}"), format!("b{li}")]);
+        }
+        ArchInfo { l, dims, params, head_params: Vec::new(), layer_params }
+    }
+
+    /// GCNII metadata mirroring `python/compile/archs.py::GCNII`
+    /// (`W0, b0, W1..WL, Wc, bc`; head = `Wc, bc`).
+    pub fn gcnii(l: usize, d_x: usize, hidden: usize, n_class: usize) -> ArchInfo {
+        let dims = vec![hidden; l + 1];
+        let mut params = vec![("W0".to_string(), vec![d_x, hidden]), ("b0".to_string(), vec![hidden])];
+        let mut layer_params = BTreeMap::new();
+        for li in 1..=l {
+            params.push((format!("W{li}"), vec![hidden, hidden]));
+            layer_params.insert(li, vec![format!("W{li}")]);
+        }
+        params.push(("Wc".to_string(), vec![hidden, n_class]));
+        params.push(("bc".to_string(), vec![n_class]));
+        ArchInfo {
+            l,
+            dims,
+            params,
+            head_params: vec!["Wc".to_string(), "bc".to_string()],
+            layer_params,
+        }
+    }
+
+    /// Arch metadata for a profile by name ("gcn" | "gcnii").
+    pub fn for_profile(prof: &ProfileInfo, arch_name: &str) -> Result<ArchInfo> {
+        match arch_name {
+            "gcn" => Ok(ArchInfo::gcn(prof.gcn_layers, prof.d_x, prof.hidden, prof.n_class)),
+            "gcnii" => Ok(ArchInfo::gcnii(prof.gcnii_layers, prof.d_x, prof.hidden, prof.n_class)),
+            other => bail!("unknown arch '{other}' (expected gcn|gcnii)"),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ProfileInfo {
     pub d_x: usize,
@@ -85,6 +134,54 @@ pub struct ProfileInfo {
     pub gcnii_layers: usize,
     pub step_buckets: Vec<(usize, usize)>,
     pub exact_bucket: (usize, usize),
+}
+
+impl ProfileInfo {
+    /// Built-in profile table mirroring `python/compile/spec.py::PROFILES`,
+    /// used by the native backend (no manifest file required). The bucket
+    /// fields are kept for reference but the native backend never pads.
+    pub fn builtin(name: &str) -> Option<ProfileInfo> {
+        let p = match name {
+            "std16" => ProfileInfo {
+                d_x: 64,
+                n_class: 16,
+                hidden: 64,
+                gcn_layers: 3,
+                gcnii_layers: 4,
+                step_buckets: vec![(192, 1024), (320, 1536), (768, 1792), (1408, 1792)],
+                exact_bucket: (256, 1792),
+            },
+            "flickr" => ProfileInfo {
+                d_x: 64,
+                n_class: 7,
+                hidden: 64,
+                gcn_layers: 3,
+                gcnii_layers: 4,
+                step_buckets: vec![(160, 768), (320, 1024)],
+                exact_bucket: (256, 1024),
+            },
+            "ppi" => ProfileInfo {
+                d_x: 48,
+                n_class: 12,
+                hidden: 64,
+                gcn_layers: 3,
+                gcnii_layers: 4,
+                step_buckets: vec![(160, 640), (320, 896)],
+                exact_bucket: (160, 640),
+            },
+            "planetoid" => ProfileInfo {
+                d_x: 48,
+                n_class: 7,
+                hidden: 64,
+                gcn_layers: 3,
+                gcnii_layers: 4,
+                step_buckets: vec![(256, 768), (640, 1024)],
+                exact_bucket: (256, 1024),
+            },
+            _ => return None,
+        };
+        Some(p)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -282,5 +379,43 @@ impl Manifest {
 
     pub fn embed0_bwd(&self, profile: &str, arch: &str) -> Result<&ProgramSpec> {
         self.program(&format!("{profile}_embed0bwd_{arch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_profiles_and_archs_consistent() {
+        for name in ["std16", "flickr", "ppi", "planetoid"] {
+            let p = ProfileInfo::builtin(name).unwrap();
+            for arch_name in ["gcn", "gcnii"] {
+                let a = ArchInfo::for_profile(&p, arch_name).unwrap();
+                assert_eq!(a.dims.len(), a.l + 1, "{name}/{arch_name}");
+                assert_eq!(*a.dims.last().unwrap(), if arch_name == "gcn" { p.n_class } else { p.hidden });
+                assert!(!a.params.is_empty());
+                // every layer has its params listed
+                for l in 1..=a.l {
+                    assert!(a.layer_params.contains_key(&l));
+                }
+                // shapes align with dims
+                for (pname, shape) in &a.params {
+                    if let Some(l) = pname.strip_prefix('W').and_then(|s| s.parse::<usize>().ok()) {
+                        if l >= 1 {
+                            assert_eq!(shape[1], a.dims[l], "{pname}");
+                        }
+                    }
+                }
+            }
+        }
+        assert!(ProfileInfo::builtin("nope").is_none());
+        // canonical ordering matches archs.py: W1, b1, W2, b2, ...
+        let g = ArchInfo::gcn(3, 48, 64, 7);
+        let names: Vec<&str> = g.params.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["W1", "b1", "W2", "b2", "W3", "b3"]);
+        let g2 = ArchInfo::gcnii(4, 48, 64, 7);
+        let names2: Vec<&str> = g2.params.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names2, ["W0", "b0", "W1", "W2", "W3", "W4", "Wc", "bc"]);
     }
 }

@@ -1,6 +1,10 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once per program on
-//! the CPU PJRT client, execute from the L3 hot path (adapted from
-//! /opt/xla-example/load_hlo).
+//! Artifact metadata + (feature-gated) PJRT runtime.
+//!
+//! The manifest and host `Tensor` type are always available — the native
+//! backend uses them without any artifacts on disk. The `Runtime` that
+//! loads AOT HLO-text artifacts and executes them on the PJRT CPU client
+//! (adapted from /opt/xla-example/load_hlo) only exists under the `pjrt`
+//! feature, which pulls in the `xla` bindings; see `rust/README.md`.
 //!
 //! Python never runs here: the `xla` crate wraps the PJRT C API and the
 //! artifacts are self-contained HLO text (see aot.py for why text, not
@@ -9,117 +13,127 @@
 pub mod manifest;
 pub mod tensor;
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
-
-use anyhow::{bail, Context, Result};
-
 pub use manifest::{ArchInfo, DType, Manifest, ProfileInfo, ProgramSpec, TensorSpec};
-pub use tensor::{lit_f32, lit_i32, lit_scalar, to_vec_f32, Tensor};
+pub use tensor::Tensor;
+#[cfg(feature = "pjrt")]
+pub use tensor::{lit_f32, lit_i32, lit_scalar, scalar_f32, to_vec_f32};
 
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-    /// Cumulative executions per program (telemetry).
-    pub exec_counts: Mutex<HashMap<String, u64>>,
-    /// Cumulative seconds inside PJRT execute calls.
-    pub exec_secs: Mutex<f64>,
-}
+#[cfg(feature = "pjrt")]
+mod rt {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-impl Runtime {
-    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-            exec_counts: Mutex::new(HashMap::new()),
-            exec_secs: Mutex::new(0.0),
-        })
+    use anyhow::{bail, Context, Result};
+
+    use super::manifest::Manifest;
+
+    pub struct Runtime {
+        pub client: xla::PjRtClient,
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+        /// Cumulative executions per program (telemetry).
+        pub exec_counts: Mutex<HashMap<String, u64>>,
+        /// Cumulative seconds inside PJRT execute calls.
+        pub exec_secs: Mutex<f64>,
     }
 
-    /// Compile (or fetch the cached) executable for a program.
-    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    impl Runtime {
+        pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+                exec_counts: Mutex::new(HashMap::new()),
+                exec_secs: Mutex::new(0.0),
+            })
         }
-        let spec = self.manifest.program(name)?;
-        let path = self.manifest.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow::anyhow!("loading HLO {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Pre-compile a set of programs (hides compile latency from the loop).
-    pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.executable(n)?;
+        /// Compile (or fetch the cached) executable for a program.
+        pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let spec = self.manifest.program(name)?;
+            let path = self.manifest.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow::anyhow!("loading HLO {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            let exe = std::sync::Arc::new(exe);
+            self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+            Ok(exe)
         }
-        Ok(())
-    }
 
-    /// Execute a program with positional inputs, validating arity and
-    /// element counts against the manifest. Returns the output tuple.
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let spec = self.manifest.program(name)?.clone();
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "program {name}: got {} inputs, manifest expects {}",
-                inputs.len(),
-                spec.inputs.len()
-            );
+        /// Pre-compile a set of programs (hides compile latency from the loop).
+        pub fn warmup(&self, names: &[&str]) -> Result<()> {
+            for n in names {
+                self.executable(n)?;
+            }
+            Ok(())
         }
-        for (i, (lit, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            let got = lit.element_count();
-            if got != ts.elems() {
+
+        /// Execute a program with positional inputs, validating arity and
+        /// element counts against the manifest. Returns the output tuple.
+        pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let spec = self.manifest.program(name)?.clone();
+            if inputs.len() != spec.inputs.len() {
                 bail!(
-                    "program {name} input #{i} ({}): {} elements, expected {} {:?}",
-                    ts.name,
-                    got,
-                    ts.elems(),
-                    ts.shape
+                    "program {name}: got {} inputs, manifest expects {}",
+                    inputs.len(),
+                    spec.inputs.len()
                 );
             }
+            for (i, (lit, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+                let got = lit.element_count();
+                if got != ts.elems() {
+                    bail!(
+                        "program {name} input #{i} ({}): {} elements, expected {} {:?}",
+                        ts.name,
+                        got,
+                        ts.elems(),
+                        ts.shape
+                    );
+                }
+            }
+            let exe = self.executable(name)?;
+            let t0 = std::time::Instant::now();
+            let bufs = exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+            let result = bufs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e}"))?;
+            let outs = result
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untupling result of {name}: {e}"))?;
+            *self.exec_secs.lock().unwrap() += t0.elapsed().as_secs_f64();
+            if outs.len() != spec.outputs.len() {
+                bail!(
+                    "program {name}: got {} outputs, manifest expects {}",
+                    outs.len(),
+                    spec.outputs.len()
+                );
+            }
+            *self
+                .exec_counts
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert(0) += 1;
+            Ok(outs)
         }
-        let exe = self.executable(name)?;
-        let t0 = std::time::Instant::now();
-        let bufs = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
-        let result = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result of {name}: {e}"))?;
-        let outs = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling result of {name}: {e}"))?;
-        *self.exec_secs.lock().unwrap() += t0.elapsed().as_secs_f64();
-        if outs.len() != spec.outputs.len() {
-            bail!(
-                "program {name}: got {} outputs, manifest expects {}",
-                outs.len(),
-                spec.outputs.len()
-            );
-        }
-        *self
-            .exec_counts
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_insert(0) += 1;
-        Ok(outs)
-    }
 
-    pub fn total_exec_secs(&self) -> f64 {
-        *self.exec_secs.lock().unwrap()
+        pub fn total_exec_secs(&self) -> f64 {
+            *self.exec_secs.lock().unwrap()
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use rt::Runtime;

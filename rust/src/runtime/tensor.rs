@@ -1,8 +1,6 @@
-//! Literal construction/extraction helpers + a tiny host tensor type.
+//! Host tensor type + (feature-gated) XLA literal construction/extraction.
 
-use anyhow::Result;
-
-/// Host-side f32 tensor (row-major) used by the coordinator.
+/// Host-side f32 tensor (row-major) used by the coordinator and backends.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
@@ -23,7 +21,8 @@ impl Tensor {
         self.data.len()
     }
 
-    pub fn to_literal(&self) -> Result<xla::Literal> {
+    #[cfg(feature = "pjrt")]
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         lit_f32(&self.data, &self.shape)
     }
 
@@ -33,7 +32,8 @@ impl Tensor {
 }
 
 /// Build an f32 literal of the given shape.
-pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+#[cfg(feature = "pjrt")]
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
     let l = xla::Literal::vec1(data);
     if shape.is_empty() {
         // rank-0 scalar
@@ -45,7 +45,8 @@ pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Build an i32 literal of the given shape.
-pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+#[cfg(feature = "pjrt")]
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
     let l = xla::Literal::vec1(data);
     if shape.is_empty() {
         return Ok(xla::Literal::scalar(data[0]));
@@ -56,17 +57,20 @@ pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Rank-0 f32 scalar.
+#[cfg(feature = "pjrt")]
 pub fn lit_scalar(x: f32) -> xla::Literal {
     xla::Literal::scalar(x)
 }
 
 /// Extract an f32 literal's data (any rank).
-pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+#[cfg(feature = "pjrt")]
+pub fn to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
     lit.to_vec::<f32>()
         .map_err(|e| anyhow::anyhow!("literal to_vec<f32>: {e}"))
 }
 
 /// Extract a rank-0 f32.
-pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+#[cfg(feature = "pjrt")]
+pub fn scalar_f32(lit: &xla::Literal) -> anyhow::Result<f32> {
     Ok(to_vec_f32(lit)?[0])
 }

@@ -1,6 +1,8 @@
-//! Subgraph sampler: mini-batch construction with 1-hop halos, densified
-//! into the padded adjacency blocks the AOT train_step programs consume
-//! (DESIGN.md §1 step 2-3, paper Algorithm 1 lines 4-5).
+//! Subgraph sampler: mini-batch construction with 1-hop halos, stored as
+//! CSR sparse adjacency blocks (DESIGN.md §1 step 2-3, paper Algorithm 1
+//! lines 4-5). The native backend aggregates straight over the sparse
+//! blocks (O(nnz · d) per step); the PJRT backend densifies them on demand
+//! into the zero-padded bucket layout via [`SubgraphBatch::to_dense`].
 //!
 //! Per method:
 //!   - LMC / GAS / FM: blocks over `Nbar(V_B)` with *global* GCN
@@ -10,20 +12,37 @@
 //!     (paper §E.2 footnote).
 
 pub mod batcher;
+pub mod sparse;
 
-use crate::graph::{local_normalized_dense, Graph};
+use crate::graph::{Csr, Graph};
 use crate::util::rng::Rng;
 
 pub use batcher::{Batcher, BatcherMode};
+pub use sparse::{CsrBlock, CsrBuilder};
 
-/// Shape buckets available for a profile, from the artifact manifest.
+/// Shape buckets available for a profile.
+///
+/// A non-empty list comes from the artifact manifest (PJRT backend: every
+/// subgraph must be padded to a compiled shape). The empty list means
+/// *unbounded exact fit* — the native backend has no compiled shapes, so
+/// `pick` returns the subgraph's own dimensions and nothing is ever padded
+/// or dropped.
 #[derive(Clone, Debug)]
 pub struct Buckets(pub Vec<(usize, usize)>);
 
 impl Buckets {
+    /// Exact-fit buckets for backends without compiled shapes.
+    pub fn unbounded() -> Buckets {
+        Buckets(Vec::new())
+    }
+
     /// Smallest bucket with B >= nb; among those, the one whose H fits nh if
     /// possible, else the largest-H bucket at that B (halo then capped).
+    /// Unbounded buckets fit exactly.
     pub fn pick(&self, nb: usize, nh: usize) -> Option<(usize, usize)> {
+        if self.0.is_empty() {
+            return Some((nb, nh));
+        }
         let mut fitting: Vec<(usize, usize)> = self
             .0
             .iter()
@@ -52,7 +71,11 @@ pub enum AdjacencyPolicy {
     LocalNoHalo,
 }
 
-/// A densified mini-batch subgraph ready for the train_step program.
+/// A sampled mini-batch subgraph with CSR adjacency blocks.
+///
+/// `bucket_b` / `bucket_h` are the padded shapes the PJRT step programs
+/// expect (`batch.len() <= bucket_b`); with unbounded buckets they equal
+/// the actual `batch.len()` / `halo.len()`.
 #[derive(Clone, Debug)]
 pub struct SubgraphBatch {
     /// In-batch node ids (unpadded; `batch.len() <= bucket_b`).
@@ -61,10 +84,12 @@ pub struct SubgraphBatch {
     pub halo: Vec<u32>,
     pub bucket_b: usize,
     pub bucket_h: usize,
-    /// Row-major dense blocks, padded with zeros to the bucket shape.
-    pub a_bb: Vec<f32>,
-    pub a_bh: Vec<f32>,
-    pub a_hh: Vec<f32>,
+    /// Sparse adjacency blocks over local indices: `a_bb` is
+    /// `batch × batch` (self-loops on the diagonal), `a_bh` is
+    /// `batch × halo`, `a_hh` is `halo × halo`.
+    pub a_bb: CsrBlock,
+    pub a_bh: CsrBlock,
+    pub a_hh: CsrBlock,
     /// Halo neighbors dropped by the bucket cap (0 in normal operation).
     pub dropped_halo: usize,
     /// Degree of each halo node inside the sampled subgraph (for beta
@@ -76,7 +101,28 @@ pub struct SubgraphBatch {
     pub nnz_fwd: usize,
 }
 
-/// Build the densified subgraph for `batch` under `policy`.
+impl SubgraphBatch {
+    /// Total adjacency nonzeros stored across the three blocks.
+    pub fn nnz(&self) -> usize {
+        self.a_bb.nnz() + self.a_bh.nnz() + self.a_hh.nnz()
+    }
+
+    /// Densify the blocks into the zero-padded row-major bucket layout the
+    /// AOT train_step programs consume: `([bucket_b, bucket_b],
+    /// [bucket_b, bucket_h], [bucket_h, bucket_h])`.
+    pub fn to_dense(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            self.a_bb.to_dense(self.bucket_b, self.bucket_b),
+            self.a_bh.to_dense(self.bucket_b, self.bucket_h),
+            self.a_hh.to_dense(self.bucket_h, self.bucket_h),
+        )
+    }
+}
+
+/// Build the sparse subgraph blocks for `batch` under `policy`.
+///
+/// `batch` must be sorted ascending (the batcher and the exact tiler both
+/// emit sorted node lists); this keeps every CSR row's columns sorted.
 pub fn build_subgraph(
     g: &Graph,
     batch: &[u32],
@@ -84,6 +130,7 @@ pub fn build_subgraph(
     buckets: &Buckets,
     rng: &mut Rng,
 ) -> anyhow::Result<SubgraphBatch> {
+    debug_assert!(batch.windows(2).all(|w| w[0] < w[1]), "batch must be sorted");
     let n = g.n();
     let nb = batch.len();
     // membership: 0 = outside, 1 = batch, 2 = halo
@@ -138,62 +185,79 @@ pub fn build_subgraph(
     }
 
     let nh = halo.len();
-    let mut a_bb = vec![0f32; bucket_b * bucket_b];
-    let mut a_bh = vec![0f32; bucket_b * bucket_h];
-    let mut a_hh = vec![0f32; bucket_h * bucket_h];
     let mut nnz = 0usize;
-
-    match policy {
+    let (a_bb, a_bh, a_hh) = match policy {
         AdjacencyPolicy::LocalNoHalo => {
-            let local = local_normalized_dense(&g.csr, batch);
-            for i in 0..nb {
-                a_bb[i * bucket_b..i * bucket_b + nb]
-                    .copy_from_slice(&local[i * nb..(i + 1) * nb]);
-            }
-            nnz += local.iter().filter(|&&w| w != 0.0).count();
+            let blk = local_normalized_csr(&g.csr, batch, &pos, &mark);
+            nnz += blk.nnz();
+            (blk, CsrBlock::empty(nb, 0), CsrBlock::empty(0, 0))
         }
         AdjacencyPolicy::GlobalWithHalo => {
+            let mut bb = CsrBuilder::new(nb);
+            let mut bh = CsrBuilder::new(nh);
             for (i, &u) in batch.iter().enumerate() {
                 let u = u as usize;
-                a_bb[i * bucket_b + i] = g.self_w[u];
-                nnz += 1;
-                let (s, e) = (g.csr.offsets[u] as usize, g.csr.offsets[u + 1] as usize);
-                for ei in s..e {
+                // batch is sorted and neighbor lists are sorted, so local
+                // columns arrive in increasing order; the self-loop at the
+                // diagonal is merged in at its sorted position.
+                let mut diag_emitted = false;
+                for ei in g.csr.offsets[u] as usize..g.csr.offsets[u + 1] as usize {
                     let v = g.csr.neighbors[ei] as usize;
                     let w = g.edge_w[ei];
                     match mark[v] {
                         1 => {
-                            a_bb[i * bucket_b + pos[v] as usize] = w;
+                            let j = pos[v];
+                            if !diag_emitted && j > i as u32 {
+                                bb.push(i as u32, g.self_w[u]);
+                                diag_emitted = true;
+                            }
+                            bb.push(j, w);
                             nnz += 1;
                         }
                         2 => {
-                            a_bh[i * bucket_h + pos[v] as usize] = w;
+                            bh.push(pos[v], w);
                             nnz += 1;
                         }
                         _ => {}
                     }
                 }
+                if !diag_emitted {
+                    bb.push(i as u32, g.self_w[u]);
+                }
+                nnz += 1; // self-loop
+                bb.finish_row();
+                bh.finish_row();
             }
+            let mut hh = CsrBuilder::new(nh);
             for (i, &u) in halo.iter().enumerate() {
                 let u = u as usize;
-                a_hh[i * bucket_h + i] = g.self_w[u];
-                nnz += 1;
-                let (s, e) = (g.csr.offsets[u] as usize, g.csr.offsets[u + 1] as usize);
-                for ei in s..e {
+                let mut diag_emitted = false;
+                for ei in g.csr.offsets[u] as usize..g.csr.offsets[u + 1] as usize {
                     let v = g.csr.neighbors[ei] as usize;
                     if mark[v] == 2 {
-                        a_hh[i * bucket_h + pos[v] as usize] = g.edge_w[ei];
+                        let j = pos[v];
+                        if !diag_emitted && j > i as u32 {
+                            hh.push(i as u32, g.self_w[u]);
+                            diag_emitted = true;
+                        }
+                        hh.push(j, g.edge_w[ei]);
                         nnz += 1;
                     }
-                    // halo -> batch arcs are A_bh^T; the program transposes,
-                    // so count them (they are used) but don't store twice.
+                    // halo -> batch arcs are A_bh^T; the step transposes, so
+                    // count them (they are used) but don't store twice.
                     if mark[v] == 1 {
                         nnz += 1;
                     }
                 }
+                if !diag_emitted {
+                    hh.push(i as u32, g.self_w[u]);
+                }
+                nnz += 1; // self-loop
+                hh.finish_row();
             }
+            (bb.build(), bh.build(), hh.build())
         }
-    }
+    };
 
     // halo degree stats for beta scores
     let mut halo_deg_local = vec![0u32; nh];
@@ -223,6 +287,41 @@ pub fn build_subgraph(
         halo_deg_global,
         nnz_fwd: nnz,
     })
+}
+
+/// CLUSTER-GCN local re-normalization (paper §E.2) straight into CSR:
+/// degrees counted inside the induced subgraph only, self-loops on the
+/// diagonal. `pos`/`mark` are the sampler's position/membership maps.
+fn local_normalized_csr(csr: &Csr, batch: &[u32], pos: &[u32], mark: &[u8]) -> CsrBlock {
+    let nb = batch.len();
+    let mut deg = vec![1f32; nb]; // +1 self-loop
+    for (i, &u) in batch.iter().enumerate() {
+        for &v in csr.neighbors(u as usize) {
+            if mark[v as usize] == 1 {
+                deg[i] += 1.0;
+            }
+        }
+    }
+    let inv: Vec<f32> = deg.iter().map(|d| 1.0 / d.sqrt()).collect();
+    let mut b = CsrBuilder::new(nb);
+    for (i, &u) in batch.iter().enumerate() {
+        let mut diag_emitted = false;
+        for &v in csr.neighbors(u as usize) {
+            if mark[v as usize] == 1 {
+                let j = pos[v as usize];
+                if !diag_emitted && j > i as u32 {
+                    b.push(i as u32, inv[i] * inv[i]);
+                    diag_emitted = true;
+                }
+                b.push(j, inv[i] * inv[j as usize]);
+            }
+        }
+        if !diag_emitted {
+            b.push(i as u32, inv[i] * inv[i]);
+        }
+        b.finish_row();
+    }
+    b.build()
 }
 
 /// Beta score functions from the paper's Appendix A.4.
@@ -296,7 +395,7 @@ pub fn gather_rows(src: &[f32], d: usize, idx: &[u32], rows: usize) -> Vec<f32> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{load, DatasetId};
+    use crate::graph::{load, local_normalized_dense, DatasetId};
 
     fn test_graph() -> Graph {
         load(DatasetId::CoraSim, 3)
@@ -335,26 +434,50 @@ mod tests {
         let batch: Vec<u32> = (40..160u32).collect();
         let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
         let (bb, bh) = (sb.bucket_b, sb.bucket_h);
+        let (a_bb, a_bh, a_hh) = sb.to_dense();
         for (i, &u) in sb.batch.iter().enumerate() {
             // diagonal self weight
-            assert_eq!(sb.a_bb[i * bb + i], g.self_w[u as usize]);
+            assert_eq!(a_bb[i * bb + i], g.self_w[u as usize]);
             for (j, &v) in sb.batch.iter().enumerate() {
                 if i != j {
-                    let w = sb.a_bb[i * bb + j];
+                    let w = a_bb[i * bb + j];
                     assert_eq!(w != 0.0, g.csr.has_edge(u as usize, v as usize));
                 }
             }
             for (j, &v) in sb.halo.iter().enumerate() {
-                let w = sb.a_bh[i * bh + j];
+                let w = a_bh[i * bh + j];
                 assert_eq!(w != 0.0, g.csr.has_edge(u as usize, v as usize));
             }
         }
         // A_hh symmetric where defined
         for i in 0..sb.halo.len() {
             for j in 0..sb.halo.len() {
-                assert_eq!(sb.a_hh[i * bh + j], sb.a_hh[j * bh + i]);
+                assert_eq!(a_hh[i * bh + j], a_hh[j * bh + i]);
             }
         }
+    }
+
+    #[test]
+    fn sparse_rows_sorted_and_counted() {
+        let g = test_graph();
+        let mut rng = Rng::new(7);
+        let batch: Vec<u32> = (40..160u32).collect();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        for blk in [&sb.a_bb, &sb.a_bh, &sb.a_hh] {
+            assert_eq!(blk.offsets.len(), blk.n_rows + 1);
+            assert_eq!(blk.offsets[blk.n_rows] as usize, blk.nnz());
+            for i in 0..blk.n_rows {
+                let (cols, _) = blk.row(i);
+                assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} unsorted");
+                assert!(cols.iter().all(|&c| (c as usize) < blk.n_cols));
+            }
+        }
+        assert_eq!(sb.a_bb.n_rows, sb.batch.len());
+        assert_eq!(sb.a_bh.n_rows, sb.batch.len());
+        assert_eq!(sb.a_bh.n_cols, sb.halo.len());
+        assert_eq!(sb.a_hh.n_rows, sb.halo.len());
+        // nnz_fwd = stored nonzeros + the implicit halo->batch (A_bh^T) arcs
+        assert_eq!(sb.nnz_fwd, sb.nnz() + sb.a_bh.nnz());
     }
 
     #[test]
@@ -364,17 +487,18 @@ mod tests {
         let batch: Vec<u32> = (0..50u32).collect();
         let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
         let (bb, bh, nb, nh) = (sb.bucket_b, sb.bucket_h, sb.batch.len(), sb.halo.len());
+        let (a_bb, a_bh, _) = sb.to_dense();
         for i in 0..bb {
             for j in 0..bb {
                 if i >= nb || j >= nb {
-                    assert_eq!(sb.a_bb[i * bb + j], 0.0);
+                    assert_eq!(a_bb[i * bb + j], 0.0);
                 }
             }
         }
         for i in 0..bb {
             for j in 0..bh {
                 if i >= nb || j >= nh {
-                    assert_eq!(sb.a_bh[i * bh + j], 0.0);
+                    assert_eq!(a_bh[i * bh + j], 0.0);
                 }
             }
         }
@@ -387,12 +511,17 @@ mod tests {
         let batch: Vec<u32> = (0..80u32).collect();
         let sb = build_subgraph(&g, &batch, AdjacencyPolicy::LocalNoHalo, &buckets(), &mut rng).unwrap();
         assert!(sb.halo.is_empty());
-        assert!(sb.a_bh.iter().all(|&w| w == 0.0));
-        assert!(sb.a_hh.iter().all(|&w| w == 0.0));
+        assert_eq!(sb.a_bh.nnz(), 0);
+        assert_eq!(sb.a_hh.nnz(), 0);
+        // matches the dense local-normalization reference exactly
+        let nb = sb.batch.len();
+        let want = local_normalized_dense(&g.csr, &sb.batch);
+        let got = sb.a_bb.to_dense(nb, nb);
+        assert_eq!(got, want);
         // local normalization rows: positive diagonal, finite weights
-        for i in 0..sb.batch.len() {
-            assert!(sb.a_bb[i * sb.bucket_b + i] > 0.0);
-            let row: f32 = sb.a_bb[i * sb.bucket_b..(i + 1) * sb.bucket_b].iter().sum();
+        for i in 0..nb {
+            assert!(got[i * nb + i] > 0.0);
+            let row: f32 = got[i * nb..(i + 1) * nb].iter().sum();
             assert!(row.is_finite() && row > 0.0);
         }
     }
@@ -406,6 +535,19 @@ mod tests {
         let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &tiny, &mut rng).unwrap();
         assert_eq!(sb.halo.len(), 16);
         assert!(sb.dropped_halo > 0);
+    }
+
+    #[test]
+    fn unbounded_buckets_fit_exactly() {
+        let g = test_graph();
+        let mut rng = Rng::new(6);
+        let batch: Vec<u32> = (0..100u32).collect();
+        let sb =
+            build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+                .unwrap();
+        assert_eq!(sb.bucket_b, sb.batch.len());
+        assert_eq!(sb.bucket_h, sb.halo.len());
+        assert_eq!(sb.dropped_halo, 0);
     }
 
     #[test]
@@ -439,5 +581,6 @@ mod tests {
         assert_eq!(b.pick(100, 2000), Some((128, 1024))); // cap
         assert_eq!(b.pick(200, 100), Some((256, 768)));
         assert_eq!(b.pick(300, 100), None);
+        assert_eq!(Buckets::unbounded().pick(300, 100), Some((300, 100)));
     }
 }

@@ -1,0 +1,264 @@
+//! CSR sparse blocks for subgraph adjacency (`{offsets, cols, vals}`).
+//!
+//! `SubgraphBatch` stores its `A_bb` / `A_bh` / `A_hh` blocks in this format
+//! so per-step aggregation cost is O(nnz · d) instead of O(bucket² · d).
+//! The PJRT backend densifies on demand via [`CsrBlock::to_dense`], which
+//! reproduces the zero-padded row-major layout the AOT programs consume.
+
+use rayon::prelude::*;
+
+/// A sparse `n_rows × n_cols` matrix in compressed-sparse-row form.
+///
+/// `offsets` has `n_rows + 1` entries; row `i`'s nonzeros live at
+/// `cols[offsets[i]..offsets[i+1]]` / `vals[..]`, with column indices
+/// strictly increasing within a row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrBlock {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub offsets: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CsrBlock {
+    /// All-zero block.
+    pub fn empty(n_rows: usize, n_cols: usize) -> CsrBlock {
+        CsrBlock { n_rows, n_cols, offsets: vec![0; n_rows + 1], cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Build from a dense row-major `[n_rows, n_cols]` buffer (tests/benches).
+    pub fn from_dense(n_rows: usize, n_cols: usize, dense: &[f32]) -> CsrBlock {
+        assert_eq!(dense.len(), n_rows * n_cols);
+        let mut b = CsrBuilder::new(n_cols);
+        for i in 0..n_rows {
+            for j in 0..n_cols {
+                let w = dense[i * n_cols + j];
+                if w != 0.0 {
+                    b.push(j as u32, w);
+                }
+            }
+            b.finish_row();
+        }
+        b.build()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Row `i`'s (column, value) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        (&self.cols[s..e], &self.vals[s..e])
+    }
+
+    /// Densify into a zero-padded row-major `[pad_rows, pad_cols]` buffer —
+    /// exactly the layout the padded AOT step programs consume.
+    pub fn to_dense(&self, pad_rows: usize, pad_cols: usize) -> Vec<f32> {
+        assert!(pad_rows >= self.n_rows && pad_cols >= self.n_cols);
+        let mut out = vec![0f32; pad_rows * pad_cols];
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            let row = &mut out[i * pad_cols..(i + 1) * pad_cols];
+            for (&j, &w) in cols.iter().zip(vals) {
+                row[j as usize] = w;
+            }
+        }
+        out
+    }
+
+    /// Transposed block (counting sort; preserves sorted columns).
+    pub fn transpose(&self) -> CsrBlock {
+        let mut counts = vec![0u32; self.n_cols + 1];
+        for &j in &self.cols {
+            counts[j as usize + 1] += 1;
+        }
+        for j in 0..self.n_cols {
+            counts[j + 1] += counts[j];
+        }
+        let offsets = counts.clone();
+        let mut cols = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut cursor = counts;
+        for i in 0..self.n_rows {
+            let (rc, rv) = self.row(i);
+            for (&j, &w) in rc.iter().zip(rv) {
+                let at = cursor[j as usize] as usize;
+                cols[at] = i as u32;
+                vals[at] = w;
+                cursor[j as usize] += 1;
+            }
+        }
+        CsrBlock { n_rows: self.n_cols, n_cols: self.n_rows, offsets, cols, vals }
+    }
+
+    /// `out[i, :] += Σ_j A[i, j] · x[j, :]` for all rows (serial).
+    /// `x` is row-major `[n_cols, d]`, `out` row-major `[n_rows, d]`.
+    pub fn spmm_acc(&self, x: &[f32], d: usize, out: &mut [f32]) {
+        debug_assert!(x.len() >= self.n_cols * d);
+        debug_assert!(out.len() >= self.n_rows * d);
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            let row = &mut out[i * d..(i + 1) * d];
+            for (&j, &w) in cols.iter().zip(vals) {
+                let src = &x[j as usize * d..(j as usize + 1) * d];
+                for (r, &s) in row.iter_mut().zip(src) {
+                    *r += w * s;
+                }
+            }
+        }
+    }
+
+    /// `A @ x` with rayon-parallel rows. `x` is row-major `[n_cols, d]`.
+    pub fn par_spmm(&self, x: &[f32], d: usize) -> Vec<f32> {
+        debug_assert!(x.len() >= self.n_cols * d);
+        let mut out = vec![0f32; self.n_rows * d];
+        out.par_chunks_mut(d).enumerate().for_each(|(i, row)| {
+            let (cols, vals) = self.row(i);
+            for (&j, &w) in cols.iter().zip(vals) {
+                let src = &x[j as usize * d..(j as usize + 1) * d];
+                for (r, &s) in row.iter_mut().zip(src) {
+                    *r += w * s;
+                }
+            }
+        });
+        out
+    }
+}
+
+/// Incremental row-by-row CSR construction (columns must be pushed in
+/// increasing order within each row).
+pub struct CsrBuilder {
+    n_cols: usize,
+    offsets: Vec<u32>,
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl CsrBuilder {
+    pub fn new(n_cols: usize) -> CsrBuilder {
+        CsrBuilder { n_cols, offsets: vec![0], cols: Vec::new(), vals: Vec::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, col: u32, val: f32) {
+        debug_assert!((col as usize) < self.n_cols);
+        debug_assert!(
+            self.cols.len() == *self.offsets.last().unwrap() as usize
+                || *self.cols.last().unwrap() < col,
+            "columns must be strictly increasing within a row"
+        );
+        self.cols.push(col);
+        self.vals.push(val);
+    }
+
+    #[inline]
+    pub fn finish_row(&mut self) {
+        self.offsets.push(self.cols.len() as u32);
+    }
+
+    pub fn build(self) -> CsrBlock {
+        CsrBlock {
+            n_rows: self.offsets.len() - 1,
+            n_cols: self.n_cols,
+            offsets: self.offsets,
+            cols: self.cols,
+            vals: self.vals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_block(rng: &mut Rng, n_rows: usize, n_cols: usize, p: f64) -> (CsrBlock, Vec<f32>) {
+        let mut dense = vec![0f32; n_rows * n_cols];
+        for v in dense.iter_mut() {
+            if rng.next_f64() < p {
+                *v = rng.normal() as f32;
+            }
+        }
+        (CsrBlock::from_dense(n_rows, n_cols, &dense), dense)
+    }
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let mut rng = Rng::new(1);
+        for &(r, c) in &[(5usize, 7usize), (1, 1), (16, 3), (0, 4)] {
+            let (blk, dense) = random_block(&mut rng, r, c, 0.4);
+            assert_eq!(blk.to_dense(r, c), dense);
+            // padded: original entries in place, padding zero
+            let pad = blk.to_dense(r + 3, c + 2);
+            for i in 0..r + 3 {
+                for j in 0..c + 2 {
+                    let want = if i < r && j < c { dense[i * c + j] } else { 0.0 };
+                    assert_eq!(pad[i * (c + 2) + j], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let mut rng = Rng::new(2);
+        let (blk, dense) = random_block(&mut rng, 9, 6, 0.3);
+        let t = blk.transpose();
+        assert_eq!(t.n_rows, 6);
+        assert_eq!(t.n_cols, 9);
+        let td = t.to_dense(6, 9);
+        for i in 0..9 {
+            for j in 0..6 {
+                assert_eq!(td[j * 9 + i], dense[i * 6 + j]);
+            }
+        }
+        // columns sorted in each row
+        for i in 0..t.n_rows {
+            let (cols, _) = t.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let mut rng = Rng::new(3);
+        let (blk, dense) = random_block(&mut rng, 11, 8, 0.35);
+        let d = 5;
+        let x: Vec<f32> = (0..8 * d).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0f32; 11 * d];
+        for i in 0..11 {
+            for j in 0..8 {
+                let w = dense[i * 8 + j];
+                for k in 0..d {
+                    want[i * d + k] += w * x[j * d + k];
+                }
+            }
+        }
+        let mut got = vec![0f32; 11 * d];
+        blk.spmm_acc(&x, d, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        let par = blk.par_spmm(&x, d);
+        assert_eq!(par, got);
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let mut b = CsrBuilder::new(4);
+        b.push(1, 2.0);
+        b.push(3, -1.0);
+        b.finish_row();
+        b.finish_row(); // empty row
+        b.push(0, 0.5);
+        b.finish_row();
+        let blk = b.build();
+        assert_eq!(blk.n_rows, 3);
+        assert_eq!(blk.nnz(), 3);
+        assert_eq!(blk.to_dense(3, 4), vec![0.0, 2.0, 0.0, -1.0, 0.0, 0.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.0]);
+    }
+}

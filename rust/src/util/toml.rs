@@ -53,12 +53,19 @@ impl TomlValue {
 /// `section.key -> value`; keys before any section header live under `""`.
 pub type TomlDoc = BTreeMap<String, TomlValue>;
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
     let mut doc = TomlDoc::new();

@@ -1,14 +1,16 @@
 //! Integration: the experiment harness runs end-to-end at reduced scale and
-//! reproduces the paper's qualitative shapes. Requires `make artifacts`.
-//! Heavier checks are behind `--ignored` (run via `cargo test --release
-//! -- --ignored` or the `make experiments` full harness).
+//! reproduces the paper's qualitative shapes, on the native backend (no
+//! artifacts needed). Heavier checks are behind `--ignored` (run via
+//! `cargo test --release -- --ignored` or the `make experiments` harness).
 
-use lmc::experiments::{run_fig4, run_table7};
+use lmc::backend::Backend;
 use lmc::experiments::Ctx;
+use lmc::experiments::{run_fig4, run_table7};
 
 fn ctx() -> Ctx {
     let out = std::env::temp_dir().join("lmc_test_results");
-    Ctx::new("artifacts", out.to_str().unwrap(), 0.08, 3).expect("run `make artifacts` first")
+    Ctx::new(Backend::Native, "artifacts", out.to_str().unwrap(), 0.08, 3)
+        .expect("native experiment context")
 }
 
 #[test]

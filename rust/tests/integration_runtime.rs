@@ -1,5 +1,7 @@
 //! Integration: manifest + PJRT runtime + numeric cross-check of a compiled
-//! layer program against a host-side reference. Requires `make artifacts`.
+//! layer program against a host-side reference. Requires `make artifacts`
+//! and a `--features pjrt` build with the real xla bindings.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

@@ -1,17 +1,15 @@
-//! Integration: end-to-end training behaviour per method on cora-sim.
-//! Requires `make artifacts`. Kept small (few epochs) so `cargo test` stays
-//! in CI-tolerable time; the full-scale runs live in `lmc experiment`.
+//! Integration: end-to-end training behaviour per method on cora-sim,
+//! running on the default native backend — no AOT artifacts required.
 
-use std::path::Path;
 use std::sync::Arc;
 
+use lmc::backend::{Executor, NativeExecutor};
 use lmc::config::RunConfig;
 use lmc::coordinator::{grad_check, Method, Trainer};
 use lmc::graph::DatasetId;
-use lmc::runtime::Runtime;
 
-fn rt() -> Arc<Runtime> {
-    Arc::new(Runtime::new(Path::new("artifacts")).expect("run `make artifacts` first"))
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new())
 }
 
 fn cfg(method: Method, epochs: usize) -> RunConfig {
@@ -28,9 +26,9 @@ fn cfg(method: Method, epochs: usize) -> RunConfig {
 
 #[test]
 fn every_method_trains_and_learns() {
-    let rt = rt();
+    let exec = exec();
     for method in [Method::Lmc, Method::Gas, Method::Fm, Method::Cluster] {
-        let mut t = Trainer::new(rt.clone(), cfg(method, 6)).unwrap();
+        let mut t = Trainer::new(exec.clone(), cfg(method, 6)).unwrap();
         let m = t.run().unwrap();
         let first = m.records.first().unwrap().train_loss;
         let last = m.records.last().unwrap().train_loss;
@@ -46,8 +44,7 @@ fn every_method_trains_and_learns() {
 
 #[test]
 fn gd_oracle_trains() {
-    let rt = rt();
-    let mut t = Trainer::new(rt, cfg(Method::Gd, 8)).unwrap();
+    let mut t = Trainer::new(exec(), cfg(Method::Gd, 8)).unwrap();
     let m = t.run().unwrap();
     let first = m.records.first().unwrap().train_loss;
     let last = m.records.last().unwrap().train_loss;
@@ -56,10 +53,9 @@ fn gd_oracle_trains() {
 
 #[test]
 fn gcnii_trains_too() {
-    let rt = rt();
     let mut c = cfg(Method::Lmc, 5);
     c.arch = "gcnii".into();
-    let mut t = Trainer::new(rt, c).unwrap();
+    let mut t = Trainer::new(exec(), c).unwrap();
     let m = t.run().unwrap();
     let first = m.records.first().unwrap().train_loss;
     let last = m.records.last().unwrap().train_loss;
@@ -75,11 +71,10 @@ fn lmc_gradient_bias_beats_gas_and_cluster() {
     // point, same histories, same batches, so only the compensation
     // differs. Theorem 2's regime needs moderate staleness, hence the
     // reduced learning rate.
-    let rt = rt();
     let mut c = cfg(Method::Lmc, 3);
     c.dataset = DatasetId::ArxivSim;
     c.lr = 3e-3;
-    let mut t = Trainer::new(rt.clone(), c).unwrap();
+    let mut t = Trainer::new(exec(), c).unwrap();
     for _ in 0..3 {
         t.train_epoch().unwrap();
     }
@@ -95,16 +90,16 @@ fn lmc_gradient_bias_beats_gas_and_cluster() {
 
 #[test]
 fn history_staleness_decreases_with_more_frequent_visits() {
-    let rt = rt();
+    let exec = exec();
     // larger batches -> every node visited sooner -> lower mean staleness
-    let mut small = Trainer::new(rt.clone(), {
+    let mut small = Trainer::new(exec.clone(), {
         let mut c = cfg(Method::Lmc, 2);
         c.clusters_per_batch = 1;
         c
     })
     .unwrap();
     small.run().unwrap();
-    let mut big = Trainer::new(rt, {
+    let mut big = Trainer::new(exec, {
         let mut c = cfg(Method::Lmc, 2);
         c.clusters_per_batch = 4;
         c
@@ -117,24 +112,55 @@ fn history_staleness_decreases_with_more_frequent_visits() {
 
 #[test]
 fn fixed_batches_mode_runs() {
-    let rt = rt();
     let mut c = cfg(Method::Lmc, 3);
     c.batcher_mode = lmc::sampler::BatcherMode::Fixed;
-    let mut t = Trainer::new(rt, c).unwrap();
+    let mut t = Trainer::new(exec(), c).unwrap();
     let m = t.run().unwrap();
     assert_eq!(m.records.len(), 3);
 }
 
 #[test]
 fn ppi_inductive_trains() {
-    let rt = rt();
     let mut c = cfg(Method::Lmc, 4);
     c.dataset = DatasetId::PpiSim;
-    let mut t = Trainer::new(rt, c).unwrap();
+    let mut t = Trainer::new(exec(), c).unwrap();
     let m = t.run().unwrap();
     let first = m.records.first().unwrap().train_loss;
     let last = m.records.last().unwrap().train_loss;
     assert!(last < first, "ppi loss {first} -> {last}");
     // inductive test graph accuracy above chance (12 classes)
     assert!(m.final_test().unwrap() > 1.5 / 12.0);
+}
+
+#[test]
+fn pipeline_and_serial_paths_are_identical() {
+    // Unified per-batch forked RNG streams: the prefetch pipeline must
+    // sample the same halo subsets and produce bit-identical parameters.
+    let run = |pipeline: bool| {
+        let mut c = cfg(Method::Lmc, 3);
+        c.pipeline = pipeline;
+        c.eval_every = usize::MAX;
+        let mut t = Trainer::new(exec(), c).unwrap();
+        for _ in 0..3 {
+            t.train_epoch().unwrap();
+        }
+        t.params.tensors.clone()
+    };
+    let serial = run(false);
+    let pipelined = run(true);
+    assert_eq!(serial.len(), pipelined.len());
+    for (a, b) in serial.iter().zip(&pipelined) {
+        assert_eq!(a.data, b.data, "pipeline diverged from serial path");
+    }
+}
+
+#[test]
+fn spider_variant_runs_and_learns() {
+    let mut c = cfg(Method::LmcSpider, 4);
+    c.spider_period = 3;
+    let mut t = Trainer::new(exec(), c).unwrap();
+    let m = t.run().unwrap();
+    let first = m.records.first().unwrap().train_loss;
+    let last = m.records.last().unwrap().train_loss;
+    assert!(last < first, "SPIDER loss {first} -> {last}");
 }

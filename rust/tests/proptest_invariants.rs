@@ -1,10 +1,14 @@
 //! Property-based tests (randomized, seeded — in-repo substitute for the
-//! proptest crate): coordinator invariants over random graphs and
+//! proptest crate, which the offline registry cannot supply because it
+//! depends on `rand`): coordinator invariants over random graphs and
 //! configurations. No artifacts/PJRT required.
 
+use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs};
+use lmc::coordinator::params::{grad_rel_err, Params};
 use lmc::graph::{gcn_normalize, load, random_graph, Csr, DatasetId, Graph};
 use lmc::history::History;
 use lmc::partition::{edge_cut, partition, quality::quality, PartitionConfig};
+use lmc::runtime::ArchInfo;
 use lmc::sampler::{
     beta_vector, build_subgraph, AdjacencyPolicy, Batcher, BatcherMode, BetaScore, Buckets,
 };
@@ -64,46 +68,169 @@ fn attr_graph(csr: Csr, seed: u64) -> Graph {
     Graph::new(csr, d_x, 4, features, labels, split)
 }
 
+/// Old-layout dense reference blocks built straight from the graph, padded
+/// to (bb, bh) — exactly what the pre-refactor sampler materialized.
+fn dense_reference(
+    g: &Graph,
+    batch: &[u32],
+    halo: &[u32],
+    bb: usize,
+    bh: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = g.n();
+    let mut mark = vec![0u8; n];
+    let mut pos = vec![u32::MAX; n];
+    for (i, &u) in batch.iter().enumerate() {
+        mark[u as usize] = 1;
+        pos[u as usize] = i as u32;
+    }
+    for (i, &u) in halo.iter().enumerate() {
+        mark[u as usize] = 2;
+        pos[u as usize] = i as u32;
+    }
+    let mut abb = vec![0f32; bb * bb];
+    let mut abh = vec![0f32; bb * bh];
+    let mut ahh = vec![0f32; bh * bh];
+    for (i, &u) in batch.iter().enumerate() {
+        let u = u as usize;
+        abb[i * bb + i] = g.self_w[u];
+        for ei in g.csr.offsets[u] as usize..g.csr.offsets[u + 1] as usize {
+            let v = g.csr.neighbors[ei] as usize;
+            match mark[v] {
+                1 => abb[i * bb + pos[v] as usize] = g.edge_w[ei],
+                2 => abh[i * bh + pos[v] as usize] = g.edge_w[ei],
+                _ => {}
+            }
+        }
+    }
+    for (i, &u) in halo.iter().enumerate() {
+        let u = u as usize;
+        ahh[i * bh + i] = g.self_w[u];
+        for ei in g.csr.offsets[u] as usize..g.csr.offsets[u + 1] as usize {
+            let v = g.csr.neighbors[ei] as usize;
+            if mark[v] == 2 {
+                ahh[i * bh + pos[v] as usize] = g.edge_w[ei];
+            }
+        }
+    }
+    (abb, abh, ahh)
+}
+
 #[test]
-fn prop_subgraph_blocks_are_exact_adjacency_gathers() {
+fn prop_sparse_blocks_roundtrip_to_old_dense_layout() {
     for (seed, csr) in random_cases(15) {
         let g = attr_graph(csr, seed);
         let mut rng = Rng::new(seed + 5);
         let nb = 1 + rng.below(g.n() / 2);
-        let mut batch: Vec<u32> = rng.sample_indices(g.n(), nb).into_iter().map(|x| x as u32).collect();
+        let mut batch: Vec<u32> =
+            rng.sample_indices(g.n(), nb).into_iter().map(|x| x as u32).collect();
         batch.sort_unstable();
+        // padded bucket exercises the to_dense zero-padding path
         let buckets = Buckets(vec![(g.n(), g.n())]);
-        let sb =
-            build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets, &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets, &mut rng)
+            .unwrap();
         assert_eq!(sb.dropped_halo, 0);
+        let (abb, abh, ahh) = sb.to_dense();
+        let (want_bb, want_bh, want_hh) =
+            dense_reference(&g, &sb.batch, &sb.halo, sb.bucket_b, sb.bucket_h);
+        assert_eq!(abb, want_bb, "seed {seed}: A_bb dense mismatch");
+        assert_eq!(abh, want_bh, "seed {seed}: A_bh dense mismatch");
+        assert_eq!(ahh, want_hh, "seed {seed}: A_hh dense mismatch");
+
+        // sparse values are exact global-normalization gathers
         let (ew, sw) = gcn_normalize(&g.csr);
-        // every nonzero in A_bb/A_bh/A_hh equals the global normalization
         for (i, &u) in sb.batch.iter().enumerate() {
             let u = u as usize;
-            assert_eq!(sb.a_bb[i * sb.bucket_b + i], sw[u]);
-            for (j, &v) in sb.batch.iter().enumerate() {
-                if i == j {
-                    continue;
-                }
-                let w = sb.a_bb[i * sb.bucket_b + j];
-                match g.csr.neighbors(u).binary_search(&v) {
-                    Ok(e) => assert_eq!(w, ew[g.csr.offsets[u] as usize + e]),
-                    Err(_) => assert_eq!(w, 0.0),
-                }
-            }
-            for (j, &v) in sb.halo.iter().enumerate() {
-                let w = sb.a_bh[i * sb.bucket_h + j];
-                match g.csr.neighbors(u).binary_search(&v) {
-                    Ok(e) => assert_eq!(w, ew[g.csr.offsets[u] as usize + e]),
-                    Err(_) => assert_eq!(w, 0.0),
+            let (cols, vals) = sb.a_bb.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+            for (&j, &w) in cols.iter().zip(vals) {
+                if j as usize == i {
+                    assert_eq!(w, sw[u]);
+                } else {
+                    let v = sb.batch[j as usize];
+                    let e = g.csr.neighbors(u).binary_search(&v).unwrap();
+                    assert_eq!(w, ew[g.csr.offsets[u] as usize + e]);
                 }
             }
         }
+
         // beta padding + range invariants under every score fn
-        for score in [BetaScore::XSquared, BetaScore::TwoXMinusXSquared, BetaScore::X, BetaScore::One, BetaScore::SinX] {
+        for score in [
+            BetaScore::XSquared,
+            BetaScore::TwoXMinusXSquared,
+            BetaScore::X,
+            BetaScore::One,
+            BetaScore::SinX,
+        ] {
             let beta = beta_vector(&sb, 0.7, score);
             assert!(beta.iter().all(|&b| (0.0..=1.0).contains(&b)));
             assert!(beta[sb.halo.len()..].iter().all(|&b| b == 0.0));
+        }
+    }
+}
+
+/// Full-batch mini-batch step (V_B = V, no halo) through the native
+/// backend must reproduce the exact full-graph oracle gradients — the
+/// paper's Theorem 1 consistency check, per architecture.
+#[test]
+fn prop_native_full_batch_step_matches_exact_oracle() {
+    let exec = NativeExecutor::new();
+    for (case, arch_name) in [(0u64, "gcn"), (1u64, "gcnii")] {
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(seed * 31 + case * 7 + 2);
+            let n = 30 + rng.below(120);
+            let csr = random_graph(n, 0.06, &mut rng);
+            let g = attr_graph(csr, seed + 100);
+            let arch = match arch_name {
+                "gcn" => ArchInfo::gcn(3, g.d_x, 16, g.n_class),
+                _ => ArchInfo::gcnii(3, g.d_x, 16, g.n_class),
+            };
+            let model = ModelSpec {
+                profile: "custom".into(),
+                arch_name: arch_name.into(),
+                arch,
+            };
+            let mut prng = Rng::new(seed ^ 0x51DE);
+            let params = Params::init(&model.arch, &mut prng);
+            let n_train = g.split.iter().filter(|&&s| s == 0).count().max(1);
+
+            let batch: Vec<u32> = (0..g.n() as u32).collect();
+            let sb = build_subgraph(
+                &g,
+                &batch,
+                AdjacencyPolicy::GlobalWithHalo,
+                &Buckets::unbounded(),
+                &mut rng,
+            )
+            .unwrap();
+            assert!(sb.halo.is_empty(), "full batch has no halo");
+            let l = model.arch.l;
+            let inputs = StepInputs {
+                graph: &g,
+                sb: &sb,
+                model: &model,
+                params: &params,
+                hist_h: (1..l).map(|_| Vec::new()).collect(),
+                hist_v: (1..l).map(|_| Vec::new()).collect(),
+                beta: Vec::new(),
+                bwd_scale: 1.0,
+                vscale: 1.0 / n_train as f32,
+                grad_scale: 1.0,
+            };
+            let step = exec.forward_backward(&inputs).unwrap();
+            let oracle = exec.full_grad(&g, &params, &model).unwrap();
+            let rel = grad_rel_err(&step.grads, &oracle.grads);
+            assert!(
+                rel < 1e-4,
+                "{arch_name} seed {seed}: native step vs oracle rel err {rel}"
+            );
+            // losses agree too (step loss_sum is the unnormalized train CE)
+            let step_loss = step.loss_sum / n_train as f64;
+            assert!(
+                (step_loss - oracle.train_loss).abs() < 1e-5 * (1.0 + oracle.train_loss.abs()),
+                "{arch_name} seed {seed}: loss {step_loss} vs {}",
+                oracle.train_loss
+            );
         }
     }
 }

@@ -1,0 +1,122 @@
+//! Compile-time stub of the XLA/PJRT binding crate.
+//!
+//! The `lmc` crate's `pjrt` feature needs an `xla` crate exposing the PJRT
+//! C-API surface (client, compiled executable, literals). The real bindings
+//! link against a PJRT plugin and cannot be vendored here, so this stub
+//! provides the same API shape and fails at the first runtime entry point
+//! (`PjRtClient::cpu`) with an actionable message. This keeps
+//! `cargo check --features pjrt` working on machines with no XLA toolchain.
+//!
+//! To enable real PJRT execution, point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual bindings (e.g. a local build of the
+//! `xla` PJRT wrapper used to produce the AOT artifacts) — the API below
+//! mirrors the subset the `lmc` crate calls, so no source changes are
+//! needed.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' error (Display-able).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT unavailable: the `xla` dependency is the in-repo API stub \
+         (rust/vendor/xla). Point Cargo.toml at the real PJRT bindings to \
+         execute AOT artifacts, or use the default native backend."
+            .to_string(),
+    ))
+}
+
+/// Host literal (stub: carries no data).
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T: Copy>(_x: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        stub_unavailable()
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>, Error> {
+        stub_unavailable()
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        stub_unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        stub_unavailable()
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub_unavailable()
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub_unavailable()
+    }
+}
+
+/// PJRT client (stub; `cpu()` is the first call every path makes, so the
+/// stub fails fast with a clear message).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        stub_unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        stub_unavailable()
+    }
+}
