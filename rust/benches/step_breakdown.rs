@@ -1,0 +1,237 @@
+//! Bench: per-phase train-step breakdown (sample / gather / aggregate /
+//! gemm / compensate) plus the end-to-end single-step comparison between
+//! the pre-optimization native configuration (serial reference kernels,
+//! rebuild-per-step, allocate-per-step) and the optimized one (blocked
+//! kernels, Fixed-mode subgraph cache semantics, workspace reuse).
+//!
+//! Emits `BENCH_step.json` at the repo root so subsequent PRs have a perf
+//! trajectory to regress against. Timings are recorded, never gated: the
+//! CI smoke job (`BENCH_SMOKE=1` or `--quick`) fails only on panic.
+
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use lmc::backend::native::combine;
+use lmc::backend::{gemm, Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspace};
+use lmc::coordinator::params::Params;
+use lmc::graph::{load, DatasetId};
+use lmc::history::History;
+use lmc::partition::{partition, PartitionConfig};
+use lmc::runtime::ArchInfo;
+use lmc::sampler::{
+    beta_vector, beta_vector_into, build_subgraph, AdjacencyPolicy, BetaScore, Buckets,
+};
+use lmc::util::bench::{black_box, Bencher};
+use lmc::util::rng::Rng;
+
+const D_HIDDEN: usize = 128;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_SMOKE").is_ok();
+    let id = if smoke { DatasetId::CoraSim } else { DatasetId::ArxivSim };
+    let b = if smoke {
+        Bencher { warmup_iters: 1, min_iters: 2, max_iters: 8, min_window_s: 0.05 }
+    } else {
+        Bencher::quick()
+    };
+    println!("== step breakdown (native backend, hidden d = {D_HIDDEN}, {}) ==", id.name());
+
+    // graph, partition-contiguous relabeling, a 2-cluster batch
+    let g = load(id, 0);
+    let k = id.default_parts();
+    let part = partition(&g.csr, &PartitionConfig::new(k, 0));
+    let g = g.permute(&part.contiguous_perm());
+    let per = g.n() / k;
+    let batch: Vec<u32> = (0..(2 * per).min(g.n()) as u32).collect();
+
+    // a 3-layer GCN at hidden width 128 (wider than any built-in profile,
+    // to exercise the wide-d kernel paths the acceptance bar names)
+    let arch = ArchInfo::gcn(3, g.d_x, D_HIDDEN, g.n_class);
+    let dims = arch.dims.clone();
+    let l_total = arch.l;
+    let model = ModelSpec { profile: "bench".into(), arch_name: "gcn".into(), arch };
+    let mut prng = Rng::new(1);
+    let params = Params::init(&model.arch, &mut prng);
+    let hist_dims: Vec<usize> = dims[1..l_total].to_vec();
+    let history = History::new(g.n(), &hist_dims);
+    let n_train = g.split.iter().filter(|&&s| s == 0).count().max(1);
+    let vscale = 1.0 / n_train as f32;
+
+    let mut rng = Rng::new(7);
+    let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+        .expect("build_subgraph");
+    let (nb, nh) = (sb.batch.len(), sb.halo.len());
+    let m = nb + nh;
+    println!("    batch {nb}  halo {nh}  nnz {}", sb.nnz());
+
+    // ---- phase: sample (subgraph construction; a cache hit skips this) --
+    let sample = b.run("phase/sample(build_subgraph)", || {
+        let mut r = Rng::new(7);
+        black_box(
+            build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r)
+                .unwrap(),
+        );
+    });
+
+    // ---- phase: gather (feature rows at step width) ---------------------
+    let wide: Vec<f32> = (0..g.n() * D_HIDDEN).map(|i| (i % 23) as f32 * 0.1 - 1.1).collect();
+    let stacked: Vec<u32> = sb.batch.iter().chain(sb.halo.iter()).copied().collect();
+    let gather = b.run("phase/gather(rows at d=128)", || {
+        black_box(lmc::sampler::gather_rows(&wide, D_HIDDEN, &stacked, m));
+    });
+
+    // ---- phase: aggregate (SpMM over the four blocks) -------------------
+    let x: Vec<f32> = (0..m * D_HIDDEN).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+    let xb = &x[..nb * D_HIDDEN];
+    let xh = &x[nb * D_HIDDEN..];
+    let agg_naive = b.run("phase/aggregate/naive(serial spmm_acc)", || {
+        let mut out = vec![0f32; m * D_HIDDEN];
+        let (bpart, hpart) = out.split_at_mut(nb * D_HIDDEN);
+        sb.a_bb.spmm_acc(xb, D_HIDDEN, bpart);
+        sb.a_bh.spmm_acc(xh, D_HIDDEN, bpart);
+        sb.a_hb.spmm_acc(xb, D_HIDDEN, hpart);
+        sb.a_hh.spmm_acc(xh, D_HIDDEN, hpart);
+        black_box(&out);
+    });
+    let agg_opt = b.run("phase/aggregate/tiled(par_spmm_acc_tiled)", || {
+        let mut out = vec![0f32; m * D_HIDDEN];
+        let (bpart, hpart) = out.split_at_mut(nb * D_HIDDEN);
+        sb.a_bb.par_spmm_acc_tiled(xb, D_HIDDEN, 1.0, bpart);
+        sb.a_bh.par_spmm_acc_tiled(xh, D_HIDDEN, 1.0, bpart);
+        sb.a_hb.par_spmm_acc_tiled(xb, D_HIDDEN, 1.0, hpart);
+        sb.a_hh.par_spmm_acc_tiled(xh, D_HIDDEN, 1.0, hpart);
+        black_box(&out);
+    });
+
+    // ---- phase: gemm (the O(m·d²) dense-affine term) --------------------
+    let w: Vec<f32> = (0..D_HIDDEN * D_HIDDEN).map(|i| (i % 19) as f32 * 0.05 - 0.45).collect();
+    let gemm_naive = b.run("phase/gemm/reference(serial)", || {
+        black_box(gemm::reference::matmul(&x, m, D_HIDDEN, &w, D_HIDDEN));
+    });
+    let gemm_opt = b.run("phase/gemm/blocked(parallel)", || {
+        black_box(gemm::matmul(&x, m, D_HIDDEN, &w, D_HIDDEN));
+    });
+
+    // ---- phase: compensate (Eq. 9 convex combination on halo rows) ------
+    let beta = beta_vector(&sb, 0.8, BetaScore::TwoXMinusXSquared);
+    let hist_rows: Vec<f32> = (0..nh * D_HIDDEN).map(|i| (i % 11) as f32 * 0.2 - 1.0).collect();
+    let compensate = b.run("phase/compensate(combine)", || {
+        black_box(combine(&beta[..nh], &hist_rows, xh, nh, D_HIDDEN));
+    });
+
+    // ---- end-to-end single step -----------------------------------------
+    // pre-PR configuration: reference kernels, rebuild the subgraph every
+    // step, allocate every buffer
+    let exec_ref = NativeExecutor::with_reference_kernels();
+    let mut rng_n = Rng::new(7);
+    let step_naive = b.run("step/naive(reference kernels, rebuild, alloc)", || {
+        let sb_i = build_subgraph(
+            &g,
+            &batch,
+            AdjacencyPolicy::GlobalWithHalo,
+            &Buckets::unbounded(),
+            &mut rng_n,
+        )
+        .unwrap();
+        let hist_h: Vec<Vec<f32>> =
+            (1..l_total).map(|l| history.gather_h(l, &sb_i.halo, sb_i.halo.len())).collect();
+        let hist_v: Vec<Vec<f32>> =
+            (1..l_total).map(|l| history.gather_v(l, &sb_i.halo, sb_i.halo.len())).collect();
+        let beta_i = beta_vector(&sb_i, 0.8, BetaScore::TwoXMinusXSquared);
+        let inputs = StepInputs {
+            graph: &g,
+            sb: &sb_i,
+            model: &model,
+            params: &params,
+            hist_h,
+            hist_v,
+            beta: beta_i,
+            bwd_scale: 1.0,
+            vscale,
+            grad_scale: 1.0,
+            ws: None,
+        };
+        black_box(exec_ref.forward_backward(&inputs).unwrap());
+    });
+    // optimized configuration: blocked kernels, cached subgraph (Fixed-mode
+    // steady state), workspace reuse with trainer-style recycling
+    let exec_opt = NativeExecutor::new();
+    let ws = Mutex::new(StepWorkspace::new());
+    let step_opt = b.run("step/optimized(blocked, cached subgraph, workspace)", || {
+        let (beta_i, hist_h, hist_v) = {
+            let mut w = ws.lock().unwrap();
+            let mut beta_i = w.grab(sb.bucket_h);
+            beta_vector_into(&sb, 0.8, BetaScore::TwoXMinusXSquared, &mut beta_i);
+            let mut hist_h: Vec<Vec<f32>> = Vec::with_capacity(l_total - 1);
+            let mut hist_v: Vec<Vec<f32>> = Vec::with_capacity(l_total - 1);
+            for l in 1..l_total {
+                let mut buf = w.grab(sb.bucket_h * dims[l]);
+                history.gather_h_into(l, &sb.halo, &mut buf);
+                hist_h.push(buf);
+                let mut buf = w.grab(sb.bucket_h * dims[l]);
+                history.gather_v_into(l, &sb.halo, &mut buf);
+                hist_v.push(buf);
+            }
+            (beta_i, hist_h, hist_v)
+        };
+        let inputs = StepInputs {
+            graph: &g,
+            sb: &sb,
+            model: &model,
+            params: &params,
+            hist_h,
+            hist_v,
+            beta: beta_i,
+            bwd_scale: 1.0,
+            vscale,
+            grad_scale: 1.0,
+            ws: Some(&ws),
+        };
+        let mut outs = exec_opt.forward_backward(&inputs).unwrap();
+        {
+            let mut w = ws.lock().unwrap();
+            let StepInputs { hist_h, hist_v, beta, .. } = inputs;
+            w.put(beta);
+            w.put_all(hist_h);
+            w.put_all(hist_v);
+            w.put_all(outs.new_h.drain(..));
+            w.put_all(outs.new_v.drain(..));
+            w.put_all(outs.htilde.drain(..));
+        }
+        black_box(&outs.grads);
+    });
+
+    let speedup = step_naive.mean_s / step_opt.mean_s;
+    println!("    single-step speedup (naive/optimized): {speedup:.2}x");
+    println!(
+        "    workspace: {} grabs, {} misses",
+        ws.lock().unwrap().grabs(),
+        ws.lock().unwrap().misses()
+    );
+
+    // ---- emit BENCH_step.json at the repo root --------------------------
+    let mut json = String::from("{\n  \"bench\": \"step_breakdown\",\n  \"provenance\": \"measured\",\n");
+    let _ = writeln!(json, "  \"dataset\": \"{}\",", id.name());
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"d_hidden\": {D_HIDDEN},");
+    let _ = writeln!(json, "  \"layers\": {l_total},");
+    let _ = writeln!(json, "  \"batch\": {nb},");
+    let _ = writeln!(json, "  \"halo\": {nh},");
+    let _ = writeln!(json, "  \"nnz\": {},", sb.nnz());
+    json.push_str("  \"phases\": {\n");
+    let _ = writeln!(json, "    \"sample_s\": {:.6e},", sample.mean_s);
+    let _ = writeln!(json, "    \"gather_s\": {:.6e},", gather.mean_s);
+    let _ = writeln!(json, "    \"aggregate_naive_s\": {:.6e},", agg_naive.mean_s);
+    let _ = writeln!(json, "    \"aggregate_s\": {:.6e},", agg_opt.mean_s);
+    let _ = writeln!(json, "    \"gemm_naive_s\": {:.6e},", gemm_naive.mean_s);
+    let _ = writeln!(json, "    \"gemm_s\": {:.6e},", gemm_opt.mean_s);
+    let _ = writeln!(json, "    \"compensate_s\": {:.6e}", compensate.mean_s);
+    json.push_str("  },\n");
+    let _ = writeln!(json, "  \"step_naive_s\": {:.6e},", step_naive.mean_s);
+    let _ = writeln!(json, "  \"step_optimized_s\": {:.6e},", step_opt.mean_s);
+    let _ = writeln!(json, "  \"speedup_naive_over_optimized\": {speedup:.2}");
+    json.push_str("}\n");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_step.json");
+    std::fs::write(path, &json).expect("write BENCH_step.json");
+    println!("wrote {path}");
+}

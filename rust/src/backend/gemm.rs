@@ -1,0 +1,475 @@
+//! Blocked, rayon-parallel dense GEMM kernels for the native backend.
+//!
+//! Three layouts cover every dense product a train step needs:
+//!
+//!   * `matmul`     — `a[m, k] @ b[k, n]`        (forward affine, `dagg`)
+//!   * `matmul_nt`  — `a[m, n] @ b[p, n]^T`      (cotangent through `W`)
+//!   * `matmul_tn`  — `a[m, k]^T @ c[m, n]`      (parameter gradients)
+//!
+//! Each kernel tiles over output row blocks ([`ROW_BLOCK`] rows per rayon
+//! task) and, for the N/N and T/N layouts, over k-panels ([`K_PANEL`]) so
+//! the `b`/`c` panel in flight stays cache-resident while it is reused
+//! across the block's rows. Per output element the accumulation order is
+//! identical to the naive kernel (`k` resp. `i` ascending), so results are
+//! deterministic, independent of thread count, and — for `matmul` /
+//! `matmul_tn` — bit-identical to the [`reference`] implementations. The
+//! N/T kernel uses a 4-way unrolled dot product (different association,
+//! same value to ≤1e-6 relative; see `tests/proptest_invariants.rs`).
+//!
+//! `matmul_bias_into` is the fused affine entry point: the output buffer is
+//! initialized with the broadcast bias row and the product accumulates on
+//! top, eliminating the separate `add_bias_rows` pass over `m · n` floats.
+//!
+//! The serial [`reference`] module retains the pre-optimization kernels;
+//! [`Kernels`] dispatches between the two so benches can measure the old
+//! configuration (`benches/step_breakdown.rs`) and property tests can
+//! cross-check the blocked kernels against the naive ones.
+
+use rayon::prelude::*;
+
+/// Output rows per rayon task (and per T/N output-row block).
+const ROW_BLOCK: usize = 16;
+/// k-panel length for the N/N and T/N kernels.
+const K_PANEL: usize = 64;
+/// Column block for the N/T kernel (rows of `b` kept hot per pass).
+const COL_BLOCK: usize = 32;
+/// Below this many output elements the serial path is used (a rayon
+/// dispatch costs more than it saves).
+const PAR_MIN: usize = 1 << 12;
+
+/// Which kernel family executes the dense products of a train step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmMode {
+    /// Cache-blocked, rayon-parallel kernels (the default).
+    Blocked,
+    /// The retained serial reference kernels (pre-optimization behaviour;
+    /// used by `benches/step_breakdown.rs` to measure the old backend).
+    Reference,
+}
+
+/// Kernel dispatch handle carried by `NativeExecutor`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kernels {
+    pub mode: GemmMode,
+}
+
+impl Kernels {
+    pub fn blocked() -> Kernels {
+        Kernels { mode: GemmMode::Blocked }
+    }
+
+    pub fn reference() -> Kernels {
+        Kernels { mode: GemmMode::Reference }
+    }
+
+    /// `out = a[m, k] @ b[k, n]` (overwrites `out`).
+    pub fn matmul_into(&self, out: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize) {
+        match self.mode {
+            GemmMode::Blocked => matmul_into(out, a, m, k, b, n),
+            GemmMode::Reference => reference::matmul_into(out, a, m, k, b, n),
+        }
+    }
+
+    /// `out = a[m, k] @ b[k, n] + bias` (fused affine; overwrites `out`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_bias_into(
+        &self,
+        out: &mut [f32],
+        a: &[f32],
+        m: usize,
+        k: usize,
+        b: &[f32],
+        n: usize,
+        bias: &[f32],
+    ) {
+        match self.mode {
+            GemmMode::Blocked => matmul_bias_into(out, a, m, k, b, n, bias),
+            GemmMode::Reference => {
+                reference::matmul_into(out, a, m, k, b, n);
+                reference::add_bias_rows(&mut out[..m * n], bias);
+            }
+        }
+    }
+
+    /// `out = a[m, n] @ b[p, n]^T` (overwrites `out`).
+    pub fn matmul_nt_into(&self, out: &mut [f32], a: &[f32], m: usize, n: usize, b: &[f32], p: usize) {
+        match self.mode {
+            GemmMode::Blocked => matmul_nt_into(out, a, m, n, b, p),
+            GemmMode::Reference => reference::matmul_nt_into(out, a, m, n, b, p),
+        }
+    }
+
+    /// `out = a[m, k]^T @ c[m, n]` (overwrites `out`).
+    pub fn matmul_tn_into(&self, out: &mut [f32], a: &[f32], m: usize, k: usize, c: &[f32], n: usize) {
+        match self.mode {
+            GemmMode::Blocked => matmul_tn_into(out, a, m, k, c, n),
+            GemmMode::Reference => reference::matmul_tn_into(out, a, m, k, c, n),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// blocked kernels
+// ---------------------------------------------------------------------------
+
+/// Allocating convenience: `a[m, k] @ b[k, n]`.
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    matmul_into(&mut out, a, m, k, b, n);
+    out
+}
+
+/// Allocating convenience: `a[m, n] @ b[p, n]^T`.
+pub fn matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], p: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * p];
+    matmul_nt_into(&mut out, a, m, n, b, p);
+    out
+}
+
+/// Allocating convenience: `a[m, k]^T @ c[m, n]`.
+pub fn matmul_tn(a: &[f32], m: usize, k: usize, c: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * n];
+    matmul_tn_into(&mut out, a, m, k, c, n);
+    out
+}
+
+/// `out = a[m, k] @ b[k, n]`, row-blocked and k-paneled.
+pub fn matmul_into(out: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let out = &mut out[..m * n];
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let a = &a[..m * k];
+    if m * n <= PAR_MIN {
+        out.fill(0.0);
+        nn_block(out, a, k, b, n);
+        return;
+    }
+    out.par_chunks_mut(ROW_BLOCK * n)
+        .zip(a.par_chunks(ROW_BLOCK * k))
+        .for_each(|(orows, arows)| {
+            orows.fill(0.0);
+            nn_block(orows, arows, k, b, n);
+        });
+}
+
+/// `out = a[m, k] @ b[k, n] + bias` (bias broadcast over rows).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_into(
+    out: &mut [f32],
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: &[f32],
+) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    debug_assert!(bias.len() >= n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let out = &mut out[..m * n];
+    let bias = &bias[..n];
+    if k == 0 {
+        fill_bias(out, n, bias);
+        return;
+    }
+    let a = &a[..m * k];
+    if m * n <= PAR_MIN {
+        fill_bias(out, n, bias);
+        nn_block(out, a, k, b, n);
+        return;
+    }
+    out.par_chunks_mut(ROW_BLOCK * n)
+        .zip(a.par_chunks(ROW_BLOCK * k))
+        .for_each(|(orows, arows)| {
+            fill_bias(orows, n, bias);
+            nn_block(orows, arows, k, b, n);
+        });
+}
+
+fn fill_bias(orows: &mut [f32], n: usize, bias: &[f32]) {
+    for row in orows.chunks_mut(n) {
+        row.copy_from_slice(bias);
+    }
+}
+
+/// Accumulate `arows @ b` into `orows` (one row block), k-paneled so the
+/// active `b` panel is reused across all the block's rows.
+fn nn_block(orows: &mut [f32], arows: &[f32], k: usize, b: &[f32], n: usize) {
+    let rows = orows.len() / n;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + K_PANEL).min(k);
+        for r in 0..rows {
+            let arow = &arows[r * k + k0..r * k + k1];
+            let orow = &mut orows[r * n..(r + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    let brow = &b[(k0 + i) * n..(k0 + i + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// `out = a[m, n] @ b[p, n]^T`, row-blocked with column blocks of `b` rows
+/// and a 4-way unrolled dot product.
+pub fn matmul_nt_into(out: &mut [f32], a: &[f32], m: usize, n: usize, b: &[f32], p: usize) {
+    debug_assert!(a.len() >= m * n && b.len() >= p * n && out.len() >= m * p);
+    if m == 0 || p == 0 {
+        return;
+    }
+    let out = &mut out[..m * p];
+    if n == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let a = &a[..m * n];
+    if m * p <= PAR_MIN {
+        nt_block(out, a, n, b, p);
+        return;
+    }
+    out.par_chunks_mut(ROW_BLOCK * p)
+        .zip(a.par_chunks(ROW_BLOCK * n))
+        .for_each(|(orows, arows)| nt_block(orows, arows, n, b, p));
+}
+
+fn nt_block(orows: &mut [f32], arows: &[f32], n: usize, b: &[f32], p: usize) {
+    let rows = orows.len() / p;
+    let mut j0 = 0;
+    while j0 < p {
+        let j1 = (j0 + COL_BLOCK).min(p);
+        for r in 0..rows {
+            let arow = &arows[r * n..(r + 1) * n];
+            let orow = &mut orows[r * p..(r + 1) * p];
+            for j in j0..j1 {
+                orow[j] = dot(arow, &b[j * n..(j + 1) * n]);
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// 4-way unrolled dot product (independent accumulators for ILP).
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    let len = x.len().min(y.len());
+    let n4 = len - len % 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+    let mut i = 0;
+    while i < n4 {
+        a0 += x[i] * y[i];
+        a1 += x[i + 1] * y[i + 1];
+        a2 += x[i + 2] * y[i + 2];
+        a3 += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    let mut s = (a0 + a1) + (a2 + a3);
+    while i < len {
+        s += x[i] * y[i];
+        i += 1;
+    }
+    s
+}
+
+/// `out = a[m, k]^T @ c[m, n]`, parallel over blocks of the `k` output rows;
+/// every block streams `a`'s column slab and `c` once, in fixed `i` order
+/// (bit-identical to the reference kernel).
+pub fn matmul_tn_into(out: &mut [f32], a: &[f32], m: usize, k: usize, c: &[f32], n: usize) {
+    debug_assert!(a.len() >= m * k && c.len() >= m * n && out.len() >= k * n);
+    if k == 0 || n == 0 {
+        return;
+    }
+    let out = &mut out[..k * n];
+    if k * n <= PAR_MIN {
+        out.fill(0.0);
+        tn_block(out, 0, a, m, k, c, n);
+        return;
+    }
+    out.par_chunks_mut(ROW_BLOCK * n).enumerate().for_each(|(blk, orows)| {
+        orows.fill(0.0);
+        tn_block(orows, blk * ROW_BLOCK, a, m, k, c, n);
+    });
+}
+
+/// Accumulate rows `kk0..kk0 + orows.len()/n` of `a^T @ c` into `orows`.
+#[allow(clippy::too_many_arguments)]
+fn tn_block(orows: &mut [f32], kk0: usize, a: &[f32], m: usize, k: usize, c: &[f32], n: usize) {
+    let kb = orows.len() / n;
+    for i in 0..m {
+        let crow = &c[i * n..(i + 1) * n];
+        let arow = &a[i * k + kk0..i * k + kk0 + kb];
+        for (r, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let orow = &mut orows[r * n..(r + 1) * n];
+                for (o, &cv) in orow.iter_mut().zip(crow) {
+                    *o += av * cv;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// retained naive reference kernels
+// ---------------------------------------------------------------------------
+
+/// The serial pre-optimization kernels, retained verbatim as the ground
+/// truth the blocked kernels are property-tested against and as the
+/// baseline `benches/step_breakdown.rs` measures.
+pub mod reference {
+    /// `a[m, k] @ b[k, n]`, serial triple loop.
+    pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        matmul_into(&mut out, a, m, k, b, n);
+        out
+    }
+
+    pub fn matmul_into(out: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize) {
+        debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+        let out = &mut out[..m * n];
+        out.fill(0.0);
+        for (i, row) in out.chunks_mut(n).enumerate() {
+            let ar = &a[i * k..(i + 1) * k];
+            for (kk, &av) in ar.iter().enumerate() {
+                if av != 0.0 {
+                    let br = &b[kk * n..(kk + 1) * n];
+                    for (r, &bv) in row.iter_mut().zip(br) {
+                        *r += av * bv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `a[m, n] @ b[p, n]^T`, serial.
+    pub fn matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], p: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * p];
+        matmul_nt_into(&mut out, a, m, n, b, p);
+        out
+    }
+
+    pub fn matmul_nt_into(out: &mut [f32], a: &[f32], m: usize, n: usize, b: &[f32], p: usize) {
+        debug_assert!(a.len() >= m * n && b.len() >= p * n && out.len() >= m * p);
+        let out = &mut out[..m * p];
+        for (i, row) in out.chunks_mut(p).enumerate() {
+            let ar = &a[i * n..(i + 1) * n];
+            for (j, r) in row.iter_mut().enumerate() {
+                let br = &b[j * n..(j + 1) * n];
+                let mut acc = 0f32;
+                for (&x, &y) in ar.iter().zip(br) {
+                    acc += x * y;
+                }
+                *r = acc;
+            }
+        }
+    }
+
+    /// `a[m, k]^T @ c[m, n]`, serial.
+    pub fn matmul_tn(a: &[f32], m: usize, k: usize, c: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; k * n];
+        matmul_tn_into(&mut out, a, m, k, c, n);
+        out
+    }
+
+    pub fn matmul_tn_into(out: &mut [f32], a: &[f32], m: usize, k: usize, c: &[f32], n: usize) {
+        debug_assert!(a.len() >= m * k && c.len() >= m * n && out.len() >= k * n);
+        let out = &mut out[..k * n];
+        out.fill(0.0);
+        for (kk, row) in out.chunks_mut(n).enumerate() {
+            for i in 0..m {
+                let av = a[i * k + kk];
+                if av != 0.0 {
+                    let cr = &c[i * n..(i + 1) * n];
+                    for (r, &cv) in row.iter_mut().zip(cr) {
+                        *r += av * cv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `z[i, :] += bias` for every row.
+    pub fn add_bias_rows(z: &mut [f32], bias: &[f32]) {
+        let n = bias.len();
+        for row in z.chunks_mut(n) {
+            for (r, &b) in row.iter_mut().zip(bias) {
+                *r += b;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_shapes_and_values() {
+        // a = [[1,2],[3,4],[5,6]] (3x2), b = [[1,0,2],[0,1,3]] (2x3)
+        let a = vec![1., 2., 3., 4., 5., 6.];
+        let b = vec![1., 0., 2., 0., 1., 3.];
+        let c = matmul(&a, 3, 2, &b, 3);
+        assert_eq!(c, vec![1., 2., 8., 3., 4., 18., 5., 6., 28.]);
+        // a @ bT where bT rows are b's columns
+        let bt = vec![1., 0., 0., 1., 2., 3.]; // (3x2): rows of b^T
+        let c2 = matmul_nt(&a, 3, 2, &bt, 3);
+        assert_eq!(c2, c);
+        // aT @ c: (2x3) @ (3x3)
+        let atc = matmul_tn(&a, 3, 2, &c, 3);
+        // column 0 of a = [1,3,5]; aT@c row 0 = 1*c0 + 3*c1 + 5*c2
+        let want0: Vec<f32> = (0..3).map(|j| c[j] + 3. * c[3 + j] + 5. * c[6 + j]).collect();
+        assert_eq!(&atc[..3], &want0[..]);
+    }
+
+    #[test]
+    fn fused_bias_matches_separate_passes() {
+        let a = vec![1., 2., 3., 4., 5., 6.];
+        let b = vec![1., 0., 2., 0., 1., 3.];
+        let bias = vec![0.5, -1.0, 2.0];
+        let mut fused = vec![0f32; 9];
+        matmul_bias_into(&mut fused, &a, 3, 2, &b, 3, &bias);
+        let mut want = reference::matmul(&a, 3, 2, &b, 3);
+        reference::add_bias_rows(&mut want, &bias);
+        assert_eq!(fused, want);
+    }
+
+    #[test]
+    fn kernels_dispatch_agrees() {
+        let a = vec![1., -2., 3., 0., 5., 6., -7., 8.];
+        let b = vec![0.5, 1., -1., 2., 0., 3., 1., -2.];
+        for kern in [Kernels::blocked(), Kernels::reference()] {
+            let mut out = vec![0f32; 8];
+            kern.matmul_into(&mut out, &a, 4, 2, &b, 2);
+            assert_eq!(out, reference::matmul(&a, 4, 2, &b, 2), "{kern:?}");
+            let mut out = vec![0f32; 16];
+            kern.matmul_nt_into(&mut out, &a, 4, 2, &b, 4);
+            assert_eq!(out, reference::matmul_nt(&a, 4, 2, &b, 4), "{kern:?}");
+            let mut out = vec![0f32; 4];
+            kern.matmul_tn_into(&mut out, &a, 4, 2, &b, 2);
+            assert_eq!(out, reference::matmul_tn(&a, 4, 2, &b, 2), "{kern:?}");
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_noops() {
+        let a: Vec<f32> = Vec::new();
+        let b = vec![1.0, 2.0];
+        let mut out: Vec<f32> = Vec::new();
+        matmul_into(&mut out, &a, 0, 2, &b, 1);
+        matmul_nt_into(&mut out, &a, 0, 2, &b, 1);
+        matmul_tn_into(&mut out, &b, 2, 0, &b, 1);
+        assert!(out.is_empty());
+    }
+}

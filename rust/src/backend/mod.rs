@@ -17,11 +17,13 @@
 //! (Eqs. 8-10), backward compensation of the auxiliary variables
 //! (Eqs. 11-13), Eq. 7 parameter gradients from in-batch cotangents only.
 
+pub mod gemm;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod workspace;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -34,6 +36,7 @@ use crate::sampler::{Buckets, SubgraphBatch};
 pub use native::NativeExecutor;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtExecutor;
+pub use workspace::StepWorkspace;
 
 /// Which executor a run uses (`backend = "native" | "pjrt"` in RunConfig).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,6 +90,13 @@ pub struct StepInputs<'a> {
     pub vscale: f32,
     /// Cluster-sampling reweighting b/c (Eqs. 14-15).
     pub grad_scale: f32,
+    /// Optional reusable scratch pool (owned by the trainer). Backends that
+    /// support it grab every per-layer buffer from here instead of
+    /// allocating; `None` restores allocate-per-step behaviour. The escaped
+    /// output buffers (`new_h`/`new_v`/`htilde`) and the gather buffers in
+    /// `hist_h`/`hist_v`/`beta` come from the same pool and are recycled by
+    /// the trainer after history write-back.
+    pub ws: Option<&'a Mutex<StepWorkspace>>,
 }
 
 /// Host-visible results of one fused train step.

@@ -1,6 +1,6 @@
 //! Native CPU executor: the GCN / GCNII forward + LMC-compensated backward
 //! of `python/compile/step.py`, re-implemented directly over the sampler's
-//! sparse CSR blocks with rayon-parallel row-wise SpMM.
+//! sparse CSR blocks with blocked, rayon-parallel kernels.
 //!
 //! No buckets, no padding, no AOT artifacts: per-step cost is
 //! O(nnz · d + m · d²) for m = |V_B| + |halo| instead of the padded
@@ -19,6 +19,21 @@
 //! Aggregation operates on the *stacked* `[batch; halo]` node space with
 //! the symmetric block operator `[[A_bb, A_bh], [A_bh^T, A_hh]]`, so the
 //! backward aggregation reuses the forward one.
+//!
+//! Performance architecture (see rust/README.md § Performance):
+//!
+//!   * dense products run through the cache-blocked kernels in
+//!     [`super::gemm`] (`Kernels::blocked()`); the serial reference
+//!     kernels remain selectable via
+//!     [`NativeExecutor::with_reference_kernels`] for baselines and
+//!     cross-checks;
+//!   * aggregation accumulates *into* caller-provided buffers
+//!     ([`agg_full_scaled_into`]) with feature-dim tiling for wide `d`,
+//!     and the affine bias/residual terms are fused into the destination
+//!     before the product/SpMM lands on it;
+//!   * every O(m · d) buffer is grabbed from the [`StepWorkspace`]
+//!     threaded through `StepInputs::ws`, so steady-state steps perform
+//!     no per-layer heap allocation.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -32,13 +47,19 @@ use crate::coordinator::memory;
 use crate::coordinator::params::Params;
 use crate::graph::Graph;
 use crate::runtime::{ArchInfo, ProfileInfo, Tensor};
-use crate::sampler::{Buckets, CsrBlock, SubgraphBatch};
+use crate::sampler::sparse::{SPMM_D_TILE, SPMM_PAR_MIN, SPMM_ROW_BLOCK};
+use crate::sampler::{gather_rows_into, Buckets, SubgraphBatch};
 
+use super::gemm::{self, GemmMode, Kernels};
+use super::workspace::StepWorkspace;
 use super::{Executor, ModelSpec, StepInputs, StepOutputs};
 
 /// GCNII hyperparameters (python/compile/spec.py profile defaults).
 const GCNII_ALPHA: f32 = 0.1;
 const GCNII_LAM: f64 = 0.5;
+
+/// Below this many elements `combine` stays serial.
+const COMBINE_PAR_MIN: usize = 1 << 14;
 
 #[inline]
 fn gcnii_gamma(l: usize) -> f32 {
@@ -59,21 +80,61 @@ fn kind_of(arch_name: &str) -> Result<Kind> {
     }
 }
 
+/// Cumulative exec-clock state: `depth` makes [`NativeExecutor::time`]
+/// re-entrant so nested timed scopes cannot double-count.
+struct TimerState {
+    secs: f64,
+    depth: u32,
+    t0: Instant,
+}
+
 /// Pure-Rust CPU backend (the default): sparse-block train steps + exact
 /// full-graph oracle, no artifacts required.
 pub struct NativeExecutor {
-    exec_secs: Mutex<f64>,
+    timer: Mutex<TimerState>,
+    kern: Kernels,
 }
 
 impl NativeExecutor {
     pub fn new() -> NativeExecutor {
-        NativeExecutor { exec_secs: Mutex::new(0.0) }
+        NativeExecutor::with_kernels(Kernels::blocked())
     }
 
+    /// Pre-optimization configuration: the retained serial reference
+    /// GEMM/SpMM kernels. Used by `benches/step_breakdown.rs` as the
+    /// speedup baseline and by cross-check tests.
+    pub fn with_reference_kernels() -> NativeExecutor {
+        NativeExecutor::with_kernels(Kernels::reference())
+    }
+
+    fn with_kernels(kern: Kernels) -> NativeExecutor {
+        NativeExecutor {
+            timer: Mutex::new(TimerState { secs: 0.0, depth: 0, t0: Instant::now() }),
+            kern,
+        }
+    }
+
+    /// Time `f` against the cumulative exec clock. Re-entrant: when timed
+    /// scopes nest (executor entry points share helpers like the full
+    /// forward), only the outermost scope accumulates elapsed time, so
+    /// nested scopes can never overlap-count
+    /// (`exec_secs_counts_nested_scopes_once`).
     fn time<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
-        let t0 = Instant::now();
+        {
+            let mut st = self.timer.lock().unwrap();
+            st.depth += 1;
+            if st.depth == 1 {
+                st.t0 = Instant::now();
+            }
+        }
         let out = f();
-        *self.exec_secs.lock().unwrap() += t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.timer.lock().unwrap();
+            st.depth -= 1;
+            if st.depth == 0 {
+                st.secs += st.t0.elapsed().as_secs_f64();
+            }
+        }
         out
     }
 }
@@ -103,7 +164,8 @@ impl Executor for NativeExecutor {
     }
 
     fn forward_backward(&self, inp: &StepInputs) -> Result<StepOutputs> {
-        self.time(|| step_native(inp))
+        let kern = self.kern;
+        self.time(|| step_native(inp, kern))
     }
 
     fn full_forward(&self, g: &Graph, params: &Params, model: &ModelSpec) -> Result<Vec<Vec<f32>>> {
@@ -119,67 +181,13 @@ impl Executor for NativeExecutor {
     }
 
     fn exec_secs(&self) -> f64 {
-        *self.exec_secs.lock().unwrap()
+        self.timer.lock().unwrap().secs
     }
 }
 
 // ---------------------------------------------------------------------------
-// dense kernels (rayon-parallel over output rows; deterministic per row)
+// elementwise helpers
 // ---------------------------------------------------------------------------
-
-/// `a[m, k] @ b[k, n]` row-major.
-fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
-    debug_assert!(a.len() >= m * k && b.len() >= k * n);
-    let mut out = vec![0f32; m * n];
-    out.par_chunks_mut(n).enumerate().for_each(|(i, row)| {
-        let ar = &a[i * k..(i + 1) * k];
-        for (kk, &av) in ar.iter().enumerate() {
-            if av != 0.0 {
-                let br = &b[kk * n..(kk + 1) * n];
-                for (r, &bv) in row.iter_mut().zip(br) {
-                    *r += av * bv;
-                }
-            }
-        }
-    });
-    out
-}
-
-/// `a[m, n] @ b[p, n]^T` → `[m, p]`.
-fn matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], p: usize) -> Vec<f32> {
-    debug_assert!(a.len() >= m * n && b.len() >= p * n);
-    let mut out = vec![0f32; m * p];
-    out.par_chunks_mut(p).enumerate().for_each(|(i, row)| {
-        let ar = &a[i * n..(i + 1) * n];
-        for (j, r) in row.iter_mut().enumerate() {
-            let br = &b[j * n..(j + 1) * n];
-            let mut acc = 0f32;
-            for (&x, &y) in ar.iter().zip(br) {
-                acc += x * y;
-            }
-            *r = acc;
-        }
-    });
-    out
-}
-
-/// `a[m, k]^T @ c[m, n]` → `[k, n]`.
-fn matmul_tn(a: &[f32], m: usize, k: usize, c: &[f32], n: usize) -> Vec<f32> {
-    debug_assert!(a.len() >= m * k && c.len() >= m * n);
-    let mut out = vec![0f32; k * n];
-    out.par_chunks_mut(n).enumerate().for_each(|(kk, row)| {
-        for i in 0..m {
-            let av = a[i * k + kk];
-            if av != 0.0 {
-                let cr = &c[i * n..(i + 1) * n];
-                for (r, &cv) in row.iter_mut().zip(cr) {
-                    *r += av * cv;
-                }
-            }
-        }
-    });
-    out
-}
 
 fn add_bias_rows(z: &mut [f32], bias: &[f32]) {
     let n = bias.len();
@@ -198,6 +206,16 @@ fn colsum(a: &[f32], m: usize, n: usize) -> Vec<f32> {
         }
     }
     out
+}
+
+/// `dst += scale · colsum(a[m, n])` without materializing the column sums
+/// (bias-gradient accumulation on the step's hot path).
+fn colsum_axpy(dst: &mut [f32], a: &[f32], m: usize, n: usize, scale: f32) {
+    for i in 0..m {
+        for (d, &v) in dst.iter_mut().zip(&a[i * n..(i + 1) * n]) {
+            *d += scale * v;
+        }
+    }
 }
 
 fn relu_inplace(z: &mut [f32]) {
@@ -225,28 +243,57 @@ fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
     }
 }
 
-/// Eq. (9)/(12): out[i, :] = (1 - beta[i]) * hist[i, :] + beta[i] * fresh[i, :].
-fn combine(beta: &[f32], hist: &[f32], fresh: &[f32], rows: usize, d: usize) -> Vec<f32> {
+/// Eq. (9)/(12): out[i, :] = (1 - beta[i]) * hist[i, :] + beta[i] * fresh[i, :],
+/// rayon-parallel for large row blocks (it sits between the sampler and the
+/// GEMM on the per-step critical path).
+pub fn combine_into(out: &mut [f32], beta: &[f32], hist: &[f32], fresh: &[f32], rows: usize, d: usize) {
     debug_assert!(beta.len() >= rows && hist.len() >= rows * d && fresh.len() >= rows * d);
-    let mut out = vec![0f32; rows * d];
-    for i in 0..rows {
-        let b = beta[i];
-        let (o, h, f) =
-            (&mut out[i * d..(i + 1) * d], &hist[i * d..(i + 1) * d], &fresh[i * d..(i + 1) * d]);
-        for ((ov, &hv), &fv) in o.iter_mut().zip(h).zip(f) {
-            *ov = (1.0 - b) * hv + b * fv;
+    debug_assert!(out.len() >= rows * d);
+    if rows == 0 || d == 0 {
+        return;
+    }
+    let out = &mut out[..rows * d];
+    if rows * d >= COMBINE_PAR_MIN {
+        out.par_chunks_mut(d).enumerate().for_each(|(i, o)| {
+            let b = beta[i];
+            let (hrow, frow) = (&hist[i * d..(i + 1) * d], &fresh[i * d..(i + 1) * d]);
+            for ((ov, &hv), &fv) in o.iter_mut().zip(hrow).zip(frow) {
+                *ov = (1.0 - b) * hv + b * fv;
+            }
+        });
+    } else {
+        for (i, o) in out.chunks_mut(d).enumerate() {
+            let b = beta[i];
+            let (hrow, frow) = (&hist[i * d..(i + 1) * d], &fresh[i * d..(i + 1) * d]);
+            for ((ov, &hv), &fv) in o.iter_mut().zip(hrow).zip(frow) {
+                *ov = (1.0 - b) * hv + b * fv;
+            }
         }
     }
+}
+
+/// Allocating wrapper around [`combine_into`] (tests, benches).
+pub fn combine(beta: &[f32], hist: &[f32], fresh: &[f32], rows: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; rows * d];
+    combine_into(&mut out, beta, hist, fresh, rows, d);
     out
 }
 
-/// Numerically-stable masked softmax cross-entropy over `[rows, c]` logits.
-/// Returns (loss_sum, correct, dlogits) with dlogits = (softmax - onehot) ⊙ mask
-/// (unscaled — callers fold in vscale / bwd_scale).
-fn masked_ce(logits: &[f32], rows: usize, c: usize, y: &[u16], mask: &[f32]) -> (f64, f64, Vec<f32>) {
+/// Numerically-stable masked softmax cross-entropy over `[rows, c]` logits
+/// into a caller-provided (pre-zeroed) `dl` buffer. Returns
+/// (loss_sum, correct); dl = (softmax - onehot) ⊙ mask, unscaled — callers
+/// fold in vscale / bwd_scale.
+fn masked_ce_into(
+    logits: &[f32],
+    rows: usize,
+    c: usize,
+    y: &[u16],
+    mask: &[f32],
+    dl: &mut [f32],
+) -> (f64, f64) {
+    debug_assert!(dl.len() >= rows * c);
     let mut loss = 0f64;
     let mut correct = 0f64;
-    let mut dl = vec![0f32; rows * c];
     for i in 0..rows {
         let row = &logits[i * c..(i + 1) * c];
         let mk = mask[i];
@@ -276,6 +323,13 @@ fn masked_ce(logits: &[f32], rows: usize, c: usize, y: &[u16], mask: &[f32]) -> 
             }
         }
     }
+    (loss, correct)
+}
+
+/// Allocating wrapper around [`masked_ce_into`] (oracle paths, tests).
+fn masked_ce(logits: &[f32], rows: usize, c: usize, y: &[u16], mask: &[f32]) -> (f64, f64, Vec<f32>) {
+    let mut dl = vec![0f32; rows * c];
+    let (loss, correct) = masked_ce_into(logits, rows, c, y, mask, &mut dl);
     (loss, correct, dl)
 }
 
@@ -283,45 +337,112 @@ fn masked_ce(logits: &[f32], rows: usize, c: usize, y: &[u16], mask: &[f32]) -> 
 // subgraph step
 // ---------------------------------------------------------------------------
 
-/// Gather feature rows for the stacked `[batch; halo]` node space.
-fn gather_stacked(src: &[f32], d: usize, batch: &[u32], halo: &[u32]) -> Vec<f32> {
-    let mut out = vec![0f32; (batch.len() + halo.len()) * d];
-    for (i, &u) in batch.iter().chain(halo.iter()).enumerate() {
-        out[i * d..(i + 1) * d].copy_from_slice(&src[u as usize * d..(u as usize + 1) * d]);
-    }
-    out
+/// Gather feature rows for the stacked `[batch; halo]` node space into a
+/// caller-provided buffer (parallel for large gathers).
+fn gather_stacked_into(src: &[f32], d: usize, batch: &[u32], halo: &[u32], out: &mut [f32]) {
+    gather_rows_into(src, d, batch, out);
+    gather_rows_into(src, d, halo, &mut out[batch.len() * d..]);
 }
 
-/// `[[A_bb, A_bh], [A_bh^T, A_hh]] @ x` over the stacked node space,
-/// rayon-parallel per output row — the backend's SpMM hot path.
-fn agg_full(sb: &SubgraphBatch, a_hb: &CsrBlock, x: &[f32], d: usize) -> Vec<f32> {
-    let nb = sb.batch.len();
-    let nh = sb.halo.len();
-    let m = nb + nh;
+/// `out += scale · [[A_bb, A_bh], [A_bh^T, A_hh]] @ x` over the stacked
+/// node space — the backend's SpMM hot path. Accumulating into the
+/// caller's buffer is what fuses the affine/residual term: the step
+/// pre-fills `out` (bias rows, `α·h0`, or zeros) and the aggregate lands
+/// directly in the pre-activation buffer. Blocked mode parallelizes over
+/// row blocks with feature-dim tiling (the same scheme as
+/// `CsrBlock::par_spmm_acc_tiled`); reference mode is the pre-optimization
+/// one-row-per-task loop.
+fn agg_full_scaled_into(
+    kern: Kernels,
+    sb: &SubgraphBatch,
+    x: &[f32],
+    d: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let m = sb.batch.len() + sb.halo.len();
     debug_assert!(x.len() >= m * d);
-    let mut out = vec![0f32; m * d];
-    out.par_chunks_mut(d).enumerate().for_each(|(r, row)| {
-        let (lo, hi) = if r < nb {
-            (sb.a_bb.row(r), sb.a_bh.row(r))
-        } else {
-            (a_hb.row(r - nb), sb.a_hh.row(r - nb))
-        };
-        let (cols, vals) = lo;
-        for (&j, &w) in cols.iter().zip(vals) {
-            let src = &x[j as usize * d..(j as usize + 1) * d];
-            for (o, &s) in row.iter_mut().zip(src) {
-                *o += w * s;
-            }
-        }
-        let (cols, vals) = hi;
-        for (&j, &w) in cols.iter().zip(vals) {
-            let src = &x[(nb + j as usize) * d..(nb + j as usize + 1) * d];
-            for (o, &s) in row.iter_mut().zip(src) {
-                *o += w * s;
-            }
-        }
+    debug_assert!(out.len() >= m * d);
+    if m == 0 || d == 0 {
+        return;
+    }
+    let out = &mut out[..m * d];
+    if kern.mode == GemmMode::Reference {
+        out.par_chunks_mut(d)
+            .enumerate()
+            .for_each(|(r, row)| agg_row(sb, x, d, scale, r, row));
+        return;
+    }
+    if m * d <= SPMM_PAR_MIN {
+        agg_rows_tiled(sb, x, d, scale, 0, out);
+        return;
+    }
+    out.par_chunks_mut(SPMM_ROW_BLOCK * d).enumerate().for_each(|(blk, orows)| {
+        agg_rows_tiled(sb, x, d, scale, blk * SPMM_ROW_BLOCK, orows);
     });
-    out
+}
+
+/// One stacked-operator row: `row += scale · (A @ x)[r, :]`.
+fn agg_row(sb: &SubgraphBatch, x: &[f32], d: usize, scale: f32, r: usize, row: &mut [f32]) {
+    let nb = sb.batch.len();
+    let (lo, hi) = if r < nb {
+        (sb.a_bb.row(r), sb.a_bh.row(r))
+    } else {
+        (sb.a_hb.row(r - nb), sb.a_hh.row(r - nb))
+    };
+    let (cols, vals) = lo;
+    for (&j, &w) in cols.iter().zip(vals) {
+        let sw = scale * w;
+        let src = &x[j as usize * d..(j as usize + 1) * d];
+        for (o, &s) in row.iter_mut().zip(src) {
+            *o += sw * s;
+        }
+    }
+    let (cols, vals) = hi;
+    for (&j, &w) in cols.iter().zip(vals) {
+        let sw = scale * w;
+        let src = &x[(nb + j as usize) * d..(nb + j as usize + 1) * d];
+        for (o, &s) in row.iter_mut().zip(src) {
+            *o += sw * s;
+        }
+    }
+}
+
+/// A block of stacked-operator rows starting at `r0`, feature-tiled so the
+/// active `x` tile stays cache-resident across the block's rows.
+fn agg_rows_tiled(sb: &SubgraphBatch, x: &[f32], d: usize, scale: f32, r0: usize, orows: &mut [f32]) {
+    let nb = sb.batch.len();
+    let rows = orows.len() / d;
+    let mut d0 = 0;
+    while d0 < d {
+        let d1 = (d0 + SPMM_D_TILE).min(d);
+        for rr in 0..rows {
+            let r = r0 + rr;
+            let (lo, hi) = if r < nb {
+                (sb.a_bb.row(r), sb.a_bh.row(r))
+            } else {
+                (sb.a_hb.row(r - nb), sb.a_hh.row(r - nb))
+            };
+            let orow = &mut orows[rr * d + d0..rr * d + d1];
+            let (cols, vals) = lo;
+            for (&j, &w) in cols.iter().zip(vals) {
+                let sw = scale * w;
+                let src = &x[j as usize * d + d0..j as usize * d + d1];
+                for (o, &s) in orow.iter_mut().zip(src) {
+                    *o += sw * s;
+                }
+            }
+            let (cols, vals) = hi;
+            for (&j, &w) in cols.iter().zip(vals) {
+                let sw = scale * w;
+                let src = &x[(nb + j as usize) * d + d0..(nb + j as usize) * d + d1];
+                for (o, &s) in orow.iter_mut().zip(src) {
+                    *o += sw * s;
+                }
+            }
+        }
+        d0 = d1;
+    }
 }
 
 fn labels_of(g: &Graph, idx: &[u32]) -> Vec<u16> {
@@ -336,7 +457,7 @@ fn param<'p>(params: &'p Params, name: &str) -> Result<&'p Tensor> {
     params.get(name).ok_or_else(|| anyhow!("missing parameter {name}"))
 }
 
-fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
+fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
     let g = inp.graph;
     let sb = inp.sb;
     let arch = &inp.model.arch;
@@ -346,23 +467,42 @@ fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
     let nb = sb.batch.len();
     let nh = sb.halo.len();
     let m = nb + nh;
-    let a_hb = sb.a_bh.transpose();
+
+    // Scratch: the trainer-owned pool (held for the whole step), or a
+    // step-local pool for callers without one (old allocate-per-step
+    // behaviour, bit-identical results).
+    let mut local_ws;
+    let mut guard;
+    let ws: &mut StepWorkspace = match inp.ws {
+        Some(mtx) => {
+            guard = mtx.lock().unwrap();
+            &mut guard
+        }
+        None => {
+            local_ws = StepWorkspace::new();
+            &mut local_ws
+        }
+    };
 
     // ---- embed0 ----------------------------------------------------------
     // For GCN the features flow straight into layer 1 (embed0 = identity),
-    // so `x_full` is moved, not copied; GCNII keeps `x_full` for the W0
-    // gradient and `h0_full` for the initial-residual connection.
-    let x_full = gather_stacked(&g.features, g.d_x, &sb.batch, &sb.halo);
+    // so the gather buffer is moved, not copied; GCNII keeps `x_full` for
+    // the W0 gradient and `h0_full` for the initial-residual connection.
+    let mut x_full = ws.grab_dirty(m * g.d_x);
+    gather_stacked_into(&g.features, g.d_x, &sb.batch, &sb.halo, &mut x_full);
     let (mut h, h0_full, z0_full, x_embed0) = match kind {
         Kind::Gcn => (x_full, Vec::new(), Vec::new(), Vec::new()),
         Kind::Gcnii => {
             let w0 = param(inp.params, "W0")?;
             let b0 = param(inp.params, "b0")?;
-            let mut z0 = matmul(&x_full, m, g.d_x, &w0.data, dims[0]);
-            add_bias_rows(&mut z0, &b0.data);
-            let mut h0 = z0.clone();
+            let mut z0 = ws.grab_dirty(m * dims[0]);
+            kern.matmul_bias_into(&mut z0, &x_full, m, g.d_x, &w0.data, dims[0], &b0.data);
+            let mut h0 = ws.grab_dirty(m * dims[0]);
+            h0.copy_from_slice(&z0);
             relu_inplace(&mut h0);
-            (h0.clone(), h0, z0, x_full)
+            let mut h = ws.grab_dirty(m * dims[0]);
+            h.copy_from_slice(&h0);
+            (h, h0, z0, x_full)
         }
     };
 
@@ -377,33 +517,39 @@ fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
     for l in 1..=l_total {
         let d_prev = dims[l - 1];
         let d_l = dims[l];
-        let agg = agg_full(sb, &a_hb, &h, d_prev);
         let z = match kind {
             Kind::Gcn => {
                 let w = param(inp.params, &format!("W{l}"))?;
                 let b = param(inp.params, &format!("b{l}"))?;
-                let mut z = matmul(&agg, m, d_prev, &w.data, d_l);
-                add_bias_rows(&mut z, &b.data);
+                let mut agg = ws.grab(m * d_prev);
+                agg_full_scaled_into(kern, sb, &h, d_prev, 1.0, &mut agg);
+                let mut z = ws.grab_dirty(m * d_l);
+                kern.matmul_bias_into(&mut z, &agg, m, d_prev, &w.data, d_l, &b.data);
                 lin.push(agg);
                 z
             }
             Kind::Gcnii => {
                 let w = param(inp.params, &format!("W{l}"))?;
                 let gam = gcnii_gamma(l);
-                let mut s = agg;
+                // fused residual + aggregate: s = α·h0 + (1-α)·(A @ h)
+                let mut s = ws.grab_dirty(m * d_prev);
                 for (sv, &h0v) in s.iter_mut().zip(&h0_full) {
-                    *sv = (1.0 - GCNII_ALPHA) * *sv + GCNII_ALPHA * h0v;
+                    *sv = GCNII_ALPHA * h0v;
                 }
-                let sw = matmul(&s, m, d_prev, &w.data, d_l);
-                let mut z = vec![0f32; m * d_l];
-                for ((zv, &sv), &swv) in z.iter_mut().zip(&s).zip(&sw) {
+                agg_full_scaled_into(kern, sb, &h, d_prev, 1.0 - GCNII_ALPHA, &mut s);
+                let mut sw = ws.grab_dirty(m * d_l);
+                kern.matmul_into(&mut sw, &s, m, d_prev, &w.data, d_l);
+                let mut z = ws.grab_dirty(m * d_l);
+                for ((zv, &sv), &swv) in z.iter_mut().zip(&s[..m * d_l]).zip(&sw) {
                     *zv = (1.0 - gam) * sv + gam * swv;
                 }
+                ws.put(sw);
                 lin.push(s);
                 z
             }
         };
-        let mut act = z.clone();
+        let mut act = ws.grab_dirty(m * d_l);
+        act.copy_from_slice(&z);
         if l < l_total || kind == Kind::Gcnii {
             relu_inplace(&mut act);
         }
@@ -411,20 +557,19 @@ fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
         if l < l_total {
             // Eq. (9): halo rows become a convex combination of the fresh
             // incomplete value and the historical embedding.
-            let ht = act[nb * d_l..].to_vec();
-            let hh_new = combine(&inp.beta[..nh], &inp.hist_h[l - 1], &ht, nh, d_l);
-            act.truncate(nb * d_l);
-            new_h.push(act.clone());
+            let mut ht = ws.grab_dirty(nh * d_l);
+            ht.copy_from_slice(&act[nb * d_l..]);
+            combine_into(&mut act[nb * d_l..], &inp.beta[..nh], &inp.hist_h[l - 1], &ht, nh, d_l);
+            let mut newh_l = ws.grab_dirty(nb * d_l);
+            newh_l.copy_from_slice(&act[..nb * d_l]);
+            new_h.push(newh_l);
             htilde.push(ht);
-            act.extend_from_slice(&hh_new);
         }
-        h = act;
+        ws.put(std::mem::replace(&mut h, act));
     }
 
     // ---- loss head (Vbar^L and Vhat^L initialization, Alg. 1 line 11) ----
     let d_last = dims[l_total];
-    let hb = &h[..nb * d_last];
-    let hh = &h[nb * d_last..];
     let y_b = labels_of(g, &sb.batch);
     let mask_b = train_mask_of(g, &sb.batch);
     let y_h = labels_of(g, &sb.halo);
@@ -434,14 +579,18 @@ fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
     let gidx: HashMap<&str, usize> =
         arch.params.iter().enumerate().map(|(i, (n, _))| (n.as_str(), i)).collect();
 
+    let hb = &h[..nb * d_last];
+    let hh = &h[nb * d_last..];
     let (loss_sum, correct, mut vb, mut vh) = match kind {
         Kind::Gcn => {
             let c = d_last;
-            let (ls, cor, mut dlb) = masked_ce(hb, nb, c, &y_b, &mask_b);
+            let mut dlb = ws.grab(nb * c);
+            let (ls, cor) = masked_ce_into(hb, nb, c, &y_b, &mask_b, &mut dlb);
             for v in dlb.iter_mut() {
                 *v *= inp.vscale;
             }
-            let (_, _, mut dlh) = masked_ce(hh, nh, c, &y_h, &mask_h);
+            let mut dlh = ws.grab(nh * c);
+            masked_ce_into(hh, nh, c, &y_h, &mask_h, &mut dlh);
             let s = inp.bwd_scale * inp.vscale;
             for v in dlh.iter_mut() {
                 *v *= s;
@@ -452,36 +601,47 @@ fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
             let wc = param(inp.params, "Wc")?;
             let bc = param(inp.params, "bc")?;
             let c = wc.shape[1];
-            let mut logit_b = matmul(hb, nb, d_last, &wc.data, c);
-            add_bias_rows(&mut logit_b, &bc.data);
-            let (ls, cor, dlb) = masked_ce(&logit_b, nb, c, &y_b, &mask_b);
-            axpy(&mut grads[gidx["Wc"]].data, &matmul_tn(hb, nb, d_last, &dlb, c), inp.grad_scale * inp.vscale);
-            axpy(&mut grads[gidx["bc"]].data, &colsum(&dlb, nb, c), inp.grad_scale * inp.vscale);
-            let mut vbv = matmul_nt(&dlb, nb, c, &wc.data, d_last);
+            let mut logit_b = ws.grab_dirty(nb * c);
+            kern.matmul_bias_into(&mut logit_b, hb, nb, d_last, &wc.data, c, &bc.data);
+            let mut dlb = ws.grab(nb * c);
+            let (ls, cor) = masked_ce_into(&logit_b, nb, c, &y_b, &mask_b, &mut dlb);
+            let mut gtmp = ws.grab_dirty(d_last * c);
+            kern.matmul_tn_into(&mut gtmp, hb, nb, d_last, &dlb, c);
+            axpy(&mut grads[gidx["Wc"]].data, &gtmp, inp.grad_scale * inp.vscale);
+            ws.put(gtmp);
+            colsum_axpy(&mut grads[gidx["bc"]].data, &dlb, nb, c, inp.grad_scale * inp.vscale);
+            let mut vbv = ws.grab_dirty(nb * d_last);
+            kern.matmul_nt_into(&mut vbv, &dlb, nb, c, &wc.data, d_last);
             for v in vbv.iter_mut() {
                 *v *= inp.vscale;
             }
-            let mut logit_h = matmul(hh, nh, d_last, &wc.data, c);
-            add_bias_rows(&mut logit_h, &bc.data);
-            let (_, _, dlh) = masked_ce(&logit_h, nh, c, &y_h, &mask_h);
-            let mut vhv = matmul_nt(&dlh, nh, c, &wc.data, d_last);
+            let mut logit_h = ws.grab_dirty(nh * c);
+            kern.matmul_bias_into(&mut logit_h, hh, nh, d_last, &wc.data, c, &bc.data);
+            let mut dlh = ws.grab(nh * c);
+            masked_ce_into(&logit_h, nh, c, &y_h, &mask_h, &mut dlh);
+            let mut vhv = ws.grab_dirty(nh * d_last);
+            kern.matmul_nt_into(&mut vhv, &dlh, nh, c, &wc.data, d_last);
             let s = inp.bwd_scale * inp.vscale;
             for v in vhv.iter_mut() {
                 *v *= s;
             }
+            ws.put(logit_b);
+            ws.put(logit_h);
+            ws.put(dlb);
+            ws.put(dlh);
             (ls, cor, vbv, vhv)
         }
     };
 
     // ---- backward (Eqs. 11-13 propagation, Eq. 7 parameter grads) --------
     let mut new_v: Vec<Vec<f32>> = vec![Vec::new(); l_total.saturating_sub(1)];
-    let mut acc_h0 = vec![0f32; nb * dims[0]];
+    let mut acc_h0 = ws.grab(nb * dims[0]);
     for l in (1..=l_total).rev() {
         let d_prev = dims[l - 1];
         let d_l = dims[l];
-        let mut dz = Vec::with_capacity(m * d_l);
-        dz.extend_from_slice(&vb);
-        dz.extend_from_slice(&vh);
+        let mut dz = ws.grab_dirty(m * d_l);
+        dz[..nb * d_l].copy_from_slice(&vb);
+        dz[nb * d_l..].copy_from_slice(&vh);
         if l < l_total || kind == Kind::Gcnii {
             relu_bwd_mask(&mut dz, &pre[l - 1]);
         }
@@ -489,45 +649,76 @@ fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
             Kind::Gcn => {
                 let w = param(inp.params, &format!("W{l}"))?;
                 // Eq. (7): in-batch cotangents only feed parameter grads.
-                let gw = matmul_tn(&lin[l - 1], nb, d_prev, &dz, d_l);
+                let mut gw = ws.grab_dirty(d_prev * d_l);
+                kern.matmul_tn_into(&mut gw, &lin[l - 1], nb, d_prev, &dz, d_l);
                 axpy(&mut grads[gidx[format!("W{l}").as_str()]].data, &gw, inp.grad_scale);
-                let gb = colsum(&dz[..nb * d_l], nb, d_l);
-                axpy(&mut grads[gidx[format!("b{l}").as_str()]].data, &gb, inp.grad_scale);
+                ws.put(gw);
+                colsum_axpy(
+                    &mut grads[gidx[format!("b{l}").as_str()]].data,
+                    &dz[..nb * d_l],
+                    nb,
+                    d_l,
+                    inp.grad_scale,
+                );
                 // Eqs. (11) & (13): propagate with full (batch, halo) rows.
-                let dagg = matmul_nt(&dz, m, d_l, &w.data, d_prev);
-                agg_full(sb, &a_hb, &dagg, d_prev)
+                let mut dagg = ws.grab_dirty(m * d_prev);
+                kern.matmul_nt_into(&mut dagg, &dz, m, d_l, &w.data, d_prev);
+                let mut vf = ws.grab(m * d_prev);
+                agg_full_scaled_into(kern, sb, &dagg, d_prev, 1.0, &mut vf);
+                ws.put(dagg);
+                vf
             }
             Kind::Gcnii => {
                 let w = param(inp.params, &format!("W{l}"))?;
                 let gam = gcnii_gamma(l);
-                let gw = matmul_tn(&lin[l - 1], nb, d_prev, &dz, d_l);
+                let mut gw = ws.grab_dirty(d_prev * d_l);
+                kern.matmul_tn_into(&mut gw, &lin[l - 1], nb, d_prev, &dz, d_l);
                 axpy(&mut grads[gidx[format!("W{l}").as_str()]].data, &gw, inp.grad_scale * gam);
-                let dzw = matmul_nt(&dz, m, d_l, &w.data, d_prev);
-                let mut ds = vec![0f32; m * d_prev];
-                for ((dv, &zv), &zwv) in ds.iter_mut().zip(&dz).zip(&dzw) {
+                ws.put(gw);
+                let mut dzw = ws.grab_dirty(m * d_prev);
+                kern.matmul_nt_into(&mut dzw, &dz, m, d_l, &w.data, d_prev);
+                let mut ds = ws.grab_dirty(m * d_prev);
+                for ((dv, &zv), &zwv) in ds.iter_mut().zip(&dz[..m * d_prev]).zip(&dzw) {
                     *dv = (1.0 - gam) * zv + gam * zwv;
                 }
+                ws.put(dzw);
                 // initial-residual cotangent into embed0, batch rows (Eq. 7)
                 axpy(&mut acc_h0, &ds[..nb * d_prev], GCNII_ALPHA);
-                for v in ds.iter_mut() {
-                    *v *= 1.0 - GCNII_ALPHA;
-                }
-                agg_full(sb, &a_hb, &ds, d_prev)
+                // (1 - α) factor folded into the aggregation scale
+                let mut vf = ws.grab(m * d_prev);
+                agg_full_scaled_into(kern, sb, &ds, d_prev, 1.0 - GCNII_ALPHA, &mut vf);
+                ws.put(ds);
+                vf
             }
         };
+        ws.put(dz);
         if l > 1 {
             // Eq. (12): compensate halo auxiliary variables with history.
-            let mut vh_next =
-                combine(&inp.beta[..nh], &inp.hist_v[l - 2], &v_full[nb * d_prev..], nh, d_prev);
+            let mut vh_next = ws.grab_dirty(nh * d_prev);
+            combine_into(
+                &mut vh_next,
+                &inp.beta[..nh],
+                &inp.hist_v[l - 2],
+                &v_full[nb * d_prev..],
+                nh,
+                d_prev,
+            );
             for v in vh_next.iter_mut() {
                 *v *= inp.bwd_scale;
             }
-            vh = vh_next;
-            vb = v_full[..nb * d_prev].to_vec();
-            new_v[l - 2] = vb.clone(); // Vbar^{l-1} write-back equals the propagated Vb
+            ws.put(std::mem::replace(&mut vh, vh_next));
+            let mut vb_next = ws.grab_dirty(nb * d_prev);
+            vb_next.copy_from_slice(&v_full[..nb * d_prev]);
+            // Vbar^{l-1} write-back equals the propagated Vb
+            let mut vbar = ws.grab_dirty(nb * d_prev);
+            vbar.copy_from_slice(&vb_next);
+            new_v[l - 2] = vbar;
+            ws.put(std::mem::replace(&mut vb, vb_next));
+            ws.put(v_full);
         } else {
             // V^0 feeds embed0 through the compensated propagation
             axpy(&mut acc_h0, &v_full[..nb * d_prev], 1.0);
+            ws.put(v_full);
         }
     }
 
@@ -535,10 +726,28 @@ fn step_native(inp: &StepInputs) -> Result<StepOutputs> {
     if kind == Kind::Gcnii {
         let mut dz0 = acc_h0;
         relu_bwd_mask(&mut dz0, &z0_full[..nb * dims[0]]);
-        let gw0 = matmul_tn(&x_embed0, nb, g.d_x, &dz0, dims[0]);
+        let mut gw0 = ws.grab_dirty(g.d_x * dims[0]);
+        kern.matmul_tn_into(&mut gw0, &x_embed0, nb, g.d_x, &dz0, dims[0]);
         axpy(&mut grads[gidx["W0"]].data, &gw0, inp.grad_scale);
-        axpy(&mut grads[gidx["b0"]].data, &colsum(&dz0, nb, dims[0]), inp.grad_scale);
+        ws.put(gw0);
+        colsum_axpy(&mut grads[gidx["b0"]].data, &dz0, nb, dims[0], inp.grad_scale);
+        ws.put(dz0);
+        ws.put(x_embed0);
+        ws.put(h0_full);
+        ws.put(z0_full);
+    } else {
+        ws.put(acc_h0);
+        ws.put(x_embed0);
+        ws.put(h0_full);
+        ws.put(z0_full);
     }
+
+    // remaining caches back to the pool
+    ws.put(h);
+    ws.put(vb);
+    ws.put(vh);
+    ws.put_all(pre);
+    ws.put_all(lin);
 
     let active_bytes = memory::sparse_step_active_bytes(sb, arch, g.d_x);
     Ok(StepOutputs { loss_sum, correct, grads, new_h, new_v, htilde, active_bytes })
@@ -596,7 +805,7 @@ fn full_forward_cached(g: &Graph, params: &Params, model: &ModelSpec, keep_cache
         Kind::Gcnii => {
             let w0 = param(params, "W0")?;
             let b0 = param(params, "b0")?;
-            let mut z0 = matmul(&g.features, n, g.d_x, &w0.data, dims[0]);
+            let mut z0 = gemm::matmul(&g.features, n, g.d_x, &w0.data, dims[0]);
             add_bias_rows(&mut z0, &b0.data);
             let mut h0 = z0.clone();
             relu_inplace(&mut h0);
@@ -615,7 +824,7 @@ fn full_forward_cached(g: &Graph, params: &Params, model: &ModelSpec, keep_cache
             Kind::Gcn => {
                 let w = param(params, &format!("W{l}"))?;
                 let b = param(params, &format!("b{l}"))?;
-                let mut z = matmul(&agg, n, d_prev, &w.data, d_l);
+                let mut z = gemm::matmul(&agg, n, d_prev, &w.data, d_l);
                 add_bias_rows(&mut z, &b.data);
                 lin.push(agg);
                 z
@@ -627,7 +836,7 @@ fn full_forward_cached(g: &Graph, params: &Params, model: &ModelSpec, keep_cache
                 for (sv, &h0v) in s.iter_mut().zip(&hs[0]) {
                     *sv = (1.0 - GCNII_ALPHA) * *sv + GCNII_ALPHA * h0v;
                 }
-                let sw = matmul(&s, n, d_prev, &w.data, d_l);
+                let sw = gemm::matmul(&s, n, d_prev, &w.data, d_l);
                 let mut z = vec![0f32; n * d_l];
                 for ((zv, &sv), &swv) in z.iter_mut().zip(&s).zip(&sw) {
                     *zv = (1.0 - gam) * sv + gam * swv;
@@ -667,7 +876,7 @@ fn logits_of(kind: Kind, params: &Params, h: &[f32], rows: usize, d_last: usize)
         Kind::Gcnii => {
             let wc = param(params, "Wc")?;
             let bc = param(params, "bc")?;
-            let mut l = matmul(h, rows, d_last, &wc.data, wc.shape[1]);
+            let mut l = gemm::matmul(h, rows, d_last, &wc.data, wc.shape[1]);
             add_bias_rows(&mut l, &bc.data);
             Ok(l)
         }
@@ -732,9 +941,13 @@ fn full_grad_native(g: &Graph, params: &Params, model: &ModelSpec) -> Result<Ora
         Kind::Gcn => dlogits.iter().map(|&x| x * vscale).collect(),
         Kind::Gcnii => {
             let wc = param(params, "Wc")?;
-            axpy(&mut grads[gidx["Wc"]].data, &matmul_tn(&fwd.hs[l_total], n, d_last, &dlogits, c), vscale);
+            axpy(
+                &mut grads[gidx["Wc"]].data,
+                &gemm::matmul_tn(&fwd.hs[l_total], n, d_last, &dlogits, c),
+                vscale,
+            );
             axpy(&mut grads[gidx["bc"]].data, &colsum(&dlogits, n, c), vscale);
-            let mut vv = matmul_nt(&dlogits, n, c, &wc.data, d_last);
+            let mut vv = gemm::matmul_nt(&dlogits, n, c, &wc.data, d_last);
             for x in vv.iter_mut() {
                 *x *= vscale;
             }
@@ -757,11 +970,11 @@ fn full_grad_native(g: &Graph, params: &Params, model: &ModelSpec) -> Result<Ora
                 let w = param(params, &format!("W{l}"))?;
                 axpy(
                     &mut grads[gidx[format!("W{l}").as_str()]].data,
-                    &matmul_tn(&fwd.lin[l - 1], n, d_prev, &dz, d_l),
+                    &gemm::matmul_tn(&fwd.lin[l - 1], n, d_prev, &dz, d_l),
                     1.0,
                 );
                 axpy(&mut grads[gidx[format!("b{l}").as_str()]].data, &colsum(&dz, n, d_l), 1.0);
-                let dagg = matmul_nt(&dz, n, d_l, &w.data, d_prev);
+                let dagg = gemm::matmul_nt(&dz, n, d_l, &w.data, d_prev);
                 full_aggregate(g, &dagg, d_prev)
             }
             Kind::Gcnii => {
@@ -769,10 +982,10 @@ fn full_grad_native(g: &Graph, params: &Params, model: &ModelSpec) -> Result<Ora
                 let gam = gcnii_gamma(l);
                 axpy(
                     &mut grads[gidx[format!("W{l}").as_str()]].data,
-                    &matmul_tn(&fwd.lin[l - 1], n, d_prev, &dz, d_l),
+                    &gemm::matmul_tn(&fwd.lin[l - 1], n, d_prev, &dz, d_l),
                     gam,
                 );
-                let dzw = matmul_nt(&dz, n, d_l, &w.data, d_prev);
+                let dzw = gemm::matmul_nt(&dz, n, d_l, &w.data, d_prev);
                 let mut ds = vec![0f32; n * d_prev];
                 for ((dv, &zv), &zwv) in ds.iter_mut().zip(&dz).zip(&dzw) {
                     *dv = (1.0 - gam) * zv + gam * zwv;
@@ -794,7 +1007,7 @@ fn full_grad_native(g: &Graph, params: &Params, model: &ModelSpec) -> Result<Ora
     if kind == Kind::Gcnii {
         let mut dz0 = acc_h0;
         relu_bwd_mask(&mut dz0, &fwd.z0);
-        axpy(&mut grads[gidx["W0"]].data, &matmul_tn(&g.features, n, g.d_x, &dz0, dims[0]), 1.0);
+        axpy(&mut grads[gidx["W0"]].data, &gemm::matmul_tn(&g.features, n, g.d_x, &dz0, dims[0]), 1.0);
         axpy(&mut grads[gidx["b0"]].data, &colsum(&dz0, n, dims[0]), 1.0);
     }
 
@@ -809,24 +1022,6 @@ fn full_grad_native(g: &Graph, params: &Params, model: &ModelSpec) -> Result<Ora
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn matmul_shapes_and_values() {
-        // a = [[1,2],[3,4],[5,6]] (3x2), b = [[1,0,2],[0,1,3]] (2x3)
-        let a = vec![1., 2., 3., 4., 5., 6.];
-        let b = vec![1., 0., 2., 0., 1., 3.];
-        let c = matmul(&a, 3, 2, &b, 3);
-        assert_eq!(c, vec![1., 2., 8., 3., 4., 18., 5., 6., 28.]);
-        // a @ bT where bT rows are b's columns
-        let bt = vec![1., 0., 0., 1., 2., 3.]; // (3x2): rows of b^T
-        let c2 = matmul_nt(&a, 3, 2, &bt, 3);
-        assert_eq!(c2, c);
-        // aT @ c: (2x3) @ (3x3)
-        let atc = matmul_tn(&a, 3, 2, &c, 3);
-        // column 0 of a = [1,3,5]; aT@c row 0 = 1*c0 + 3*c1 + 5*c2
-        let want0: Vec<f32> = (0..3).map(|j| c[j] + 3. * c[3 + j] + 5. * c[6 + j]).collect();
-        assert_eq!(&atc[..3], &want0[..]);
-    }
 
     #[test]
     fn masked_ce_grads_sum_to_zero_per_masked_row() {
@@ -848,9 +1043,65 @@ mod tests {
     }
 
     #[test]
+    fn combine_parallel_path_matches_serial() {
+        // rows * d above COMBINE_PAR_MIN exercises the rayon path
+        let rows = 300;
+        let d = 64;
+        let beta: Vec<f32> = (0..rows).map(|i| (i % 11) as f32 / 10.0).collect();
+        let hist: Vec<f32> = (0..rows * d).map(|i| (i % 17) as f32 * 0.25 - 2.0).collect();
+        let fresh: Vec<f32> = (0..rows * d).map(|i| (i % 13) as f32 * 0.5 - 3.0).collect();
+        let got = combine(&beta, &hist, &fresh, rows, d);
+        for i in 0..rows {
+            let b = beta[i];
+            for j in 0..d {
+                let want = (1.0 - b) * hist[i * d + j] + b * fresh[i * d + j];
+                assert_eq!(got[i * d + j], want, "row {i} col {j}");
+            }
+        }
+    }
+
+    #[test]
     fn gamma_matches_archs_py() {
         // gamma_l = log(lam / l + 1), lam = 0.5
         assert!((gcnii_gamma(1) - (1.5f64).ln() as f32).abs() < 1e-6);
         assert!((gcnii_gamma(4) - (1.125f64).ln() as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exec_secs_counts_nested_scopes_once() {
+        let ex = NativeExecutor::new();
+        let d = std::time::Duration::from_millis(20);
+        let t0 = Instant::now();
+        ex.time(|| {
+            ex.time(|| {
+                std::thread::sleep(d);
+                Ok(())
+            })?;
+            std::thread::sleep(d);
+            Ok(())
+        })
+        .unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let secs = ex.exec_secs();
+        // the outer scope alone is ~2 sleeps; double-counting the nested
+        // scope would add a third
+        assert!(secs >= 0.035, "outer scope undercounted: {secs}");
+        assert!(secs <= wall + 1e-3, "nested scope double-counted: {secs} > wall {wall}");
+        // a second top-level scope keeps accumulating
+        ex.time(|| {
+            std::thread::sleep(d);
+            Ok(())
+        })
+        .unwrap();
+        assert!(ex.exec_secs() >= secs + 0.015);
+    }
+
+    #[test]
+    fn colsum_axpy_matches_colsum() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut dst = vec![1.0f32, 1.0];
+        colsum_axpy(&mut dst, &a, 3, 2, 0.5);
+        let cs = colsum(&a, 3, 2);
+        assert_eq!(dst, vec![1.0 + 0.5 * cs[0], 1.0 + 0.5 * cs[1]]);
     }
 }

@@ -1,0 +1,215 @@
+//! Reusable per-step scratch buffers.
+//!
+//! Every buffer a native train step needs — the stacked feature gather,
+//! per-layer pre-activation / linearized-input / activation caches,
+//! cotangent scratch, history gather buffers — is grabbed from a
+//! [`StepWorkspace`] pool and returned when the step (and the trainer's
+//! history write-back) is done. In steady state the pool has one buffer
+//! per live slot, so repeated train steps perform **zero heap allocation**
+//! for the O(m · d) layer buffers: `misses()` stabilizes after the first
+//! epoch or two (asserted by `workspace_steady_state_has_no_new_allocations`
+//! in `tests/integration_training.rs`).
+//!
+//! The trainer owns the workspace behind a `Mutex` and threads a reference
+//! through `StepInputs::ws`; backends without a native notion of host
+//! scratch (PJRT) simply ignore it, and callers that pass `ws: None` get
+//! the old allocate-per-step behaviour.
+//!
+//! Out of scope: parameter-gradient tensors (O(d²), returned to the caller
+//! for diagnostics and optimizer updates) and tiny per-step metadata
+//! vectors (labels, masks, the per-layer `Vec` spines).
+
+/// Upper bound on pooled buffers; beyond it, returned buffers are dropped.
+/// A step holds well under this many buffers concurrently.
+const MAX_POOL: usize = 96;
+
+#[derive(Debug, Default)]
+pub struct StepWorkspace {
+    pool: Vec<Vec<f32>>,
+    grabs: u64,
+    misses: u64,
+}
+
+impl StepWorkspace {
+    pub fn new() -> StepWorkspace {
+        StepWorkspace::default()
+    }
+
+    /// Take a zeroed buffer of exactly `len` elements, reusing the pooled
+    /// buffer with the smallest sufficient capacity when one exists.
+    ///
+    /// Required for accumulate-into destinations (`+=` aggregation,
+    /// `axpy`), sparsely-written buffers (`masked_ce_into` skips unmasked
+    /// rows), and padded buffers whose tail must read as zero.
+    pub fn grab(&mut self, len: usize) -> Vec<f32> {
+        self.grabs += 1;
+        if len == 0 {
+            // empty slices (no halo, degenerate dims) never allocate — and
+            // must not steal a pooled buffer from an exact-size slot
+            return Vec::new();
+        }
+        match self.take_fit(len) {
+            Some(mut v) => {
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.misses += 1;
+                vec![0f32; len]
+            }
+        }
+    }
+
+    /// Like [`StepWorkspace::grab`] but without the zero-fill pass: a
+    /// recycled buffer keeps its stale prefix contents. Only for
+    /// destinations that are fully overwritten before being read —
+    /// gathers, `copy_from_slice` targets, and overwrite-mode
+    /// `matmul_*_into` outputs. (The repeated-step property test
+    /// `prop_optimized_step_matches_reference_step` would catch a
+    /// misclassified site as a round-2 divergence.)
+    pub fn grab_dirty(&mut self, len: usize) -> Vec<f32> {
+        self.grabs += 1;
+        if len == 0 {
+            return Vec::new();
+        }
+        match self.take_fit(len) {
+            Some(mut v) => {
+                // resize both grows (zeroed extension) and shrinks; the
+                // reused prefix keeps whatever it last held
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.misses += 1;
+                vec![0f32; len]
+            }
+        }
+    }
+
+    /// Pop the pooled buffer with the smallest capacity >= `len`.
+    fn take_fit(&mut self, len: usize) -> Option<Vec<f32>> {
+        let mut best: Option<(usize, usize)> = None; // (capacity, index)
+        for (i, v) in self.pool.iter().enumerate() {
+            let cap = v.capacity();
+            let tighter = match best {
+                None => true,
+                Some((bc, _)) => cap < bc,
+            };
+            if cap >= len && tighter {
+                best = Some((cap, i));
+            }
+        }
+        best.map(|(_, i)| self.pool.swap_remove(i))
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.pool.len() < MAX_POOL {
+            self.pool.push(v);
+        }
+    }
+
+    /// Return a batch of buffers to the pool.
+    pub fn put_all(&mut self, vs: impl IntoIterator<Item = Vec<f32>>) {
+        for v in vs {
+            self.put(v);
+        }
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Total `grab` calls.
+    pub fn grabs(&self) -> u64 {
+        self.grabs
+    }
+
+    /// `grab` calls that had to heap-allocate a fresh buffer. Constant
+    /// across steady-state epochs when workspace reuse works.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grab_reuses_returned_buffers() {
+        let mut ws = StepWorkspace::new();
+        let a = ws.grab(100);
+        assert_eq!(a.len(), 100);
+        assert_eq!(ws.misses(), 1);
+        ws.put(a);
+        // smaller request reuses the same allocation, zeroed
+        let b = ws.grab(40);
+        assert_eq!(ws.misses(), 1);
+        assert!(b.iter().all(|&x| x == 0.0));
+        ws.put(b);
+        // larger request must allocate
+        let c = ws.grab(200);
+        assert_eq!(ws.misses(), 2);
+        ws.put(c);
+    }
+
+    #[test]
+    fn grab_zeroes_previous_contents() {
+        let mut ws = StepWorkspace::new();
+        let mut a = ws.grab(8);
+        a.iter_mut().for_each(|x| *x = 7.0);
+        ws.put(a);
+        let b = ws.grab(8);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn grab_dirty_reuses_without_zeroing_pass() {
+        let mut ws = StepWorkspace::new();
+        let mut a = ws.grab(16);
+        a.iter_mut().for_each(|x| *x = 7.0);
+        ws.put(a);
+        // shrink-reuse: no allocation, exact length, prefix unspecified
+        let b = ws.grab_dirty(8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(ws.misses(), 1);
+        ws.put(b);
+        // grow-reuse within capacity: the extension past the recycled
+        // length must read as zero
+        let c = ws.grab_dirty(12);
+        assert_eq!(c.len(), 12);
+        assert_eq!(ws.misses(), 1);
+        assert!(c[8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn best_fit_prefers_tightest_capacity() {
+        let mut ws = StepWorkspace::new();
+        let small = ws.grab(10);
+        let big = ws.grab(1000);
+        ws.put(small);
+        ws.put(big);
+        let got = ws.grab(5);
+        assert!(got.capacity() < 1000, "picked the oversized buffer");
+        assert_eq!(ws.misses(), 2); // only the two initial allocations
+    }
+
+    #[test]
+    fn steady_state_sequence_stops_missing() {
+        let mut ws = StepWorkspace::new();
+        let sizes = [64usize, 128, 64, 32, 256, 128];
+        for _ in 0..3 {
+            let held: Vec<Vec<f32>> = sizes.iter().map(|&s| ws.grab(s)).collect();
+            ws.put_all(held);
+        }
+        let misses_after_warmup = ws.misses();
+        for _ in 0..5 {
+            let held: Vec<Vec<f32>> = sizes.iter().map(|&s| ws.grab(s)).collect();
+            ws.put_all(held);
+        }
+        assert_eq!(ws.misses(), misses_after_warmup, "steady state still allocating");
+    }
+}

@@ -36,6 +36,10 @@ pub struct RunConfig {
     pub artifact_dir: String,
     /// Overlap next-batch assembly with execution (std::thread pipeline).
     pub pipeline: bool,
+    /// Reuse per-group subgraph blocks across epochs when the schedule is
+    /// deterministic (`Fixed` batcher mode with unbounded buckets); no
+    /// effect in `Stochastic` mode. On by default.
+    pub subgraph_cache: bool,
     /// SPIDER anchor period (LMC-SPIDER only).
     pub spider_period: usize,
     /// Ablation (Fig. 4): run LMC with only the forward compensation C_f by
@@ -63,6 +67,7 @@ impl Default for RunConfig {
             target_acc: None,
             artifact_dir: "artifacts".into(),
             pipeline: false,
+            subgraph_cache: true,
             spider_period: 10,
             force_bwd_off: false,
             verbose: false,
@@ -140,6 +145,9 @@ impl RunConfig {
         if let Some(v) = get("pipeline").and_then(|v| v.as_bool()) {
             self.pipeline = v;
         }
+        if let Some(v) = get("subgraph_cache").and_then(|v| v.as_bool()) {
+            self.subgraph_cache = v;
+        }
         if let Some(v) = get("spider_period").and_then(|v| v.as_i64()) {
             self.spider_period = v as usize;
         }
@@ -199,6 +207,9 @@ impl RunConfig {
         }
         if args.has_flag("pipeline") {
             self.pipeline = true;
+        }
+        if args.has_flag("no-subgraph-cache") {
+            self.subgraph_cache = false;
         }
         if args.has_flag("verbose") {
             self.verbose = true;

@@ -2,7 +2,7 @@
 //! pluggable [`Executor`] backend, with per-method policies for adjacency,
 //! compensation scalars, and history write-back.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -11,13 +11,16 @@ use super::memory;
 use super::methods::Method;
 use super::metrics::{EpochRecord, RunMetrics};
 use super::params::{sgd_step, Adam, AdamConfig, Params};
-use crate::backend::{Executor, ModelSpec, StepInputs};
+use crate::backend::{Executor, ModelSpec, StepInputs, StepWorkspace};
 use crate::config::RunConfig;
 use crate::graph::{load, Graph};
 use crate::history::History;
 use crate::partition::{partition, PartitionConfig};
 use crate::runtime::Tensor;
-use crate::sampler::{beta_vector, build_subgraph, Batcher, Buckets, SubgraphBatch};
+use crate::sampler::{
+    beta_vector, beta_vector_into, build_subgraph, Batcher, BatcherMode, Buckets, SubgraphBatch,
+    SubgraphCache,
+};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -36,6 +39,18 @@ pub struct Trainer {
     pub n_train: usize,
     pub buckets: Buckets,
     pub metrics: RunMetrics,
+    /// Reusable step scratch: every O(m · d) layer buffer of the native
+    /// step comes from (and returns to) this pool, so steady-state steps
+    /// allocate nothing. Behind a `Mutex` so it can be threaded through
+    /// the shared-reference `StepInputs` without changing the `Executor`
+    /// trait; the trainer is single-threaded, so the lock is uncontended.
+    pub ws: Mutex<StepWorkspace>,
+    /// Set false to restore allocate-per-step behaviour (baseline benches).
+    pub reuse_workspace: bool,
+    /// Fixed-mode subgraph blocks, built once and reused across epochs
+    /// (enabled only when the schedule is deterministic; see
+    /// [`SubgraphCache`] for the applicability matrix).
+    pub sg_cache: SubgraphCache,
     /// SPIDER state (Appendix F): previous params + running estimator.
     spider_prev: Option<(Params, Vec<Tensor>)>,
     step_count: u64,
@@ -102,6 +117,12 @@ impl Trainer {
         let n_train = graph.split.iter().filter(|&&s| s == 0).count();
         let buckets = exec.buckets(&profile)?;
         let model = ModelSpec { profile, arch_name: cfg.arch.clone(), arch };
+        // Fixed groups + unbounded buckets => subgraph construction is a
+        // deterministic function of the (identical-every-epoch) batch, so
+        // blocks can be built once and reused (see SubgraphCache docs).
+        let cache_ok = cfg.subgraph_cache
+            && batcher.mode() == BatcherMode::Fixed
+            && buckets.is_unbounded();
         Ok(Trainer {
             exec,
             cfg,
@@ -116,6 +137,9 @@ impl Trainer {
             n_train,
             buckets,
             metrics: RunMetrics::default(),
+            ws: Mutex::new(StepWorkspace::new()),
+            reuse_workspace: true,
+            sg_cache: SubgraphCache::new(cache_ok),
             spider_prev: None,
             step_count: 0,
         })
@@ -183,29 +207,57 @@ impl Trainer {
         let l_total = self.model.arch.l;
         let dims = self.model.arch.dims.clone();
 
-        let beta = if method.uses_beta() {
-            beta_vector(sb, self.cfg.beta.alpha, self.cfg.beta.score)
-        } else {
-            vec![0f32; sb.bucket_h]
-        };
-        let hist_h: Vec<Vec<f32>> = (1..l_total)
-            .map(|l| {
+        // History/beta gather buffers: from the workspace pool (recycled
+        // after write-back) on the reuse path, plain allocations otherwise.
+        let (beta, hist_h, hist_v) = if self.reuse_workspace {
+            let mut ws = self.ws.lock().unwrap();
+            let mut beta = ws.grab(sb.bucket_h);
+            if method.uses_beta() {
+                beta_vector_into(sb, self.cfg.beta.alpha, self.cfg.beta.score, &mut beta);
+            }
+            let mut hist_h: Vec<Vec<f32>> = Vec::with_capacity(l_total.saturating_sub(1));
+            for l in 1..l_total {
+                let mut buf = ws.grab(sb.bucket_h * dims[l]);
                 if method.uses_history() {
-                    self.history.gather_h(l, &sb.halo, sb.bucket_h)
-                } else {
-                    vec![0f32; sb.bucket_h * dims[l]]
+                    self.history.gather_h_into(l, &sb.halo, &mut buf);
                 }
-            })
-            .collect();
-        let hist_v: Vec<Vec<f32>> = (1..l_total)
-            .map(|l| {
+                hist_h.push(buf);
+            }
+            let mut hist_v: Vec<Vec<f32>> = Vec::with_capacity(l_total.saturating_sub(1));
+            for l in 1..l_total {
+                let mut buf = ws.grab(sb.bucket_h * dims[l]);
                 if method.stores_aux() {
-                    self.history.gather_v(l, &sb.halo, sb.bucket_h)
-                } else {
-                    vec![0f32; sb.bucket_h * dims[l]]
+                    self.history.gather_v_into(l, &sb.halo, &mut buf);
                 }
-            })
-            .collect();
+                hist_v.push(buf);
+            }
+            (beta, hist_h, hist_v)
+        } else {
+            let beta = if method.uses_beta() {
+                beta_vector(sb, self.cfg.beta.alpha, self.cfg.beta.score)
+            } else {
+                vec![0f32; sb.bucket_h]
+            };
+            let hist_h: Vec<Vec<f32>> = (1..l_total)
+                .map(|l| {
+                    if method.uses_history() {
+                        self.history.gather_h(l, &sb.halo, sb.bucket_h)
+                    } else {
+                        vec![0f32; sb.bucket_h * dims[l]]
+                    }
+                })
+                .collect();
+            let hist_v: Vec<Vec<f32>> = (1..l_total)
+                .map(|l| {
+                    if method.stores_aux() {
+                        self.history.gather_v(l, &sb.halo, sb.bucket_h)
+                    } else {
+                        vec![0f32; sb.bucket_h * dims[l]]
+                    }
+                })
+                .collect();
+            (beta, hist_h, hist_v)
+        };
 
         let inputs = StepInputs {
             graph: self.graph.as_ref(),
@@ -218,8 +270,9 @@ impl Trainer {
             bwd_scale: if self.cfg.force_bwd_off { 0.0 } else { method.bwd_scale() },
             vscale: 1.0 / self.n_train.max(1) as f32,
             grad_scale: self.batcher.grad_scale(),
+            ws: if self.reuse_workspace { Some(&self.ws) } else { None },
         };
-        let outs = self.exec.forward_backward(&inputs)?;
+        let mut outs = self.exec.forward_backward(&inputs)?;
 
         if write_back {
             if method.uses_history() {
@@ -240,6 +293,20 @@ impl Trainer {
             if method.uses_history() {
                 self.history.tick(&sb.batch);
             }
+        }
+
+        // Recycle the gather buffers and the escaped step-output buffers
+        // back into the pool: the next step's grabs then hit warm buffers,
+        // closing the zero-allocation loop.
+        if self.reuse_workspace {
+            let mut ws = self.ws.lock().unwrap();
+            let StepInputs { hist_h, hist_v, beta, .. } = inputs;
+            ws.put(beta);
+            ws.put_all(hist_h);
+            ws.put_all(hist_v);
+            ws.put_all(outs.new_h.drain(..));
+            ws.put_all(outs.new_v.drain(..));
+            ws.put_all(outs.htilde.drain(..));
         }
 
         let labeled = sb
@@ -297,6 +364,14 @@ impl Trainer {
     /// forked RNG stream — derived identically in both modes — so the
     /// pipelined and serial paths sample the same halo subsets and produce
     /// identical results; prefetch-thread panics surface as errors.
+    ///
+    /// In `Fixed` batcher mode with unbounded buckets the per-group blocks
+    /// are deterministic and identical every epoch, so they are built once
+    /// (on whichever path runs the first epoch), stored in `sg_cache`, and
+    /// steady-state epochs skip subgraph construction — and the prefetch
+    /// thread — entirely. History gathers stay per-step, so cached and
+    /// rebuilt paths produce bit-identical results
+    /// (`fixed_mode_subgraph_cache_matches_uncached`).
     pub fn train_epoch(&mut self) -> Result<StepStats> {
         if self.cfg.method == Method::Gd {
             return self.gd_epoch();
@@ -305,9 +380,22 @@ impl Trainer {
         let mut agg = EpochAgg::default();
         let policy = self.cfg.method.adjacency_policy();
         // per-batch deterministic rng streams, forked regardless of mode so
-        // `pipeline = true/false` leave self.rng in the same state
+        // `pipeline = true/false` and cache on/off leave self.rng in the
+        // same state (unbounded-bucket builds never consume from them)
         let mut rngs: Vec<Rng> =
             (0..batches.len()).map(|i| self.rng.fork(i as u64)).collect();
+        if self.sg_cache.is_complete(batches.len()) {
+            // steady-state Fixed mode: every group's blocks are cached
+            for (i, b) in batches.iter().enumerate() {
+                let sb = self
+                    .sg_cache
+                    .get(i, b)
+                    .ok_or_else(|| anyhow!("subgraph cache invalidated mid-run (step {i})"))?;
+                let (s, _) = self.step_on(sb.as_ref())?;
+                agg.add(&s);
+            }
+            return Ok(agg.finish());
+        }
         if self.cfg.pipeline && batches.len() > 1 {
             let graph = self.graph.clone();
             let buckets = self.buckets.clone();
@@ -323,9 +411,9 @@ impl Trainer {
             }));
             // construction of batches i+1, i+2 overlaps execution of batch i
             // (channel capacity 2 bounds prefetch memory)
-            for _ in 0..batches.len() {
+            for i in 0..batches.len() {
                 let sb = match rx.recv() {
-                    Ok(built) => built?,
+                    Ok(built) => Arc::new(built?),
                     Err(_) => {
                         // channel closed early — surface the prefetch panic
                         join_prefetch(handle.take())?;
@@ -334,17 +422,34 @@ impl Trainer {
                         ));
                     }
                 };
-                let (s, _) = self.step_on(&sb)?;
+                if self.sg_cache.enabled() {
+                    self.sg_cache.insert(i, sb.clone());
+                }
+                let (s, _) = self.step_on(sb.as_ref())?;
                 agg.add(&s);
             }
             join_prefetch(handle.take())?;
         } else {
             for (i, b) in batches.iter().enumerate() {
-                let sb = build_subgraph(&self.graph, b, policy, &self.buckets, &mut rngs[i])?;
-                let (s, _) = self.step_on(&sb)?;
+                let sb = match self.sg_cache.get(i, b) {
+                    Some(cached) => cached,
+                    None => {
+                        let built = Arc::new(build_subgraph(
+                            &self.graph,
+                            b,
+                            policy,
+                            &self.buckets,
+                            &mut rngs[i],
+                        )?);
+                        self.sg_cache.insert(i, built.clone());
+                        built
+                    }
+                };
+                let (s, _) = self.step_on(sb.as_ref())?;
                 agg.add(&s);
             }
         }
+        self.sg_cache.seal(batches.len());
         Ok(agg.finish())
     }
 

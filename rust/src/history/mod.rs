@@ -11,7 +11,7 @@
 //! so its footprint does not count against the simulated accelerator memory
 //! (see coordinator::memory).
 
-use crate::sampler::gather_rows;
+use crate::sampler::{gather_rows, gather_rows_into};
 
 #[derive(Clone, Debug)]
 pub struct LayerStore {
@@ -61,6 +61,19 @@ impl History {
     pub fn gather_v(&self, l: usize, idx: &[u32], rows: usize) -> Vec<f32> {
         let s = &self.v[l - 1];
         gather_rows(&s.data, s.d, idx, rows)
+    }
+
+    /// [`History::gather_h`] into a caller-provided (pre-zeroed) buffer —
+    /// the workspace-reuse path: no allocation, rows past `idx.len()` are
+    /// the caller's padding.
+    pub fn gather_h_into(&self, l: usize, idx: &[u32], out: &mut [f32]) {
+        let s = &self.h[l - 1];
+        gather_rows_into(&s.data, s.d, idx, out);
+    }
+
+    pub fn gather_v_into(&self, l: usize, idx: &[u32], out: &mut [f32]) {
+        let s = &self.v[l - 1];
+        gather_rows_into(&s.data, s.d, idx, out);
     }
 
     /// Scatter the first `idx.len()` rows of `src` (padded buffer) into

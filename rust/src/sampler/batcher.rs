@@ -47,6 +47,13 @@ impl Batcher {
         self.clusters.len()
     }
 
+    /// The scheduling mode. `Fixed` emits identical groups every epoch,
+    /// which is what makes the trainer's [`crate::sampler::SubgraphCache`]
+    /// applicable; `Stochastic` reshuffles and must rebuild per step.
+    pub fn mode(&self) -> BatcherMode {
+        self.mode
+    }
+
     pub fn steps_per_epoch(&self) -> usize {
         match self.mode {
             BatcherMode::Fixed => self.fixed_groups.len(),

@@ -14,11 +14,18 @@
 pub mod batcher;
 pub mod sparse;
 
+use std::sync::Arc;
+
+use rayon::prelude::*;
+
 use crate::graph::{Csr, Graph};
 use crate::util::rng::Rng;
 
 pub use batcher::{Batcher, BatcherMode};
 pub use sparse::{CsrBlock, CsrBuilder};
+
+/// Below this many gathered elements `gather_rows` stays serial.
+const GATHER_PAR_MIN: usize = 1 << 14;
 
 /// Shape buckets available for a profile.
 ///
@@ -34,6 +41,13 @@ impl Buckets {
     /// Exact-fit buckets for backends without compiled shapes.
     pub fn unbounded() -> Buckets {
         Buckets(Vec::new())
+    }
+
+    /// True when nothing is ever padded or dropped (exact-fit mode) —
+    /// subgraph construction is then deterministic given the batch, which
+    /// is what makes [`SubgraphCache`] sound.
+    pub fn is_unbounded(&self) -> bool {
+        self.0.is_empty()
     }
 
     /// Smallest bucket with B >= nb; among those, the one whose H fits nh if
@@ -90,6 +104,10 @@ pub struct SubgraphBatch {
     pub a_bb: CsrBlock,
     pub a_bh: CsrBlock,
     pub a_hh: CsrBlock,
+    /// `a_bh.transpose()`, built once at construction: the halo→batch block
+    /// the symmetric stacked operator needs every aggregation. Caching it
+    /// here removes an O(nnz) counting sort from each step's hot path.
+    pub a_hb: CsrBlock,
     /// Halo neighbors dropped by the bucket cap (0 in normal operation).
     pub dropped_halo: usize,
     /// Degree of each halo node inside the sampled subgraph (for beta
@@ -274,6 +292,7 @@ pub fn build_subgraph(
         halo_deg_local[i] = dl;
     }
 
+    let a_hb = a_bh.transpose();
     Ok(SubgraphBatch {
         batch: batch.to_vec(),
         halo,
@@ -282,6 +301,7 @@ pub fn build_subgraph(
         a_bb,
         a_bh,
         a_hh,
+        a_hb,
         dropped_halo: dropped,
         halo_deg_local,
         halo_deg_global,
@@ -371,25 +391,158 @@ impl BetaScore {
 /// beta_i = alpha * score(deg_local(i) / deg_global(i)), padded to bucket_h.
 pub fn beta_vector(sb: &SubgraphBatch, alpha: f32, score: BetaScore) -> Vec<f32> {
     let mut beta = vec![0f32; sb.bucket_h];
+    beta_vector_into(sb, alpha, score, &mut beta);
+    beta
+}
+
+/// [`beta_vector`] into a caller-provided buffer of at least `bucket_h`
+/// entries; `out[halo.len()..]` must already be zero (padding).
+pub fn beta_vector_into(sb: &SubgraphBatch, alpha: f32, score: BetaScore, out: &mut [f32]) {
+    debug_assert!(out.len() >= sb.bucket_h);
     for i in 0..sb.halo.len() {
         let x = if sb.halo_deg_global[i] > 0 {
             sb.halo_deg_local[i] as f32 / sb.halo_deg_global[i] as f32
         } else {
             0.0
         };
-        beta[i] = (alpha * score.eval(x)).clamp(0.0, 1.0);
+        out[i] = (alpha * score.eval(x)).clamp(0.0, 1.0);
     }
-    beta
 }
 
 /// Gather rows of a [n, d] row-major array into a zero-padded [rows, d] buffer.
 pub fn gather_rows(src: &[f32], d: usize, idx: &[u32], rows: usize) -> Vec<f32> {
     debug_assert!(idx.len() <= rows);
     let mut out = vec![0f32; rows * d];
-    for (i, &u) in idx.iter().enumerate() {
-        out[i * d..(i + 1) * d].copy_from_slice(&src[u as usize * d..(u as usize + 1) * d]);
-    }
+    gather_rows_into(src, d, idx, &mut out);
     out
+}
+
+/// [`gather_rows`] into a caller-provided buffer, rayon-parallel for large
+/// gathers (it sits on the per-step critical path between sampler and
+/// GEMM). Rows past `idx.len()` are left untouched — callers provide a
+/// zeroed buffer when they need padding.
+pub fn gather_rows_into(src: &[f32], d: usize, idx: &[u32], out: &mut [f32]) {
+    debug_assert!(out.len() >= idx.len() * d);
+    if d == 0 || idx.is_empty() {
+        return;
+    }
+    let used = &mut out[..idx.len() * d];
+    if used.len() >= GATHER_PAR_MIN {
+        used.par_chunks_mut(d).zip(idx.par_iter()).for_each(|(row, &u)| {
+            row.copy_from_slice(&src[u as usize * d..(u as usize + 1) * d]);
+        });
+    } else {
+        for (row, &u) in used.chunks_mut(d).zip(idx) {
+            row.copy_from_slice(&src[u as usize * d..(u as usize + 1) * d]);
+        }
+    }
+}
+
+/// Reusable subgraph blocks for deterministic batch schedules.
+///
+/// Applicability (checked by the trainer at construction):
+///
+/// | batcher mode | buckets       | cached? |
+/// |--------------|---------------|---------|
+/// | `Fixed`      | unbounded     | yes — identical groups every epoch and no halo subsampling, so blocks are bit-identical across epochs |
+/// | `Fixed`      | capped        | no — a bucket cap subsamples the halo through the per-batch RNG stream |
+/// | `Stochastic` | any           | no — groups reshuffle every epoch |
+///
+/// Entries are keyed by step index within the epoch and validated against
+/// the batch node list on every hit, so a schedule change falls back to a
+/// rebuild instead of serving stale blocks.
+#[derive(Clone, Debug, Default)]
+pub struct SubgraphCache {
+    enabled: bool,
+    entries: Vec<Option<Arc<SubgraphBatch>>>,
+    complete: bool,
+}
+
+impl SubgraphCache {
+    pub fn new(enabled: bool) -> SubgraphCache {
+        SubgraphCache { enabled, entries: Vec::new(), complete: false }
+    }
+
+    pub fn disabled() -> SubgraphCache {
+        SubgraphCache::new(false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Cached entries so far.
+    pub fn len(&self) -> usize {
+        self.entries.iter().filter(|e| e.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once a full epoch of `n` groups is cached — the steady state in
+    /// which epochs skip subgraph construction (and the prefetch thread)
+    /// entirely.
+    pub fn is_complete(&self, n: usize) -> bool {
+        self.enabled && self.complete && self.entries.len() == n
+    }
+
+    /// The cached blocks for step `i`, if they exist and match `batch`.
+    pub fn get(&self, i: usize, batch: &[u32]) -> Option<Arc<SubgraphBatch>> {
+        if !self.enabled {
+            return None;
+        }
+        let e = self.entries.get(i)?.as_ref()?;
+        if e.batch.as_slice() != batch {
+            return None;
+        }
+        Some(e.clone())
+    }
+
+    pub fn insert(&mut self, i: usize, sb: Arc<SubgraphBatch>) {
+        if !self.enabled {
+            return;
+        }
+        if self.entries.len() <= i {
+            self.entries.resize(i + 1, None);
+        }
+        self.entries[i] = Some(sb);
+    }
+
+    /// Mark the cache complete after an epoch of `n` groups if every slot
+    /// was filled.
+    pub fn seal(&mut self, n: usize) {
+        if self.enabled && self.entries.len() == n && self.entries.iter().all(|e| e.is_some()) {
+            self.complete = true;
+        }
+    }
+
+    /// Host bytes retained by the cached blocks (CSR arrays + node/degree
+    /// vectors). The cache trades this host memory — roughly one extra
+    /// copy of the partitioned adjacency across all groups — for skipping
+    /// per-step subgraph construction; it is host-side and, like the
+    /// history store, does not count against the simulated accelerator
+    /// memory in `coordinator::memory`.
+    pub fn bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .flatten()
+            .map(|sb| {
+                let blocks = [&sb.a_bb, &sb.a_bh, &sb.a_hh, &sb.a_hb];
+                let csr: usize = blocks
+                    .iter()
+                    .map(|b| b.offsets.len() * 4 + b.nnz() * 8)
+                    .sum();
+                csr + (sb.batch.len() + sb.halo.len() * 3) * 4
+            })
+            .sum()
+    }
+
+    /// Drop all entries (e.g. after a schedule change).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.complete = false;
+    }
 }
 
 #[cfg(test)]
@@ -571,6 +724,95 @@ mod tests {
                 assert_eq!(beta[i], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn a_hb_is_cached_transpose() {
+        let g = test_graph();
+        let mut rng = Rng::new(8);
+        let batch: Vec<u32> = (20..140u32).collect();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        assert_eq!(sb.a_hb, sb.a_bh.transpose());
+        // CLUSTER policy: degenerate but well-formed transpose
+        let sbc = build_subgraph(&g, &batch, AdjacencyPolicy::LocalNoHalo, &buckets(), &mut rng).unwrap();
+        assert_eq!(sbc.a_hb.n_rows, 0);
+        assert_eq!(sbc.a_hb.nnz(), 0);
+    }
+
+    #[test]
+    fn gather_rows_into_parallel_matches_serial() {
+        let mut rng = Rng::new(11);
+        let n = 500;
+        let d = 40; // 500 * 40 = 20000 > GATHER_PAR_MIN, exercises the par path
+        let src: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let idx: Vec<u32> = (0..n as u32).step_by(3).collect();
+        let rows = idx.len() + 5;
+        let got = gather_rows(&src, d, &idx, rows);
+        assert_eq!(got.len(), rows * d);
+        for (i, &u) in idx.iter().enumerate() {
+            assert_eq!(&got[i * d..(i + 1) * d], &src[u as usize * d..(u as usize + 1) * d]);
+        }
+        assert!(got[idx.len() * d..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn subgraph_cache_hits_validates_and_seals() {
+        let g = test_graph();
+        let mut rng = Rng::new(12);
+        let b0: Vec<u32> = (0..60u32).collect();
+        let b1: Vec<u32> = (60..120u32).collect();
+        let sb0 = std::sync::Arc::new(
+            build_subgraph(&g, &b0, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+                .unwrap(),
+        );
+        let sb1 = std::sync::Arc::new(
+            build_subgraph(&g, &b1, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+                .unwrap(),
+        );
+        let mut cache = SubgraphCache::new(true);
+        assert!(cache.get(0, &b0).is_none());
+        cache.insert(0, sb0.clone());
+        assert!(!cache.is_complete(2));
+        cache.insert(1, sb1.clone());
+        cache.seal(2);
+        assert!(cache.is_complete(2));
+        // footprint accounting covers all four blocks of both entries
+        assert!(cache.bytes() > (sb0.nnz() + sb1.nnz()) * 8);
+        // hits return the same blocks; a mismatched batch misses
+        let hit = cache.get(0, &b0).unwrap();
+        assert_eq!(hit.a_bb, sb0.a_bb);
+        assert!(cache.get(0, &b1).is_none());
+        // disabled cache never stores
+        let mut off = SubgraphCache::disabled();
+        off.insert(0, sb0);
+        assert!(off.is_empty());
+        assert!(!off.is_complete(0));
+        // clearing drops completeness
+        cache.clear();
+        assert!(!cache.is_complete(2));
+    }
+
+    #[test]
+    fn fixed_mode_rebuild_is_bit_identical() {
+        // The cache-soundness property: with unbounded buckets the blocks
+        // are a deterministic function of the batch, so a cached entry and
+        // a fresh rebuild are interchangeable.
+        let g = test_graph();
+        let batch: Vec<u32> = (10..170u32).collect();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(999); // different RNG stream: must not matter
+        let a = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r1)
+            .unwrap();
+        let b = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r2)
+            .unwrap();
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.halo, b.halo);
+        assert_eq!(a.a_bb, b.a_bb);
+        assert_eq!(a.a_bh, b.a_bh);
+        assert_eq!(a.a_hh, b.a_hh);
+        assert_eq!(a.a_hb, b.a_hb);
+        assert_eq!(a.halo_deg_local, b.halo_deg_local);
+        assert_eq!(a.nnz_fwd, b.nnz_fwd);
     }
 
     #[test]

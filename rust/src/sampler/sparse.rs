@@ -7,6 +7,14 @@
 
 use rayon::prelude::*;
 
+/// Rows per rayon task in the blocked SpMM paths.
+pub(crate) const SPMM_ROW_BLOCK: usize = 32;
+/// Feature-dimension tile width: wide `d` is processed in column tiles so
+/// the gathered source tile stays cache-resident across a block's rows.
+pub(crate) const SPMM_D_TILE: usize = 128;
+/// Below this many output elements the serial path is used.
+pub(crate) const SPMM_PAR_MIN: usize = 1 << 12;
+
 /// A sparse `n_rows × n_cols` matrix in compressed-sparse-row form.
 ///
 /// `offsets` has `n_rows + 1` entries; row `i`'s nonzeros live at
@@ -127,6 +135,59 @@ impl CsrBlock {
         });
         out
     }
+
+    /// `A @ x` through the blocked + feature-tiled kernel.
+    pub fn par_spmm_tiled(&self, x: &[f32], d: usize) -> Vec<f32> {
+        let mut out = vec![0f32; self.n_rows * d];
+        self.par_spmm_acc_tiled(x, d, 1.0, &mut out);
+        out
+    }
+
+    /// `out[i, :] += scale · Σ_j A[i, j] · x[j, :]` — the optimized SpMM:
+    /// rayon-parallel over [`SPMM_ROW_BLOCK`]-row blocks, with the feature
+    /// dimension processed in [`SPMM_D_TILE`] tiles for wide `d`. Per
+    /// output element the accumulation order (columns ascending) matches
+    /// [`CsrBlock::spmm_acc`], so results are thread-count independent.
+    /// Accumulating into a caller-provided buffer makes this the fused
+    /// entry point: the step pre-fills `out` with the bias/residual term
+    /// and aggregates straight into the pre-activation buffer.
+    pub fn par_spmm_acc_tiled(&self, x: &[f32], d: usize, scale: f32, out: &mut [f32]) {
+        debug_assert!(x.len() >= self.n_cols * d);
+        debug_assert!(out.len() >= self.n_rows * d);
+        if d == 0 || self.n_rows == 0 {
+            return;
+        }
+        let out = &mut out[..self.n_rows * d];
+        if self.n_rows * d <= SPMM_PAR_MIN {
+            spmm_rows_tiled(self, 0, out, x, d, scale);
+            return;
+        }
+        out.par_chunks_mut(SPMM_ROW_BLOCK * d).enumerate().for_each(|(blk, orows)| {
+            spmm_rows_tiled(self, blk * SPMM_ROW_BLOCK, orows, x, d, scale);
+        });
+    }
+}
+
+/// Accumulate `scale · A[r0.., :] @ x` into `orows` (one row block),
+/// feature-tiled.
+fn spmm_rows_tiled(a: &CsrBlock, r0: usize, orows: &mut [f32], x: &[f32], d: usize, scale: f32) {
+    let rows = orows.len() / d;
+    let mut d0 = 0;
+    while d0 < d {
+        let d1 = (d0 + SPMM_D_TILE).min(d);
+        for rr in 0..rows {
+            let (cols, vals) = a.row(r0 + rr);
+            let orow = &mut orows[rr * d + d0..rr * d + d1];
+            for (&j, &w) in cols.iter().zip(vals) {
+                let sw = scale * w;
+                let src = &x[j as usize * d + d0..j as usize * d + d1];
+                for (o, &s) in orow.iter_mut().zip(src) {
+                    *o += sw * s;
+                }
+            }
+        }
+        d0 = d1;
+    }
 }
 
 /// Incremental row-by-row CSR construction (columns must be pushed in
@@ -245,6 +306,44 @@ mod tests {
         }
         let par = blk.par_spmm(&x, d);
         assert_eq!(par, got);
+        let tiled = blk.par_spmm_tiled(&x, d);
+        assert_eq!(tiled, got);
+    }
+
+    #[test]
+    fn tiled_spmm_matches_serial_across_widths() {
+        let mut rng = Rng::new(9);
+        // d values straddle the tile width, including d = 1 and non-multiples
+        for &d in &[1usize, 3, 64, 128, 130, 300] {
+            let (blk, _) = random_block(&mut rng, 23, 17, 0.3);
+            let x: Vec<f32> = (0..17 * d).map(|_| rng.normal() as f32).collect();
+            let mut want = vec![0f32; 23 * d];
+            blk.spmm_acc(&x, d, &mut want);
+            let got = blk.par_spmm_tiled(&x, d);
+            // identical per-element accumulation order => bitwise equal
+            assert_eq!(got, want, "d = {d}");
+            // scaled accumulate into a pre-filled buffer
+            let mut acc = vec![1f32; 23 * d];
+            blk.par_spmm_acc_tiled(&x, d, 0.5, &mut acc);
+            for (i, (&a, &w)) in acc.iter().zip(&want).enumerate() {
+                let expect = 1.0 + 0.5 * w;
+                assert!((a - expect).abs() <= 1e-5 * (1.0 + expect.abs()), "d={d} i={i}: {a} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_spmm_handles_empty_rows_and_blocks() {
+        // all-zero block: output untouched
+        let blk = CsrBlock::empty(5, 4);
+        let x = vec![1f32; 4 * 7];
+        let mut out = vec![2f32; 5 * 7];
+        blk.par_spmm_acc_tiled(&x, 7, 1.0, &mut out);
+        assert!(out.iter().all(|&v| v == 2.0));
+        // zero-row block: no panic
+        let blk0 = CsrBlock::empty(0, 4);
+        let mut empty: Vec<f32> = Vec::new();
+        blk0.par_spmm_acc_tiled(&x, 7, 1.0, &mut empty);
     }
 
     #[test]

@@ -117,6 +117,63 @@ fn fixed_batches_mode_runs() {
     let mut t = Trainer::new(exec(), c).unwrap();
     let m = t.run().unwrap();
     assert_eq!(m.records.len(), 3);
+    // with unbounded buckets the Fixed schedule is cacheable, and after a
+    // full epoch the cache is sealed
+    assert!(t.sg_cache.enabled());
+    assert!(!t.sg_cache.is_empty());
+}
+
+#[test]
+fn fixed_mode_subgraph_cache_matches_uncached() {
+    // The cache must be a pure memoization: training with it on and off
+    // produces bit-identical parameters (history gathers stay per-step).
+    let run = |cache: bool, pipeline: bool| {
+        let mut c = cfg(Method::Lmc, 3);
+        c.batcher_mode = lmc::sampler::BatcherMode::Fixed;
+        c.subgraph_cache = cache;
+        c.pipeline = pipeline;
+        c.eval_every = usize::MAX;
+        let mut t = Trainer::new(exec(), c).unwrap();
+        for _ in 0..3 {
+            t.train_epoch().unwrap();
+        }
+        t.params.tensors.clone()
+    };
+    let cached = run(true, false);
+    let uncached = run(false, false);
+    let cached_pipelined = run(true, true);
+    assert_eq!(cached.len(), uncached.len());
+    for ((a, b), c) in cached.iter().zip(&uncached).zip(&cached_pipelined) {
+        assert_eq!(a.data, b.data, "cache changed training results");
+        assert_eq!(a.data, c.data, "cache + pipeline diverged");
+    }
+}
+
+#[test]
+fn stochastic_mode_never_caches() {
+    let mut c = cfg(Method::Lmc, 2);
+    c.batcher_mode = lmc::sampler::BatcherMode::Stochastic;
+    let mut t = Trainer::new(exec(), c).unwrap();
+    t.run().unwrap();
+    assert!(!t.sg_cache.enabled());
+    assert!(t.sg_cache.is_empty());
+}
+
+#[test]
+fn workspace_steady_state_has_no_new_allocations() {
+    // After warmup epochs the buffer pool and subgraph cache cover every
+    // per-layer grab: further epochs must not heap-allocate step buffers.
+    let mut c = cfg(Method::Lmc, 1);
+    c.batcher_mode = lmc::sampler::BatcherMode::Fixed;
+    let mut t = Trainer::new(exec(), c).unwrap();
+    t.train_epoch().unwrap();
+    t.train_epoch().unwrap();
+    let warm = t.ws.lock().unwrap().misses();
+    t.train_epoch().unwrap();
+    t.train_epoch().unwrap();
+    let steady = t.ws.lock().unwrap().misses();
+    assert_eq!(warm, steady, "steady-state epochs still allocate step buffers");
+    assert!(t.ws.lock().unwrap().grabs() > warm, "workspace not exercised");
 }
 
 #[test]

@@ -3,7 +3,8 @@
 //! depends on `rand`): coordinator invariants over random graphs and
 //! configurations. No artifacts/PJRT required.
 
-use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs};
+use lmc::backend::gemm;
+use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspace};
 use lmc::coordinator::params::{grad_rel_err, Params};
 use lmc::graph::{gcn_normalize, load, random_graph, Csr, DatasetId, Graph};
 use lmc::history::History;
@@ -11,6 +12,7 @@ use lmc::partition::{edge_cut, partition, quality::quality, PartitionConfig};
 use lmc::runtime::ArchInfo;
 use lmc::sampler::{
     beta_vector, build_subgraph, AdjacencyPolicy, Batcher, BatcherMode, BetaScore, Buckets,
+    CsrBlock,
 };
 use lmc::util::rng::Rng;
 
@@ -216,6 +218,7 @@ fn prop_native_full_batch_step_matches_exact_oracle() {
                 bwd_scale: 1.0,
                 vscale: 1.0 / n_train as f32,
                 grad_scale: 1.0,
+                ws: None,
             };
             let step = exec.forward_backward(&inputs).unwrap();
             let oracle = exec.full_grad(&g, &params, &model).unwrap();
@@ -285,6 +288,232 @@ fn prop_history_scatter_gather_roundtrip() {
             assert!(back[k * d..].iter().all(|&x| x == 0.0));
             let backv = h.gather_v(l, &idx, rows);
             assert_eq!(&backv[..k * d], &src[..]);
+        }
+    }
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{ctx}: elem {i}: {g} vs {w}"
+        );
+    }
+}
+
+/// Blocked GEMM kernels vs the retained naive references, across odd
+/// shapes: dims that are not multiples of the tile sizes, singleton dims,
+/// and shapes big enough to cross the parallel threshold.
+#[test]
+fn prop_blocked_gemm_matches_reference() {
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 2),
+        (17, 33, 9),
+        (16, 64, 16),
+        (100, 1, 7),
+        (5, 129, 1),
+        (33, 65, 130),
+        (257, 19, 31),
+        (70, 70, 70),
+    ];
+    let mut rng = Rng::new(0xB10C);
+    for &(m, k, n) in shapes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let ctx = format!("matmul {m}x{k}x{n}");
+        assert_close(
+            &gemm::matmul(&a, m, k, &b, n),
+            &gemm::reference::matmul(&a, m, k, &b, n),
+            1e-5,
+            &ctx,
+        );
+        // fused bias
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut fused = vec![0f32; m * n];
+        gemm::matmul_bias_into(&mut fused, &a, m, k, &b, n, &bias);
+        let mut want = gemm::reference::matmul(&a, m, k, &b, n);
+        gemm::reference::add_bias_rows(&mut want, &bias);
+        assert_close(&fused, &want, 1e-5, &format!("{ctx} +bias"));
+        // nt: a[m, k] @ bt[n, k]^T
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        assert_close(
+            &gemm::matmul_nt(&a, m, k, &bt, n),
+            &gemm::reference::matmul_nt(&a, m, k, &bt, n),
+            1e-5,
+            &format!("matmul_nt {m}x{k}x{n}"),
+        );
+        // tn: a[m, k]^T @ c[m, n]
+        let c: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        assert_close(
+            &gemm::matmul_tn(&a, m, k, &c, n),
+            &gemm::reference::matmul_tn(&a, m, k, &c, n),
+            1e-5,
+            &format!("matmul_tn {m}x{k}x{n}"),
+        );
+    }
+}
+
+/// Tiled SpMM vs the serial reference over random sparse blocks with
+/// empty rows, d = 1, and d straddling the tile width.
+#[test]
+fn prop_tiled_spmm_matches_reference() {
+    let mut rng = Rng::new(0x59A7);
+    for case in 0..8u64 {
+        let n_rows = 1 + rng.below(200);
+        let n_cols = 1 + rng.below(150);
+        let p = rng.uniform(0.0, 0.1); // sparse enough that empty rows occur
+        let mut dense = vec![0f32; n_rows * n_cols];
+        for v in dense.iter_mut() {
+            if rng.next_f64() < p {
+                *v = rng.normal() as f32;
+            }
+        }
+        let blk = CsrBlock::from_dense(n_rows, n_cols, &dense);
+        for &d in &[1usize, 7, 64, 129, 256] {
+            let x: Vec<f32> = (0..n_cols * d).map(|_| rng.normal() as f32).collect();
+            let mut want = vec![0f32; n_rows * d];
+            blk.spmm_acc(&x, d, &mut want);
+            let got = blk.par_spmm_tiled(&x, d);
+            assert_close(&got, &want, 1e-6, &format!("case {case} d {d}"));
+        }
+    }
+}
+
+/// The optimized step configuration (blocked kernels + workspace reuse)
+/// must agree with the pre-optimization configuration (reference kernels,
+/// allocate-per-step) on a real compensated subgraph step — gradients,
+/// loss, and every history write-back, for both architectures. Running the
+/// workspace path twice also proves buffer recycling cannot leak state
+/// between steps.
+#[test]
+fn prop_optimized_step_matches_reference_step() {
+    let fast = NativeExecutor::new();
+    let slow = NativeExecutor::with_reference_kernels();
+    for (case, arch_name) in [(0u64, "gcn"), (1u64, "gcnii")] {
+        let mut rng = Rng::new(case * 131 + 17);
+        let n = 120 + rng.below(150);
+        let csr = random_graph(n, 0.05, &mut rng);
+        let g = attr_graph(csr, case + 7);
+        let arch = match arch_name {
+            "gcn" => ArchInfo::gcn(3, g.d_x, 16, g.n_class),
+            _ => ArchInfo::gcnii(3, g.d_x, 16, g.n_class),
+        };
+        let model = ModelSpec { profile: "custom".into(), arch_name: arch_name.into(), arch };
+        let mut prng = Rng::new(case ^ 0xF457);
+        let params = Params::init(&model.arch, &mut prng);
+        let batch: Vec<u32> = (0..(g.n() / 2) as u32).collect();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+            .unwrap();
+        assert!(!sb.halo.is_empty(), "test needs a halo");
+        let nh = sb.halo.len();
+        let l = model.arch.l;
+        let dims = model.arch.dims.clone();
+        let hist_h: Vec<Vec<f32>> = (1..l)
+            .map(|li| (0..nh * dims[li]).map(|_| prng.normal() as f32).collect())
+            .collect();
+        let hist_v: Vec<Vec<f32>> = (1..l)
+            .map(|li| (0..nh * dims[li]).map(|_| prng.normal() as f32).collect())
+            .collect();
+        let beta = beta_vector(&sb, 0.8, BetaScore::TwoXMinusXSquared);
+        let ws = std::sync::Mutex::new(StepWorkspace::new());
+        let mk_inputs = |use_ws: bool| StepInputs {
+            graph: &g,
+            sb: &sb,
+            model: &model,
+            params: &params,
+            hist_h: hist_h.clone(),
+            hist_v: hist_v.clone(),
+            beta: beta.clone(),
+            bwd_scale: 1.0,
+            vscale: 0.01,
+            grad_scale: 1.5,
+            ws: if use_ws { Some(&ws) } else { None },
+        };
+        let baseline = slow.forward_backward(&mk_inputs(false)).unwrap();
+        let mut miss_trace: Vec<u64> = Vec::new();
+        for round in 0..2 {
+            let inputs = mk_inputs(true);
+            let opt = fast.forward_backward(&inputs).unwrap();
+            // recycle escaped buffers like the trainer does, then re-run
+            {
+                let mut w = ws.lock().unwrap();
+                let StepInputs { hist_h, hist_v, beta, .. } = inputs;
+                w.put(beta);
+                w.put_all(hist_h);
+                w.put_all(hist_v);
+                let mut opt_outs = opt;
+                assert!(
+                    (opt_outs.loss_sum - baseline.loss_sum).abs()
+                        <= 1e-5 * (1.0 + baseline.loss_sum.abs()),
+                    "{arch_name} round {round}: loss {} vs {}",
+                    opt_outs.loss_sum,
+                    baseline.loss_sum
+                );
+                // kernel variants may differ at float-rounding level; a
+                // flipped argmax on a near-tie would move `correct` by 1
+                assert!((opt_outs.correct - baseline.correct).abs() <= 1.0);
+                let rel = grad_rel_err(&opt_outs.grads, &baseline.grads);
+                assert!(rel < 1e-5, "{arch_name} round {round}: grads rel err {rel}");
+                for (a, b) in opt_outs.new_h.iter().zip(&baseline.new_h) {
+                    assert_close(a, b, 1e-5, &format!("{arch_name} new_h"));
+                }
+                for (a, b) in opt_outs.new_v.iter().zip(&baseline.new_v) {
+                    assert_close(a, b, 1e-5, &format!("{arch_name} new_v"));
+                }
+                for (a, b) in opt_outs.htilde.iter().zip(&baseline.htilde) {
+                    assert_close(a, b, 1e-5, &format!("{arch_name} htilde"));
+                }
+                w.put_all(opt_outs.new_h.drain(..));
+                w.put_all(opt_outs.new_v.drain(..));
+                w.put_all(opt_outs.htilde.drain(..));
+                miss_trace.push(w.misses());
+            }
+        }
+        // identical second step: every grab must hit the warm pool
+        assert_eq!(
+            miss_trace[0], miss_trace[1],
+            "{arch_name}: repeated step allocated fresh buffers"
+        );
+    }
+}
+
+/// Fixed-mode groups are identical across epochs and subgraph construction
+/// is deterministic with unbounded buckets, so rebuilding any group yields
+/// bit-identical blocks — the property that makes SubgraphCache sound.
+#[test]
+fn prop_fixed_groups_rebuild_identically() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed + 41);
+        let n = 100 + rng.below(200);
+        let csr = random_graph(n, 0.05, &mut rng);
+        let g = attr_graph(csr, seed);
+        let k = 4;
+        let mut clusters = vec![Vec::new(); k];
+        for u in 0..g.n() as u32 {
+            clusters[rng.below(k)].push(u);
+        }
+        clusters.retain(|c| !c.is_empty());
+        let mut batcher = Batcher::new(clusters, 2, BatcherMode::Fixed, seed);
+        let e1 = batcher.epoch_batches();
+        let e2 = batcher.epoch_batches();
+        assert_eq!(e1, e2, "Fixed groups changed across epochs");
+        for (i, b) in e1.iter().enumerate() {
+            let mut r1 = Rng::new(seed * 3 + 1);
+            let mut r2 = Rng::new(seed * 5 + 2); // different stream on purpose
+            let sb1 =
+                build_subgraph(&g, b, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r1)
+                    .unwrap();
+            let sb2 =
+                build_subgraph(&g, b, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r2)
+                    .unwrap();
+            assert_eq!(sb1.batch, sb2.batch, "group {i}");
+            assert_eq!(sb1.halo, sb2.halo, "group {i}");
+            assert_eq!(sb1.a_bb, sb2.a_bb, "group {i}");
+            assert_eq!(sb1.a_bh, sb2.a_bh, "group {i}");
+            assert_eq!(sb1.a_hh, sb2.a_hh, "group {i}");
+            assert_eq!(sb1.a_hb, sb2.a_hb, "group {i}");
         }
     }
 }
