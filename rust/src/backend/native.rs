@@ -119,6 +119,12 @@ impl NativeExecutor {
     /// forward), only the outermost scope accumulates elapsed time, so
     /// nested scopes can never overlap-count
     /// (`exec_secs_counts_nested_scopes_once`).
+    /// Re-entrant executor timing: nested scopes on one thread cannot
+    /// double-count. When one executor is shared by *concurrent* callers
+    /// (sharded workers), overlapping scopes merge, so `exec_secs` reports
+    /// the wall-clock union of busy intervals rather than summed per-worker
+    /// compute — fine for "how long was the backend busy", not a per-shard
+    /// cost model (telemetry only; results are unaffected).
     fn time<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
         {
             let mut st = self.timer.lock().unwrap();
@@ -898,11 +904,14 @@ fn evaluate_native(g: &Graph, params: &Params, model: &ModelSpec) -> Result<Eval
     let mask = full_train_mask(g);
     let (loss_sum, _, _) = masked_ce(&logits, n, c, &g.labels, &mask);
     let n_train = g.split.iter().filter(|&&s| s == 0).count().max(1);
-    let mut correct = [0usize; 3];
-    let mut total = [0usize; 3];
+    // slot 3 absorbs sentinel splits (e.g. sharded halo rows, which belong
+    // to no train/val/test set of the worker graph) without counting them
+    // toward any reported accuracy
+    let mut correct = [0usize; 4];
+    let mut total = [0usize; 4];
     for u in 0..n {
         let pred = argmax(&logits[u * c..(u + 1) * c]);
-        let split = g.split[u] as usize;
+        let split = (g.split[u] as usize).min(3);
         total[split] += 1;
         if pred == g.labels[u] as usize {
             correct[split] += 1;

@@ -352,8 +352,9 @@ impl<'a> TileOracle<'a> {
             .collect();
         let n_train = g.split.iter().filter(|&&s| s == 0).count().max(1);
         let mut loss_sum = 0f64;
-        let mut correct = [0usize; 3];
-        let mut total = [0usize; 3];
+        // slot 3 absorbs sentinel splits (sharded halo rows); see native.rs
+        let mut correct = [0usize; 4];
+        let mut total = [0usize; 4];
         let nc = g.n_class;
         let logits_idx = prog.output_index("logits_t")?;
         for &(s, e) in &self.tiles {
@@ -379,7 +380,7 @@ impl<'a> TileOracle<'a> {
             for u in s..e {
                 let row = &logits[(u - s) * nc..(u - s + 1) * nc];
                 let pred = argmax(row);
-                let split = g.split[u] as usize;
+                let split = (g.split[u] as usize).min(3);
                 total[split] += 1;
                 if pred == g.labels[u] as usize {
                     correct[split] += 1;

@@ -6,6 +6,7 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::Backend;
 use crate::coordinator::methods::{BetaConfig, Method};
+use crate::coordinator::sharded::SyncMode;
 use crate::graph::DatasetId;
 use crate::sampler::{BatcherMode, BetaScore};
 use crate::util::cli::Args;
@@ -40,6 +41,15 @@ pub struct RunConfig {
     /// deterministic (`Fixed` batcher mode with unbounded buckets); no
     /// effect in `Stochastic` mode. On by default.
     pub subgraph_cache: bool,
+    /// Partition-parallel shards (`coordinator::sharded`): 1 = plain serial
+    /// trainer; > 1 = one worker trainer per shard, run concurrently and
+    /// synchronized at epoch barriers.
+    pub shards: usize,
+    /// Epochs between parameter-averaging syncs (sharded runs only).
+    pub sync_every: usize,
+    /// How sharded workers synchronize: "avg" (synchronous parameter
+    /// averaging) or "hist" (averaging + boundary history-row exchange).
+    pub sync_mode: SyncMode,
     /// SPIDER anchor period (LMC-SPIDER only).
     pub spider_period: usize,
     /// Ablation (Fig. 4): run LMC with only the forward compensation C_f by
@@ -68,6 +78,9 @@ impl Default for RunConfig {
             artifact_dir: "artifacts".into(),
             pipeline: false,
             subgraph_cache: true,
+            shards: 1,
+            sync_every: 1,
+            sync_mode: SyncMode::Average,
             spider_period: 10,
             force_bwd_off: false,
             verbose: false,
@@ -148,6 +161,17 @@ impl RunConfig {
         if let Some(v) = get("subgraph_cache").and_then(|v| v.as_bool()) {
             self.subgraph_cache = v;
         }
+        if let Some(v) = get("shards").and_then(|v| v.as_i64()) {
+            // a negative value must not wrap to usize::MAX
+            self.shards = v.max(0) as usize;
+        }
+        if let Some(v) = get("sync_every").and_then(|v| v.as_i64()) {
+            self.sync_every = v.max(0) as usize;
+        }
+        if let Some(v) = get("sync_mode").and_then(|v| v.as_str()) {
+            self.sync_mode =
+                SyncMode::parse(v).ok_or_else(|| anyhow!("unknown sync_mode {v}"))?;
+        }
         if let Some(v) = get("spider_period").and_then(|v| v.as_i64()) {
             self.spider_period = v as usize;
         }
@@ -202,6 +226,16 @@ impl RunConfig {
         if let Some(v) = args.opt("artifacts") {
             self.artifact_dir = v.to_string();
         }
+        if let Some(v) = args.opt_usize("shards") {
+            self.shards = v;
+        }
+        if let Some(v) = args.opt_usize("sync-every") {
+            self.sync_every = v;
+        }
+        if let Some(v) = args.opt("sync-mode") {
+            self.sync_mode =
+                SyncMode::parse(v).ok_or_else(|| anyhow!("unknown sync-mode {v}"))?;
+        }
         if args.has_flag("fixed-batches") {
             self.batcher_mode = BatcherMode::Fixed;
         }
@@ -251,6 +285,30 @@ mod tests {
         assert_eq!(cfg.epochs, 3);
         assert_eq!(cfg.backend, Backend::Native);
         assert!(cfg.verbose);
+    }
+
+    #[test]
+    fn sharding_knobs_parse() {
+        let doc =
+            toml_parse("shards = 4\nsync_every = 3\nsync_mode = \"hist\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.shards, 1); // serial by default
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.sync_every, 3);
+        assert_eq!(cfg.sync_mode, SyncMode::HistoryExchange);
+        let args = Args::parse(
+            ["train", "--shards", "2", "--sync-every", "5", "--sync-mode", "avg"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert_eq!(cfg.shards, 2);
+        assert_eq!(cfg.sync_every, 5);
+        assert_eq!(cfg.sync_mode, SyncMode::Average);
+        assert!(SyncMode::parse("nope").is_none());
+        assert_eq!(SyncMode::Average.name(), "avg");
+        assert_eq!(SyncMode::HistoryExchange.name(), "hist");
     }
 
     #[test]

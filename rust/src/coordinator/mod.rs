@@ -7,10 +7,12 @@ pub mod memory;
 pub mod methods;
 pub mod metrics;
 pub mod params;
+pub mod sharded;
 pub mod trainer;
 
 pub use exact::{EvalResult, OracleResult};
 pub use methods::{BetaConfig, Method};
 pub use metrics::{EpochRecord, RunMetrics};
 pub use params::{Adam, AdamConfig, Params};
+pub use sharded::{ShardedTrainer, SyncMode, WorkerState};
 pub use trainer::{StepStats, Trainer};

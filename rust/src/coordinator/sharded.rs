@@ -1,0 +1,391 @@
+//! Partition-parallel sharded training: the first multi-trainer control
+//! plane over the [`Executor`](crate::backend::Executor) seam.
+//!
+//! The parent graph is partitioned into `cfg.shards` top-level shards with
+//! the METIS-substitute partitioner; each shard becomes a full worker — its
+//! own [`Trainer`] (executor handle, parameters, Adam state, history store,
+//! step workspace, subgraph cache) over a shard-local graph view
+//! ([`crate::partition::ShardView`]): the shard's core nodes plus the 1-hop
+//! halo of cut neighbors, GCN-renormalized locally, halo rows demoted out
+//! of the train split. Workers run their epochs concurrently on the rayon
+//! pool and the coordinator synchronizes them at epoch barriers with a
+//! pluggable [`SyncMode`]:
+//!
+//!   * [`SyncMode::Average`] — synchronous parameter averaging (weighted by
+//!     each shard's labeled-train count) every `cfg.sync_every` epochs;
+//!     per-worker Adam moments stay local (local-SGD style).
+//!   * [`SyncMode::HistoryExchange`] — additionally exchanges boundary
+//!     history rows every epoch: each worker's halo H/V rows are overwritten
+//!     with the owning shard's fresh core rows, so LMC's compensation sees
+//!     cross-shard neighbors ("Provably Convergent Subgraph-wise Sampling"-
+//!     style staleness tolerance). Parameter averaging still runs every
+//!     `sync_every` epochs, which can therefore be larger.
+//!
+//! All synchronization happens on the coordinator thread in fixed shard
+//! order, so results are bit-deterministic regardless of worker scheduling
+//! (`sharded_runs_are_deterministic_under_scheduling`), and a single-shard
+//! run degenerates to the plain serial trainer bit-for-bit
+//! (`shards_one_is_bit_identical_to_plain_trainer`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use rayon::prelude::*;
+
+use super::exact::EvalResult;
+use super::metrics::RunMetrics;
+use super::params::Params;
+use super::trainer::{record_epoch, EpochObs, StepStats, Trainer};
+use crate::backend::{Executor, ModelSpec};
+use crate::config::RunConfig;
+use crate::graph::{load, Graph};
+use crate::partition::{partition, shard_graph, shard_views, PartitionConfig, ShardView};
+use crate::util::Stopwatch;
+
+/// How sharded workers are synchronized at epoch barriers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Synchronous parameter averaging every `sync_every` epochs.
+    Average,
+    /// Boundary history-row exchange every epoch + parameter averaging
+    /// every `sync_every` epochs (staleness-tolerant: LMC compensation
+    /// covers the drift between averages).
+    HistoryExchange,
+}
+
+impl SyncMode {
+    pub fn parse(s: &str) -> Option<SyncMode> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "avg" | "average" | "sync" => SyncMode::Average,
+            "hist" | "history" | "history-exchange" | "async" => SyncMode::HistoryExchange,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncMode::Average => "avg",
+            SyncMode::HistoryExchange => "hist",
+        }
+    }
+}
+
+/// One shard's worker: a full [`Trainer`] over the shard-local graph plus
+/// the row-level routing metadata the parameter/history bus needs.
+///
+/// Workers hold their own handle to one shared executor — executors are
+/// stateless apart from a telemetry timer, which under concurrent workers
+/// reports the wall-clock union of busy intervals (see
+/// `NativeExecutor::time`), never affecting results.
+pub struct WorkerState {
+    /// Index into [`ShardedTrainer::workers`] (== index into `views`).
+    pub id: usize,
+    /// The reusable serial training core, over the shard-local graph.
+    pub trainer: Trainer,
+    /// Worker-internal node id -> parent-global node id (composes the
+    /// trainer's cluster-contiguous relabeling with the shard view map).
+    pub global_of: Vec<u32>,
+}
+
+/// One shard-to-shard boundary batch of the exchange plan: history rows
+/// `src_rows` of `src_worker` (its core copies) are copied into rows
+/// `dst_rows` of `dst_worker` (its halo copies of the same global nodes).
+#[derive(Clone, Debug)]
+struct ExchangeGroup {
+    src_worker: u32,
+    dst_worker: u32,
+    src_rows: Vec<u32>,
+    dst_rows: Vec<u32>,
+}
+
+pub struct ShardedTrainer {
+    pub exec: Arc<dyn Executor>,
+    pub cfg: RunConfig,
+    /// The unpartitioned parent graph (exact evaluation runs here).
+    pub parent: Arc<Graph>,
+    /// Resolved (profile, arch) — identical across workers.
+    pub model: ModelSpec,
+    pub workers: Vec<WorkerState>,
+    /// Shard views aligned with `workers`.
+    pub views: Vec<ShardView>,
+    /// Precomputed boundary-row routing, grouped per (src, dst) shard pair
+    /// in deterministic order.
+    plan: Vec<ExchangeGroup>,
+    pub metrics: RunMetrics,
+    epochs_done: usize,
+}
+
+impl ShardedTrainer {
+    pub fn new(exec: Arc<dyn Executor>, cfg: RunConfig) -> Result<ShardedTrainer> {
+        let raw = load(cfg.dataset, cfg.seed);
+        // clamp to [1, n]: more shards than nodes can never be non-empty,
+        // and an absurd config value must not turn the O(shards · n) view
+        // construction into a hang
+        let s = cfg.shards.clamp(1, raw.n().max(1));
+        let assign: Vec<u32> = if s == 1 {
+            vec![0; raw.n()]
+        } else {
+            partition(&raw.csr, &PartitionConfig::new(s, cfg.seed ^ 0x5AAD)).assign
+        };
+        let views = shard_views(&raw.csr, &assign, s);
+        if views.is_empty() {
+            return Err(anyhow!("sharding produced no non-empty shards"));
+        }
+        let mut workers: Vec<WorkerState> = Vec::with_capacity(views.len());
+        for (wid, view) in views.iter().enumerate() {
+            let wg = shard_graph(&raw, view);
+            let mut wcfg = cfg.clone();
+            // worker 0 keeps the parent seed so `shards = 1` is bit-identical
+            // to the plain Trainer; later workers get decorrelated streams
+            wcfg.seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let trainer = Trainer::from_parent_graph(exec.clone(), wcfg, wg)?;
+            let global_of: Vec<u32> =
+                trainer.orig_of.iter().map(|&old| view.global_of(old)).collect();
+            workers.push(WorkerState { id: wid, trainer, global_of });
+        }
+        // Common initialization: data-parallel training starts every worker
+        // from worker 0's Glorot draw (which is the serial trainer's draw,
+        // since worker 0 keeps the parent seed). Averaging independent
+        // inits would shrink the weights toward zero instead.
+        if workers.len() > 1 {
+            let init = workers[0].trainer.params.clone();
+            for w in workers.iter_mut().skip(1) {
+                for (dst, src) in w.trainer.params.tensors.iter_mut().zip(&init.tensors) {
+                    dst.data.copy_from_slice(&src.data);
+                }
+            }
+        }
+
+        // Ownership maps: the worker (and its internal row) where each
+        // global node is a *core* node. Every node is core in exactly one
+        // shard, so both maps are total.
+        let n = raw.n();
+        let mut owner_worker = vec![u32::MAX; n];
+        let mut owner_row = vec![u32::MAX; n];
+        for (wid, w) in workers.iter().enumerate() {
+            let nc = views[wid].n_core();
+            for (row, &old) in w.trainer.orig_of.iter().enumerate() {
+                if (old as usize) < nc {
+                    let g = w.global_of[row] as usize;
+                    owner_worker[g] = wid as u32;
+                    owner_row[g] = row as u32;
+                }
+            }
+        }
+        // Exchange plan: route every worker's halo row to the owning
+        // worker's core row, batched per (src, dst) pair. BTreeMap keys the
+        // groups deterministically; rows within a group follow the dst
+        // worker's internal row order.
+        let mut groups: BTreeMap<(u32, u32), (Vec<u32>, Vec<u32>)> = BTreeMap::new();
+        for (wid, w) in workers.iter().enumerate() {
+            let nc = views[wid].n_core();
+            for (row, &old) in w.trainer.orig_of.iter().enumerate() {
+                if (old as usize) >= nc {
+                    let g = w.global_of[row] as usize;
+                    let (src_w, src_r) = (owner_worker[g], owner_row[g]);
+                    debug_assert!(src_w != u32::MAX, "halo node {g} has no owner");
+                    let e = groups.entry((src_w, wid as u32)).or_default();
+                    e.0.push(src_r);
+                    e.1.push(row as u32);
+                }
+            }
+        }
+        let plan = groups
+            .into_iter()
+            .map(|((src_worker, dst_worker), (src_rows, dst_rows))| ExchangeGroup {
+                src_worker,
+                dst_worker,
+                src_rows,
+                dst_rows,
+            })
+            .collect();
+
+        let model = workers[0].trainer.model.clone();
+        Ok(ShardedTrainer {
+            exec,
+            cfg,
+            parent: Arc::new(raw),
+            model,
+            workers,
+            views,
+            plan,
+            metrics: RunMetrics::default(),
+            epochs_done: 0,
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Total boundary history rows routed per exchange round.
+    pub fn boundary_rows(&self) -> usize {
+        self.plan.iter().map(|g| g.src_rows.len()).sum()
+    }
+
+    /// One sharded epoch: every worker trains one epoch concurrently on the
+    /// rayon pool, then the coordinator synchronizes at the barrier.
+    /// Returns labeled-weighted aggregate stats across shards.
+    pub fn train_epoch(&mut self) -> Result<StepStats> {
+        let stats: Vec<StepStats> = self
+            .workers
+            .par_iter_mut()
+            .map(|w| w.trainer.train_epoch())
+            .collect::<Result<Vec<_>>>()?;
+        self.epochs_done += 1;
+        if self.cfg.sync_mode == SyncMode::HistoryExchange {
+            self.exchange_boundary_histories();
+        }
+        if self.epochs_done % self.cfg.sync_every.max(1) == 0 {
+            self.average_params();
+        }
+        Ok(combine_stats(&stats))
+    }
+
+    /// Copy every worker's halo history rows (H and V, all stored layers)
+    /// from the owning shard's fresh core rows. Two-phase (gather all
+    /// payloads, then scatter) so no worker is read and written in the same
+    /// pass; runs on the coordinator thread in plan order.
+    pub fn exchange_boundary_histories(&mut self) {
+        for l in 1..self.model.arch.l {
+            let payload = self
+                .plan
+                .iter()
+                .map(|g| {
+                    self.workers[g.src_worker as usize]
+                        .trainer
+                        .history
+                        .export_rows(l, &g.src_rows)
+                })
+                .collect::<Vec<_>>();
+            for (g, (h, v)) in self.plan.iter().zip(payload) {
+                self.workers[g.dst_worker as usize]
+                    .trainer
+                    .history
+                    .import_rows(l, &g.dst_rows, &h, &v);
+            }
+        }
+    }
+
+    /// True when every worker's halo history rows (layer `l`) bitwise match
+    /// the owning shard's core rows — the post-exchange invariant.
+    pub fn boundary_in_sync(&self, l: usize) -> bool {
+        self.plan.iter().all(|g| {
+            let src =
+                self.workers[g.src_worker as usize].trainer.history.export_rows(l, &g.src_rows);
+            let dst =
+                self.workers[g.dst_worker as usize].trainer.history.export_rows(l, &g.dst_rows);
+            src == dst
+        })
+    }
+
+    /// Labeled-train-count weights of the averaging bus (uniform when no
+    /// shard holds labeled nodes).
+    fn shard_weights(&self) -> Vec<f64> {
+        let total: f64 = self.workers.iter().map(|w| w.trainer.n_train as f64).sum();
+        if total > 0.0 {
+            self.workers.iter().map(|w| w.trainer.n_train as f64 / total).collect()
+        } else {
+            vec![1.0 / self.workers.len() as f64; self.workers.len()]
+        }
+    }
+
+    /// The weighted parameter average across workers (does not mutate
+    /// worker state; evaluation uses this without forcing a sync).
+    pub fn averaged_params(&self) -> Params {
+        let weights = self.shard_weights();
+        let mut avg = self.workers[0].trainer.params.clone();
+        for (ti, t) in avg.tensors.iter_mut().enumerate() {
+            for (i, x) in t.data.iter_mut().enumerate() {
+                let mut acc = 0f64;
+                for (w, wt) in self.workers.iter().zip(&weights) {
+                    acc += w.trainer.params.tensors[ti].data[i] as f64 * wt;
+                }
+                *x = acc as f32;
+            }
+        }
+        avg
+    }
+
+    /// Synchronous averaging: overwrite every worker's parameters with the
+    /// weighted average. Adam moments stay local.
+    pub fn average_params(&mut self) {
+        let avg = self.averaged_params();
+        for w in &mut self.workers {
+            for (dst, src) in w.trainer.params.tensors.iter_mut().zip(&avg.tensors) {
+                dst.data.copy_from_slice(&src.data);
+            }
+        }
+    }
+
+    /// Exact evaluation of the (averaged) model on the parent graph.
+    pub fn evaluate(&self) -> Result<EvalResult> {
+        let params = self.averaged_params();
+        self.exec.evaluate(self.parent.as_ref(), &params, &self.model)
+    }
+
+    /// Node-weighted mean history staleness across workers.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.workers.len() == 1 {
+            return self.workers[0].trainer.history.mean_staleness();
+        }
+        let total: usize = self.workers.iter().map(|w| w.trainer.graph.n()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.workers
+            .iter()
+            .map(|w| w.trainer.history.mean_staleness() * w.trainer.graph.n() as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Full sharded training run: the same epoch protocol as
+    /// [`Trainer::run`] (shared via `record_epoch`), with evaluation of the
+    /// averaged model on the parent graph.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        let sw = Stopwatch::start();
+        for epoch in 1..=self.cfg.epochs {
+            let es = Stopwatch::start();
+            let stats = self.train_epoch()?;
+            let epoch_secs = es.secs();
+            let do_eval = epoch % self.cfg.eval_every.max(1) == 0 || epoch == self.cfg.epochs;
+            let eval = if do_eval { Some(self.evaluate()?) } else { None };
+            let staleness = self.mean_staleness();
+            let obs = EpochObs {
+                epoch,
+                epoch_secs,
+                stats: &stats,
+                eval: eval.as_ref(),
+                staleness,
+                shards: Some(self.workers.len()),
+            };
+            if record_epoch(&mut self.metrics, &self.cfg, &sw, obs) {
+                break;
+            }
+        }
+        Ok(self.metrics.clone())
+    }
+}
+
+/// Labeled-weighted aggregate of per-shard epoch stats. `active_bytes` sums
+/// across shards (the workers run concurrently, so their simulated
+/// accelerator footprints coexist). The single-shard case passes stats
+/// through untouched so `shards = 1` stays bit-identical to the serial
+/// trainer.
+fn combine_stats(per_shard: &[StepStats]) -> StepStats {
+    if per_shard.len() == 1 {
+        return per_shard[0].clone();
+    }
+    let labeled: usize = per_shard.iter().map(|s| s.labeled).sum();
+    let lw: f64 = per_shard.iter().map(|s| s.loss_mean * s.labeled as f64).sum();
+    let aw: f64 = per_shard.iter().map(|s| s.train_acc * s.labeled as f64).sum();
+    StepStats {
+        loss_mean: lw / labeled.max(1) as f64,
+        train_acc: aw / labeled.max(1) as f64,
+        labeled,
+        active_bytes: per_shard.iter().map(|s| s.active_bytes).sum(),
+        dropped_halo: per_shard.iter().map(|s| s.dropped_halo).sum(),
+    }
+}

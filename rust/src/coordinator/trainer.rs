@@ -18,8 +18,7 @@ use crate::history::History;
 use crate::partition::{partition, PartitionConfig};
 use crate::runtime::Tensor;
 use crate::sampler::{
-    beta_vector, beta_vector_into, build_subgraph, Batcher, BatcherMode, Buckets, SubgraphBatch,
-    SubgraphCache,
+    beta_vector, beta_vector_into, build_subgraph, Batcher, Buckets, SubgraphBatch, SubgraphCache,
 };
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
@@ -51,6 +50,11 @@ pub struct Trainer {
     /// (enabled only when the schedule is deterministic; see
     /// [`SubgraphCache`] for the applicability matrix).
     pub sg_cache: SubgraphCache,
+    /// The cluster-contiguous relabeling applied to the input graph:
+    /// `orig_of[internal] = pre-permutation id`. The sharded coordinator
+    /// composes this with its shard-local -> global map to route boundary
+    /// history rows between workers.
+    pub orig_of: Vec<u32>,
     /// SPIDER state (Appendix F): previous params + running estimator.
     spider_prev: Option<(Params, Vec<Tensor>)>,
     step_count: u64,
@@ -69,6 +73,19 @@ pub struct StepStats {
 impl Trainer {
     pub fn new(exec: Arc<dyn Executor>, cfg: RunConfig) -> Result<Trainer> {
         let raw = load(cfg.dataset, cfg.seed);
+        Trainer::from_parent_graph(exec, cfg, raw)
+    }
+
+    /// Build a trainer over an explicitly-given graph — the reusable
+    /// worker-state constructor. [`Trainer::new`] routes the loaded dataset
+    /// through here; `coordinator::sharded` passes shard-local graphs, so a
+    /// sharded worker is the *same* training core as the serial path rather
+    /// than a fork of it (and `shards = 1` is bit-identical to `new`).
+    pub fn from_parent_graph(
+        exec: Arc<dyn Executor>,
+        cfg: RunConfig,
+        raw: Graph,
+    ) -> Result<Trainer> {
         let profile = cfg.dataset.profile().to_string();
         let arch = exec.resolve_arch(&profile, &cfg.arch)?;
         let prof = exec.resolve_profile(&profile)?;
@@ -120,9 +137,7 @@ impl Trainer {
         // Fixed groups + unbounded buckets => subgraph construction is a
         // deterministic function of the (identical-every-epoch) batch, so
         // blocks can be built once and reused (see SubgraphCache docs).
-        let cache_ok = cfg.subgraph_cache
-            && batcher.mode() == BatcherMode::Fixed
-            && buckets.is_unbounded();
+        let cache_ok = SubgraphCache::applicable(cfg.subgraph_cache, batcher.mode(), &buckets);
         Ok(Trainer {
             exec,
             cfg,
@@ -140,6 +155,7 @@ impl Trainer {
             ws: Mutex::new(StepWorkspace::new()),
             reuse_workspace: true,
             sg_cache: SubgraphCache::new(cache_ok),
+            orig_of: perm,
             spider_prev: None,
             step_count: 0,
         })
@@ -486,37 +502,75 @@ impl Trainer {
             let epoch_secs = es.secs();
             let do_eval = epoch % self.cfg.eval_every.max(1) == 0 || epoch == self.cfg.epochs;
             let eval = if do_eval { Some(self.evaluate()?) } else { None };
-            let rec = EpochRecord {
+            let staleness = self.history.mean_staleness();
+            let obs = EpochObs {
                 epoch,
-                wall_secs: sw.secs(),
                 epoch_secs,
-                train_loss: stats.loss_mean,
-                train_acc: stats.train_acc,
-                val_acc: eval.as_ref().map(|e| e.val_acc).unwrap_or(f64::NAN),
-                test_acc: eval.as_ref().map(|e| e.test_acc).unwrap_or(f64::NAN),
-                active_bytes: stats.active_bytes,
-                staleness: self.history.mean_staleness(),
+                stats: &stats,
+                eval: eval.as_ref(),
+                staleness,
+                shards: None,
             };
-            if self.cfg.verbose {
-                println!(
-                    "epoch {:>4}  loss {:.4}  val {:.4}  test {:.4}  ({:.2}s)",
-                    epoch,
-                    rec.train_loss,
-                    rec.val_acc,
-                    rec.test_acc,
-                    rec.wall_secs
-                );
-            }
-            self.metrics.push(rec);
-            if let (Some(target), Some(e)) = (self.cfg.target_acc, eval.as_ref()) {
-                if e.test_acc >= target {
-                    self.metrics.reached_target = Some((epoch, sw.secs()));
-                    break;
-                }
+            if record_epoch(&mut self.metrics, &self.cfg, &sw, obs) {
+                break;
             }
         }
         Ok(self.metrics.clone())
     }
+}
+
+/// One epoch's observations, shared by the serial and sharded run loops.
+pub(crate) struct EpochObs<'a> {
+    pub epoch: usize,
+    pub epoch_secs: f64,
+    pub stats: &'a StepStats,
+    pub eval: Option<&'a EvalResult>,
+    pub staleness: f64,
+    /// `Some(worker count)` on the sharded path (annotates the verbose line).
+    pub shards: Option<usize>,
+}
+
+/// Shared per-epoch bookkeeping for [`Trainer::run`] and
+/// `ShardedTrainer::run`: assemble and push the [`EpochRecord`], emit the
+/// verbose line, and apply the `target_acc` early-stop protocol. Returns
+/// true when the target was reached (and `reached_target` recorded), so the
+/// caller's epoch loop knows to stop — keeping the two run loops from
+/// drifting apart.
+pub(crate) fn record_epoch(
+    metrics: &mut RunMetrics,
+    cfg: &RunConfig,
+    sw: &Stopwatch,
+    obs: EpochObs,
+) -> bool {
+    let rec = EpochRecord {
+        epoch: obs.epoch,
+        wall_secs: sw.secs(),
+        epoch_secs: obs.epoch_secs,
+        train_loss: obs.stats.loss_mean,
+        train_acc: obs.stats.train_acc,
+        val_acc: obs.eval.map(|e| e.val_acc).unwrap_or(f64::NAN),
+        test_acc: obs.eval.map(|e| e.test_acc).unwrap_or(f64::NAN),
+        active_bytes: obs.stats.active_bytes,
+        staleness: obs.staleness,
+    };
+    if cfg.verbose {
+        let suffix = match obs.shards {
+            Some(s) => format!(", {s} shards"),
+            None => String::new(),
+        };
+        println!(
+            "epoch {:>4}  loss {:.4}  val {:.4}  test {:.4}  ({:.2}s{})",
+            rec.epoch, rec.train_loss, rec.val_acc, rec.test_acc, rec.wall_secs, suffix
+        );
+    }
+    metrics.push(rec);
+    if let (Some(target), Some(e)) = (cfg.target_acc, obs.eval) {
+        if e.test_acc >= target {
+            metrics.reached_target = Some((obs.epoch, sw.secs()));
+            return true;
+        }
+    }
+    false
 }
 
 /// Join the prefetch thread, converting a panic into a readable error

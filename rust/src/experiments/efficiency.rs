@@ -1,11 +1,12 @@
 //! Table 2 (epochs / runtime to target accuracy + memory), Table 6
-//! (training time per epoch), Table 7 (memory + reserved messages).
+//! (training time per epoch), Table 7 (memory + reserved messages), and the
+//! sharded-vs-serial throughput table (`experiment sharded`).
 
 use anyhow::Result;
 
 use super::Ctx;
 use crate::coordinator::memory::{gd_active_bytes, reserved_messages};
-use crate::coordinator::Method;
+use crate::coordinator::{Method, SyncMode};
 use crate::graph::load;
 use crate::util::table::Table;
 
@@ -90,6 +91,50 @@ pub fn run_table6(ctx: &Ctx) -> Result<Table> {
         t.row(cells);
     }
     t.save(&ctx.out, "table6")?;
+    println!("{}", t.to_markdown());
+    Ok(t)
+}
+
+/// Sharded-vs-serial throughput: partition-parallel workers (one trainer
+/// per shard, synchronized at epoch barriers) against the single-trainer
+/// baseline — same dataset, arch, method, and epoch budget. The serial row
+/// anchors the speedup column; the `hist` row adds the boundary
+/// history-row exchange on top of parameter averaging.
+pub fn run_sharded(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Sharded training: partition-parallel throughput vs serial",
+        &["dataset&gnn", "shards", "sync_mode", "mean_epoch_s", "speedup", "final_train_loss"],
+    );
+    let (ds, arch, method) = ("arxiv-sim", "gcn", "lmc");
+    let epochs = ctx.epochs(10);
+    let mut serial_secs = f64::NAN;
+    for &(shards, mode) in &[(1usize, "avg"), (2, "avg"), (4, "avg"), (4, "hist")] {
+        let mut cfg = ctx.base_cfg(ds, arch, method)?;
+        cfg.epochs = epochs;
+        cfg.eval_every = usize::MAX;
+        cfg.shards = shards;
+        cfg.sync_mode = SyncMode::parse(mode).unwrap();
+        let m = if shards == 1 {
+            ctx.run(cfg)?.1
+        } else {
+            ctx.run_sharded(cfg)?.1
+        };
+        let mean = m.mean_epoch_secs();
+        if shards == 1 {
+            serial_secs = mean;
+        }
+        let final_loss = m.records.last().map(|r| r.train_loss).unwrap_or(f64::NAN);
+        t.row(vec![
+            format!("{ds} & {arch}"),
+            shards.to_string(),
+            if shards == 1 { "serial".into() } else { mode.to_string() },
+            format!("{mean:.3}"),
+            format!("{:.2}x", serial_secs / mean),
+            format!("{final_loss:.4}"),
+        ]);
+        println!("sharded: {shards} shards ({mode}) {mean:.3}s/epoch, final loss {final_loss:.4}");
+    }
+    t.save(&ctx.out, "sharded")?;
     println!("{}", t.to_markdown());
     Ok(t)
 }

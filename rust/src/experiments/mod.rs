@@ -19,12 +19,12 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::{make_executor, Backend, Executor};
 use crate::config::RunConfig;
-use crate::coordinator::{RunMetrics, Trainer};
+use crate::coordinator::{RunMetrics, ShardedTrainer, Trainer};
 use crate::util::cli::Args;
 
 pub use ablation::{run_fig4, run_table8, run_table9};
 pub use curves::{run_fig2, run_fig5};
-pub use efficiency::{run_table2, run_table6, run_table7};
+pub use efficiency::{run_sharded, run_table2, run_table6, run_table7};
 pub use grad_error::run_fig3;
 pub use prediction::{run_table1, run_table3};
 
@@ -72,6 +72,15 @@ impl Ctx {
         Ok((t, m))
     }
 
+    /// Build and run one partition-parallel sharded configuration
+    /// (`cfg.shards` workers; see `coordinator::sharded`).
+    pub fn run_sharded(&self, mut cfg: RunConfig) -> Result<(ShardedTrainer, RunMetrics)> {
+        cfg.backend = self.backend;
+        let mut t = ShardedTrainer::new(self.exec.clone(), cfg)?;
+        let m = t.run()?;
+        Ok((t, m))
+    }
+
     pub fn base_cfg(&self, dataset: &str, arch: &str, method: &str) -> Result<RunConfig> {
         let mut cfg = RunConfig {
             seed: self.seed,
@@ -111,6 +120,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "table7" => run_table7(&ctx).map(|_| ()),
         "table8" => run_table8(&ctx).map(|_| ()),
         "table9" => run_table9(&ctx).map(|_| ()),
+        "sharded" => run_sharded(&ctx).map(|_| ()),
         "fig2" => run_fig2(&ctx).map(|_| ()),
         "fig3" => run_fig3(&ctx).map(|_| ()),
         "fig4" => run_fig4(&ctx).map(|_| ()),
@@ -123,6 +133,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
             run_table7(&ctx)?;
             run_table8(&ctx)?;
             run_table9(&ctx)?;
+            run_sharded(&ctx)?;
             run_fig2(&ctx)?;
             run_fig3(&ctx)?;
             run_fig4(&ctx)?;

@@ -86,6 +86,26 @@ impl History {
         scatter(&mut self.v[l - 1], idx, src);
     }
 
+    /// Pack layer-`l` H and V rows `idx` into dense `[idx.len(), d]`
+    /// buffers — the send side of the cross-shard boundary exchange (a
+    /// shard exports the rows other shards see as halo).
+    pub fn export_rows(&self, l: usize, idx: &[u32]) -> (Vec<f32>, Vec<f32>) {
+        (self.gather_h(l, idx, idx.len()), self.gather_v(l, idx, idx.len()))
+    }
+
+    /// Unpack buffers packed by [`History::export_rows`] into rows `idx` —
+    /// the receive side of the boundary exchange. `h`/`v` must hold
+    /// `idx.len()` rows each. Imported rows count as freshly written at the
+    /// current iteration, so the staleness metric sees the exchange (the
+    /// whole point of hist-mode sync is lowering boundary staleness).
+    pub fn import_rows(&mut self, l: usize, idx: &[u32], h: &[f32], v: &[f32]) {
+        self.scatter_h(l, idx, h);
+        self.scatter_v(l, idx, v);
+        for &u in idx {
+            self.last_update[u as usize] = self.iter;
+        }
+    }
+
     /// FM momentum push: hist <- (1-m) * hist + m * fresh for halo rows.
     pub fn momentum_h(&mut self, l: usize, idx: &[u32], fresh: &[f32], m: f32) {
         let store = &mut self.h[l - 1];
@@ -151,6 +171,31 @@ mod tests {
         // untouched rows stay zero
         let other = h.gather_h(1, &[0, 1], 2);
         assert!(other.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn export_import_rows_roundtrip_across_stores() {
+        let mut a = History::new(6, &[3]);
+        a.scatter_h(1, &[1, 4], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        a.scatter_v(1, &[1, 4], &[6.0, 5.0, 4.0, 3.0, 2.0, 1.0]);
+        let (h, v) = a.export_rows(1, &[1, 4]);
+        assert_eq!(h, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(v, vec![6.0, 5.0, 4.0, 3.0, 2.0, 1.0]);
+        // import into different rows of a differently-sized store
+        let mut b = History::new(10, &[3]);
+        b.import_rows(1, &[0, 9], &h, &v);
+        assert_eq!(b.gather_h(1, &[0, 9], 2), h);
+        assert_eq!(b.gather_v(1, &[0, 9], 2), v);
+        // rows not addressed stay zero
+        assert!(b.gather_h(1, &[5], 1).iter().all(|&x| x == 0.0));
+        // imported rows count as freshly written for staleness purposes
+        let mut c = History::new(4, &[3]);
+        c.tick(&[0, 1, 2, 3]);
+        c.tick(&[0]); // iter = 2; rows 1..4 last written at iter 1
+        c.import_rows(1, &[1, 2], &h, &v);
+        assert_eq!(c.last_update[1], 2);
+        assert_eq!(c.last_update[2], 2);
+        assert_eq!(c.last_update[3], 1);
     }
 
     #[test]

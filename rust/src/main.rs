@@ -9,7 +9,7 @@
 //!   grad-error        per-layer mini-batch gradient error (Fig. 3 point)
 //!   experiment <id>   regenerate a paper table/figure (table1, table2,
 //!                     table3, table6, table7, table8, table9, fig2, fig3,
-//!                     fig4, fig5, all)
+//!                     fig4, fig5, sharded, all)
 
 use std::path::Path;
 
@@ -17,7 +17,7 @@ use anyhow::{anyhow, Result};
 
 use lmc::backend::make_executor;
 use lmc::config::RunConfig;
-use lmc::coordinator::{grad_check, Trainer};
+use lmc::coordinator::{grad_check, RunMetrics, ShardedTrainer, Trainer};
 use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, quality::quality, PartitionConfig};
 use lmc::util::cli::Args;
@@ -62,6 +62,7 @@ subcommands:
   train            --dataset D --arch gcn|gcnii --method lmc|gas|fm|cluster|gd
                    [--backend native|pjrt] [--epochs N] [--lr F]
                    [--clusters-per-batch C] [--parts K]
+                   [--shards S] [--sync-every K] [--sync-mode avg|hist]
                    [--beta-alpha F] [--beta-score x2|2x-x2|x|1|sinx]
                    [--target-acc F] [--config file.toml] [--seed N] [--verbose]
   eval             exact inference with fresh params (pipeline smoke test)
@@ -70,7 +71,7 @@ subcommands:
   programs         list artifact programs (--artifacts DIR; pjrt builds only)
   grad-error       --dataset D --method M [--warm-epochs N]
   experiment ID    table1|table2|table3|table6|table7|table8|table9|
-                   fig2|fig3|fig4|fig5|all   [--out results/]
+                   fig2|fig3|fig4|fig5|sharded|all   [--out results/]
 ";
 
 fn make_trainer(args: &Args) -> Result<Trainer> {
@@ -81,7 +82,33 @@ fn make_trainer(args: &Args) -> Result<Trainer> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let mut trainer = make_trainer(args)?;
+    let mut cfg = RunConfig::default();
+    cfg.apply_cli(args)?;
+    let exec = make_executor(&cfg)?;
+    if cfg.shards > 1 {
+        let mut st = ShardedTrainer::new(exec, cfg)?;
+        println!(
+            "training {} / {} / {} on {} backend — {} nodes, {} shards, sync {} every {} epoch(s), {} epochs",
+            st.cfg.dataset.name(),
+            st.cfg.arch,
+            st.cfg.method.name(),
+            st.exec.backend_name(),
+            st.parent.n(),
+            st.num_workers(),
+            st.cfg.sync_mode.name(),
+            st.cfg.sync_every.max(1),
+            st.cfg.epochs
+        );
+        let metrics = st.run()?;
+        return report_metrics(
+            &metrics,
+            st.cfg.dataset.name(),
+            &st.cfg.arch,
+            st.cfg.method.name(),
+            args,
+        );
+    }
+    let mut trainer = Trainer::new(exec, cfg)?;
     println!(
         "training {} / {} / {} on {} backend — {} nodes, {} clusters, {} epochs",
         trainer.cfg.dataset.name(),
@@ -93,6 +120,24 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.cfg.epochs
     );
     let metrics = trainer.run()?;
+    report_metrics(
+        &metrics,
+        trainer.cfg.dataset.name(),
+        &trainer.cfg.arch,
+        trainer.cfg.method.name(),
+        args,
+    )
+}
+
+/// Post-run summary + optional curve export, shared by the serial and
+/// sharded train paths.
+fn report_metrics(
+    metrics: &RunMetrics,
+    dataset: &str,
+    arch: &str,
+    method: &str,
+    args: &Args,
+) -> Result<()> {
     let (bv, bt) = metrics.best_val_test().unwrap_or((f64::NAN, f64::NAN));
     println!(
         "done in {:.1}s — best val {:.4}, test@best-val {:.4}, final test {:.4}",
@@ -105,12 +150,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("target accuracy reached at epoch {ep} ({secs:.1}s)");
     }
     if let Some(out) = args.opt("out") {
-        let label = format!(
-            "{}_{}_{}",
-            trainer.cfg.dataset.name(),
-            trainer.cfg.arch,
-            trainer.cfg.method.name()
-        );
+        let label = format!("{dataset}_{arch}_{method}");
         metrics.curve_table(&label).save(Path::new(out), &label)?;
         println!("curve saved to {out}/{label}.csv");
     }

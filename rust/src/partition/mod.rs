@@ -8,11 +8,13 @@
 
 pub mod quality;
 pub mod refine;
+pub mod shard;
 
 use crate::graph::Csr;
 use crate::util::rng::Rng;
 
 pub use quality::{balance, edge_cut, PartitionQuality};
+pub use shard::{shard_graph, shard_views, ShardView, HALO_SPLIT};
 
 /// A k-way node assignment.
 #[derive(Clone, Debug)]

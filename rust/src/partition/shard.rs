@@ -1,0 +1,221 @@
+//! Shard-local graph views for partition-parallel training.
+//!
+//! A `ShardView` is the per-trainer slice of a k-way partition: the shard's
+//! own ("core") nodes, the 1-hop out-of-shard boundary ("halo") nodes, and a
+//! shard-local CSR over core + halo. The view keeps every parent edge with
+//! at least one core endpoint — core-core edges live in exactly one shard,
+//! cut edges appear in both incident shards (core→halo on each side), and
+//! halo-halo edges are dropped (they belong to some other shard's core).
+//! That makes the union of all views' edge sets round-trip the parent edge
+//! set exactly (`prop_shard_local_csr_roundtrips_parent_edges`).
+//!
+//! [`shard_graph`] materializes the attributed worker [`Graph`] the sharded
+//! coordinator trains on (see `coordinator::sharded`).
+
+use crate::graph::{Csr, Graph};
+
+/// Split value assigned to halo rows in a worker graph: halo nodes are
+/// visible for aggregation and history compensation but belong to *no*
+/// train/val/test set of the shard — a dedicated sentinel (train = 0,
+/// val = 1, test = 2), so no label is optimized by more than one shard and
+/// an accidental per-worker evaluation cannot count halo rows as real
+/// val/test examples (the backends' split accounting reserves a slot for
+/// this sentinel).
+pub const HALO_SPLIT: u8 = 3;
+
+/// One shard's local slice of the parent graph.
+#[derive(Clone, Debug)]
+pub struct ShardView {
+    pub shard_id: usize,
+    /// Sorted global ids this shard owns ("core" nodes).
+    pub nodes: Vec<u32>,
+    /// Sorted global ids of 1-hop out-of-shard neighbors ("halo").
+    pub halo: Vec<u32>,
+    /// Shard-local CSR over `nodes.len() + halo.len()` locals, core ids
+    /// first: every parent edge with >= 1 core endpoint, halo-halo dropped.
+    pub csr: Csr,
+}
+
+impl ShardView {
+    pub fn n_core(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn n_local(&self) -> usize {
+        self.nodes.len() + self.halo.len()
+    }
+
+    /// Global id of shard-local node `local` (core ids come first).
+    #[inline]
+    pub fn global_of(&self, local: u32) -> u32 {
+        let l = local as usize;
+        if l < self.nodes.len() {
+            self.nodes[l]
+        } else {
+            self.halo[l - self.nodes.len()]
+        }
+    }
+
+    /// Shard-local id of global node `g`, if visible in this shard.
+    pub fn local_of(&self, g: u32) -> Option<u32> {
+        if let Ok(i) = self.nodes.binary_search(&g) {
+            return Some(i as u32);
+        }
+        self.halo
+            .binary_search(&g)
+            .ok()
+            .map(|i| (self.nodes.len() + i) as u32)
+    }
+}
+
+/// Build the per-shard local views of `csr` under the k-way `assign`ment.
+/// Empty shards are skipped, so the result may hold fewer than `k` views;
+/// every node is core in exactly one returned view.
+pub fn shard_views(csr: &Csr, assign: &[u32], k: usize) -> Vec<ShardView> {
+    assert_eq!(assign.len(), csr.n, "assignment must cover every node");
+    let mut views = Vec::with_capacity(k);
+    for s in 0..k {
+        let sid = s as u32;
+        let nodes: Vec<u32> =
+            (0..csr.n as u32).filter(|&u| assign[u as usize] == sid).collect();
+        if nodes.is_empty() {
+            continue;
+        }
+        let mut halo: Vec<u32> = Vec::new();
+        let mut seen = vec![false; csr.n];
+        for &u in &nodes {
+            for &v in csr.neighbors(u as usize) {
+                if assign[v as usize] != sid && !seen[v as usize] {
+                    seen[v as usize] = true;
+                    halo.push(v);
+                }
+            }
+        }
+        halo.sort_unstable();
+        let nb = nodes.len();
+        let mut pos = vec![u32::MAX; csr.n];
+        for (i, &u) in nodes.iter().enumerate() {
+            pos[u as usize] = i as u32;
+        }
+        for (i, &u) in halo.iter().enumerate() {
+            pos[u as usize] = (nb + i) as u32;
+        }
+        // Emit each kept undirected edge once; `Csr::from_edges`
+        // symmetrizes. Core-core from the lower local endpoint, core-halo
+        // always from the core side (the halo side is never iterated).
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for &u in &nodes {
+            let lu = pos[u as usize];
+            for &v in csr.neighbors(u as usize) {
+                let lv = pos[v as usize];
+                debug_assert!(lv != u32::MAX, "core neighbor must be core or halo");
+                if (lv as usize) >= nb || lu < lv {
+                    edges.push((lu, lv));
+                }
+            }
+        }
+        let local = Csr::from_edges(nb + halo.len(), &edges);
+        views.push(ShardView { shard_id: s, nodes, halo, csr: local });
+    }
+    views
+}
+
+/// Materialize the attributed worker [`Graph`] for `view`: features, labels
+/// and split copied from the parent, GCN normalization recomputed on the
+/// shard-local topology, halo rows demoted to [`HALO_SPLIT`] so they are
+/// never trained (or double-counted) by this shard.
+pub fn shard_graph(parent: &Graph, view: &ShardView) -> Graph {
+    let nl = view.n_local();
+    let d = parent.d_x;
+    let mut features = Vec::with_capacity(nl * d);
+    let mut labels = Vec::with_capacity(nl);
+    let mut split = Vec::with_capacity(nl);
+    let mut graph_id = Vec::with_capacity(nl);
+    for &g in view.nodes.iter().chain(view.halo.iter()) {
+        let g = g as usize;
+        features.extend_from_slice(parent.feature_row(g));
+        labels.push(parent.labels[g]);
+        split.push(parent.split[g]);
+        graph_id.push(parent.graph_id[g]);
+    }
+    for sp in split[view.n_core()..].iter_mut() {
+        *sp = HALO_SPLIT;
+    }
+    let mut g = Graph::new(view.csr.clone(), d, parent.n_class, features, labels, split);
+    g.graph_id = graph_id;
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph() -> Csr {
+        // 0-1-2-3-4-5
+        Csr::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)])
+    }
+
+    #[test]
+    fn views_split_a_path() {
+        let csr = path_graph();
+        let assign = vec![0, 0, 0, 1, 1, 1];
+        let views = shard_views(&csr, &assign, 2);
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].nodes, vec![0, 1, 2]);
+        assert_eq!(views[0].halo, vec![3]);
+        assert_eq!(views[1].nodes, vec![3, 4, 5]);
+        assert_eq!(views[1].halo, vec![2]);
+        // shard 0 locals: 0,1,2 core; 3 (global 3) halo — edges 0-1, 1-2, 2-3
+        assert_eq!(views[0].csr.num_undirected_edges(), 3);
+        assert!(views[0].csr.has_edge(2, 3));
+        assert_eq!(views[0].global_of(3), 3);
+        assert_eq!(views[0].local_of(3), Some(3));
+        assert_eq!(views[0].local_of(4), None);
+        assert_eq!(views[1].global_of(3), 2);
+    }
+
+    #[test]
+    fn single_shard_view_is_the_whole_graph() {
+        let csr = path_graph();
+        let assign = vec![0; 6];
+        let views = shard_views(&csr, &assign, 1);
+        assert_eq!(views.len(), 1);
+        assert_eq!(views[0].nodes, (0..6u32).collect::<Vec<_>>());
+        assert!(views[0].halo.is_empty());
+        assert_eq!(views[0].csr, csr);
+    }
+
+    #[test]
+    fn empty_shards_are_skipped() {
+        let csr = path_graph();
+        let assign = vec![0, 0, 0, 2, 2, 2]; // shard 1 empty
+        let views = shard_views(&csr, &assign, 3);
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].shard_id, 0);
+        assert_eq!(views[1].shard_id, 2);
+    }
+
+    #[test]
+    fn shard_graph_demotes_halo_split() {
+        let csr = path_graph();
+        let parent = Graph::new(
+            csr,
+            2,
+            2,
+            (0..12).map(|x| x as f32).collect(),
+            vec![0, 0, 0, 1, 1, 1],
+            vec![0, 0, 0, 0, 1, 2],
+        );
+        let views = shard_views(&parent.csr, &[0, 0, 0, 1, 1, 1], 2);
+        let g0 = shard_graph(&parent, &views[0]);
+        assert_eq!(g0.n(), 4);
+        // core rows keep the parent split; the halo row (global 3, train in
+        // the parent) is demoted so shard 0 never optimizes its label
+        assert_eq!(g0.split, vec![0, 0, 0, HALO_SPLIT]);
+        assert_eq!(g0.labels, vec![0, 0, 0, 1]);
+        assert_eq!(&g0.features[..2], parent.feature_row(0));
+        assert_eq!(&g0.features[6..8], parent.feature_row(3));
+        // local normalization is recomputed on the shard topology
+        assert_eq!(g0.self_w.len(), 4);
+    }
+}

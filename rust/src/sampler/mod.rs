@@ -467,6 +467,14 @@ impl SubgraphCache {
         SubgraphCache::new(false)
     }
 
+    /// The trainer-side applicability gate for the table above: caching is
+    /// sound only when the schedule is deterministic — `Fixed` groups and
+    /// unbounded (exact-fit) buckets — and the config has not disabled it.
+    /// Every other combination must fall back to per-step rebuilds.
+    pub fn applicable(cfg_flag: bool, mode: BatcherMode, buckets: &Buckets) -> bool {
+        cfg_flag && mode == BatcherMode::Fixed && buckets.is_unbounded()
+    }
+
     pub fn enabled(&self) -> bool {
         self.enabled
     }
@@ -790,6 +798,19 @@ mod tests {
         // clearing drops completeness
         cache.clear();
         assert!(!cache.is_complete(2));
+    }
+
+    #[test]
+    fn cache_applicability_matrix() {
+        let capped = Buckets(vec![(128, 64)]);
+        assert!(SubgraphCache::applicable(true, BatcherMode::Fixed, &Buckets::unbounded()));
+        // a bucket cap subsamples the halo through the per-batch RNG stream
+        assert!(!SubgraphCache::applicable(true, BatcherMode::Fixed, &capped));
+        // stochastic groups reshuffle every epoch
+        assert!(!SubgraphCache::applicable(true, BatcherMode::Stochastic, &Buckets::unbounded()));
+        assert!(!SubgraphCache::applicable(true, BatcherMode::Stochastic, &capped));
+        // config off wins regardless
+        assert!(!SubgraphCache::applicable(false, BatcherMode::Fixed, &Buckets::unbounded()));
     }
 
     #[test]

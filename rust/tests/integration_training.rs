@@ -150,6 +150,71 @@ fn fixed_mode_subgraph_cache_matches_uncached() {
 }
 
 #[test]
+fn stochastic_mode_cache_flag_is_inert() {
+    // SubgraphCache fallback path #1: Stochastic batches reshuffle every
+    // epoch, so the cache must stay disabled and the per-step rebuilds must
+    // match the cache-off configuration bit-for-bit.
+    let run = |cache_flag: bool| {
+        let mut c = cfg(Method::Lmc, 3);
+        c.batcher_mode = lmc::sampler::BatcherMode::Stochastic;
+        c.subgraph_cache = cache_flag;
+        c.eval_every = usize::MAX;
+        let mut t = Trainer::new(exec(), c).unwrap();
+        for _ in 0..3 {
+            t.train_epoch().unwrap();
+        }
+        assert!(t.sg_cache.is_empty(), "Stochastic mode must never cache");
+        t.params.tensors.clone()
+    };
+    let on = run(true);
+    let off = run(false);
+    for (a, b) in on.iter().zip(&off) {
+        assert_eq!(a.data, b.data, "cache flag changed Stochastic-mode results");
+    }
+}
+
+#[test]
+fn capped_buckets_fall_back_to_per_step_rebuilds() {
+    // SubgraphCache fallback path #2: a bucket cap subsamples the halo
+    // through the per-batch RNG stream, so even Fixed mode must not cache
+    // (the applicability gate says so), and identically-seeded capped runs
+    // still rebuild deterministically per step.
+    use lmc::sampler::{BatcherMode, Buckets, SubgraphCache};
+    let capped = Buckets(vec![(1024, 24)]);
+    assert!(!SubgraphCache::applicable(true, BatcherMode::Fixed, &capped));
+    assert!(SubgraphCache::applicable(true, BatcherMode::Fixed, &Buckets::unbounded()));
+    let run = || {
+        let mut c = cfg(Method::Lmc, 2);
+        c.batcher_mode = BatcherMode::Fixed;
+        c.eval_every = usize::MAX;
+        let mut t = Trainer::new(exec(), c).unwrap();
+        // impose the capped-bucket regime (the native backend itself always
+        // requests unbounded buckets) and re-derive the cache gate the way
+        // the constructor does
+        t.buckets = Buckets(vec![(1024, 24)]);
+        t.sg_cache = SubgraphCache::new(SubgraphCache::applicable(
+            t.cfg.subgraph_cache,
+            t.batcher.mode(),
+            &t.buckets,
+        ));
+        assert!(!t.sg_cache.enabled());
+        let mut dropped = 0usize;
+        for _ in 0..2 {
+            dropped += t.train_epoch().unwrap().dropped_halo;
+        }
+        assert!(t.sg_cache.is_empty(), "capped buckets must not cache");
+        (t.params.tensors.clone(), dropped)
+    };
+    let (p1, d1) = run();
+    let (p2, d2) = run();
+    assert!(d1 > 0, "a 24-row halo cap should drop neighbors on cora-sim");
+    assert_eq!(d1, d2, "halo subsampling not deterministic across runs");
+    for (a, b) in p1.iter().zip(&p2) {
+        assert_eq!(a.data, b.data, "capped per-step rebuilds diverged");
+    }
+}
+
+#[test]
 fn stochastic_mode_never_caches() {
     let mut c = cfg(Method::Lmc, 2);
     c.batcher_mode = lmc::sampler::BatcherMode::Stochastic;

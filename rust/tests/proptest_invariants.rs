@@ -8,7 +8,7 @@ use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspac
 use lmc::coordinator::params::{grad_rel_err, Params};
 use lmc::graph::{gcn_normalize, load, random_graph, Csr, DatasetId, Graph};
 use lmc::history::History;
-use lmc::partition::{edge_cut, partition, quality::quality, PartitionConfig};
+use lmc::partition::{edge_cut, partition, quality::quality, shard_views, PartitionConfig};
 use lmc::runtime::ArchInfo;
 use lmc::sampler::{
     beta_vector, build_subgraph, AdjacencyPolicy, Batcher, BatcherMode, BetaScore, Buckets,
@@ -58,6 +58,81 @@ fn prop_partition_never_worse_than_random_on_average() {
         total += 1;
     }
     assert!(better * 10 >= total * 9, "partitioner lost to random: {better}/{total}");
+}
+
+#[test]
+fn prop_shard_views_partition_nodes_exactly_once() {
+    for (seed, csr) in random_cases(15) {
+        let k = 2 + (seed as usize % 6);
+        let p = partition(&csr, &PartitionConfig::new(k, seed));
+        let views = shard_views(&csr, &p.assign, k);
+        let mut owner_count = vec![0usize; csr.n];
+        for v in &views {
+            assert!(v.nodes.windows(2).all(|w| w[0] < w[1]), "seed {seed}: cores unsorted");
+            assert!(v.halo.windows(2).all(|w| w[0] < w[1]), "seed {seed}: halo unsorted");
+            for &u in &v.nodes {
+                owner_count[u as usize] += 1;
+            }
+            for &h in &v.halo {
+                // halo nodes are owned elsewhere and touch this shard's core
+                assert!(v.nodes.binary_search(&h).is_err(), "seed {seed}: halo node is core");
+                assert!(p.assign[h as usize] != v.shard_id as u32, "seed {seed}");
+                assert!(
+                    csr.neighbors(h as usize)
+                        .iter()
+                        .any(|&x| p.assign[x as usize] == v.shard_id as u32),
+                    "seed {seed}: halo node {h} has no core neighbor"
+                );
+            }
+        }
+        // every node is core in exactly one shard
+        assert!(
+            owner_count.iter().all(|&c| c == 1),
+            "seed {seed}: node owned by != 1 shard: {owner_count:?}"
+        );
+        // contiguous_perm is a valid permutation of the node ids
+        let mut perm = p.contiguous_perm();
+        perm.sort_unstable();
+        assert_eq!(perm, (0..csr.n as u32).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_shard_local_csr_roundtrips_parent_edges() {
+    use std::collections::BTreeSet;
+    for (seed, csr) in random_cases(15) {
+        let k = 2 + (seed as usize % 5);
+        let p = partition(&csr, &PartitionConfig::new(k, seed ^ 0x51));
+        let views = shard_views(&csr, &p.assign, k);
+        let mut rebuilt: BTreeSet<(u32, u32)> = BTreeSet::new();
+        for v in &views {
+            for lu in 0..v.csr.n {
+                let gu = v.global_of(lu as u32);
+                for &lv in v.csr.neighbors(lu) {
+                    let gv = v.global_of(lv);
+                    // every shard-local edge maps to a real parent edge...
+                    assert!(
+                        csr.has_edge(gu as usize, gv as usize),
+                        "seed {seed}: phantom edge {gu}-{gv}"
+                    );
+                    // ...and touches at least one core endpoint (halo-halo
+                    // edges belong to some other shard)
+                    assert!(
+                        lu < v.n_core() || (lv as usize) < v.n_core(),
+                        "seed {seed}: halo-halo edge {gu}-{gv}"
+                    );
+                    rebuilt.insert((gu.min(gv), gu.max(gv)));
+                }
+            }
+        }
+        // union over shards reproduces the parent edge set exactly
+        let parent: BTreeSet<(u32, u32)> = (0..csr.n as u32)
+            .flat_map(|u| {
+                csr.neighbors(u as usize).iter().map(move |&vv| (u.min(vv), u.max(vv)))
+            })
+            .collect();
+        assert_eq!(rebuilt, parent, "seed {seed}: edge round-trip mismatch");
+    }
 }
 
 fn attr_graph(csr: Csr, seed: u64) -> Graph {
