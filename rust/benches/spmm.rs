@@ -1,15 +1,17 @@
 //! Bench: dense padded-block aggregation vs CSR sparse aggregation — the
 //! core trade the sparse-subgraph refactor makes. Dense cost is
 //! O(bucket² · d) regardless of how many edges the subgraph actually has;
-//! CSR cost is O(nnz · d). Emits `BENCH_spmm.json` with the measured
-//! speedups per bucket size.
+//! CSR cost is O(nnz · d). Emits `BENCH_spmm.json` (provenance-stamped
+//! with commit + runner + SIMD level) with the measured speedups per
+//! bucket size; smoke runs (`BENCH_SMOKE=1` / `--quick`) cover the two
+//! smallest buckets only and write `BENCH_spmm.smoke.json` instead.
 
 use std::fmt::Write as _;
 
 use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, PartitionConfig};
 use lmc::sampler::{build_subgraph, AdjacencyPolicy, Buckets};
-use lmc::util::bench::{black_box, Bencher};
+use lmc::util::bench::{black_box, provenance, Bencher};
 use lmc::util::rng::Rng;
 
 /// Dense aggregation over the padded stacked blocks, exactly as the padded
@@ -68,7 +70,8 @@ fn dense_agg(
 }
 
 fn main() {
-    let b = Bencher::quick();
+    let smoke = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_SMOKE").is_ok();
+    let b = if smoke { Bencher::smoke() } else { Bencher::quick() };
     let d = 64usize;
     let id = DatasetId::ArxivSim;
     let g = load(id, 0);
@@ -77,12 +80,14 @@ fn main() {
     let g = g.permute(&part.contiguous_perm());
     let per = g.n() / k;
 
-    // the std16 profile's compiled buckets, smallest to largest
-    let cases: [(usize, (usize, usize)); 4] =
+    // the std16 profile's compiled buckets, smallest to largest; smoke
+    // runs keep the two smallest
+    let all_cases: [(usize, (usize, usize)); 4] =
         [(1, (192, 1024)), (2, (320, 1536)), (5, (768, 1792)), (10, (1408, 1792))];
+    let cases = &all_cases[..if smoke { 2 } else { all_cases.len() }];
     let mut rows = Vec::new();
-    println!("== dense padded blocks vs CSR sparse aggregation (d = {d}) ==");
-    for &(nclusters, (bb, bh)) in &cases {
+    println!("== dense padded blocks vs CSR sparse aggregation (d = {d}, smoke = {smoke}) ==");
+    for &(nclusters, (bb, bh)) in cases {
         let batch: Vec<u32> = (0..((per * nclusters).min(g.n())) as u32).collect();
         let mut rng = Rng::new(7);
         let sb = build_subgraph(
@@ -150,10 +155,11 @@ fn main() {
         ));
     }
 
-    // emit BENCH_spmm.json at the repo root
-    let mut json = String::from(
-        "{\n  \"bench\": \"spmm_dense_vs_csr\",\n  \"provenance\": \"measured\",\n  \"d\": 64,\n  \"cases\": [\n",
-    );
+    // emit BENCH_spmm[.smoke].json at the repo root
+    let mut json = String::from("{\n  \"bench\": \"spmm_dense_vs_csr\",\n");
+    let _ = writeln!(json, "  \"provenance\": \"{}\",", provenance());
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    json.push_str("  \"d\": 64,\n  \"cases\": [\n");
     for (i, &(bb, bh, nb, nh, nnz, dense_s, csr_s, par_s, tiled_s, speedup)) in rows.iter().enumerate()
     {
         let _ = write!(
@@ -166,8 +172,9 @@ fn main() {
         );
     }
     json.push_str("  ]\n}\n");
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_spmm.json");
-    std::fs::write(path, &json).expect("write BENCH_spmm.json");
+    let fname = if smoke { "/../BENCH_spmm.smoke.json" } else { "/../BENCH_spmm.json" };
+    let path = format!("{}{}", env!("CARGO_MANIFEST_DIR"), fname);
+    std::fs::write(&path, &json).expect("write BENCH_spmm json");
     println!("wrote {path}");
     let largest = rows.last().unwrap();
     assert!(

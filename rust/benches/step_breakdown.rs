@@ -1,18 +1,28 @@
 //! Bench: per-phase train-step breakdown (sample / gather / aggregate /
-//! gemm / compensate) plus the end-to-end single-step comparison between
-//! the pre-optimization native configuration (serial reference kernels,
-//! rebuild-per-step, allocate-per-step) and the optimized one (blocked
-//! kernels, Fixed-mode subgraph cache semantics, workspace reuse).
+//! gemm / compensate) with per-kernel scalar-vs-SIMD-vs-fused timings, plus
+//! the end-to-end single-step comparison across three configurations:
 //!
-//! Emits `BENCH_step.json` at the repo root so subsequent PRs have a perf
-//! trajectory to regress against. Timings are recorded, never gated: the
-//! CI smoke job (`BENCH_SMOKE=1` or `--quick`) fails only on panic.
+//!   * `step_naive_s`     — serial reference kernels, rebuild-per-step,
+//!     allocate-per-step (the pre-PR 2 backend);
+//!   * `step_scalar_s`    — blocked scalar kernels, cached subgraph,
+//!     workspace reuse (the PR 2 backend);
+//!   * `step_optimized_s` — runtime-dispatched SIMD kernels + fused
+//!     bias/ReLU epilogues, cached subgraph, workspace reuse (current).
+//!
+//! Full runs emit `BENCH_step.json` at the repo root (provenance-stamped
+//! with commit + runner + SIMD level); smoke runs (`BENCH_SMOKE=1` /
+//! `--quick`) emit `BENCH_step.smoke.json` so the CI perf gate can never
+//! diff smoke numbers against full baselines. Pass `--write-baseline` on a
+//! full run to regenerate `BENCH_baseline.json` (the committed file the CI
+//! `perf-gate` job diffs against; see rust/README.md § Perf gate).
 
 use std::fmt::Write as _;
 use std::sync::Mutex;
 
+use lmc::backend::gemm::{self, Kernels};
 use lmc::backend::native::combine;
-use lmc::backend::{gemm, Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspace};
+use lmc::backend::simd::{self, SimdLevel};
+use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspace};
 use lmc::coordinator::params::Params;
 use lmc::graph::{load, DatasetId};
 use lmc::history::History;
@@ -21,20 +31,22 @@ use lmc::runtime::ArchInfo;
 use lmc::sampler::{
     beta_vector, beta_vector_into, build_subgraph, AdjacencyPolicy, BetaScore, Buckets,
 };
-use lmc::util::bench::{black_box, Bencher};
+use lmc::util::bench::{black_box, provenance, BenchStats, Bencher};
+use lmc::util::perfgate::{DEFAULT_MAX_SLOWDOWN, GATED_METRICS};
 use lmc::util::rng::Rng;
 
 const D_HIDDEN: usize = 128;
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_SMOKE").is_ok();
+    let write_baseline = std::env::args().any(|a| a == "--write-baseline");
     let id = if smoke { DatasetId::CoraSim } else { DatasetId::ArxivSim };
-    let b = if smoke {
-        Bencher { warmup_iters: 1, min_iters: 2, max_iters: 8, min_window_s: 0.05 }
-    } else {
-        Bencher::quick()
-    };
-    println!("== step breakdown (native backend, hidden d = {D_HIDDEN}, {}) ==", id.name());
+    let b = if smoke { Bencher::smoke() } else { Bencher::quick() };
+    println!(
+        "== step breakdown (native backend, hidden d = {D_HIDDEN}, {}, simd = {}) ==",
+        id.name(),
+        simd::level().name()
+    );
 
     // graph, partition-contiguous relabeling, a 2-cluster batch
     let g = load(id, 0);
@@ -81,10 +93,12 @@ fn main() {
     });
 
     // ---- phase: aggregate (SpMM over the four blocks) -------------------
+    let scalar_ops = simd::ops(SimdLevel::Scalar);
+    let auto_ops = simd::ops_auto();
     let x: Vec<f32> = (0..m * D_HIDDEN).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
     let xb = &x[..nb * D_HIDDEN];
     let xh = &x[nb * D_HIDDEN..];
-    let agg_naive = b.run("phase/aggregate/naive(serial spmm_acc)", || {
+    let agg_serial = b.run("phase/aggregate/serial(spmm_acc)", || {
         let mut out = vec![0f32; m * D_HIDDEN];
         let (bpart, hpart) = out.split_at_mut(nb * D_HIDDEN);
         sb.a_bb.spmm_acc(xb, D_HIDDEN, bpart);
@@ -93,7 +107,16 @@ fn main() {
         sb.a_hh.spmm_acc(xh, D_HIDDEN, hpart);
         black_box(&out);
     });
-    let agg_opt = b.run("phase/aggregate/tiled(par_spmm_acc_tiled)", || {
+    let agg_scalar = b.run("phase/aggregate/tiled-scalar(PR2)", || {
+        let mut out = vec![0f32; m * D_HIDDEN];
+        let (bpart, hpart) = out.split_at_mut(nb * D_HIDDEN);
+        sb.a_bb.par_spmm_acc_tiled_with(scalar_ops, xb, D_HIDDEN, 1.0, bpart);
+        sb.a_bh.par_spmm_acc_tiled_with(scalar_ops, xh, D_HIDDEN, 1.0, bpart);
+        sb.a_hb.par_spmm_acc_tiled_with(scalar_ops, xb, D_HIDDEN, 1.0, hpart);
+        sb.a_hh.par_spmm_acc_tiled_with(scalar_ops, xh, D_HIDDEN, 1.0, hpart);
+        black_box(&out);
+    });
+    let agg_opt = b.run(&format!("phase/aggregate/tiled-simd({})", auto_ops.level.name()), || {
         let mut out = vec![0f32; m * D_HIDDEN];
         let (bpart, hpart) = out.split_at_mut(nb * D_HIDDEN);
         sb.a_bb.par_spmm_acc_tiled(xb, D_HIDDEN, 1.0, bpart);
@@ -104,12 +127,39 @@ fn main() {
     });
 
     // ---- phase: gemm (the O(m·d²) dense-affine term) --------------------
+    let kern_scalar = Kernels::blocked_scalar();
+    let kern_simd = Kernels::blocked();
     let w: Vec<f32> = (0..D_HIDDEN * D_HIDDEN).map(|i| (i % 19) as f32 * 0.05 - 0.45).collect();
     let gemm_naive = b.run("phase/gemm/reference(serial)", || {
         black_box(gemm::reference::matmul(&x, m, D_HIDDEN, &w, D_HIDDEN));
     });
-    let gemm_opt = b.run("phase/gemm/blocked(parallel)", || {
-        black_box(gemm::matmul(&x, m, D_HIDDEN, &w, D_HIDDEN));
+    let mut zbuf = vec![0f32; m * D_HIDDEN];
+    let gemm_scalar = b.run("phase/gemm/blocked-scalar(PR2)", || {
+        kern_scalar.matmul_into(&mut zbuf, &x, m, D_HIDDEN, &w, D_HIDDEN);
+        black_box(&zbuf);
+    });
+    let gemm_opt = b.run(&format!("phase/gemm/blocked-simd({})", kern_simd.simd.name()), || {
+        kern_simd.matmul_into(&mut zbuf, &x, m, D_HIDDEN, &w, D_HIDDEN);
+        black_box(&zbuf);
+    });
+
+    // ---- phase: fused bias+ReLU epilogue vs the unfused sequence --------
+    let bias: Vec<f32> = (0..D_HIDDEN).map(|i| (i % 7) as f32 * 0.01 - 0.02).collect();
+    let mut actbuf = vec![0f32; m * D_HIDDEN];
+    let gemm_unfused = b.run("phase/gemm/bias-relu-unfused", || {
+        kern_simd.matmul_bias_into(&mut zbuf, &x, m, D_HIDDEN, &w, D_HIDDEN, &bias);
+        actbuf.copy_from_slice(&zbuf);
+        for v in actbuf.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        black_box(&actbuf);
+    });
+    let gemm_fused = b.run("phase/gemm/bias-relu-fused", || {
+        kern_simd
+            .matmul_bias_relu_into(&mut zbuf, &mut actbuf, &x, m, D_HIDDEN, &w, D_HIDDEN, &bias);
+        black_box(&actbuf);
     });
 
     // ---- phase: compensate (Eq. 9 convex combination on halo rows) ------
@@ -120,7 +170,7 @@ fn main() {
     });
 
     // ---- end-to-end single step -----------------------------------------
-    // pre-PR configuration: reference kernels, rebuild the subgraph every
+    // pre-PR 2 configuration: reference kernels, rebuild the subgraph every
     // step, allocate every buffer
     let exec_ref = NativeExecutor::with_reference_kernels();
     let mut rng_n = Rng::new(7);
@@ -153,66 +203,84 @@ fn main() {
         };
         black_box(exec_ref.forward_backward(&inputs).unwrap());
     });
-    // optimized configuration: blocked kernels, cached subgraph (Fixed-mode
-    // steady state), workspace reuse with trainer-style recycling
+    // cached-subgraph configurations (Fixed-mode steady state, workspace
+    // reuse with trainer-style recycling), parameterized by kernel family
+    type Ws = Mutex<StepWorkspace>;
+    let run_cached_step = |exec: &NativeExecutor, ws: &Ws, name: &str| -> BenchStats {
+        b.run(name, || {
+            let (beta_i, hist_h, hist_v) = {
+                let mut w = ws.lock().unwrap();
+                let mut beta_i = w.grab(sb.bucket_h);
+                beta_vector_into(&sb, 0.8, BetaScore::TwoXMinusXSquared, &mut beta_i);
+                let mut hist_h: Vec<Vec<f32>> = Vec::with_capacity(l_total - 1);
+                let mut hist_v: Vec<Vec<f32>> = Vec::with_capacity(l_total - 1);
+                for l in 1..l_total {
+                    let mut buf = w.grab(sb.bucket_h * dims[l]);
+                    history.gather_h_into(l, &sb.halo, &mut buf);
+                    hist_h.push(buf);
+                    let mut buf = w.grab(sb.bucket_h * dims[l]);
+                    history.gather_v_into(l, &sb.halo, &mut buf);
+                    hist_v.push(buf);
+                }
+                (beta_i, hist_h, hist_v)
+            };
+            let inputs = StepInputs {
+                graph: &g,
+                sb: &sb,
+                model: &model,
+                params: &params,
+                hist_h,
+                hist_v,
+                beta: beta_i,
+                bwd_scale: 1.0,
+                vscale,
+                grad_scale: 1.0,
+                ws: Some(ws),
+            };
+            let mut outs = exec.forward_backward(&inputs).unwrap();
+            {
+                let mut w = ws.lock().unwrap();
+                let StepInputs { hist_h, hist_v, beta, .. } = inputs;
+                w.put(beta);
+                w.put_all(hist_h);
+                w.put_all(hist_v);
+                w.put_all(outs.new_h.drain(..));
+                w.put_all(outs.new_v.drain(..));
+                w.put_all(outs.htilde.drain(..));
+            }
+            black_box(&outs.grads);
+        })
+    };
+    let exec_scalar = NativeExecutor::with_kernels(Kernels::blocked_scalar());
+    let ws_scalar = Mutex::new(StepWorkspace::new());
+    let step_scalar =
+        run_cached_step(&exec_scalar, &ws_scalar, "step/blocked-scalar(PR2: cached, workspace)");
     let exec_opt = NativeExecutor::new();
     let ws = Mutex::new(StepWorkspace::new());
-    let step_opt = b.run("step/optimized(blocked, cached subgraph, workspace)", || {
-        let (beta_i, hist_h, hist_v) = {
-            let mut w = ws.lock().unwrap();
-            let mut beta_i = w.grab(sb.bucket_h);
-            beta_vector_into(&sb, 0.8, BetaScore::TwoXMinusXSquared, &mut beta_i);
-            let mut hist_h: Vec<Vec<f32>> = Vec::with_capacity(l_total - 1);
-            let mut hist_v: Vec<Vec<f32>> = Vec::with_capacity(l_total - 1);
-            for l in 1..l_total {
-                let mut buf = w.grab(sb.bucket_h * dims[l]);
-                history.gather_h_into(l, &sb.halo, &mut buf);
-                hist_h.push(buf);
-                let mut buf = w.grab(sb.bucket_h * dims[l]);
-                history.gather_v_into(l, &sb.halo, &mut buf);
-                hist_v.push(buf);
-            }
-            (beta_i, hist_h, hist_v)
-        };
-        let inputs = StepInputs {
-            graph: &g,
-            sb: &sb,
-            model: &model,
-            params: &params,
-            hist_h,
-            hist_v,
-            beta: beta_i,
-            bwd_scale: 1.0,
-            vscale,
-            grad_scale: 1.0,
-            ws: Some(&ws),
-        };
-        let mut outs = exec_opt.forward_backward(&inputs).unwrap();
-        {
-            let mut w = ws.lock().unwrap();
-            let StepInputs { hist_h, hist_v, beta, .. } = inputs;
-            w.put(beta);
-            w.put_all(hist_h);
-            w.put_all(hist_v);
-            w.put_all(outs.new_h.drain(..));
-            w.put_all(outs.new_v.drain(..));
-            w.put_all(outs.htilde.drain(..));
-        }
-        black_box(&outs.grads);
-    });
-
-    let speedup = step_naive.mean_s / step_opt.mean_s;
-    println!("    single-step speedup (naive/optimized): {speedup:.2}x");
-    println!(
-        "    workspace: {} grabs, {} misses",
-        ws.lock().unwrap().grabs(),
-        ws.lock().unwrap().misses()
+    let step_opt = run_cached_step(
+        &exec_opt,
+        &ws,
+        &format!("step/optimized(simd {} + fused, cached, workspace)", simd::level().name()),
     );
 
-    // ---- emit BENCH_step.json at the repo root --------------------------
-    let mut json = String::from("{\n  \"bench\": \"step_breakdown\",\n  \"provenance\": \"measured\",\n");
+    let speedup = step_naive.mean_s / step_opt.mean_s;
+    let speedup_scalar = step_scalar.mean_s / step_opt.mean_s;
+    println!("    single-step speedup (naive/optimized):  {speedup:.2}x");
+    println!("    single-step speedup (scalar/optimized): {speedup_scalar:.2}x");
+    {
+        // one guard for both reads: two ws.lock() temporaries in a single
+        // statement would coexist until the statement ends and self-deadlock
+        let w = ws.lock().unwrap();
+        println!("    workspace: {} grabs, {} misses", w.grabs(), w.misses());
+    }
+
+    // ---- emit BENCH_step[.smoke].json at the repo root ------------------
+    let prov = provenance();
+    let mut json = String::from("{\n  \"bench\": \"step_breakdown\",\n");
+    let _ = writeln!(json, "  \"provenance\": \"{prov}\",");
     let _ = writeln!(json, "  \"dataset\": \"{}\",", id.name());
     let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"simd_level\": \"{}\",", simd::level().name());
     let _ = writeln!(json, "  \"d_hidden\": {D_HIDDEN},");
     let _ = writeln!(json, "  \"layers\": {l_total},");
     let _ = writeln!(json, "  \"batch\": {nb},");
@@ -221,17 +289,54 @@ fn main() {
     json.push_str("  \"phases\": {\n");
     let _ = writeln!(json, "    \"sample_s\": {:.6e},", sample.mean_s);
     let _ = writeln!(json, "    \"gather_s\": {:.6e},", gather.mean_s);
-    let _ = writeln!(json, "    \"aggregate_naive_s\": {:.6e},", agg_naive.mean_s);
+    let _ = writeln!(json, "    \"aggregate_serial_s\": {:.6e},", agg_serial.mean_s);
+    let _ = writeln!(json, "    \"aggregate_scalar_s\": {:.6e},", agg_scalar.mean_s);
     let _ = writeln!(json, "    \"aggregate_s\": {:.6e},", agg_opt.mean_s);
     let _ = writeln!(json, "    \"gemm_naive_s\": {:.6e},", gemm_naive.mean_s);
+    let _ = writeln!(json, "    \"gemm_scalar_s\": {:.6e},", gemm_scalar.mean_s);
     let _ = writeln!(json, "    \"gemm_s\": {:.6e},", gemm_opt.mean_s);
+    let _ = writeln!(json, "    \"gemm_bias_relu_unfused_s\": {:.6e},", gemm_unfused.mean_s);
+    let _ = writeln!(json, "    \"gemm_bias_relu_fused_s\": {:.6e},", gemm_fused.mean_s);
     let _ = writeln!(json, "    \"compensate_s\": {:.6e}", compensate.mean_s);
     json.push_str("  },\n");
     let _ = writeln!(json, "  \"step_naive_s\": {:.6e},", step_naive.mean_s);
+    let _ = writeln!(json, "  \"step_scalar_s\": {:.6e},", step_scalar.mean_s);
     let _ = writeln!(json, "  \"step_optimized_s\": {:.6e},", step_opt.mean_s);
-    let _ = writeln!(json, "  \"speedup_naive_over_optimized\": {speedup:.2}");
+    let _ = writeln!(json, "  \"speedup_naive_over_optimized\": {speedup:.2},");
+    let _ = writeln!(json, "  \"speedup_scalar_over_optimized\": {speedup_scalar:.2}");
     json.push_str("}\n");
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_step.json");
-    std::fs::write(path, &json).expect("write BENCH_step.json");
+    let fname = if smoke { "/../BENCH_step.smoke.json" } else { "/../BENCH_step.json" };
+    let path = format!("{}{}", env!("CARGO_MANIFEST_DIR"), fname);
+    std::fs::write(&path, &json).expect("write BENCH_step json");
     println!("wrote {path}");
+
+    // ---- optionally regenerate the committed perf-gate baseline ---------
+    if write_baseline {
+        if smoke {
+            println!("--write-baseline ignored: smoke numbers must never become a gate baseline");
+        } else {
+            let mut base = String::from("{\n  \"bench\": \"step_breakdown_baseline\",\n");
+            let _ = writeln!(base, "  \"provenance\": \"{prov}\",");
+            let _ = writeln!(base, "  \"dataset\": \"{}\",", id.name());
+            let _ = writeln!(base, "  \"d_hidden\": {D_HIDDEN},");
+            let _ = writeln!(base, "  \"layers\": {l_total},");
+            let metrics = GATED_METRICS
+                .iter()
+                .map(|m| format!("\"{m}\""))
+                .collect::<Vec<_>>()
+                .join(", ");
+            let _ = writeln!(base, "  \"gate\": {{");
+            let _ = writeln!(base, "    \"max_slowdown\": {DEFAULT_MAX_SLOWDOWN},");
+            let _ = writeln!(base, "    \"metrics\": [{metrics}]");
+            base.push_str("  },\n");
+            base.push_str("  \"metrics\": {\n");
+            let _ = writeln!(base, "    \"gemm_s\": {:.6e},", gemm_opt.mean_s);
+            let _ = writeln!(base, "    \"aggregate_s\": {:.6e},", agg_opt.mean_s);
+            let _ = writeln!(base, "    \"step_optimized_s\": {:.6e}", step_opt.mean_s);
+            base.push_str("  }\n}\n");
+            let bpath = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json");
+            std::fs::write(bpath, &base).expect("write BENCH_baseline.json");
+            println!("wrote {bpath} (commit it to move the perf-gate baseline)");
+        }
+    }
 }

@@ -1,4 +1,5 @@
-//! Blocked, rayon-parallel dense GEMM kernels for the native backend.
+//! Blocked, rayon-parallel dense GEMM kernels for the native backend, with
+//! runtime-dispatched SIMD inner loops ([`super::simd`]).
 //!
 //! Three layouts cover every dense product a train step needs:
 //!
@@ -9,23 +10,39 @@
 //! Each kernel tiles over output row blocks ([`ROW_BLOCK`] rows per rayon
 //! task) and, for the N/N and T/N layouts, over k-panels ([`K_PANEL`]) so
 //! the `b`/`c` panel in flight stays cache-resident while it is reused
-//! across the block's rows. Per output element the accumulation order is
+//! across the block's rows. The innermost loops run through the
+//! [`SimdOps`] dispatch table (8-wide AVX2/FMA on x86_64, NEON on aarch64,
+//! scalar fallback): per output element the accumulation *order* is
 //! identical to the naive kernel (`k` resp. `i` ascending), so results are
-//! deterministic, independent of thread count, and — for `matmul` /
-//! `matmul_tn` — bit-identical to the [`reference`] implementations. The
-//! N/T kernel uses a 4-way unrolled dot product (different association,
-//! same value to ≤1e-6 relative; see `tests/proptest_invariants.rs`).
+//! deterministic and thread-count independent at every level. At the
+//! scalar level the N/N and T/N kernels are bit-identical to the
+//! [`reference`] implementations; with FMA active each multiply-add loses
+//! one rounding (≤ 1 ulp per op — property-pinned to the scalar kernels at
+//! ≤ 1e-5 in `tests/proptest_invariants.rs`). The N/T kernel uses an
+//! unrolled/vectorized dot product (different association, same value to
+//! ≤ 1e-6 relative at the scalar level).
 //!
-//! `matmul_bias_into` is the fused affine entry point: the output buffer is
-//! initialized with the broadcast bias row and the product accumulates on
-//! top, eliminating the separate `add_bias_rows` pass over `m · n` floats.
+//! Fused epilogues write downstream buffers while the output row block is
+//! still cache-hot instead of re-traversing `m · n` floats afterwards:
+//!
+//!   * `matmul_bias_into`      — output initialized with the bias row, the
+//!     product accumulates on top (no separate `add_bias_rows` pass);
+//!   * `matmul_bias_relu_into` — additionally writes `act = relu(z)` per
+//!     row block (the pre-activation and activation buffers are each
+//!     written exactly once);
+//!   * `matmul_mix_relu_into`  — the GCNII layer epilogue: `z = (1-γ)·s +
+//!     γ·(s@W)` and `act = relu(z)` fused into the product's row blocks
+//!     (the `α·h0` initial-residual term is already folded into `s` by the
+//!     aggregation prefill; see `native::step_native`).
 //!
 //! The serial [`reference`] module retains the pre-optimization kernels;
-//! [`Kernels`] dispatches between the two so benches can measure the old
-//! configuration (`benches/step_breakdown.rs`) and property tests can
-//! cross-check the blocked kernels against the naive ones.
+//! [`Kernels`] dispatches between the families so benches can measure the
+//! old configurations (`benches/step_breakdown.rs`) and property tests can
+//! cross-check the blocked/SIMD kernels against the naive ones.
 
 use rayon::prelude::*;
+
+use super::simd::{self, SimdLevel, SimdOps};
 
 /// Output rows per rayon task (and per T/N output-row block).
 const ROW_BLOCK: usize = 16;
@@ -47,25 +64,42 @@ pub enum GemmMode {
     Reference,
 }
 
-/// Kernel dispatch handle carried by `NativeExecutor`.
+/// Kernel dispatch handle carried by `NativeExecutor`: the kernel family
+/// plus the SIMD level its inner loops dispatch to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Kernels {
     pub mode: GemmMode,
+    pub simd: SimdLevel,
 }
 
 impl Kernels {
+    /// Blocked kernels at the process-wide detected SIMD level
+    /// (`LMC_SIMD=scalar` forces the scalar inner loops). The default.
     pub fn blocked() -> Kernels {
-        Kernels { mode: GemmMode::Blocked }
+        Kernels { mode: GemmMode::Blocked, simd: simd::level() }
+    }
+
+    /// Blocked kernels with the scalar inner loops regardless of hardware —
+    /// the PR 2 configuration. Used by `benches/step_breakdown.rs` for the
+    /// scalar-vs-SIMD A/B and by the SIMD property tests as the oracle.
+    pub fn blocked_scalar() -> Kernels {
+        Kernels { mode: GemmMode::Blocked, simd: SimdLevel::Scalar }
     }
 
     pub fn reference() -> Kernels {
-        Kernels { mode: GemmMode::Reference }
+        Kernels { mode: GemmMode::Reference, simd: SimdLevel::Scalar }
+    }
+
+    /// The SIMD primitive table this handle's blocked kernels dispatch to.
+    #[inline]
+    pub fn ops(&self) -> &'static SimdOps {
+        simd::ops(self.simd)
     }
 
     /// `out = a[m, k] @ b[k, n]` (overwrites `out`).
     pub fn matmul_into(&self, out: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize) {
         match self.mode {
-            GemmMode::Blocked => matmul_into(out, a, m, k, b, n),
+            GemmMode::Blocked => matmul_into_with(self.ops(), out, a, m, k, b, n),
             GemmMode::Reference => reference::matmul_into(out, a, m, k, b, n),
         }
     }
@@ -83,7 +117,7 @@ impl Kernels {
         bias: &[f32],
     ) {
         match self.mode {
-            GemmMode::Blocked => matmul_bias_into(out, a, m, k, b, n, bias),
+            GemmMode::Blocked => matmul_bias_into_with(self.ops(), out, a, m, k, b, n, bias),
             GemmMode::Reference => {
                 reference::matmul_into(out, a, m, k, b, n);
                 reference::add_bias_rows(&mut out[..m * n], bias);
@@ -91,10 +125,71 @@ impl Kernels {
         }
     }
 
+    /// Fused affine + ReLU epilogue: `z = a @ b + bias`, `act = relu(z)`,
+    /// both written in one traversal of each output row block.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_bias_relu_into(
+        &self,
+        z: &mut [f32],
+        act: &mut [f32],
+        a: &[f32],
+        m: usize,
+        k: usize,
+        b: &[f32],
+        n: usize,
+        bias: &[f32],
+    ) {
+        match self.mode {
+            GemmMode::Blocked => {
+                matmul_bias_relu_into_with(self.ops(), z, act, a, m, k, b, n, bias)
+            }
+            GemmMode::Reference => {
+                reference::matmul_into(z, a, m, k, b, n);
+                reference::add_bias_rows(&mut z[..m * n], bias);
+                let (z, act) = (&z[..m * n], &mut act[..m * n]);
+                for (av, &zv) in act.iter_mut().zip(z) {
+                    *av = if zv > 0.0 { zv } else { 0.0 };
+                }
+            }
+        }
+    }
+
+    /// Fused GCNII layer epilogue: `z = (1-gam)·s + gam·(s @ w)`,
+    /// `act = relu(z)`, computed per row block while `s @ w` is cache-hot.
+    /// Requires a square layer (`k == n`); callers with `k != n` use the
+    /// unfused sequence.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_mix_relu_into(
+        &self,
+        z: &mut [f32],
+        act: &mut [f32],
+        s: &[f32],
+        m: usize,
+        k: usize,
+        w: &[f32],
+        n: usize,
+        gam: f32,
+    ) {
+        debug_assert_eq!(k, n, "fused mix epilogue requires a square layer");
+        match self.mode {
+            GemmMode::Blocked => matmul_mix_relu_into_with(self.ops(), z, act, s, m, k, w, n, gam),
+            GemmMode::Reference => {
+                let sw = reference::matmul(s, m, k, w, n);
+                let (z, act) = (&mut z[..m * n], &mut act[..m * n]);
+                for ((zv, &sv), &swv) in z.iter_mut().zip(&s[..m * n]).zip(&sw) {
+                    *zv = (1.0 - gam) * sv + gam * swv;
+                }
+                for (av, &zv) in act.iter_mut().zip(z.iter()) {
+                    *av = if zv > 0.0 { zv } else { 0.0 };
+                }
+            }
+        }
+    }
+
     /// `out = a[m, n] @ b[p, n]^T` (overwrites `out`).
     pub fn matmul_nt_into(&self, out: &mut [f32], a: &[f32], m: usize, n: usize, b: &[f32], p: usize) {
         match self.mode {
-            GemmMode::Blocked => matmul_nt_into(out, a, m, n, b, p),
+            GemmMode::Blocked => matmul_nt_into_with(self.ops(), out, a, m, n, b, p),
             GemmMode::Reference => reference::matmul_nt_into(out, a, m, n, b, p),
         }
     }
@@ -102,7 +197,7 @@ impl Kernels {
     /// `out = a[m, k]^T @ c[m, n]` (overwrites `out`).
     pub fn matmul_tn_into(&self, out: &mut [f32], a: &[f32], m: usize, k: usize, c: &[f32], n: usize) {
         match self.mode {
-            GemmMode::Blocked => matmul_tn_into(out, a, m, k, c, n),
+            GemmMode::Blocked => matmul_tn_into_with(self.ops(), out, a, m, k, c, n),
             GemmMode::Reference => reference::matmul_tn_into(out, a, m, k, c, n),
         }
     }
@@ -133,8 +228,46 @@ pub fn matmul_tn(a: &[f32], m: usize, k: usize, c: &[f32], n: usize) -> Vec<f32>
     out
 }
 
-/// `out = a[m, k] @ b[k, n]`, row-blocked and k-paneled.
+/// `out = a[m, k] @ b[k, n]` at the process-wide SIMD level.
 pub fn matmul_into(out: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize) {
+    matmul_into_with(simd::ops_auto(), out, a, m, k, b, n)
+}
+
+/// `out = a[m, k] @ b[k, n] + bias` at the process-wide SIMD level.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_into(
+    out: &mut [f32],
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: &[f32],
+) {
+    matmul_bias_into_with(simd::ops_auto(), out, a, m, k, b, n, bias)
+}
+
+/// `out = a[m, n] @ b[p, n]^T` at the process-wide SIMD level.
+pub fn matmul_nt_into(out: &mut [f32], a: &[f32], m: usize, n: usize, b: &[f32], p: usize) {
+    matmul_nt_into_with(simd::ops_auto(), out, a, m, n, b, p)
+}
+
+/// `out = a[m, k]^T @ c[m, n]` at the process-wide SIMD level.
+pub fn matmul_tn_into(out: &mut [f32], a: &[f32], m: usize, k: usize, c: &[f32], n: usize) {
+    matmul_tn_into_with(simd::ops_auto(), out, a, m, k, c, n)
+}
+
+/// `out = a[m, k] @ b[k, n]`, row-blocked and k-paneled.
+#[allow(clippy::too_many_arguments)]
+fn matmul_into_with(
+    ops: &SimdOps,
+    out: &mut [f32],
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+) {
     debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
     if m == 0 || n == 0 {
         return;
@@ -147,20 +280,21 @@ pub fn matmul_into(out: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n:
     let a = &a[..m * k];
     if m * n <= PAR_MIN {
         out.fill(0.0);
-        nn_block(out, a, k, b, n);
+        nn_block(ops, out, a, k, b, n);
         return;
     }
     out.par_chunks_mut(ROW_BLOCK * n)
         .zip(a.par_chunks(ROW_BLOCK * k))
         .for_each(|(orows, arows)| {
             orows.fill(0.0);
-            nn_block(orows, arows, k, b, n);
+            nn_block(ops, orows, arows, k, b, n);
         });
 }
 
 /// `out = a[m, k] @ b[k, n] + bias` (bias broadcast over rows).
 #[allow(clippy::too_many_arguments)]
-pub fn matmul_bias_into(
+fn matmul_bias_into_with(
+    ops: &SimdOps,
     out: &mut [f32],
     a: &[f32],
     m: usize,
@@ -183,14 +317,100 @@ pub fn matmul_bias_into(
     let a = &a[..m * k];
     if m * n <= PAR_MIN {
         fill_bias(out, n, bias);
-        nn_block(out, a, k, b, n);
+        nn_block(ops, out, a, k, b, n);
         return;
     }
     out.par_chunks_mut(ROW_BLOCK * n)
         .zip(a.par_chunks(ROW_BLOCK * k))
         .for_each(|(orows, arows)| {
             fill_bias(orows, n, bias);
-            nn_block(orows, arows, k, b, n);
+            nn_block(ops, orows, arows, k, b, n);
+        });
+}
+
+/// `z = a @ b + bias`, `act = relu(z)` — the fused affine + ReLU epilogue:
+/// `act` is written per row block right after the block's product lands,
+/// while the block is still cache-hot.
+#[allow(clippy::too_many_arguments)]
+fn matmul_bias_relu_into_with(
+    ops: &SimdOps,
+    z: &mut [f32],
+    act: &mut [f32],
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: &[f32],
+) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n);
+    debug_assert!(z.len() >= m * n && act.len() >= m * n && bias.len() >= n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let z = &mut z[..m * n];
+    let act = &mut act[..m * n];
+    let bias = &bias[..n];
+    if k == 0 {
+        fill_bias(z, n, bias);
+        (ops.relu_copy)(act, z);
+        return;
+    }
+    let a = &a[..m * k];
+    if m * n <= PAR_MIN {
+        fill_bias(z, n, bias);
+        nn_block(ops, z, a, k, b, n);
+        (ops.relu_copy)(act, z);
+        return;
+    }
+    z.par_chunks_mut(ROW_BLOCK * n)
+        .zip(act.par_chunks_mut(ROW_BLOCK * n))
+        .zip(a.par_chunks(ROW_BLOCK * k))
+        .for_each(|((zrows, actrows), arows)| {
+            fill_bias(zrows, n, bias);
+            nn_block(ops, zrows, arows, k, b, n);
+            (ops.relu_copy)(actrows, zrows);
+        });
+}
+
+/// `z = (1-gam)·s + gam·(s @ w)`, `act = relu(z)` — the fused GCNII layer
+/// epilogue. `s @ w` accumulates into `z` per row block (identical order to
+/// the standalone product), then the residual mix and ReLU run over the
+/// cache-hot block. Requires `k == n` so `s`'s rows align with `z`'s.
+#[allow(clippy::too_many_arguments)]
+fn matmul_mix_relu_into_with(
+    ops: &SimdOps,
+    z: &mut [f32],
+    act: &mut [f32],
+    s: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    gam: f32,
+) {
+    debug_assert_eq!(k, n, "fused mix epilogue requires a square layer");
+    debug_assert!(s.len() >= m * k && w.len() >= k * n);
+    debug_assert!(z.len() >= m * n && act.len() >= m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let z = &mut z[..m * n];
+    let act = &mut act[..m * n];
+    let s = &s[..m * k];
+    if m * n <= PAR_MIN {
+        z.fill(0.0);
+        nn_block(ops, z, s, k, w, n);
+        (ops.mix_relu)(z, act, s, gam);
+        return;
+    }
+    z.par_chunks_mut(ROW_BLOCK * n)
+        .zip(act.par_chunks_mut(ROW_BLOCK * n))
+        .zip(s.par_chunks(ROW_BLOCK * k))
+        .for_each(|((zrows, actrows), srows)| {
+            zrows.fill(0.0);
+            nn_block(ops, zrows, srows, k, w, n);
+            (ops.mix_relu)(zrows, actrows, srows, gam);
         });
 }
 
@@ -201,9 +421,10 @@ fn fill_bias(orows: &mut [f32], n: usize, bias: &[f32]) {
 }
 
 /// Accumulate `arows @ b` into `orows` (one row block), k-paneled so the
-/// active `b` panel is reused across all the block's rows.
-fn nn_block(orows: &mut [f32], arows: &[f32], k: usize, b: &[f32], n: usize) {
+/// active `b` panel is reused across the block's rows.
+fn nn_block(ops: &SimdOps, orows: &mut [f32], arows: &[f32], k: usize, b: &[f32], n: usize) {
     let rows = orows.len() / n;
+    let axpy = ops.axpy;
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + K_PANEL).min(k);
@@ -212,10 +433,7 @@ fn nn_block(orows: &mut [f32], arows: &[f32], k: usize, b: &[f32], n: usize) {
             let orow = &mut orows[r * n..(r + 1) * n];
             for (i, &av) in arow.iter().enumerate() {
                 if av != 0.0 {
-                    let brow = &b[(k0 + i) * n..(k0 + i + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
+                    axpy(orow, &b[(k0 + i) * n..(k0 + i + 1) * n], av);
                 }
             }
         }
@@ -224,8 +442,17 @@ fn nn_block(orows: &mut [f32], arows: &[f32], k: usize, b: &[f32], n: usize) {
 }
 
 /// `out = a[m, n] @ b[p, n]^T`, row-blocked with column blocks of `b` rows
-/// and a 4-way unrolled dot product.
-pub fn matmul_nt_into(out: &mut [f32], a: &[f32], m: usize, n: usize, b: &[f32], p: usize) {
+/// and a vectorized dot product.
+#[allow(clippy::too_many_arguments)]
+fn matmul_nt_into_with(
+    ops: &SimdOps,
+    out: &mut [f32],
+    a: &[f32],
+    m: usize,
+    n: usize,
+    b: &[f32],
+    p: usize,
+) {
     debug_assert!(a.len() >= m * n && b.len() >= p * n && out.len() >= m * p);
     if m == 0 || p == 0 {
         return;
@@ -237,16 +464,17 @@ pub fn matmul_nt_into(out: &mut [f32], a: &[f32], m: usize, n: usize, b: &[f32],
     }
     let a = &a[..m * n];
     if m * p <= PAR_MIN {
-        nt_block(out, a, n, b, p);
+        nt_block(ops, out, a, n, b, p);
         return;
     }
     out.par_chunks_mut(ROW_BLOCK * p)
         .zip(a.par_chunks(ROW_BLOCK * n))
-        .for_each(|(orows, arows)| nt_block(orows, arows, n, b, p));
+        .for_each(|(orows, arows)| nt_block(ops, orows, arows, n, b, p));
 }
 
-fn nt_block(orows: &mut [f32], arows: &[f32], n: usize, b: &[f32], p: usize) {
+fn nt_block(ops: &SimdOps, orows: &mut [f32], arows: &[f32], n: usize, b: &[f32], p: usize) {
     let rows = orows.len() / p;
+    let dot = ops.dot;
     let mut j0 = 0;
     while j0 < p {
         let j1 = (j0 + COL_BLOCK).min(p);
@@ -261,32 +489,18 @@ fn nt_block(orows: &mut [f32], arows: &[f32], n: usize, b: &[f32], p: usize) {
     }
 }
 
-/// 4-way unrolled dot product (independent accumulators for ILP).
-#[inline]
-fn dot(x: &[f32], y: &[f32]) -> f32 {
-    let len = x.len().min(y.len());
-    let n4 = len - len % 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
-    let mut i = 0;
-    while i < n4 {
-        a0 += x[i] * y[i];
-        a1 += x[i + 1] * y[i + 1];
-        a2 += x[i + 2] * y[i + 2];
-        a3 += x[i + 3] * y[i + 3];
-        i += 4;
-    }
-    let mut s = (a0 + a1) + (a2 + a3);
-    while i < len {
-        s += x[i] * y[i];
-        i += 1;
-    }
-    s
-}
-
 /// `out = a[m, k]^T @ c[m, n]`, parallel over blocks of the `k` output rows;
-/// every block streams `a`'s column slab and `c` once, in fixed `i` order
-/// (bit-identical to the reference kernel).
-pub fn matmul_tn_into(out: &mut [f32], a: &[f32], m: usize, k: usize, c: &[f32], n: usize) {
+/// every block streams `a`'s column slab and `c` once, in fixed `i` order.
+#[allow(clippy::too_many_arguments)]
+fn matmul_tn_into_with(
+    ops: &SimdOps,
+    out: &mut [f32],
+    a: &[f32],
+    m: usize,
+    k: usize,
+    c: &[f32],
+    n: usize,
+) {
     debug_assert!(a.len() >= m * k && c.len() >= m * n && out.len() >= k * n);
     if k == 0 || n == 0 {
         return;
@@ -294,28 +508,35 @@ pub fn matmul_tn_into(out: &mut [f32], a: &[f32], m: usize, k: usize, c: &[f32],
     let out = &mut out[..k * n];
     if k * n <= PAR_MIN {
         out.fill(0.0);
-        tn_block(out, 0, a, m, k, c, n);
+        tn_block(ops, out, 0, a, m, k, c, n);
         return;
     }
     out.par_chunks_mut(ROW_BLOCK * n).enumerate().for_each(|(blk, orows)| {
         orows.fill(0.0);
-        tn_block(orows, blk * ROW_BLOCK, a, m, k, c, n);
+        tn_block(ops, orows, blk * ROW_BLOCK, a, m, k, c, n);
     });
 }
 
 /// Accumulate rows `kk0..kk0 + orows.len()/n` of `a^T @ c` into `orows`.
 #[allow(clippy::too_many_arguments)]
-fn tn_block(orows: &mut [f32], kk0: usize, a: &[f32], m: usize, k: usize, c: &[f32], n: usize) {
+fn tn_block(
+    ops: &SimdOps,
+    orows: &mut [f32],
+    kk0: usize,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    c: &[f32],
+    n: usize,
+) {
     let kb = orows.len() / n;
+    let axpy = ops.axpy;
     for i in 0..m {
         let crow = &c[i * n..(i + 1) * n];
         let arow = &a[i * k + kk0..i * k + kk0 + kb];
         for (r, &av) in arow.iter().enumerate() {
             if av != 0.0 {
-                let orow = &mut orows[r * n..(r + 1) * n];
-                for (o, &cv) in orow.iter_mut().zip(crow) {
-                    *o += av * cv;
-                }
+                axpy(&mut orows[r * n..(r + 1) * n], crow, av);
             }
         }
     }
@@ -446,10 +667,47 @@ mod tests {
     }
 
     #[test]
+    fn fused_bias_relu_matches_separate_passes() {
+        // integer-valued inputs => exact arithmetic at every SIMD level
+        let a = vec![1., -2., 3., 4., -5., 6.];
+        let b = vec![1., 0., -2., 0., 1., 3.];
+        let bias = vec![0.5, -1.0, 2.0];
+        for kern in [Kernels::blocked(), Kernels::blocked_scalar(), Kernels::reference()] {
+            let mut z = vec![0f32; 9];
+            let mut act = vec![7f32; 9];
+            kern.matmul_bias_relu_into(&mut z, &mut act, &a, 3, 2, &b, 3, &bias);
+            let mut want_z = reference::matmul(&a, 3, 2, &b, 3);
+            reference::add_bias_rows(&mut want_z, &bias);
+            assert_eq!(z, want_z, "{kern:?}");
+            for (i, (&av, &zv)) in act.iter().zip(&want_z).enumerate() {
+                assert_eq!(av, if zv > 0.0 { zv } else { 0.0 }, "{kern:?} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_mix_relu_matches_separate_passes() {
+        let s = vec![2., -4., 8., 2., -1., 0.5, 4., -8., 2.];
+        let w = vec![1., 0., 0., 0., 1., 0., -1., 0., 2.]; // 3x3
+        let gam = 0.5f32;
+        for kern in [Kernels::blocked(), Kernels::blocked_scalar(), Kernels::reference()] {
+            let mut z = vec![0f32; 9];
+            let mut act = vec![0f32; 9];
+            kern.matmul_mix_relu_into(&mut z, &mut act, &s, 3, 3, &w, 3, gam);
+            let sw = reference::matmul(&s, 3, 3, &w, 3);
+            for i in 0..9 {
+                let want = (1.0 - gam) * s[i] + gam * sw[i];
+                assert_eq!(z[i], want, "{kern:?} z elem {i}");
+                assert_eq!(act[i], if want > 0.0 { want } else { 0.0 }, "{kern:?} act elem {i}");
+            }
+        }
+    }
+
+    #[test]
     fn kernels_dispatch_agrees() {
         let a = vec![1., -2., 3., 0., 5., 6., -7., 8.];
         let b = vec![0.5, 1., -1., 2., 0., 3., 1., -2.];
-        for kern in [Kernels::blocked(), Kernels::reference()] {
+        for kern in [Kernels::blocked(), Kernels::blocked_scalar(), Kernels::reference()] {
             let mut out = vec![0f32; 8];
             kern.matmul_into(&mut out, &a, 4, 2, &b, 2);
             assert_eq!(out, reference::matmul(&a, 4, 2, &b, 2), "{kern:?}");
@@ -471,5 +729,10 @@ mod tests {
         matmul_nt_into(&mut out, &a, 0, 2, &b, 1);
         matmul_tn_into(&mut out, &b, 2, 0, &b, 1);
         assert!(out.is_empty());
+        // fused entries tolerate empty dims too
+        let mut act: Vec<f32> = Vec::new();
+        matmul_bias_relu_into_with(simd::ops_auto(), &mut out, &mut act, &a, 0, 2, &b, 1, &b);
+        matmul_mix_relu_into_with(simd::ops_auto(), &mut out, &mut act, &a, 0, 2, &b, 2, 0.5);
+        assert!(out.is_empty() && act.is_empty());
     }
 }

@@ -21,6 +21,7 @@ pub mod gemm;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod simd;
 pub mod workspace;
 
 use std::sync::{Arc, Mutex};

@@ -23,17 +23,26 @@
 //! Performance architecture (see rust/README.md § Performance):
 //!
 //!   * dense products run through the cache-blocked kernels in
-//!     [`super::gemm`] (`Kernels::blocked()`); the serial reference
-//!     kernels remain selectable via
+//!     [`super::gemm`] (`Kernels::blocked()`), whose inner loops dispatch
+//!     to runtime-detected SIMD ([`super::simd`]: AVX2/FMA, NEON, or the
+//!     scalar fallback — `LMC_SIMD=scalar` forces the latter); the serial
+//!     reference kernels remain selectable via
 //!     [`NativeExecutor::with_reference_kernels`] for baselines and
 //!     cross-checks;
+//!   * forward layers use the fused GEMM epilogues: the pre-activation
+//!     `z` and the activation `relu(z)` (plus, for GCNII, the
+//!     `(1-γ)·s + γ·s@W` residual mix) are written per cache-hot row
+//!     block instead of re-traversing `m · d` floats per pass, and the
+//!     GCNII `α·h0` initial residual is a SIMD prefill of the
+//!     aggregation destination;
 //!   * aggregation accumulates *into* caller-provided buffers
 //!     ([`agg_full_scaled_into`]) with feature-dim tiling for wide `d`,
 //!     and the affine bias/residual terms are fused into the destination
 //!     before the product/SpMM lands on it;
 //!   * every O(m · d) buffer is grabbed from the [`StepWorkspace`]
 //!     threaded through `StepInputs::ws`, so steady-state steps perform
-//!     no per-layer heap allocation.
+//!     no per-layer heap allocation (the fused path drops the per-layer
+//!     `sw` scratch buffer entirely).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -51,6 +60,7 @@ use crate::sampler::sparse::{SPMM_D_TILE, SPMM_PAR_MIN, SPMM_ROW_BLOCK};
 use crate::sampler::{gather_rows_into, Buckets, SubgraphBatch};
 
 use super::gemm::{self, GemmMode, Kernels};
+use super::simd::{self, SimdOps};
 use super::workspace::StepWorkspace;
 use super::{Executor, ModelSpec, StepInputs, StepOutputs};
 
@@ -107,7 +117,10 @@ impl NativeExecutor {
         NativeExecutor::with_kernels(Kernels::reference())
     }
 
-    fn with_kernels(kern: Kernels) -> NativeExecutor {
+    /// Executor over an explicit kernel configuration — benches use
+    /// `Kernels::blocked_scalar()` here to time the PR 2 (blocked, no
+    /// SIMD) step against the dispatched one within a single process.
+    pub fn with_kernels(kern: Kernels) -> NativeExecutor {
         NativeExecutor {
             timer: Mutex::new(TimerState { secs: 0.0, depth: 0, t0: Instant::now() }),
             kern,
@@ -241,12 +254,10 @@ fn relu_bwd_mask(dz: &mut [f32], z: &[f32]) {
     }
 }
 
-/// dst += scale * src.
+/// dst += scale * src (runtime-dispatched SIMD).
 fn axpy(dst: &mut [f32], src: &[f32], scale: f32) {
     debug_assert_eq!(dst.len(), src.len());
-    for (d, &s) in dst.iter_mut().zip(src) {
-        *d += scale * s;
-    }
+    (simd::ops_auto().axpy)(dst, src, scale);
 }
 
 /// Eq. (9)/(12): out[i, :] = (1 - beta[i]) * hist[i, :] + beta[i] * fresh[i, :],
@@ -259,21 +270,14 @@ pub fn combine_into(out: &mut [f32], beta: &[f32], hist: &[f32], fresh: &[f32], 
         return;
     }
     let out = &mut out[..rows * d];
+    let cmb = simd::ops_auto().combine;
     if rows * d >= COMBINE_PAR_MIN {
         out.par_chunks_mut(d).enumerate().for_each(|(i, o)| {
-            let b = beta[i];
-            let (hrow, frow) = (&hist[i * d..(i + 1) * d], &fresh[i * d..(i + 1) * d]);
-            for ((ov, &hv), &fv) in o.iter_mut().zip(hrow).zip(frow) {
-                *ov = (1.0 - b) * hv + b * fv;
-            }
+            cmb(o, &hist[i * d..(i + 1) * d], &fresh[i * d..(i + 1) * d], beta[i]);
         });
     } else {
         for (i, o) in out.chunks_mut(d).enumerate() {
-            let b = beta[i];
-            let (hrow, frow) = (&hist[i * d..(i + 1) * d], &fresh[i * d..(i + 1) * d]);
-            for ((ov, &hv), &fv) in o.iter_mut().zip(hrow).zip(frow) {
-                *ov = (1.0 - b) * hv + b * fv;
-            }
+            cmb(o, &hist[i * d..(i + 1) * d], &fresh[i * d..(i + 1) * d], beta[i]);
         }
     }
 }
@@ -379,12 +383,13 @@ fn agg_full_scaled_into(
             .for_each(|(r, row)| agg_row(sb, x, d, scale, r, row));
         return;
     }
+    let ops = kern.ops();
     if m * d <= SPMM_PAR_MIN {
-        agg_rows_tiled(sb, x, d, scale, 0, out);
+        agg_rows_tiled(ops, sb, x, d, scale, 0, out);
         return;
     }
     out.par_chunks_mut(SPMM_ROW_BLOCK * d).enumerate().for_each(|(blk, orows)| {
-        agg_rows_tiled(sb, x, d, scale, blk * SPMM_ROW_BLOCK, orows);
+        agg_rows_tiled(ops, sb, x, d, scale, blk * SPMM_ROW_BLOCK, orows);
     });
 }
 
@@ -415,10 +420,20 @@ fn agg_row(sb: &SubgraphBatch, x: &[f32], d: usize, scale: f32, r: usize, row: &
 }
 
 /// A block of stacked-operator rows starting at `r0`, feature-tiled so the
-/// active `x` tile stays cache-resident across the block's rows.
-fn agg_rows_tiled(sb: &SubgraphBatch, x: &[f32], d: usize, scale: f32, r0: usize, orows: &mut [f32]) {
+/// active `x` tile stays cache-resident across the block's rows; the
+/// per-edge inner loop is the dispatched SIMD `axpy`.
+fn agg_rows_tiled(
+    ops: &SimdOps,
+    sb: &SubgraphBatch,
+    x: &[f32],
+    d: usize,
+    scale: f32,
+    r0: usize,
+    orows: &mut [f32],
+) {
     let nb = sb.batch.len();
     let rows = orows.len() / d;
+    let axpy = ops.axpy;
     let mut d0 = 0;
     while d0 < d {
         let d1 = (d0 + SPMM_D_TILE).min(d);
@@ -432,19 +447,11 @@ fn agg_rows_tiled(sb: &SubgraphBatch, x: &[f32], d: usize, scale: f32, r0: usize
             let orow = &mut orows[rr * d + d0..rr * d + d1];
             let (cols, vals) = lo;
             for (&j, &w) in cols.iter().zip(vals) {
-                let sw = scale * w;
-                let src = &x[j as usize * d + d0..j as usize * d + d1];
-                for (o, &s) in orow.iter_mut().zip(src) {
-                    *o += sw * s;
-                }
+                axpy(orow, &x[j as usize * d + d0..j as usize * d + d1], scale * w);
             }
             let (cols, vals) = hi;
             for (&j, &w) in cols.iter().zip(vals) {
-                let sw = scale * w;
-                let src = &x[(nb + j as usize) * d + d0..(nb + j as usize) * d + d1];
-                for (o, &s) in orow.iter_mut().zip(src) {
-                    *o += sw * s;
-                }
+                axpy(orow, &x[(nb + j as usize) * d + d0..(nb + j as usize) * d + d1], scale * w);
             }
         }
         d0 = d1;
@@ -501,11 +508,12 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
         Kind::Gcnii => {
             let w0 = param(inp.params, "W0")?;
             let b0 = param(inp.params, "b0")?;
+            // fused affine + ReLU epilogue: z0 and h0 = relu(z0) are each
+            // written exactly once, per cache-hot row block
             let mut z0 = ws.grab_dirty(m * dims[0]);
-            kern.matmul_bias_into(&mut z0, &x_full, m, g.d_x, &w0.data, dims[0], &b0.data);
             let mut h0 = ws.grab_dirty(m * dims[0]);
-            h0.copy_from_slice(&z0);
-            relu_inplace(&mut h0);
+            let (w0d, b0d) = (&w0.data, &b0.data);
+            kern.matmul_bias_relu_into(&mut z0, &mut h0, &x_full, m, g.d_x, w0d, dims[0], b0d);
             let mut h = ws.grab_dirty(m * dims[0]);
             h.copy_from_slice(&h0);
             (h, h0, z0, x_full)
@@ -523,42 +531,55 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
     for l in 1..=l_total {
         let d_prev = dims[l - 1];
         let d_l = dims[l];
-        let z = match kind {
+        let relu = l < l_total || kind == Kind::Gcnii;
+        let (z, mut act) = match kind {
             Kind::Gcn => {
                 let w = param(inp.params, &format!("W{l}"))?;
                 let b = param(inp.params, &format!("b{l}"))?;
                 let mut agg = ws.grab(m * d_prev);
                 agg_full_scaled_into(kern, sb, &h, d_prev, 1.0, &mut agg);
                 let mut z = ws.grab_dirty(m * d_l);
-                kern.matmul_bias_into(&mut z, &agg, m, d_prev, &w.data, d_l, &b.data);
+                let mut act = ws.grab_dirty(m * d_l);
+                if relu {
+                    // fused epilogue: z and act = relu(z) in one traversal
+                    let (wd, bd) = (&w.data, &b.data);
+                    kern.matmul_bias_relu_into(&mut z, &mut act, &agg, m, d_prev, wd, d_l, bd);
+                } else {
+                    kern.matmul_bias_into(&mut z, &agg, m, d_prev, &w.data, d_l, &b.data);
+                    act.copy_from_slice(&z);
+                }
                 lin.push(agg);
-                z
+                (z, act)
             }
             Kind::Gcnii => {
                 let w = param(inp.params, &format!("W{l}"))?;
                 let gam = gcnii_gamma(l);
-                // fused residual + aggregate: s = α·h0 + (1-α)·(A @ h)
+                // fused residual + aggregate: s = α·h0 + (1-α)·(A @ h);
+                // the α·h0 prefill is the SIMD scaled copy, the aggregate
+                // then accumulates on top of it
                 let mut s = ws.grab_dirty(m * d_prev);
-                for (sv, &h0v) in s.iter_mut().zip(&h0_full) {
-                    *sv = GCNII_ALPHA * h0v;
-                }
+                (kern.ops().scale)(&mut s, &h0_full, GCNII_ALPHA);
                 agg_full_scaled_into(kern, sb, &h, d_prev, 1.0 - GCNII_ALPHA, &mut s);
-                let mut sw = ws.grab_dirty(m * d_l);
-                kern.matmul_into(&mut sw, &s, m, d_prev, &w.data, d_l);
                 let mut z = ws.grab_dirty(m * d_l);
-                for ((zv, &sv), &swv) in z.iter_mut().zip(&s[..m * d_l]).zip(&sw) {
-                    *zv = (1.0 - gam) * sv + gam * swv;
+                let mut act = ws.grab_dirty(m * d_l);
+                if d_prev == d_l {
+                    // fused epilogue: s@W lands per row block, the
+                    // (1-γ)·s + γ·s@W mix and ReLU run on the hot block
+                    kern.matmul_mix_relu_into(&mut z, &mut act, &s, m, d_prev, &w.data, d_l, gam);
+                } else {
+                    let mut sw = ws.grab_dirty(m * d_l);
+                    kern.matmul_into(&mut sw, &s, m, d_prev, &w.data, d_l);
+                    for ((zv, &sv), &swv) in z.iter_mut().zip(&s[..m * d_l]).zip(&sw) {
+                        *zv = (1.0 - gam) * sv + gam * swv;
+                    }
+                    ws.put(sw);
+                    act.copy_from_slice(&z);
+                    relu_inplace(&mut act);
                 }
-                ws.put(sw);
                 lin.push(s);
-                z
+                (z, act)
             }
         };
-        let mut act = ws.grab_dirty(m * d_l);
-        act.copy_from_slice(&z);
-        if l < l_total || kind == Kind::Gcnii {
-            relu_inplace(&mut act);
-        }
         pre.push(z);
         if l < l_total {
             // Eq. (9): halo rows become a convex combination of the fresh
@@ -1053,7 +1074,10 @@ mod tests {
 
     #[test]
     fn combine_parallel_path_matches_serial() {
-        // rows * d above COMBINE_PAR_MIN exercises the rayon path
+        // rows * d above COMBINE_PAR_MIN exercises the rayon path. The
+        // dispatched SIMD primitive may fuse the multiply-add (one fewer
+        // rounding than the written-out formula), so compare to ≤ 1 ulp
+        // tolerance rather than bitwise.
         let rows = 300;
         let d = 64;
         let beta: Vec<f32> = (0..rows).map(|i| (i % 11) as f32 / 10.0).collect();
@@ -1064,9 +1088,18 @@ mod tests {
             let b = beta[i];
             for j in 0..d {
                 let want = (1.0 - b) * hist[i * d + j] + b * fresh[i * d + j];
-                assert_eq!(got[i * d + j], want, "row {i} col {j}");
+                let g = got[i * d + j];
+                assert!(
+                    (g - want).abs() <= 1e-6 * (1.0 + want.abs()),
+                    "row {i} col {j}: {g} vs {want}"
+                );
             }
         }
+        // parallel and serial paths of combine_into itself agree bitwise
+        // (same primitive, same per-row calls)
+        let small_rows = 4;
+        let serial = combine(&beta[..small_rows], &hist[..small_rows * d], &fresh[..small_rows * d], small_rows, d);
+        assert_eq!(&serial[..], &got[..small_rows * d]);
     }
 
     #[test]

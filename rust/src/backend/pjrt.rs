@@ -361,11 +361,11 @@ impl<'a> TileOracle<'a> {
             let hl_t = gather_range(hl, d_l, s, e, self.bt);
             let y: Vec<i32> = (s..e)
                 .map(|u| g.labels[u] as i32)
-                .chain(std::iter::repeat(0).take(self.bt - (e - s)))
+                .chain(std::iter::repeat_n(0, self.bt - (e - s)))
                 .collect();
             let mask: Vec<f32> = (s..e)
                 .map(|u| if g.split[u] == 0 { 1.0 } else { 0.0 })
-                .chain(std::iter::repeat(0.0).take(self.bt - (e - s)))
+                .chain(std::iter::repeat_n(0.0, self.bt - (e - s)))
                 .collect();
             let mut inputs = vec![
                 lit_f32(&hl_t, &[self.bt, d_l])?,
@@ -426,11 +426,11 @@ impl<'a> TileOracle<'a> {
                 let hl_t = gather_range(&hs[self.l], d_l, s, e, self.bt);
                 let y: Vec<i32> = (s..e)
                     .map(|u| g.labels[u] as i32)
-                    .chain(std::iter::repeat(0).take(self.bt - (e - s)))
+                    .chain(std::iter::repeat_n(0, self.bt - (e - s)))
                     .collect();
                 let mask: Vec<f32> = (s..e)
                     .map(|u| if g.split[u] == 0 { 1.0 } else { 0.0 })
-                    .chain(std::iter::repeat(0.0).take(self.bt - (e - s)))
+                    .chain(std::iter::repeat_n(0.0, self.bt - (e - s)))
                     .collect();
                 let mut inputs = vec![
                     lit_f32(&hl_t, &[self.bt, d_l])?,

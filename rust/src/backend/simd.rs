@@ -1,0 +1,679 @@
+//! Runtime-dispatched, SIMD-explicit elementwise primitives for the native
+//! backend's hot loops (GEMM microkernels, SpMM row loops, the fused
+//! bias/ReLU/residual epilogues, and the Eq. 9/12 convex combination).
+//!
+//! Three dispatch levels:
+//!
+//!   * [`SimdLevel::Avx2Fma`] — 8-wide f32 `std::arch` AVX2 + FMA on
+//!     x86_64, selected at runtime via `is_x86_feature_detected!`;
+//!   * [`SimdLevel::Neon`] — 8-wide (2 × 4-lane) NEON on aarch64;
+//!   * [`SimdLevel::Scalar`] — the portable scalar kernels, bit-identical
+//!     to the pre-SIMD blocked kernels. Always available; the property-test
+//!     oracle the SIMD paths are pinned against
+//!     (`tests/proptest_invariants.rs`, ≤ 1e-5).
+//!
+//! Dispatch is a [`SimdOps`] table of plain `fn` pointers resolved once per
+//! kernel invocation (`Kernels::ops()` / [`ops_auto`]), so inner loops pay
+//! one indirect call per row/panel, not per element.
+//!
+//! Numerics contract: every vector lane and every scalar tail of the
+//! accumulating primitives computes `fma(a, x, acc)` with a single rounding
+//! (`f32::mul_add` in the tails), so results are **independent of vector
+//! width, tile boundaries, and slice alignment** — the serial and tiled
+//! SpMM paths stay bitwise equal to each other at any level. Relative to
+//! the scalar level, FMA removes one rounding per multiply-add (≤ 1 ulp per
+//! op); only `dot` additionally reassociates (multiple accumulators). Force
+//! the scalar level with `LMC_SIMD=scalar` to reproduce pre-SIMD bits
+//! exactly (see rust/README.md § Kernel dispatch).
+
+use std::sync::OnceLock;
+
+/// Which SIMD instruction family the dispatched primitives use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// 8-wide AVX2 + FMA (x86_64, runtime-detected).
+    Avx2Fma,
+    /// 2 × 4-lane NEON (aarch64).
+    Neon,
+    /// Portable scalar kernels (fallback + property-test oracle).
+    Scalar,
+}
+
+impl SimdLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Avx2Fma => "avx2+fma",
+            SimdLevel::Neon => "neon",
+            SimdLevel::Scalar => "scalar",
+        }
+    }
+}
+
+/// Parse the `LMC_SIMD` env knob. Only an explicit request for the scalar
+/// path is honored ("scalar" / "off" / "0"); anything else means "auto".
+pub fn parse_level(s: &str) -> Option<SimdLevel> {
+    match s.to_ascii_lowercase().as_str() {
+        "scalar" | "off" | "0" => Some(SimdLevel::Scalar),
+        _ => None,
+    }
+}
+
+/// Best level the running hardware supports (no env override).
+pub fn hw_level() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return SimdLevel::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return SimdLevel::Neon;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// The process-wide dispatch level: hardware detection, overridden by
+/// `LMC_SIMD=scalar` (forces the portable scalar kernels — for debugging
+/// and for A/B timing outside the in-process bench handles). Cached after
+/// first use.
+pub fn level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if let Ok(v) = std::env::var("LMC_SIMD") {
+            if parse_level(&v) == Some(SimdLevel::Scalar) {
+                return SimdLevel::Scalar;
+            }
+        }
+        hw_level()
+    })
+}
+
+/// Dispatch table of the elementwise primitives the kernels hot-loop over.
+/// All slice-length mismatches resolve to the shortest operand.
+#[derive(Clone, Copy)]
+pub struct SimdOps {
+    pub level: SimdLevel,
+    /// `dst[i] += a * src[i]` — the GEMM/SpMM accumulation inner loop.
+    pub axpy: fn(&mut [f32], &[f32], f32),
+    /// `dst[i] = a * src[i]` — the GCNII `α·h0` residual prefill.
+    pub scale: fn(&mut [f32], &[f32], f32),
+    /// Dot product (reassociates across accumulators) — the N/T kernel.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `act[i] = max(z[i], 0)` — the fused bias+ReLU epilogue pass.
+    pub relu_copy: fn(&mut [f32], &[f32]),
+    /// `z[i] = (1-g)·s[i] + g·z[i]; act[i] = max(z[i], 0)` — the fused
+    /// GCNII residual-mix + ReLU epilogue (`z` holds `s @ W` on entry).
+    pub mix_relu: fn(&mut [f32], &mut [f32], &[f32], f32),
+    /// `out[i] = (1-b)·hist[i] + b·fresh[i]` — one Eq. 9/12 row.
+    pub combine: fn(&mut [f32], &[f32], &[f32], f32),
+}
+
+/// The ops table for `level`, falling back to scalar when the requested
+/// level is not supported by the running hardware (so a deserialized or
+/// hard-coded level can never dispatch into unsupported instructions).
+pub fn ops(level: SimdLevel) -> &'static SimdOps {
+    #[cfg(target_arch = "x86_64")]
+    if level == SimdLevel::Avx2Fma && hw_level() == SimdLevel::Avx2Fma {
+        return &AVX2_OPS;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if level == SimdLevel::Neon && hw_level() == SimdLevel::Neon {
+        return &NEON_OPS;
+    }
+    let _ = level;
+    &SCALAR_OPS
+}
+
+/// The ops table for the process-wide [`level`].
+pub fn ops_auto() -> &'static SimdOps {
+    ops(level())
+}
+
+// ---------------------------------------------------------------------------
+// scalar (portable fallback + oracle)
+// ---------------------------------------------------------------------------
+
+static SCALAR_OPS: SimdOps = SimdOps {
+    level: SimdLevel::Scalar,
+    axpy: scalar::axpy,
+    scale: scalar::scale,
+    dot: scalar::dot,
+    relu_copy: scalar::relu_copy,
+    mix_relu: scalar::mix_relu,
+    combine: scalar::combine,
+};
+
+mod scalar {
+    pub fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        for (d, &s) in dst[..n].iter_mut().zip(&src[..n]) {
+            *d += a * s;
+        }
+    }
+
+    pub fn scale(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        for (d, &s) in dst[..n].iter_mut().zip(&src[..n]) {
+            *d = a * s;
+        }
+    }
+
+    /// 4-way unrolled dot product (independent accumulators for ILP) — the
+    /// pre-SIMD N/T kernel inner loop, retained verbatim.
+    pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let len = x.len().min(y.len());
+        let n4 = len - len % 4;
+        let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+        let mut i = 0;
+        while i < n4 {
+            a0 += x[i] * y[i];
+            a1 += x[i + 1] * y[i + 1];
+            a2 += x[i + 2] * y[i + 2];
+            a3 += x[i + 3] * y[i + 3];
+            i += 4;
+        }
+        let mut s = (a0 + a1) + (a2 + a3);
+        while i < len {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    pub fn relu_copy(act: &mut [f32], z: &[f32]) {
+        let n = act.len().min(z.len());
+        for (a, &v) in act[..n].iter_mut().zip(&z[..n]) {
+            *a = if v > 0.0 { v } else { 0.0 };
+        }
+    }
+
+    pub fn mix_relu(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
+        let n = z.len().min(act.len()).min(s.len());
+        let (zs, acts) = (&mut z[..n], &mut act[..n]);
+        for ((zv, av), &sv) in zs.iter_mut().zip(acts.iter_mut()).zip(&s[..n]) {
+            let m = (1.0 - gam) * sv + gam * *zv;
+            *zv = m;
+            *av = if m > 0.0 { m } else { 0.0 };
+        }
+    }
+
+    pub fn combine(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
+        let n = out.len().min(hist.len()).min(fresh.len());
+        for ((o, &h), &f) in out[..n].iter_mut().zip(&hist[..n]).zip(&fresh[..n]) {
+            *o = (1.0 - b) * h + b * f;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_OPS: SimdOps = SimdOps {
+    level: SimdLevel::Avx2Fma,
+    axpy: axpy_avx2,
+    scale: scale_avx2,
+    dot: dot_avx2,
+    relu_copy: relu_copy_avx2,
+    mix_relu: mix_relu_avx2,
+    combine: combine_avx2,
+};
+
+// Safe shims. SAFETY (all six): these fn pointers are only installed in
+// `AVX2_OPS`, which `ops()` returns only after `is_x86_feature_detected!`
+// confirmed avx2+fma on the running CPU.
+#[cfg(target_arch = "x86_64")]
+fn axpy_avx2(dst: &mut [f32], src: &[f32], a: f32) {
+    unsafe { x86::axpy(dst, src, a) }
+}
+#[cfg(target_arch = "x86_64")]
+fn scale_avx2(dst: &mut [f32], src: &[f32], a: f32) {
+    unsafe { x86::scale(dst, src, a) }
+}
+#[cfg(target_arch = "x86_64")]
+fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+    unsafe { x86::dot(x, y) }
+}
+#[cfg(target_arch = "x86_64")]
+fn relu_copy_avx2(act: &mut [f32], z: &[f32]) {
+    unsafe { x86::relu_copy(act, z) }
+}
+#[cfg(target_arch = "x86_64")]
+fn mix_relu_avx2(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
+    unsafe { x86::mix_relu(z, act, s, gam) }
+}
+#[cfg(target_arch = "x86_64")]
+fn combine_avx2(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
+    unsafe { x86::combine(out, hist, fresh, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! 8-wide AVX2/FMA bodies. Every `fn` here requires avx2+fma at
+    //! runtime; they are reachable only through the `AVX2_OPS` table.
+
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dp.add(i));
+            let s = _mm256_loadu_ps(sp.add(i));
+            _mm256_storeu_ps(dp.add(i), _mm256_fmadd_ps(av, s, d));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = a.mul_add(*sp.add(i), *dp.add(i));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dp.add(i), _mm256_mul_ps(av, _mm256_loadu_ps(sp.add(i))));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = a * *sp.add(i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i + 8)),
+                _mm256_loadu_ps(yp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            i += 8;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut total = ((lanes[0] + lanes[4]) + (lanes[1] + lanes[5]))
+            + ((lanes[2] + lanes[6]) + (lanes[3] + lanes[7]));
+        while i < n {
+            total = (*xp.add(i)).mul_add(*yp.add(i), total);
+            i += 1;
+        }
+        total
+    }
+
+    /// # Safety
+    /// Requires avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn relu_copy(act: &mut [f32], z: &[f32]) {
+        let n = act.len().min(z.len());
+        let ap = act.as_mut_ptr();
+        let zp = z.as_ptr();
+        let zero = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(ap.add(i), _mm256_max_ps(_mm256_loadu_ps(zp.add(i)), zero));
+            i += 8;
+        }
+        while i < n {
+            let v = *zp.add(i);
+            *ap.add(i) = if v > 0.0 { v } else { 0.0 };
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mix_relu(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
+        let n = z.len().min(act.len()).min(s.len());
+        let zp = z.as_mut_ptr();
+        let ap = act.as_mut_ptr();
+        let sp = s.as_ptr();
+        let g = _mm256_set1_ps(gam);
+        let omg = _mm256_set1_ps(1.0 - gam);
+        let zero = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let zv = _mm256_loadu_ps(zp.add(i));
+            let sv = _mm256_loadu_ps(sp.add(i));
+            let mixed = _mm256_fmadd_ps(g, zv, _mm256_mul_ps(omg, sv));
+            _mm256_storeu_ps(zp.add(i), mixed);
+            _mm256_storeu_ps(ap.add(i), _mm256_max_ps(mixed, zero));
+            i += 8;
+        }
+        while i < n {
+            let m = gam.mul_add(*zp.add(i), (1.0 - gam) * *sp.add(i));
+            *zp.add(i) = m;
+            *ap.add(i) = if m > 0.0 { m } else { 0.0 };
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn combine(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
+        let n = out.len().min(hist.len()).min(fresh.len());
+        let op = out.as_mut_ptr();
+        let hp = hist.as_ptr();
+        let fp = fresh.as_ptr();
+        let bv = _mm256_set1_ps(b);
+        let omb = _mm256_set1_ps(1.0 - b);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let hv = _mm256_loadu_ps(hp.add(i));
+            let fv = _mm256_loadu_ps(fp.add(i));
+            _mm256_storeu_ps(op.add(i), _mm256_fmadd_ps(bv, fv, _mm256_mul_ps(omb, hv)));
+            i += 8;
+        }
+        while i < n {
+            *op.add(i) = b.mul_add(*fp.add(i), (1.0 - b) * *hp.add(i));
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+static NEON_OPS: SimdOps = SimdOps {
+    level: SimdLevel::Neon,
+    axpy: axpy_neon,
+    scale: scale_neon,
+    dot: dot_neon,
+    relu_copy: relu_copy_neon,
+    mix_relu: mix_relu_neon,
+    combine: combine_neon,
+};
+
+// Safe shims. SAFETY (all six): installed only in `NEON_OPS`, which `ops()`
+// returns only after `is_aarch64_feature_detected!("neon")`.
+#[cfg(target_arch = "aarch64")]
+fn axpy_neon(dst: &mut [f32], src: &[f32], a: f32) {
+    unsafe { neon::axpy(dst, src, a) }
+}
+#[cfg(target_arch = "aarch64")]
+fn scale_neon(dst: &mut [f32], src: &[f32], a: f32) {
+    unsafe { neon::scale(dst, src, a) }
+}
+#[cfg(target_arch = "aarch64")]
+fn dot_neon(x: &[f32], y: &[f32]) -> f32 {
+    unsafe { neon::dot(x, y) }
+}
+#[cfg(target_arch = "aarch64")]
+fn relu_copy_neon(act: &mut [f32], z: &[f32]) {
+    unsafe { neon::relu_copy(act, z) }
+}
+#[cfg(target_arch = "aarch64")]
+fn mix_relu_neon(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
+    unsafe { neon::mix_relu(z, act, s, gam) }
+}
+#[cfg(target_arch = "aarch64")]
+fn combine_neon(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
+    unsafe { neon::combine(out, hist, fresh, b) }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! 8-wide (2 × 4-lane) NEON bodies; reachable only through `NEON_OPS`.
+
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// Requires neon (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let av = vdupq_n_f32(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d0 = vld1q_f32(dp.add(i));
+            let d1 = vld1q_f32(dp.add(i + 4));
+            let s0 = vld1q_f32(sp.add(i));
+            let s1 = vld1q_f32(sp.add(i + 4));
+            vst1q_f32(dp.add(i), vfmaq_f32(d0, av, s0));
+            vst1q_f32(dp.add(i + 4), vfmaq_f32(d1, av, s1));
+            i += 8;
+        }
+        while i + 4 <= n {
+            let d = vld1q_f32(dp.add(i));
+            let s = vld1q_f32(sp.add(i));
+            vst1q_f32(dp.add(i), vfmaq_f32(d, av, s));
+            i += 4;
+        }
+        while i < n {
+            *dp.add(i) = a.mul_add(*sp.add(i), *dp.add(i));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires neon (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let av = vdupq_n_f32(a);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(dp.add(i), vmulq_f32(av, vld1q_f32(sp.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *dp.add(i) = a * *sp.add(i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires neon (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(xp.add(i + 4)), vld1q_f32(yp.add(i + 4)));
+            i += 8;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i)));
+            i += 4;
+        }
+        let mut total = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            total = (*xp.add(i)).mul_add(*yp.add(i), total);
+            i += 1;
+        }
+        total
+    }
+
+    /// # Safety
+    /// Requires neon (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn relu_copy(act: &mut [f32], z: &[f32]) {
+        let n = act.len().min(z.len());
+        let ap = act.as_mut_ptr();
+        let zp = z.as_ptr();
+        let zero = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(ap.add(i), vmaxq_f32(vld1q_f32(zp.add(i)), zero));
+            i += 4;
+        }
+        while i < n {
+            let v = *zp.add(i);
+            *ap.add(i) = if v > 0.0 { v } else { 0.0 };
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires neon (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mix_relu(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
+        let n = z.len().min(act.len()).min(s.len());
+        let zp = z.as_mut_ptr();
+        let ap = act.as_mut_ptr();
+        let sp = s.as_ptr();
+        let g = vdupq_n_f32(gam);
+        let omg = vdupq_n_f32(1.0 - gam);
+        let zero = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let zv = vld1q_f32(zp.add(i));
+            let sv = vld1q_f32(sp.add(i));
+            let mixed = vfmaq_f32(vmulq_f32(omg, sv), g, zv);
+            vst1q_f32(zp.add(i), mixed);
+            vst1q_f32(ap.add(i), vmaxq_f32(mixed, zero));
+            i += 4;
+        }
+        while i < n {
+            let m = gam.mul_add(*zp.add(i), (1.0 - gam) * *sp.add(i));
+            *zp.add(i) = m;
+            *ap.add(i) = if m > 0.0 { m } else { 0.0 };
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires neon (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn combine(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
+        let n = out.len().min(hist.len()).min(fresh.len());
+        let op = out.as_mut_ptr();
+        let hp = hist.as_ptr();
+        let fp = fresh.as_ptr();
+        let bv = vdupq_n_f32(b);
+        let omb = vdupq_n_f32(1.0 - b);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let hv = vld1q_f32(hp.add(i));
+            let fv = vld1q_f32(fp.add(i));
+            vst1q_f32(op.add(i), vfmaq_f32(vmulq_f32(omb, hv), bv, fv));
+            i += 4;
+        }
+        while i < n {
+            *op.add(i) = b.mul_add(*fp.add(i), (1.0 - b) * *hp.add(i));
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_only_forces_scalar() {
+        assert_eq!(parse_level("scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(parse_level("OFF"), Some(SimdLevel::Scalar));
+        assert_eq!(parse_level("0"), Some(SimdLevel::Scalar));
+        assert_eq!(parse_level("auto"), None);
+        assert_eq!(parse_level(""), None);
+        assert_eq!(parse_level("avx512"), None);
+    }
+
+    #[test]
+    fn ops_auto_matches_level() {
+        assert_eq!(ops_auto().level, ops(level()).level);
+        // the scalar table is always reachable
+        assert_eq!(ops(SimdLevel::Scalar).level, SimdLevel::Scalar);
+    }
+
+    /// Small-integer values make every product/sum exact in f32, so the
+    /// active level must agree with scalar **bitwise** regardless of FMA.
+    #[test]
+    fn active_level_exact_on_integer_values() {
+        let active = ops_auto();
+        let scalar = ops(SimdLevel::Scalar);
+        let src: Vec<f32> = (0..21).map(|i| (i % 7) as f32 - 3.0).collect();
+        let base: Vec<f32> = (0..21).map(|i| (i % 5) as f32).collect();
+
+        let mut a1 = base.clone();
+        (active.axpy)(&mut a1, &src, 2.0);
+        let mut a2 = base.clone();
+        (scalar.axpy)(&mut a2, &src, 2.0);
+        assert_eq!(a1, a2);
+
+        let mut s1 = vec![0f32; 21];
+        (active.scale)(&mut s1, &src, -1.5);
+        let mut s2 = vec![0f32; 21];
+        (scalar.scale)(&mut s2, &src, -1.5);
+        assert_eq!(s1, s2);
+
+        assert_eq!((active.dot)(&src, &base), (scalar.dot)(&src, &base));
+
+        let mut r1 = vec![7f32; 21];
+        (active.relu_copy)(&mut r1, &src);
+        assert!(r1.iter().zip(&src).all(|(&r, &z)| r == if z > 0.0 { z } else { 0.0 }));
+    }
+
+    #[test]
+    fn mix_relu_and_combine_formulas() {
+        let ops = ops(SimdLevel::Scalar);
+        let mut z = vec![2.0f32, -4.0, 8.0];
+        let mut act = vec![0f32; 3];
+        let s = vec![4.0f32, 4.0, -16.0];
+        // gam = 0.5: z' = 0.5*s + 0.5*z = [3, 0, -4]
+        (ops.mix_relu)(&mut z, &mut act, &s, 0.5);
+        assert_eq!(z, vec![3.0, 0.0, -4.0]);
+        assert_eq!(act, vec![3.0, 0.0, 0.0]);
+
+        let mut out = vec![0f32; 2];
+        (ops.combine)(&mut out, &[4.0, 8.0], &[0.0, 0.0], 0.25);
+        assert_eq!(out, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn length_mismatch_resolves_to_shortest() {
+        let ops = ops_auto();
+        let mut dst = vec![1f32; 10];
+        (ops.axpy)(&mut dst, &[1.0, 1.0, 1.0], 1.0);
+        assert_eq!(&dst[..3], &[2.0, 2.0, 2.0]);
+        assert!(dst[3..].iter().all(|&v| v == 1.0));
+        assert_eq!((ops.dot)(&[1.0, 2.0], &[3.0, 4.0, 100.0]), 11.0);
+    }
+}

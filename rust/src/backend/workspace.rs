@@ -64,8 +64,10 @@ impl StepWorkspace {
     /// Like [`StepWorkspace::grab`] but without the zero-fill pass: a
     /// recycled buffer keeps its stale prefix contents. Only for
     /// destinations that are fully overwritten before being read —
-    /// gathers, `copy_from_slice` targets, and overwrite-mode
-    /// `matmul_*_into` outputs. (The repeated-step property test
+    /// gathers, `copy_from_slice` targets, overwrite-mode
+    /// `matmul_*_into` outputs, and the fused-epilogue `z`/`act` pairs
+    /// (`matmul_bias_relu_into` / `matmul_mix_relu_into` write every
+    /// element of both buffers). (The repeated-step property test
     /// `prop_optimized_step_matches_reference_step` would catch a
     /// misclassified site as a round-2 divergence.)
     pub fn grab_dirty(&mut self, len: usize) -> Vec<f32> {

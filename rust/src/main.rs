@@ -7,6 +7,8 @@
 //!   datasets          list datasets and their stats
 //!   programs          list compiled artifact programs (pjrt builds)
 //!   grad-error        per-layer mini-batch gradient error (Fig. 3 point)
+//!   bench-gate        diff BENCH_step.json vs BENCH_baseline.json and fail
+//!                     on a gated-phase slowdown (CI perf-gate job)
 //!   experiment <id>   regenerate a paper table/figure (table1, table2,
 //!                     table3, table6, table7, table8, table9, fig2, fig3,
 //!                     fig4, fig5, sharded, all)
@@ -42,6 +44,7 @@ fn run(args: &Args) -> Result<()> {
         "datasets" => cmd_datasets(),
         "programs" => cmd_programs(args),
         "grad-error" => cmd_grad_error(args),
+        "bench-gate" => cmd_bench_gate(args),
         "experiment" => lmc::experiments::dispatch(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -70,6 +73,8 @@ subcommands:
   datasets         list registered datasets
   programs         list artifact programs (--artifacts DIR; pjrt builds only)
   grad-error       --dataset D --method M [--warm-epochs N]
+  bench-gate       [--bench ../BENCH_step.json] [--baseline ../BENCH_baseline.json]
+                   [--summary FILE]   diff gated phases, exit 1 on regression
   experiment ID    table1|table2|table3|table6|table7|table8|table9|
                    fig2|fig3|fig4|fig5|sharded|all   [--out results/]
 ";
@@ -235,6 +240,44 @@ fn cmd_programs(_args: &Args) -> Result<()> {
         "`lmc programs` lists compiled PJRT artifacts; this build ships the \
          native backend only (rebuild with `--features pjrt`)"
     ))
+}
+
+/// CI perf gate: compare a freshly measured `BENCH_step.json` against the
+/// committed `BENCH_baseline.json` (noise-banded; see util::perfgate),
+/// print the markdown delta table (CI appends it to the job summary), and
+/// exit nonzero when a gated phase regressed.
+fn cmd_bench_gate(args: &Args) -> Result<()> {
+    let bench_path = args.opt_or("bench", "../BENCH_step.json");
+    let base_path = args.opt_or("baseline", "../BENCH_baseline.json");
+    let read = |path: &str| -> Result<lmc::util::json::Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read {path}: {e}"))?;
+        lmc::util::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))
+    };
+    let baseline = read(base_path)?;
+    let bench = read(bench_path)?;
+    let report = lmc::util::perfgate::compare(&baseline, &bench)?;
+    let md = report.markdown();
+    println!("{md}");
+    if let Some(path) = args.opt("summary") {
+        std::fs::write(path, &md)?;
+    }
+    if !report.passed() {
+        let failed: Vec<&str> = report
+            .rows
+            .iter()
+            .filter(|r| !r.pass)
+            .map(|r| r.name.as_str())
+            .collect();
+        return Err(anyhow!(
+            "perf gate failed: {} regressed past {:.2}x of {base_path} \
+             (if the slowdown is intended, regenerate the baseline with \
+             `cargo bench --bench step_breakdown -- --write-baseline` and commit it)",
+            failed.join(", "),
+            report.max_slowdown
+        ));
+    }
+    Ok(())
 }
 
 fn cmd_grad_error(args: &Args) -> Result<()> {

@@ -4,8 +4,20 @@
 //! so per-step aggregation cost is O(nnz · d) instead of O(bucket² · d).
 //! The PJRT backend densifies on demand via [`CsrBlock::to_dense`], which
 //! reproduces the zero-padded row-major layout the AOT programs consume.
+//!
+//! The SpMM inner loops (`row += w · x[j, :]`) run through the dispatched
+//! SIMD `axpy` primitive (`crate::backend::simd`). Because that primitive
+//! computes the same per-element operation regardless of vector width,
+//! tile boundaries, or slice alignment (single-rounded `fma` in both the
+//! lanes and the scalar tail at the SIMD levels), the serial
+//! ([`CsrBlock::spmm_acc`]) and blocked/tiled
+//! ([`CsrBlock::par_spmm_acc_tiled`]) paths stay **bitwise identical** to
+//! each other at any one level (pinned by
+//! `tiled_spmm_matches_serial_across_widths`).
 
 use rayon::prelude::*;
+
+use crate::backend::simd::{self, SimdOps};
 
 /// Rows per rayon task in the blocked SpMM paths.
 pub(crate) const SPMM_ROW_BLOCK: usize = 32;
@@ -103,19 +115,18 @@ impl CsrBlock {
         CsrBlock { n_rows: self.n_cols, n_cols: self.n_rows, offsets, cols, vals }
     }
 
-    /// `out[i, :] += Σ_j A[i, j] · x[j, :]` for all rows (serial).
+    /// `out[i, :] += Σ_j A[i, j] · x[j, :]` for all rows (serial row loop,
+    /// dispatched SIMD inner loop).
     /// `x` is row-major `[n_cols, d]`, `out` row-major `[n_rows, d]`.
     pub fn spmm_acc(&self, x: &[f32], d: usize, out: &mut [f32]) {
         debug_assert!(x.len() >= self.n_cols * d);
         debug_assert!(out.len() >= self.n_rows * d);
+        let axpy = simd::ops_auto().axpy;
         for i in 0..self.n_rows {
             let (cols, vals) = self.row(i);
             let row = &mut out[i * d..(i + 1) * d];
             for (&j, &w) in cols.iter().zip(vals) {
-                let src = &x[j as usize * d..(j as usize + 1) * d];
-                for (r, &s) in row.iter_mut().zip(src) {
-                    *r += w * s;
-                }
+                axpy(row, &x[j as usize * d..(j as usize + 1) * d], w);
             }
         }
     }
@@ -124,13 +135,11 @@ impl CsrBlock {
     pub fn par_spmm(&self, x: &[f32], d: usize) -> Vec<f32> {
         debug_assert!(x.len() >= self.n_cols * d);
         let mut out = vec![0f32; self.n_rows * d];
+        let axpy = simd::ops_auto().axpy;
         out.par_chunks_mut(d).enumerate().for_each(|(i, row)| {
             let (cols, vals) = self.row(i);
             for (&j, &w) in cols.iter().zip(vals) {
-                let src = &x[j as usize * d..(j as usize + 1) * d];
-                for (r, &s) in row.iter_mut().zip(src) {
-                    *r += w * s;
-                }
+                axpy(row, &x[j as usize * d..(j as usize + 1) * d], w);
             }
         });
         out
@@ -152,6 +161,21 @@ impl CsrBlock {
     /// entry point: the step pre-fills `out` with the bias/residual term
     /// and aggregates straight into the pre-activation buffer.
     pub fn par_spmm_acc_tiled(&self, x: &[f32], d: usize, scale: f32, out: &mut [f32]) {
+        self.par_spmm_acc_tiled_with(simd::ops_auto(), x, d, scale, out)
+    }
+
+    /// [`CsrBlock::par_spmm_acc_tiled`] with an explicit SIMD ops table —
+    /// `benches/step_breakdown.rs` uses this to A/B the scalar and SIMD
+    /// aggregation paths inside one process, and the property tests pin
+    /// the dispatched level against `SimdLevel::Scalar`.
+    pub fn par_spmm_acc_tiled_with(
+        &self,
+        ops: &SimdOps,
+        x: &[f32],
+        d: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) {
         debug_assert!(x.len() >= self.n_cols * d);
         debug_assert!(out.len() >= self.n_rows * d);
         if d == 0 || self.n_rows == 0 {
@@ -159,19 +183,29 @@ impl CsrBlock {
         }
         let out = &mut out[..self.n_rows * d];
         if self.n_rows * d <= SPMM_PAR_MIN {
-            spmm_rows_tiled(self, 0, out, x, d, scale);
+            spmm_rows_tiled(ops, self, 0, out, x, d, scale);
             return;
         }
         out.par_chunks_mut(SPMM_ROW_BLOCK * d).enumerate().for_each(|(blk, orows)| {
-            spmm_rows_tiled(self, blk * SPMM_ROW_BLOCK, orows, x, d, scale);
+            spmm_rows_tiled(ops, self, blk * SPMM_ROW_BLOCK, orows, x, d, scale);
         });
     }
 }
 
 /// Accumulate `scale · A[r0.., :] @ x` into `orows` (one row block),
-/// feature-tiled.
-fn spmm_rows_tiled(a: &CsrBlock, r0: usize, orows: &mut [f32], x: &[f32], d: usize, scale: f32) {
+/// feature-tiled; per-edge inner loop is the dispatched SIMD `axpy`.
+#[allow(clippy::too_many_arguments)]
+fn spmm_rows_tiled(
+    ops: &SimdOps,
+    a: &CsrBlock,
+    r0: usize,
+    orows: &mut [f32],
+    x: &[f32],
+    d: usize,
+    scale: f32,
+) {
     let rows = orows.len() / d;
+    let axpy = ops.axpy;
     let mut d0 = 0;
     while d0 < d {
         let d1 = (d0 + SPMM_D_TILE).min(d);
@@ -179,11 +213,7 @@ fn spmm_rows_tiled(a: &CsrBlock, r0: usize, orows: &mut [f32], x: &[f32], d: usi
             let (cols, vals) = a.row(r0 + rr);
             let orow = &mut orows[rr * d + d0..rr * d + d1];
             for (&j, &w) in cols.iter().zip(vals) {
-                let sw = scale * w;
-                let src = &x[j as usize * d + d0..j as usize * d + d1];
-                for (o, &s) in orow.iter_mut().zip(src) {
-                    *o += sw * s;
-                }
+                axpy(orow, &x[j as usize * d + d0..j as usize * d + d1], scale * w);
             }
         }
         d0 = d1;

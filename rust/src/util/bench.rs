@@ -61,6 +61,13 @@ impl Bencher {
         Bencher { warmup_iters: 1, min_iters: 5, max_iters: 100, min_window_s: 0.3 }
     }
 
+    /// CI smoke caps (`BENCH_SMOKE=1` / `--quick` in the bench targets):
+    /// just enough iterations to prove the path runs; the numbers land in
+    /// namespaced `*.smoke.json` files and are never gated.
+    pub fn smoke() -> Self {
+        Bencher { warmup_iters: 1, min_iters: 2, max_iters: 8, min_window_s: 0.05 }
+    }
+
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
         for _ in 0..self.warmup_iters {
             f();
@@ -97,6 +104,37 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Provenance string stamped into regenerated `BENCH_*.json` files, so a
+/// measured file is distinguishable from a committed estimate at a glance:
+/// commit SHA (CI's `GITHUB_SHA`, else `git rev-parse`), runner identity
+/// (`RUNNER_OS`/`RUNNER_ARCH` on GitHub, `local` otherwise), the compile
+/// target, and the dispatched SIMD level.
+pub fn provenance() -> String {
+    let commit = std::env::var("GITHUB_SHA")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .or_else(|| {
+            std::process::Command::new("git")
+                .args(["rev-parse", "--short=12", "HEAD"])
+                .output()
+                .ok()
+                .filter(|o| o.status.success())
+                .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        })
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string());
+    let runner = match (std::env::var("RUNNER_OS"), std::env::var("RUNNER_ARCH")) {
+        (Ok(os), Ok(arch)) => format!("github:{os}/{arch}"),
+        _ => "local".to_string(),
+    };
+    format!(
+        "measured commit={commit} runner={runner} target={}/{} simd={}",
+        std::env::consts::OS,
+        std::env::consts::ARCH,
+        crate::backend::simd::level().name()
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +148,14 @@ mod tests {
         });
         assert!(s.iters >= 3);
         assert!(s.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn provenance_is_measured_and_stamped() {
+        let p = provenance();
+        assert!(p.starts_with("measured "), "{p}");
+        assert!(p.contains("commit="), "{p}");
+        assert!(p.contains("runner="), "{p}");
+        assert!(p.contains("simd="), "{p}");
     }
 }

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod perfgate;
 pub mod rng;
 pub mod table;
 pub mod toml;

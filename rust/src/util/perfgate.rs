@@ -1,0 +1,284 @@
+//! Perf-regression gate: diff a freshly measured `BENCH_step.json` against
+//! the committed `BENCH_baseline.json` and fail CI on a real slowdown.
+//!
+//! Policy (see rust/README.md § Perf gate):
+//!
+//!   * only the metrics listed in the baseline's `gate.metrics` are gated
+//!     (currently `gemm_s`, `aggregate_s`, `step_optimized_s`) — every
+//!     other phase in `BENCH_step.json` stays informational;
+//!   * a metric fails only when `measured / baseline > gate.max_slowdown`
+//!     (a generous noise band, default [`DEFAULT_MAX_SLOWDOWN`], so runner
+//!     jitter and modest machine differences never flake the gate — it
+//!     exists to catch step-function kernel regressions, not 10% drift);
+//!   * improvements are reported but never gated;
+//!   * smoke outputs (`BENCH_step.smoke.json`, `"smoke": true`) are
+//!     refused outright: smoke iteration counts are not comparable to
+//!     full-run baselines.
+//!
+//! Driven by `lmc bench-gate` (see `main.rs`); the markdown table it
+//! returns is appended to the CI job summary.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::bench::fmt_secs;
+use crate::util::json::Json;
+
+/// Fallback noise band when the baseline omits `gate.max_slowdown`; also
+/// the band `--write-baseline` stamps into regenerated baselines.
+pub const DEFAULT_MAX_SLOWDOWN: f64 = 1.8;
+
+/// The phases a regenerated baseline gates (single source of truth shared
+/// with `benches/step_breakdown.rs --write-baseline`; a committed baseline
+/// may list a different set — `compare` follows the file).
+pub const GATED_METRICS: [&str; 3] = ["gemm_s", "aggregate_s", "step_optimized_s"];
+
+/// One gated metric's comparison.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    pub name: String,
+    pub baseline_s: f64,
+    pub measured_s: f64,
+    /// `measured / baseline` (> 1 means slower than baseline).
+    pub ratio: f64,
+    pub pass: bool,
+}
+
+/// The full gate verdict.
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    pub max_slowdown: f64,
+    pub rows: Vec<GateRow>,
+    /// The baseline's provenance marks it as an estimate (never measured
+    /// on real hardware) — the gate still enforces its generous headroom,
+    /// but the summary carries a bootstrap warning until a measured
+    /// baseline is committed.
+    pub baseline_estimated: bool,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.rows.iter().all(|r| r.pass)
+    }
+
+    /// Markdown delta table for the CI job summary.
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str("### perf gate: step-breakdown bench vs committed baseline\n\n");
+        s.push_str(&format!(
+            "noise band: a metric fails only above {:.2}x its baseline time\n\n",
+            self.max_slowdown
+        ));
+        s.push_str("| metric | baseline | measured | ratio | status |\n");
+        s.push_str("|---|---:|---:|---:|---|\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "| {} | {} | {} | {:.2}x | {} |\n",
+                r.name,
+                fmt_secs(r.baseline_s),
+                fmt_secs(r.measured_s),
+                r.ratio,
+                if r.pass { "ok" } else { "**REGRESSION**" },
+            ));
+        }
+        if self.passed() {
+            s.push_str("\nperf gate: **pass**\n");
+        } else {
+            s.push_str("\nperf gate: **FAIL**\n");
+        }
+        if self.baseline_estimated {
+            s.push_str(
+                "\n> warning: the committed baseline is an *estimate* (see its \
+                 provenance) — ratios above compare against projected headroom \
+                 values, not measured hardware. Bootstrap a real baseline with \
+                 `cargo bench --bench step_breakdown -- --write-baseline` on a \
+                 representative runner and commit BENCH_baseline.json.\n",
+            );
+        }
+        s
+    }
+}
+
+/// Compare a measured bench output against the committed baseline.
+///
+/// `baseline` is `BENCH_baseline.json` (carries `gate.metrics`,
+/// `gate.max_slowdown`, and `metrics.<name>` seconds); `bench` is a
+/// full-run `BENCH_step.json` (gated values read from `phases.<name>`,
+/// falling back to a top-level `<name>` field for the end-to-end step
+/// timings).
+pub fn compare(baseline: &Json, bench: &Json) -> Result<GateReport> {
+    if bench.get("smoke").and_then(Json::as_bool) == Some(true) {
+        bail!(
+            "refusing to gate smoke bench output (BENCH_step.smoke.json): \
+             smoke iteration counts are not comparable to full-run baselines"
+        );
+    }
+    let max_slowdown = baseline
+        .path("gate.max_slowdown")
+        .and_then(Json::as_f64)
+        .unwrap_or(DEFAULT_MAX_SLOWDOWN);
+    if !(max_slowdown.is_finite() && max_slowdown >= 1.0) {
+        bail!("baseline gate.max_slowdown must be a finite value >= 1.0, got {max_slowdown}");
+    }
+    let metrics = baseline
+        .path("gate.metrics")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("baseline missing gate.metrics (list of gated phase names)"))?;
+    let mut rows = Vec::new();
+    for m in metrics {
+        let name = m
+            .as_str()
+            .ok_or_else(|| anyhow!("gate.metrics entries must be strings, got {m}"))?;
+        let baseline_s = baseline
+            .path(&format!("metrics.{name}"))
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("baseline missing metrics.{name}"))?;
+        if !(baseline_s.is_finite() && baseline_s > 0.0) {
+            bail!("baseline metrics.{name} must be positive, got {baseline_s}");
+        }
+        let measured_s = bench
+            .path(&format!("phases.{name}"))
+            .or_else(|| bench.get(name))
+            .and_then(Json::as_f64)
+            .ok_or_else(|| {
+                anyhow!("bench output missing phase '{name}' (schema drift? regenerate both files)")
+            })?;
+        let ratio = measured_s / baseline_s;
+        rows.push(GateRow {
+            name: name.to_string(),
+            baseline_s,
+            measured_s,
+            ratio,
+            pass: ratio <= max_slowdown,
+        });
+    }
+    if rows.is_empty() {
+        bail!("gate.metrics is empty — nothing to gate");
+    }
+    let baseline_estimated = baseline
+        .get("provenance")
+        .and_then(Json::as_str)
+        .is_some_and(|p| p.starts_with("estimated"));
+    Ok(GateReport { max_slowdown, rows, baseline_estimated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline_json() -> Json {
+        Json::parse(
+            r#"{
+              "bench": "step_breakdown_baseline",
+              "gate": {"max_slowdown": 1.8, "metrics": ["gemm_s", "aggregate_s", "step_optimized_s"]},
+              "metrics": {"gemm_s": 1.0e-3, "aggregate_s": 2.0e-4, "step_optimized_s": 8.0e-3}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn bench_json(gemm: f64, agg: f64, step: f64, smoke: bool) -> Json {
+        Json::parse(&format!(
+            r#"{{
+              "bench": "step_breakdown",
+              "smoke": {smoke},
+              "phases": {{"gemm_s": {gemm:e}, "aggregate_s": {agg:e}, "compensate_s": 1e-5}},
+              "step_optimized_s": {step:e}
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn passes_at_parity_and_when_faster() {
+        let base = baseline_json();
+        let report = compare(&base, &bench_json(1.0e-3, 2.0e-4, 8.0e-3, false)).unwrap();
+        assert!(report.passed());
+        // a 2x improvement is reported (ratio 0.5) but never gated
+        let report = compare(&base, &bench_json(5.0e-4, 1.0e-4, 4.0e-3, false)).unwrap();
+        assert!(report.passed());
+        assert!(report.rows.iter().all(|r| r.ratio < 0.6));
+    }
+
+    #[test]
+    fn passes_inside_noise_band() {
+        // 1.7x < 1.8x band: noisy-but-fine
+        let report =
+            compare(&baseline_json(), &bench_json(1.7e-3, 3.4e-4, 1.36e-2, false)).unwrap();
+        assert!(report.passed(), "{:?}", report.rows);
+    }
+
+    /// The acceptance check: an injected 2x slowdown of a gated kernel
+    /// metric must fail the gate.
+    #[test]
+    fn gate_fails_on_injected_2x_slowdown() {
+        let report = compare(&baseline_json(), &bench_json(2.0e-3, 2.0e-4, 8.0e-3, false)).unwrap();
+        assert!(!report.passed());
+        let gemm = report.rows.iter().find(|r| r.name == "gemm_s").unwrap();
+        assert!(!gemm.pass);
+        assert!((gemm.ratio - 2.0).abs() < 1e-9);
+        // the other metrics still read ok
+        assert!(report.rows.iter().filter(|r| r.name != "gemm_s").all(|r| r.pass));
+        assert!(report.markdown().contains("REGRESSION"));
+        // end-to-end step regression is gated too
+        let report = compare(&baseline_json(), &bench_json(1.0e-3, 2.0e-4, 1.7e-2, false)).unwrap();
+        assert!(!report.passed());
+    }
+
+    #[test]
+    fn refuses_smoke_outputs() {
+        let err = compare(&baseline_json(), &bench_json(1.0e-3, 2.0e-4, 8.0e-3, true)).unwrap_err();
+        assert!(err.to_string().contains("smoke"), "{err}");
+    }
+
+    #[test]
+    fn missing_metric_is_an_error_not_a_pass() {
+        let base = Json::parse(
+            r#"{"gate": {"max_slowdown": 1.8, "metrics": ["nope_s"]}, "metrics": {"nope_s": 1.0e-3}}"#,
+        )
+        .unwrap();
+        let err = compare(&base, &bench_json(1.0e-3, 2.0e-4, 8.0e-3, false)).unwrap_err();
+        assert!(err.to_string().contains("nope_s"), "{err}");
+    }
+
+    #[test]
+    fn default_band_applies_when_baseline_omits_it() {
+        let base = Json::parse(
+            r#"{"gate": {"metrics": ["gemm_s"]}, "metrics": {"gemm_s": 1.0e-3}}"#,
+        )
+        .unwrap();
+        let report = compare(&base, &bench_json(1.79e-3, 0.0, 0.0, false)).unwrap();
+        assert!((report.max_slowdown - DEFAULT_MAX_SLOWDOWN).abs() < 1e-12);
+        assert!(report.passed());
+    }
+
+    #[test]
+    fn estimated_baseline_carries_bootstrap_warning() {
+        let base = Json::parse(
+            r#"{
+              "provenance": "estimated-no-toolchain headroom baseline",
+              "gate": {"max_slowdown": 1.8, "metrics": ["gemm_s"]},
+              "metrics": {"gemm_s": 1.0e-3}
+            }"#,
+        )
+        .unwrap();
+        let report = compare(&base, &bench_json(1.0e-3, 0.0, 0.0, false)).unwrap();
+        assert!(report.baseline_estimated);
+        assert!(report.passed());
+        assert!(report.markdown().contains("warning"));
+        // a measured baseline carries no warning
+        let report =
+            compare(&baseline_json(), &bench_json(1.0e-3, 2.0e-4, 8.0e-3, false)).unwrap();
+        assert!(!report.baseline_estimated);
+        assert!(!report.markdown().contains("warning"));
+    }
+
+    #[test]
+    fn markdown_lists_every_gated_metric() {
+        let report = compare(&baseline_json(), &bench_json(1.0e-3, 2.0e-4, 8.0e-3, false)).unwrap();
+        let md = report.markdown();
+        for name in ["gemm_s", "aggregate_s", "step_optimized_s"] {
+            assert!(md.contains(name), "missing {name} in:\n{md}");
+        }
+        assert!(md.contains("perf gate: **pass**"));
+    }
+}

@@ -3,7 +3,8 @@
 //! depends on `rand`): coordinator invariants over random graphs and
 //! configurations. No artifacts/PJRT required.
 
-use lmc::backend::gemm;
+use lmc::backend::gemm::{self, Kernels};
+use lmc::backend::simd::{self, SimdLevel};
 use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspace};
 use lmc::coordinator::params::{grad_rel_err, Params};
 use lmc::graph::{gcn_normalize, load, random_graph, Csr, DatasetId, Graph};
@@ -427,6 +428,204 @@ fn prop_blocked_gemm_matches_reference() {
             1e-5,
             &format!("matmul_tn {m}x{k}x{n}"),
         );
+    }
+}
+
+/// The runtime-dispatched SIMD primitives vs the scalar oracle, across odd
+/// lengths (non-multiples of the 8-wide vector, singletons, empties) and
+/// unaligned slice starts (offsets 0..3 from the allocation). Elementwise
+/// ops are pinned at ≤ 1e-5; `dot` reassociates across accumulators so it
+/// gets a wider band here, while the GEMM-level tests below pin the N/T
+/// kernel it feeds at ≤ 1e-5 on realistic shapes.
+#[test]
+fn prop_simd_primitives_match_scalar() {
+    let scalar = simd::ops(SimdLevel::Scalar);
+    let active = simd::ops_auto();
+    let mut rng = Rng::new(0x51D0);
+    let lens = [0usize, 1, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100, 257];
+    for &len in &lens {
+        for off in 0..3usize {
+            let total = len + off;
+            let src: Vec<f32> = (0..total).map(|_| rng.normal() as f32).collect();
+            let src2: Vec<f32> = (0..total).map(|_| rng.normal() as f32).collect();
+            let base: Vec<f32> = (0..total).map(|_| rng.normal() as f32).collect();
+            let a = rng.normal() as f32;
+            let ctx = |p: &str| format!("{p} len {len} off {off}");
+
+            let mut want = base.clone();
+            (scalar.axpy)(&mut want[off..], &src[off..], a);
+            let mut got = base.clone();
+            (active.axpy)(&mut got[off..], &src[off..], a);
+            assert_close(&got, &want, 1e-5, &ctx("axpy"));
+
+            let mut want = base.clone();
+            (scalar.scale)(&mut want[off..], &src[off..], a);
+            let mut got = base.clone();
+            (active.scale)(&mut got[off..], &src[off..], a);
+            assert_close(&got, &want, 1e-5, &ctx("scale"));
+
+            let wd = (scalar.dot)(&src[off..], &src2[off..]);
+            let gd = (active.dot)(&src[off..], &src2[off..]);
+            assert!(
+                (gd - wd).abs() <= 1e-4 * (1.0 + wd.abs()),
+                "{}: {gd} vs {wd}",
+                ctx("dot")
+            );
+
+            let mut want = base.clone();
+            (scalar.relu_copy)(&mut want[off..], &src[off..]);
+            let mut got = base.clone();
+            (active.relu_copy)(&mut got[off..], &src[off..]);
+            assert_eq!(got, want, "{}", ctx("relu_copy"));
+
+            let gam = 0.3f32;
+            let mut wz = base.clone();
+            let mut wa = vec![0f32; total];
+            (scalar.mix_relu)(&mut wz[off..], &mut wa[off..], &src[off..], gam);
+            let mut gz = base.clone();
+            let mut ga = vec![0f32; total];
+            (active.mix_relu)(&mut gz[off..], &mut ga[off..], &src[off..], gam);
+            assert_close(&gz, &wz, 1e-5, &ctx("mix_relu z"));
+            assert_close(&ga, &wa, 1e-5, &ctx("mix_relu act"));
+
+            let bcoef = 0.4f32;
+            let mut want = base.clone();
+            (scalar.combine)(&mut want[off..], &src[off..], &src2[off..], bcoef);
+            let mut got = base.clone();
+            (active.combine)(&mut got[off..], &src[off..], &src2[off..], bcoef);
+            assert_close(&got, &want, 1e-5, &ctx("combine"));
+        }
+    }
+}
+
+/// SIMD-dispatched blocked GEMM vs the scalar blocked kernels across odd
+/// shapes: widths that are not multiples of the 8-lane vector, d = 1, and
+/// shapes crossing the parallel threshold.
+#[test]
+fn prop_simd_gemm_matches_scalar_blocked() {
+    let fast = Kernels::blocked();
+    let slow = Kernels::blocked_scalar();
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 2),
+        (9, 8, 8),
+        (17, 33, 9),
+        (16, 64, 16),
+        (100, 1, 7),
+        (5, 129, 1),
+        (33, 65, 130),
+        (257, 19, 31),
+        (70, 70, 70),
+    ];
+    let mut rng = Rng::new(0x51D1);
+    for &(m, k, n) in shapes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let ctx = format!("{m}x{k}x{n}");
+
+        let mut want = vec![0f32; m * n];
+        slow.matmul_into(&mut want, &a, m, k, &b, n);
+        let mut got = vec![0f32; m * n];
+        fast.matmul_into(&mut got, &a, m, k, &b, n);
+        assert_close(&got, &want, 1e-5, &format!("simd matmul {ctx}"));
+
+        let mut want = vec![0f32; m * n];
+        slow.matmul_bias_into(&mut want, &a, m, k, &b, n, &bias);
+        let mut got = vec![0f32; m * n];
+        fast.matmul_bias_into(&mut got, &a, m, k, &b, n, &bias);
+        assert_close(&got, &want, 1e-5, &format!("simd matmul+bias {ctx}"));
+
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0f32; m * n];
+        slow.matmul_nt_into(&mut want, &a, m, k, &bt, n);
+        let mut got = vec![0f32; m * n];
+        fast.matmul_nt_into(&mut got, &a, m, k, &bt, n);
+        assert_close(&got, &want, 1e-5, &format!("simd matmul_nt {ctx}"));
+
+        let c: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0f32; k * n];
+        slow.matmul_tn_into(&mut want, &a, m, k, &c, n);
+        let mut got = vec![0f32; k * n];
+        fast.matmul_tn_into(&mut got, &a, m, k, &c, n);
+        assert_close(&got, &want, 1e-5, &format!("simd matmul_tn {ctx}"));
+    }
+}
+
+/// SIMD-dispatched SpMM vs the scalar ops over random sparse blocks with
+/// empty rows, including scaled accumulation into a pre-filled buffer.
+#[test]
+fn prop_simd_spmm_matches_scalar() {
+    let scalar = simd::ops(SimdLevel::Scalar);
+    let mut rng = Rng::new(0x51D2);
+    for case in 0..6u64 {
+        let n_rows = 1 + rng.below(150);
+        let n_cols = 1 + rng.below(120);
+        let p = rng.uniform(0.0, 0.1); // sparse enough that empty rows occur
+        let mut dense = vec![0f32; n_rows * n_cols];
+        for v in dense.iter_mut() {
+            if rng.next_f64() < p {
+                *v = rng.normal() as f32;
+            }
+        }
+        let blk = CsrBlock::from_dense(n_rows, n_cols, &dense);
+        for &d in &[1usize, 7, 8, 64, 129] {
+            let x: Vec<f32> = (0..n_cols * d).map(|_| rng.normal() as f32).collect();
+            let mut want = vec![0.5f32; n_rows * d];
+            blk.par_spmm_acc_tiled_with(scalar, &x, d, 0.7, &mut want);
+            let mut got = vec![0.5f32; n_rows * d];
+            blk.par_spmm_acc_tiled(&x, d, 0.7, &mut got);
+            assert_close(&got, &want, 1e-5, &format!("simd spmm case {case} d {d}"));
+        }
+    }
+}
+
+/// The fused epilogue entry points vs the corresponding unfused sequences,
+/// for every kernel family: fused(GEMM + bias + ReLU) and the GCNII
+/// fused(GEMM + residual mix + ReLU) must be value-comparable within 1e-6.
+#[test]
+fn prop_fused_epilogues_match_unfused() {
+    let mut rng = Rng::new(0x51D3);
+    for kern in [Kernels::blocked(), Kernels::blocked_scalar(), Kernels::reference()] {
+        // bias + ReLU, rectangular shapes
+        let rect = [(1usize, 1usize, 1usize), (3, 5, 2), (17, 33, 9), (64, 32, 48), (257, 19, 31)];
+        for &(m, k, n) in &rect {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut want_z = vec![0f32; m * n];
+            kern.matmul_bias_into(&mut want_z, &a, m, k, &b, n, &bias);
+            let want_act: Vec<f32> =
+                want_z.iter().map(|&z| if z > 0.0 { z } else { 0.0 }).collect();
+            let mut z = vec![0f32; m * n];
+            let mut act = vec![0f32; m * n];
+            kern.matmul_bias_relu_into(&mut z, &mut act, &a, m, k, &b, n, &bias);
+            let ctx = format!("{kern:?} fused bias+relu {m}x{k}x{n}");
+            assert_close(&z, &want_z, 1e-6, &ctx);
+            assert_close(&act, &want_act, 1e-6, &ctx);
+        }
+        // residual mix + ReLU, square layers (the GCNII shape)
+        // (200, 32) crosses the parallel threshold for the fused-mix path
+        for &(m, d) in &[(1usize, 1usize), (3, 4), (17, 16), (33, 40), (129, 24), (200, 32)] {
+            let s: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32).collect();
+            let gam = 0.35f32;
+            let mut sw = vec![0f32; m * d];
+            kern.matmul_into(&mut sw, &s, m, d, &w, d);
+            let want_z: Vec<f32> = s
+                .iter()
+                .zip(&sw)
+                .map(|(&sv, &swv)| (1.0 - gam) * sv + gam * swv)
+                .collect();
+            let want_act: Vec<f32> =
+                want_z.iter().map(|&z| if z > 0.0 { z } else { 0.0 }).collect();
+            let mut z = vec![0f32; m * d];
+            let mut act = vec![0f32; m * d];
+            kern.matmul_mix_relu_into(&mut z, &mut act, &s, m, d, &w, d, gam);
+            let ctx = format!("{kern:?} fused mix+relu {m}x{d}");
+            assert_close(&z, &want_z, 1e-6, &ctx);
+            assert_close(&act, &want_act, 1e-6, &ctx);
+        }
     }
 }
 
