@@ -1,0 +1,78 @@
+//! Bench: serve-path throughput over the native backend — the exact
+//! (L-hop closure) vs cached (1-hop + history halo) tile paths across
+//! request batch sizes, plus the history-refresh cost a parameter update
+//! pays. Emits `BENCH_serve.json` at the repo root (provenance-stamped
+//! with commit + runner + SIMD level); smoke runs (`BENCH_SMOKE=1` /
+//! `--quick`) write `BENCH_serve.smoke.json` instead, so the numbers can
+//! never be confused with full-run measurements.
+
+use std::fmt::Write as _;
+
+use lmc::config::RunConfig;
+use lmc::graph::DatasetId;
+use lmc::serve::{ServeEngine, ServeMode};
+use lmc::util::bench::{black_box, provenance, Bencher};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--quick") || std::env::var("BENCH_SMOKE").is_ok();
+    let id = if smoke { DatasetId::CoraSim } else { DatasetId::ArxivSim };
+    let b = if smoke { Bencher::smoke() } else { Bencher::quick() };
+    let cfg = RunConfig { dataset: id, arch: "gcn".into(), seed: 0, ..Default::default() };
+    let mut eng = ServeEngine::from_config(&cfg, None).expect("serve engine");
+    let warm = b.run("serve/refresh_history(full forward)", || {
+        eng.refresh_history().expect("warm history");
+    });
+    let n = eng.graph().n();
+    println!(
+        "== serve bench ({}, {} nodes, arch {}, simd {}) ==",
+        id.name(),
+        n,
+        eng.model().arch_name,
+        lmc::backend::simd::level().name()
+    );
+
+    let sizes: &[usize] = if smoke { &[1, 16, 128] } else { &[1, 16, 128, 1024] };
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &bs in sizes {
+        let bs = bs.min(n);
+        // spread the request across the graph so tiles see realistic halos
+        let nodes: Vec<u32> = (0..n as u32).step_by((n / bs).max(1)).take(bs).collect();
+        let cached = b.run(&format!("serve/cached/batch{bs}"), || {
+            black_box(eng.predict_in_mode(&nodes, ServeMode::Cached).expect("cached predict"));
+        });
+        let exact = b.run(&format!("serve/exact/batch{bs}"), || {
+            black_box(eng.predict_in_mode(&nodes, ServeMode::Exact).expect("exact predict"));
+        });
+        println!(
+            "    batch {bs:>5}: cached {:>10.1} nodes/s   exact {:>10.1} nodes/s",
+            bs as f64 / cached.mean_s,
+            bs as f64 / exact.mean_s
+        );
+        rows.push((bs, cached.mean_s, exact.mean_s));
+    }
+
+    // ---- emit BENCH_serve[.smoke].json at the repo root -----------------
+    let mut json = String::from("{\n  \"bench\": \"serve\",\n");
+    let _ = writeln!(json, "  \"provenance\": \"{}\",", provenance());
+    let _ = writeln!(json, "  \"dataset\": \"{}\",", id.name());
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"arch\": \"{}\",", eng.model().arch_name);
+    let _ = writeln!(json, "  \"nodes\": {n},");
+    let _ = writeln!(json, "  \"refresh_history_s\": {:.6e},", warm.mean_s);
+    json.push_str("  \"batches\": [\n");
+    for (i, (bs, cached_s, exact_s)) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"batch\": {bs}, \"cached_s\": {cached_s:.6e}, \"cached_nodes_per_s\": \
+             {:.1}, \"exact_s\": {exact_s:.6e}, \"exact_nodes_per_s\": {:.1}}}{}",
+            *bs as f64 / cached_s,
+            *bs as f64 / exact_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    let fname = if smoke { "/../BENCH_serve.smoke.json" } else { "/../BENCH_serve.json" };
+    let path = format!("{}{}", env!("CARGO_MANIFEST_DIR"), fname);
+    std::fs::write(&path, &json).expect("write BENCH_serve json");
+    println!("wrote {path}");
+}

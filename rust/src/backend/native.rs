@@ -45,7 +45,7 @@
 //!     `sw` scratch buffer entirely).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -65,24 +65,24 @@ use super::workspace::StepWorkspace;
 use super::{Executor, ModelSpec, StepInputs, StepOutputs};
 
 /// GCNII hyperparameters (python/compile/spec.py profile defaults).
-const GCNII_ALPHA: f32 = 0.1;
+pub(crate) const GCNII_ALPHA: f32 = 0.1;
 const GCNII_LAM: f64 = 0.5;
 
 /// Below this many elements `combine` stays serial.
 const COMBINE_PAR_MIN: usize = 1 << 14;
 
 #[inline]
-fn gcnii_gamma(l: usize) -> f32 {
+pub(crate) fn gcnii_gamma(l: usize) -> f32 {
     (GCNII_LAM / l as f64 + 1.0).ln() as f32
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Kind {
+pub(crate) enum Kind {
     Gcn,
     Gcnii,
 }
 
-fn kind_of(arch_name: &str) -> Result<Kind> {
+pub(crate) fn kind_of(arch_name: &str) -> Result<Kind> {
     match arch_name {
         "gcn" => Ok(Kind::Gcn),
         "gcnii" => Ok(Kind::Gcnii),
@@ -90,12 +90,61 @@ fn kind_of(arch_name: &str) -> Result<Kind> {
     }
 }
 
-/// Cumulative exec-clock state: `depth` makes [`NativeExecutor::time`]
-/// re-entrant so nested timed scopes cannot double-count.
+/// Cumulative exec-clock state: `depth` counts the *live* timed scopes
+/// across every calling thread. The first scope to open records `t0`; the
+/// last one to close accumulates the elapsed busy interval. Nested scopes
+/// on one thread therefore count once, and concurrent scopes from many
+/// threads (sharded workers, serve requests) merge into the union of busy
+/// wall-clock intervals — `exec_secs` can never exceed wall time.
 struct TimerState {
     secs: f64,
     depth: u32,
     t0: Instant,
+}
+
+/// RAII scope for the exec clock. Closing the scope happens in `Drop`, so
+/// a panicking workload (one bad serve request out of many concurrent
+/// ones) still decrements `depth` during unwind instead of wedging the
+/// timer at depth > 0 and silently stopping all future accumulation.
+struct TimerScope<'a> {
+    timer: &'a Mutex<TimerState>,
+}
+
+impl<'a> TimerScope<'a> {
+    fn enter(timer: &'a Mutex<TimerState>) -> TimerScope<'a> {
+        let mut st = lock_timer(timer);
+        st.depth += 1;
+        if st.depth == 1 {
+            st.t0 = Instant::now();
+        }
+        TimerScope { timer }
+    }
+}
+
+impl Drop for TimerScope<'_> {
+    fn drop(&mut self) {
+        let mut st = lock_timer(self.timer);
+        st.depth -= 1;
+        if st.depth == 0 {
+            st.secs += st.t0.elapsed().as_secs_f64();
+        }
+    }
+}
+
+/// Lock the timer even when a previous holder panicked: the state is a
+/// counter plus two plain numbers, always consistent at lock release, so
+/// poisoning carries no information worth propagating.
+fn lock_timer(timer: &Mutex<TimerState>) -> MutexGuard<'_, TimerState> {
+    timer.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Lock a shared step workspace, shrugging off poisoning: a panic while
+/// the pool was held can only leak buffers that were grabbed and never
+/// returned (the pool shrinks; every pooled `Vec` stays valid), so a
+/// long-lived serve engine must not let one panicking request wedge every
+/// later step/predict on the same pool.
+fn lock_workspace(ws: &Mutex<StepWorkspace>) -> MutexGuard<'_, StepWorkspace> {
+    ws.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Pure-Rust CPU backend (the default): sparse-block train steps + exact
@@ -131,30 +180,45 @@ impl NativeExecutor {
     /// scopes nest (executor entry points share helpers like the full
     /// forward), only the outermost scope accumulates elapsed time, so
     /// nested scopes can never overlap-count
-    /// (`exec_secs_counts_nested_scopes_once`).
-    /// Re-entrant executor timing: nested scopes on one thread cannot
-    /// double-count. When one executor is shared by *concurrent* callers
-    /// (sharded workers), overlapping scopes merge, so `exec_secs` reports
-    /// the wall-clock union of busy intervals rather than summed per-worker
-    /// compute — fine for "how long was the backend busy", not a per-shard
-    /// cost model (telemetry only; results are unaffected).
+    /// (`exec_secs_counts_nested_scopes_once`). Safe under *concurrent*
+    /// callers (sharded workers, rayon-parallel serve requests):
+    /// overlapping scopes merge into the union of busy wall-clock
+    /// intervals, scope exit is an RAII drop so a panicking workload
+    /// cannot wedge the clock, and the lock shrugs off poisoning
+    /// (`exec_secs_safe_under_concurrent_rayon_callers`,
+    /// `exec_secs_survives_panicking_scope`). Telemetry only — "how long
+    /// was the backend busy", not summed per-caller compute.
     fn time<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
-        {
-            let mut st = self.timer.lock().unwrap();
-            st.depth += 1;
-            if st.depth == 1 {
-                st.t0 = Instant::now();
-            }
-        }
-        let out = f();
-        {
-            let mut st = self.timer.lock().unwrap();
-            st.depth -= 1;
-            if st.depth == 0 {
-                st.secs += st.t0.elapsed().as_secs_f64();
-            }
-        }
-        out
+        let _scope = TimerScope::enter(&self.timer);
+        f()
+    }
+
+    /// Time an external forward-only workload (the serve engine's
+    /// exact-tile assembly) on this executor's exec clock. Same semantics
+    /// as the trait entry points: nested scopes count once, concurrent
+    /// scopes merge.
+    pub fn time_scope<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        self.time(f)
+    }
+
+    /// Forward-only compensated subgraph pass for online inference (the
+    /// serve engine's cached-history tile path): Eq. 8/10 forward with the
+    /// Eq. 9 halo combination against caller-gathered history rows,
+    /// returning output-head logits for the batch rows. No backward, no
+    /// history write-back, no optimizer state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_logits(
+        &self,
+        g: &Graph,
+        sb: &SubgraphBatch,
+        model: &ModelSpec,
+        params: &Params,
+        hist_h: &[Vec<f32>],
+        beta: &[f32],
+        ws: Option<&Mutex<StepWorkspace>>,
+    ) -> Result<Vec<f32>> {
+        let kern = self.kern;
+        self.time(|| subgraph_forward_logits(kern, g, sb, model, params, hist_h, beta, ws))
     }
 }
 
@@ -200,7 +264,7 @@ impl Executor for NativeExecutor {
     }
 
     fn exec_secs(&self) -> f64 {
-        self.timer.lock().unwrap().secs
+        lock_timer(&self.timer).secs
     }
 }
 
@@ -208,7 +272,7 @@ impl Executor for NativeExecutor {
 // elementwise helpers
 // ---------------------------------------------------------------------------
 
-fn add_bias_rows(z: &mut [f32], bias: &[f32]) {
+pub(crate) fn add_bias_rows(z: &mut [f32], bias: &[f32]) {
     let n = bias.len();
     for row in z.chunks_mut(n) {
         for (r, &b) in row.iter_mut().zip(bias) {
@@ -237,7 +301,7 @@ fn colsum_axpy(dst: &mut [f32], a: &[f32], m: usize, n: usize, scale: f32) {
     }
 }
 
-fn relu_inplace(z: &mut [f32]) {
+pub(crate) fn relu_inplace(z: &mut [f32]) {
     for v in z.iter_mut() {
         if *v < 0.0 {
             *v = 0.0;
@@ -488,7 +552,7 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
     let mut guard;
     let ws: &mut StepWorkspace = match inp.ws {
         Some(mtx) => {
-            guard = mtx.lock().unwrap();
+            guard = lock_workspace(mtx);
             &mut guard
         }
         None => {
@@ -781,6 +845,145 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
 }
 
 // ---------------------------------------------------------------------------
+// forward-only subgraph pass (online inference)
+// ---------------------------------------------------------------------------
+
+/// The forward half of [`step_native`] for a serve tile: stacked
+/// `[batch; halo]` gather, fused GEMM epilogues, Eq. 9 halo combination
+/// against caller-gathered history rows, output-head logits for the batch
+/// rows. Shares every kernel with the train step (the subgraph cache, the
+/// fused epilogues, the workspace pool) but materializes no backward
+/// caches, so a serve tile touches O(m · d) scratch and returns only
+/// `batch.len() · n_class` floats.
+#[allow(clippy::too_many_arguments)]
+pub fn subgraph_forward_logits(
+    kern: Kernels,
+    g: &Graph,
+    sb: &SubgraphBatch,
+    model: &ModelSpec,
+    params: &Params,
+    hist_h: &[Vec<f32>],
+    beta: &[f32],
+    ws: Option<&Mutex<StepWorkspace>>,
+) -> Result<Vec<f32>> {
+    let arch = &model.arch;
+    let kind = kind_of(&model.arch_name)?;
+    let l_total = arch.l;
+    let dims = &arch.dims;
+    let nb = sb.batch.len();
+    let nh = sb.halo.len();
+    let m = nb + nh;
+    debug_assert!(beta.len() >= nh, "beta must cover every halo row");
+
+    let mut local_ws;
+    let mut guard;
+    let ws: &mut StepWorkspace = match ws {
+        Some(mtx) => {
+            guard = lock_workspace(mtx);
+            &mut guard
+        }
+        None => {
+            local_ws = StepWorkspace::new();
+            &mut local_ws
+        }
+    };
+
+    // ---- embed0 ----------------------------------------------------------
+    let mut x_full = ws.grab_dirty(m * g.d_x);
+    gather_stacked_into(&g.features, g.d_x, &sb.batch, &sb.halo, &mut x_full);
+    let (mut h, h0_full) = match kind {
+        Kind::Gcn => (x_full, Vec::new()),
+        Kind::Gcnii => {
+            let w0 = param(params, "W0")?;
+            let b0 = param(params, "b0")?;
+            let mut z0 = ws.grab_dirty(m * dims[0]);
+            let mut h0 = ws.grab_dirty(m * dims[0]);
+            let (w0d, b0d) = (&w0.data, &b0.data);
+            kern.matmul_bias_relu_into(&mut z0, &mut h0, &x_full, m, g.d_x, w0d, dims[0], b0d);
+            ws.put(z0);
+            ws.put(x_full);
+            let mut h = ws.grab_dirty(m * dims[0]);
+            h.copy_from_slice(&h0);
+            (h, h0)
+        }
+    };
+
+    // ---- layers ----------------------------------------------------------
+    for l in 1..=l_total {
+        let d_prev = dims[l - 1];
+        let d_l = dims[l];
+        let relu = l < l_total || kind == Kind::Gcnii;
+        let mut act = ws.grab_dirty(m * d_l);
+        match kind {
+            Kind::Gcn => {
+                let w = param(params, &format!("W{l}"))?;
+                let b = param(params, &format!("b{l}"))?;
+                let mut agg = ws.grab(m * d_prev);
+                agg_full_scaled_into(kern, sb, &h, d_prev, 1.0, &mut agg);
+                if relu {
+                    let mut z = ws.grab_dirty(m * d_l);
+                    let (wd, bd) = (&w.data, &b.data);
+                    kern.matmul_bias_relu_into(&mut z, &mut act, &agg, m, d_prev, wd, d_l, bd);
+                    ws.put(z);
+                } else {
+                    kern.matmul_bias_into(&mut act, &agg, m, d_prev, &w.data, d_l, &b.data);
+                }
+                ws.put(agg);
+            }
+            Kind::Gcnii => {
+                let w = param(params, &format!("W{l}"))?;
+                let gam = gcnii_gamma(l);
+                let mut s = ws.grab_dirty(m * d_prev);
+                (kern.ops().scale)(&mut s, &h0_full, GCNII_ALPHA);
+                agg_full_scaled_into(kern, sb, &h, d_prev, 1.0 - GCNII_ALPHA, &mut s);
+                if d_prev == d_l {
+                    let mut z = ws.grab_dirty(m * d_l);
+                    kern.matmul_mix_relu_into(&mut z, &mut act, &s, m, d_prev, &w.data, d_l, gam);
+                    ws.put(z);
+                } else {
+                    let mut sw = ws.grab_dirty(m * d_l);
+                    kern.matmul_into(&mut sw, &s, m, d_prev, &w.data, d_l);
+                    for ((av, &sv), &swv) in act.iter_mut().zip(&s[..m * d_l]).zip(&sw) {
+                        *av = (1.0 - gam) * sv + gam * swv;
+                    }
+                    ws.put(sw);
+                    relu_inplace(&mut act);
+                }
+                ws.put(s);
+            }
+        }
+        if l < l_total {
+            // Eq. (9): halo rows become the convex combination of the
+            // incomplete fresh value and the cached-history embedding
+            // (beta = 0 serves pure history, the GAS-style serve default).
+            let mut ht = ws.grab_dirty(nh * d_l);
+            ht.copy_from_slice(&act[nb * d_l..]);
+            combine_into(&mut act[nb * d_l..], &beta[..nh], &hist_h[l - 1], &ht, nh, d_l);
+            ws.put(ht);
+        }
+        ws.put(std::mem::replace(&mut h, act));
+    }
+
+    // ---- output head -----------------------------------------------------
+    let d_last = dims[l_total];
+    let hb = &h[..nb * d_last];
+    let logits = match kind {
+        Kind::Gcn => hb.to_vec(),
+        Kind::Gcnii => {
+            let wc = param(params, "Wc")?;
+            let bc = param(params, "bc")?;
+            let c = wc.shape[1];
+            let mut out = vec![0f32; nb * c];
+            kern.matmul_bias_into(&mut out, hb, nb, d_last, &wc.data, c, &bc.data);
+            out
+        }
+    };
+    ws.put(h);
+    ws.put(h0_full);
+    Ok(logits)
+}
+
+// ---------------------------------------------------------------------------
 // exact full-graph oracle
 // ---------------------------------------------------------------------------
 
@@ -896,8 +1099,10 @@ fn full_forward_cached(g: &Graph, params: &Params, model: &ModelSpec, keep_cache
     Ok(FullFwd { hs, pre, lin, z0 })
 }
 
-/// Output-head logits for a `[rows, d_last]` representation.
-fn logits_of(kind: Kind, params: &Params, h: &[f32], rows: usize, d_last: usize) -> Result<Vec<f32>> {
+/// Output-head logits for a `[rows, d_last]` representation — shared by
+/// the oracle paths here and the serve engine's tile/oracle heads, so the
+/// head computation cannot drift between them.
+pub(crate) fn logits_of(kind: Kind, params: &Params, h: &[f32], rows: usize, d_last: usize) -> Result<Vec<f32>> {
     match kind {
         Kind::Gcn => Ok(h[..rows * d_last].to_vec()),
         Kind::Gcnii => {
@@ -1136,6 +1341,64 @@ mod tests {
         })
         .unwrap();
         assert!(ex.exec_secs() >= secs + 0.015);
+    }
+
+    #[test]
+    fn exec_secs_safe_under_concurrent_rayon_callers() {
+        // The serve engine shares one executor across rayon-parallel
+        // requests. Concurrent scopes must merge into the union of busy
+        // intervals: cumulative secs stays positive, monotone, and never
+        // exceeds wall clock (summing per-caller time would).
+        use rayon::prelude::*;
+        let ex = NativeExecutor::new();
+        let wall = Instant::now();
+        (0..48).into_par_iter().for_each(|_| {
+            ex.time(|| {
+                // nested scope on the same thread while siblings overlap
+                ex.time(|| {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    Ok(())
+                })?;
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                Ok(())
+            })
+            .unwrap();
+        });
+        let secs = ex.exec_secs();
+        let w = wall.elapsed().as_secs_f64();
+        assert!(secs > 0.0, "concurrent scopes recorded nothing");
+        assert!(secs <= w + 1e-3, "busy union exceeded wall clock: {secs} > {w}");
+        // the clock keeps accumulating after the hammer
+        ex.time(|| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            Ok(())
+        })
+        .unwrap();
+        assert!(ex.exec_secs() >= secs + 0.004, "clock stalled after concurrent use");
+    }
+
+    #[test]
+    fn exec_secs_survives_panicking_scope() {
+        // One bad request out of many concurrent ones must not wedge the
+        // clock: scope exit is a Drop, so depth returns to zero during
+        // unwind and later scopes still accumulate.
+        let ex = NativeExecutor::new();
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = ex.time(|| -> Result<()> { panic!("bad serve request") });
+        }));
+        assert!(panicked.is_err());
+        let before = ex.exec_secs();
+        ex.time(|| {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            Ok(())
+        })
+        .unwrap();
+        assert!(
+            ex.exec_secs() >= before + 0.008,
+            "timer wedged after a panicking scope: {} -> {}",
+            before,
+            ex.exec_secs()
+        );
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::coordinator::methods::{BetaConfig, Method};
 use crate::coordinator::sharded::SyncMode;
 use crate::graph::DatasetId;
 use crate::sampler::{BatcherMode, BetaScore};
+use crate::serve::ServeMode;
 use crate::util::cli::Args;
 use crate::util::toml::{parse as toml_parse, TomlDoc};
 
@@ -52,6 +53,18 @@ pub struct RunConfig {
     pub sync_mode: SyncMode,
     /// SPIDER anchor period (LMC-SPIDER only).
     pub spider_period: usize,
+    /// Serve-path tile assembly: "cached" (1-hop core + history halo, the
+    /// LMC-style default) or "exact" (L-hop closure, bit-identical to the
+    /// full-graph oracle).
+    pub serve_mode: ServeMode,
+    /// Serve-path micro-batching: flush once this many node ids are
+    /// queued; also the max core nodes per assembled tile.
+    pub serve_max_batch: usize,
+    /// Serve-path micro-batching: flush once the oldest queued request
+    /// has waited this many milliseconds.
+    pub serve_max_wait_ms: u64,
+    /// Eq. 9 β strength on the cached serve path (0 = pure history).
+    pub serve_beta: f32,
     /// Ablation (Fig. 4): run LMC with only the forward compensation C_f by
     /// forcing the backward compensation off.
     pub force_bwd_off: bool,
@@ -82,6 +95,10 @@ impl Default for RunConfig {
             sync_every: 1,
             sync_mode: SyncMode::Average,
             spider_period: 10,
+            serve_mode: ServeMode::Cached,
+            serve_max_batch: 256,
+            serve_max_wait_ms: 4,
+            serve_beta: 0.0,
             force_bwd_off: false,
             verbose: false,
         }
@@ -175,6 +192,19 @@ impl RunConfig {
         if let Some(v) = get("spider_period").and_then(|v| v.as_i64()) {
             self.spider_period = v as usize;
         }
+        if let Some(v) = get("serve_mode").and_then(|v| v.as_str()) {
+            self.serve_mode =
+                ServeMode::parse(v).ok_or_else(|| anyhow!("unknown serve_mode {v}"))?;
+        }
+        if let Some(v) = get("serve_max_batch").and_then(|v| v.as_i64()) {
+            self.serve_max_batch = v.max(0) as usize;
+        }
+        if let Some(v) = get("serve_max_wait_ms").and_then(|v| v.as_i64()) {
+            self.serve_max_wait_ms = v.max(0) as u64;
+        }
+        if let Some(v) = get("serve_beta").and_then(|v| v.as_f64()) {
+            self.serve_beta = v as f32;
+        }
         Ok(())
     }
 
@@ -235,6 +265,19 @@ impl RunConfig {
         if let Some(v) = args.opt("sync-mode") {
             self.sync_mode =
                 SyncMode::parse(v).ok_or_else(|| anyhow!("unknown sync-mode {v}"))?;
+        }
+        if let Some(v) = args.opt("serve-mode") {
+            self.serve_mode =
+                ServeMode::parse(v).ok_or_else(|| anyhow!("unknown serve-mode {v}"))?;
+        }
+        if let Some(v) = args.opt_usize("serve-max-batch") {
+            self.serve_max_batch = v;
+        }
+        if let Some(v) = args.opt_usize("serve-max-wait-ms") {
+            self.serve_max_wait_ms = v as u64;
+        }
+        if let Some(v) = args.opt_f64("serve-beta") {
+            self.serve_beta = v as f32;
         }
         if args.has_flag("fixed-batches") {
             self.batcher_mode = BatcherMode::Fixed;
@@ -309,6 +352,43 @@ mod tests {
         assert!(SyncMode::parse("nope").is_none());
         assert_eq!(SyncMode::Average.name(), "avg");
         assert_eq!(SyncMode::HistoryExchange.name(), "hist");
+    }
+
+    #[test]
+    fn serve_knobs_parse() {
+        let doc = toml_parse(
+            "serve_mode = \"exact\"\nserve_max_batch = 64\nserve_max_wait_ms = 9\nserve_beta = 0.25\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.serve_mode, ServeMode::Cached); // default
+        assert_eq!(cfg.serve_beta, 0.0);
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.serve_mode, ServeMode::Exact);
+        assert_eq!(cfg.serve_max_batch, 64);
+        assert_eq!(cfg.serve_max_wait_ms, 9);
+        assert!((cfg.serve_beta - 0.25).abs() < 1e-9);
+        let args = Args::parse(
+            [
+                "serve",
+                "--serve-mode",
+                "cached",
+                "--serve-max-batch",
+                "512",
+                "--serve-max-wait-ms",
+                "2",
+                "--serve-beta",
+                "0.1",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert_eq!(cfg.serve_mode, ServeMode::Cached);
+        assert_eq!(cfg.serve_max_batch, 512);
+        assert_eq!(cfg.serve_max_wait_ms, 2);
+        assert!((cfg.serve_beta - 0.1).abs() < 1e-6);
+        assert!(ServeMode::parse("bogus").is_none());
     }
 
     #[test]

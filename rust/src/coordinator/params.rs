@@ -1,8 +1,17 @@
 //! Model parameters (host-resident, canonical manifest order) and the Adam
-//! optimizer (paper uses Adam across all experiments).
+//! optimizer (paper uses Adam across all experiments), plus the bitwise
+//! save/load round-trip the serve path uses to hand trained parameters to
+//! a long-lived inference engine.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::{ArchInfo, Tensor};
 use crate::util::rng::Rng;
+
+/// File magic of the `lmc` binary params format (version 1).
+const PARAMS_MAGIC: &[u8; 8] = b"LMCPAR1\n";
 
 #[derive(Clone, Debug)]
 pub struct Params {
@@ -50,6 +59,111 @@ impl Params {
     /// Zero gradients with matching shapes.
     pub fn zeros_like(&self) -> Vec<Tensor> {
         self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect()
+    }
+
+    /// Serialize to the `lmc` binary params format: magic, tensor count,
+    /// then per tensor name / shape / little-endian f32 bit patterns. The
+    /// round-trip is **bitwise** — every float (including -0.0, subnormals
+    /// and NaN payloads) reloads with identical bits
+    /// (`prop_params_save_load_roundtrip_is_bitwise`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload: usize = self
+            .tensors
+            .iter()
+            .map(|t| 8 + 4 * t.shape.len() + 4 * t.elems())
+            .sum();
+        let mut out = Vec::with_capacity(PARAMS_MAGIC.len() + 4 + payload + 16 * self.names.len());
+        out.extend_from_slice(PARAMS_MAGIC);
+        push_u32(&mut out, self.tensors.len() as u32);
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            push_u32(&mut out, name.len() as u32);
+            out.extend_from_slice(name.as_bytes());
+            push_u32(&mut out, t.shape.len() as u32);
+            for &d in &t.shape {
+                push_u32(&mut out, d as u32);
+            }
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse the [`Params::to_bytes`] format, validating magic, bounds
+    /// and shape/data consistency.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Params> {
+        let mut cur = Cursor { b: bytes, i: 0 };
+        let magic = cur.take(PARAMS_MAGIC.len())?;
+        if magic != PARAMS_MAGIC {
+            bail!("not an lmc params file (bad magic)");
+        }
+        let count = cur.u32()? as usize;
+        let mut names = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for ti in 0..count {
+            let name_len = cur.u32()? as usize;
+            let name = std::str::from_utf8(cur.take(name_len)?)
+                .map_err(|_| anyhow!("tensor #{ti}: name is not valid utf-8"))?
+                .to_string();
+            let rank = cur.u32()? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(cur.u32()? as usize);
+            }
+            let elems: usize = shape.iter().product();
+            let raw = cur.take(4 * elems)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            names.push(name);
+            tensors.push(Tensor::from_vec(&shape, data));
+        }
+        if cur.i != bytes.len() {
+            bail!("trailing bytes after tensor {} of {}", count, count);
+        }
+        Ok(Params { names, tensors })
+    }
+
+    /// Write the binary params format to `path` (the `lmc train
+    /// --save-params` side of the round-trip).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow!("writing params to {}: {e}", path.display()))
+    }
+
+    /// Load a file written by [`Params::save`] (the `lmc serve --params`
+    /// side).
+    pub fn load(path: &Path) -> Result<Params> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow!("reading params from {}: {e}", path.display()))?;
+        Params::from_bytes(&bytes).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked byte reader for [`Params::from_bytes`].
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated params file at byte {} (wanted {} more)", self.i, n);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 }
 
@@ -191,6 +305,71 @@ mod tests {
         assert!(p.get("W1").unwrap().data.iter().all(|&x| x.abs() <= bound));
         assert!(p.get("b1").unwrap().data.iter().all(|&x| x == 0.0));
         assert_eq!(p.num_scalars(), 40);
+    }
+
+    #[test]
+    fn params_bytes_roundtrip_is_bitwise() {
+        let mut p = Params {
+            names: vec!["W1".into(), "b1".into()],
+            tensors: vec![
+                Tensor::from_vec(&[2, 3], vec![1.5, -0.0, f32::MIN_POSITIVE, -2.25, 1e-40, 0.0]),
+                Tensor::from_vec(&[3], vec![0.0, -1.0, 3.75]),
+            ],
+        };
+        // NaN payload must survive the trip bit-for-bit
+        p.tensors[1].data[0] = f32::from_bits(0x7fc0_1234);
+        let q = Params::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p.names, q.names);
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a.shape, b.shape);
+            let (ab, bb): (Vec<u32>, Vec<u32>) = (
+                a.data.iter().map(|v| v.to_bits()).collect(),
+                b.data.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(ab, bb, "bit pattern drifted through serialization");
+        }
+    }
+
+    #[test]
+    fn params_save_load_file_roundtrip() {
+        let arch = ArchInfo {
+            l: 1,
+            dims: vec![4, 8],
+            params: vec![("W1".into(), vec![4, 8]), ("b1".into(), vec![8])],
+            head_params: vec![],
+            layer_params: Default::default(),
+        };
+        let p = Params::init(&arch, &mut Rng::new(9));
+        let path = std::env::temp_dir()
+            .join(format!("lmc_params_unit_{}.bin", std::process::id()));
+        p.save(&path).unwrap();
+        let q = Params::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(p.names, q.names);
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn params_from_bytes_rejects_garbage() {
+        assert!(Params::from_bytes(b"nope").is_err());
+        let good = Params {
+            names: vec!["w".into()],
+            tensors: vec![Tensor::from_vec(&[2], vec![1.0, 2.0])],
+        }
+        .to_bytes();
+        // truncation anywhere inside the payload is an error
+        assert!(Params::from_bytes(&good[..good.len() - 1]).is_err());
+        // trailing bytes are an error, not silently ignored
+        let mut long = good.clone();
+        long.push(0);
+        assert!(Params::from_bytes(&long).is_err());
+        // bad magic
+        let mut bad = good;
+        bad[0] ^= 0xFF;
+        assert!(Params::from_bytes(&bad).is_err());
     }
 
     #[test]

@@ -23,4 +23,5 @@ pub mod history;
 pub mod partition;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod util;

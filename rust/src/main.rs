@@ -9,20 +9,29 @@
 //!   grad-error        per-layer mini-batch gradient error (Fig. 3 point)
 //!   bench-gate        diff BENCH_step.json vs BENCH_baseline.json and fail
 //!                     on a gated-phase slowdown (CI perf-gate job)
+//!   predict           one-shot batched inference over the serve engine
+//!   serve             long-lived inference loop: JSONL requests on stdin,
+//!                     micro-batched through the serve engine
 //!   experiment <id>   regenerate a paper table/figure (table1, table2,
 //!                     table3, table6, table7, table8, table9, fig2, fig3,
 //!                     fig4, fig5, sharded, all)
 
+use std::collections::BTreeMap;
+use std::io::BufRead;
 use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use lmc::backend::make_executor;
+use lmc::backend::{make_executor, Executor};
 use lmc::config::RunConfig;
-use lmc::coordinator::{grad_check, RunMetrics, ShardedTrainer, Trainer};
+use lmc::coordinator::{grad_check, Params, RunMetrics, ShardedTrainer, Trainer};
 use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, quality::quality, PartitionConfig};
+use lmc::serve::{BatchPolicy, MicroBatcher, ServeEngine, ServeMode, ServeRequest};
 use lmc::util::cli::Args;
+use lmc::util::json::Json;
 
 fn main() {
     let args = Args::from_env();
@@ -45,6 +54,8 @@ fn run(args: &Args) -> Result<()> {
         "programs" => cmd_programs(args),
         "grad-error" => cmd_grad_error(args),
         "bench-gate" => cmd_bench_gate(args),
+        "predict" => cmd_predict(args),
+        "serve" => cmd_serve(args),
         "experiment" => lmc::experiments::dispatch(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -67,8 +78,18 @@ subcommands:
                    [--clusters-per-batch C] [--parts K]
                    [--shards S] [--sync-every K] [--sync-mode avg|hist]
                    [--beta-alpha F] [--beta-score x2|2x-x2|x|1|sinx]
-                   [--target-acc F] [--config file.toml] [--seed N] [--verbose]
+                   [--target-acc F] [--config file.toml] [--seed N]
+                   [--save-params FILE] [--verbose]
   eval             exact inference with fresh params (pipeline smoke test)
+  predict          one-shot serve-engine inference: --nodes 1,2,3
+                   [--dataset D] [--arch A] [--params FILE]
+                   [--serve-mode exact|cached] [--serve-beta F]
+  serve            JSONL request loop on stdin ('[ids...]' or
+                   '{\"id\":N,\"nodes\":[ids...]}' per line; one JSON response
+                   per request on stdout, status on stderr)
+                   [--params FILE] [--serve-mode exact|cached]
+                   [--serve-max-batch N] [--serve-max-wait-ms MS]
+                   [--serve-beta F]
   partition-stats  --dataset D [--parts K] [--seed N]
   datasets         list registered datasets
   programs         list artifact programs (--artifacts DIR; pjrt builds only)
@@ -105,6 +126,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             st.cfg.epochs
         );
         let metrics = st.run()?;
+        if let Some(path) = args.opt("save-params") {
+            st.averaged_params().save(Path::new(path))?;
+            println!("averaged worker params saved to {path}");
+        }
         return report_metrics(
             &metrics,
             st.cfg.dataset.name(),
@@ -125,6 +150,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.cfg.epochs
     );
     let metrics = trainer.run()?;
+    if let Some(path) = args.opt("save-params") {
+        trainer.params.save(Path::new(path))?;
+        println!("params saved to {path}");
+    }
     report_metrics(
         &metrics,
         trainer.cfg.dataset.name(),
@@ -132,6 +161,218 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.cfg.method.name(),
         args,
     )
+}
+
+// ---------------------------------------------------------------------------
+// serve path
+// ---------------------------------------------------------------------------
+
+/// Build a serve engine from the CLI config, loading `--params FILE` when
+/// given (the `train --save-params` round-trip) and warming the history
+/// for the cached path.
+fn make_engine(args: &Args) -> Result<ServeEngine> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_cli(args)?;
+    let params = match args.opt("params") {
+        Some(p) => Some(Params::load(Path::new(p))?),
+        None => None,
+    };
+    let mut engine = ServeEngine::from_config(&cfg, params)?;
+    if engine.opts().mode == ServeMode::Cached {
+        engine.refresh_history()?;
+    }
+    Ok(engine)
+}
+
+fn parse_nodes(s: &str) -> Result<Vec<u32>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<u32>().map_err(|e| anyhow!("bad node id '{t}': {e}")))
+        .collect()
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let engine = make_engine(args)?;
+    let nodes = parse_nodes(
+        args.opt("nodes")
+            .ok_or_else(|| anyhow!("predict needs --nodes 1,2,3 (comma-separated ids)"))?,
+    )?;
+    let preds = engine.predict(&nodes)?;
+    println!(
+        "{}-node graph / arch {} — {} mode, {} prediction(s):",
+        engine.graph().n(),
+        engine.model().arch_name,
+        engine.opts().mode.name(),
+        preds.len()
+    );
+    for p in &preds {
+        println!(
+            "node {:>7}  class {:>3}  logit {:.4}",
+            p.node,
+            p.label,
+            p.logits[p.label as usize]
+        );
+    }
+    Ok(())
+}
+
+/// One stdin request line: a bare JSON array of node ids, or an object
+/// `{"id": N, "nodes": [ids...]}`. Requests without an id get sequential
+/// ones.
+fn parse_request(line: &str, next_id: &mut u64) -> Result<ServeRequest> {
+    let v = Json::parse(line).map_err(|e| anyhow!("bad request line: {e}"))?;
+    let (id, nodes) = match v.as_arr() {
+        Some(arr) => (None, arr),
+        None => {
+            let nodes = v.get("nodes").and_then(Json::as_arr).ok_or_else(|| {
+                anyhow!("request must be '[ids...]' or '{{\"nodes\": [ids...]}}'")
+            })?;
+            (v.get("id").and_then(Json::as_f64).map(|x| x as u64), nodes)
+        }
+    };
+    let nodes: Vec<u32> = nodes
+        .iter()
+        .map(|j| {
+            j.as_f64()
+                .map(|x| x as u32)
+                .ok_or_else(|| anyhow!("node ids must be numbers, got {j}"))
+        })
+        .collect::<Result<_>>()?;
+    let id = id.unwrap_or(*next_id);
+    *next_id += 1;
+    Ok(ServeRequest { id, nodes })
+}
+
+/// One JSON error response line (`{"id": N, "error": "..."}`; id omitted
+/// when the request never got one).
+fn print_error_line(id: Option<u64>, msg: &str) {
+    let mut top = BTreeMap::new();
+    if let Some(id) = id {
+        top.insert("id".to_string(), Json::Num(id as f64));
+    }
+    top.insert("error".to_string(), Json::Str(msg.to_string()));
+    println!("{}", Json::Obj(top));
+}
+
+fn print_answers(answers: &[(u64, Vec<lmc::serve::Prediction>)]) -> usize {
+    let mut served = 0usize;
+    for (id, preds) in answers {
+        let items: Vec<Json> = preds
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("node".to_string(), Json::Num(p.node as f64));
+                m.insert("label".to_string(), Json::Num(p.label as f64));
+                m.insert(
+                    "logit".to_string(),
+                    Json::Num(p.logits[p.label as usize] as f64),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        served += preds.len();
+        let mut top = BTreeMap::new();
+        top.insert("id".to_string(), Json::Num(*id as f64));
+        top.insert("predictions".to_string(), Json::Arr(items));
+        println!("{}", Json::Obj(top));
+    }
+    served
+}
+
+/// Answer one drained micro-batch: a JSON response line per request. A
+/// failing request (e.g. an out-of-range node id) must not take the batch
+/// — or the long-lived loop — down with it, so on a batch-level error
+/// each request is retried alone and only the offender gets an error
+/// response.
+fn answer_batch(engine: &ServeEngine, batch: &[ServeRequest]) -> usize {
+    match engine.answer(batch) {
+        Ok(answers) => print_answers(&answers),
+        Err(_) => {
+            let mut served = 0usize;
+            for r in batch {
+                match engine.answer(std::slice::from_ref(r)) {
+                    Ok(answers) => served += print_answers(&answers),
+                    Err(e) => print_error_line(Some(r.id), &format!("{e:#}")),
+                }
+            }
+            served
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_cli(args)?;
+    let engine = make_engine(args)?;
+    eprintln!(
+        "serving {} / {} on the native backend — {} nodes, {} mode, tiles of {} node(s), \
+         flush at {} queued node(s) or {} ms",
+        engine.model().profile,
+        engine.model().arch_name,
+        engine.graph().n(),
+        engine.opts().mode.name(),
+        engine.opts().tile_nodes,
+        cfg.serve_max_batch,
+        cfg.serve_max_wait_ms
+    );
+    let policy = BatchPolicy { max_nodes: cfg.serve_max_batch, max_wait: cfg.serve_max_wait_ms };
+    let mut mb = MicroBatcher::new(policy);
+    let clock = Instant::now();
+    let mut next_id = 0u64;
+    let mut served = 0usize;
+    // stdin is read on its own thread so the main loop can wake on the
+    // micro-batcher's latency deadline even while no input arrives — a
+    // queued sub-threshold request is answered within ~serve_max_wait_ms,
+    // not held hostage until the next line or EOF.
+    let (tx, rx) = mpsc::channel::<String>();
+    let reader = std::thread::spawn(move || {
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    let wait = Duration::from_millis(cfg.serve_max_wait_ms.max(1));
+    loop {
+        match rx.recv_timeout(wait) {
+            Ok(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let now = clock.elapsed().as_millis() as u64;
+                match parse_request(&line, &mut next_id) {
+                    Ok(req) => {
+                        if let Some(batch) = mb.push(req, now) {
+                            served += answer_batch(&engine, &batch);
+                        }
+                    }
+                    // a malformed line gets an error response, not a
+                    // service abort: queued requests stay alive
+                    Err(e) => print_error_line(None, &format!("{e:#}")),
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let now = clock.elapsed().as_millis() as u64;
+                if let Some(batch) = mb.poll(now) {
+                    served += answer_batch(&engine, &batch);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    if let Some(batch) = mb.flush() {
+        served += answer_batch(&engine, &batch);
+    }
+    let _ = reader.join();
+    eprintln!(
+        "served {served} node prediction(s) in {:.3}s (backend busy {:.3}s)",
+        clock.elapsed().as_secs_f64(),
+        engine.exec().exec_secs()
+    );
+    Ok(())
 }
 
 /// Post-run summary + optional curve export, shared by the serial and

@@ -1,0 +1,162 @@
+//! Micro-batching request queue for the serve path.
+//!
+//! Requests accumulate until either the pending node count reaches
+//! `BatchPolicy::max_nodes` (throughput: bigger tiles amortize the GEMM
+//! and SpMM launches) or the oldest request has waited `max_wait` clock
+//! units (latency: nobody is held hostage by a quiet stream). Time is an
+//! explicit logical clock passed by the caller — the CLI loop feeds real
+//! milliseconds, tests feed deterministic ticks — so flush decisions are
+//! reproducible and the queue needs no threads of its own.
+
+/// One inference request: caller-chosen id plus the node ids to predict.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub nodes: Vec<u32>,
+}
+
+/// The size/latency trade-off knob.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many node ids are queued (counted with
+    /// multiplicity — the cost driver is tile assembly work, not
+    /// uniqueness).
+    pub max_nodes: usize,
+    /// Flush once the oldest queued request has waited this many clock
+    /// units (milliseconds in the CLI loop).
+    pub max_wait: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_nodes: 256, max_wait: 4 }
+    }
+}
+
+/// FIFO micro-batch queue. `push` and `poll` return a drained batch when a
+/// flush condition holds; the caller answers the whole batch in one
+/// engine pass.
+#[derive(Debug, Default)]
+pub struct MicroBatcher {
+    policy: BatchPolicy,
+    queue: Vec<(u64, ServeRequest)>,
+    queued_nodes: usize,
+}
+
+impl MicroBatcher {
+    pub fn new(policy: BatchPolicy) -> MicroBatcher {
+        MicroBatcher { policy, queue: Vec::new(), queued_nodes: 0 }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request at logical time `now`; returns the drained batch
+    /// (FIFO order) when the size threshold is reached or the oldest
+    /// request's deadline has passed.
+    pub fn push(&mut self, req: ServeRequest, now: u64) -> Option<Vec<ServeRequest>> {
+        self.queued_nodes += req.nodes.len();
+        self.queue.push((now, req));
+        if self.queued_nodes >= self.policy.max_nodes.max(1) {
+            return Some(self.drain());
+        }
+        self.poll(now)
+    }
+
+    /// Deadline check without enqueuing: returns the drained batch when
+    /// the oldest request has waited at least `max_wait`.
+    pub fn poll(&mut self, now: u64) -> Option<Vec<ServeRequest>> {
+        match self.queue.first() {
+            Some(&(t0, _)) if now.saturating_sub(t0) >= self.policy.max_wait => Some(self.drain()),
+            _ => None,
+        }
+    }
+
+    /// Unconditional drain (stream end).
+    pub fn flush(&mut self) -> Option<Vec<ServeRequest>> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.drain())
+        }
+    }
+
+    /// Queued requests.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Queued node ids (with multiplicity).
+    pub fn queued_nodes(&self) -> usize {
+        self.queued_nodes
+    }
+
+    fn drain(&mut self) -> Vec<ServeRequest> {
+        self.queued_nodes = 0;
+        self.queue.drain(..).map(|(_, r)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, nodes: &[u32]) -> ServeRequest {
+        ServeRequest { id, nodes: nodes.to_vec() }
+    }
+
+    #[test]
+    fn flushes_on_node_count_threshold() {
+        let mut mb = MicroBatcher::new(BatchPolicy { max_nodes: 5, max_wait: 100 });
+        assert!(mb.push(req(1, &[0, 1]), 0).is_none());
+        assert_eq!(mb.queued(), 1);
+        assert_eq!(mb.queued_nodes(), 2);
+        // 2 + 3 = 5 >= max_nodes: flush, FIFO order preserved
+        let batch = mb.push(req(2, &[2, 3, 4]), 1).expect("size flush");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(mb.queued(), 0);
+        assert_eq!(mb.queued_nodes(), 0);
+    }
+
+    #[test]
+    fn flushes_on_oldest_request_deadline() {
+        let mut mb = MicroBatcher::new(BatchPolicy { max_nodes: 100, max_wait: 10 });
+        assert!(mb.push(req(7, &[3]), 0).is_none());
+        assert!(mb.poll(9).is_none(), "deadline not reached yet");
+        let batch = mb.poll(10).expect("deadline flush");
+        assert_eq!(batch, vec![req(7, &[3])]);
+        // a later push measures its wait from its own enqueue time
+        assert!(mb.push(req(8, &[4]), 50).is_none());
+        assert!(mb.poll(59).is_none());
+        assert!(mb.poll(60).is_some());
+    }
+
+    #[test]
+    fn push_honors_deadline_of_older_requests() {
+        let mut mb = MicroBatcher::new(BatchPolicy { max_nodes: 100, max_wait: 10 });
+        assert!(mb.push(req(1, &[0]), 0).is_none());
+        // the new request rides along with the expired older one
+        let batch = mb.push(req(2, &[1]), 15).expect("deadline flush on push");
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn flush_drains_everything_and_empty_flush_is_none() {
+        let mut mb = MicroBatcher::new(BatchPolicy::default());
+        assert!(mb.flush().is_none());
+        mb.push(req(1, &[0]), 0);
+        mb.push(req(2, &[1]), 1);
+        let batch = mb.flush().expect("explicit flush");
+        assert_eq!(batch.len(), 2);
+        assert!(mb.flush().is_none());
+    }
+
+    #[test]
+    fn zero_max_nodes_flushes_every_push() {
+        // max(1) guard: a zero knob degenerates to per-request batches
+        // instead of never flushing on size.
+        let mut mb = MicroBatcher::new(BatchPolicy { max_nodes: 0, max_wait: 1000 });
+        assert!(mb.push(req(1, &[5]), 0).is_some());
+    }
+}

@@ -1,0 +1,590 @@
+//! Online inference service over the native backend (ROADMAP "serve
+//! path"): a long-lived [`ServeEngine`] that holds a read-only graph,
+//! trained [`Params`], and a warm [`History`], and answers
+//! `predict(node_ids)` requests by assembling batched tiles through the
+//! fused SIMD forward kernels — no backward, no optimizer state.
+//!
+//! Two tile-assembly paths, selected by [`ServeMode`]:
+//!
+//!   * **Exact** — the requested core set is expanded one hop per layer
+//!     into its L-hop closure and every layer is evaluated only on the
+//!     rows the next layer needs, mirroring the full-graph oracle's
+//!     per-row operations exactly (same GEMM kernels, same per-row
+//!     aggregation order). Served logits are **bit-identical** to
+//!     `Executor::full_forward` + the output head
+//!     (`tests/integration_serve.rs`); cost grows with the closure size.
+//!   * **Cached** — LMC's own trick turned into a serving strategy: a
+//!     1-hop tile (core + halo) through the sampler's [`CsrBlock`]
+//!     machinery, with halo rows at layers 1..L-1 combined against the
+//!     cached-history embeddings (Eq. 9; `beta = 0` serves pure history).
+//!     With a warm history this tracks the oracle to ~1e-4 at 1-hop cost
+//!     — the transductive mini-batch inference argument of "Accurate and
+//!     Scalable GNNs via Message Invariance" (PAPERS.md).
+//!
+//! Parameter updates go through [`ServeEngine::set_params`], which bumps
+//! the params version and *invalidates* the warm history; the refresh
+//! hook ([`ServeEngine::refresh_history`]) recomputes every cached row
+//! from an exact full forward, so an update → refresh → re-predict
+//! sequence is deterministic. Requests are micro-batched by
+//! [`MicroBatcher`] (size/latency knob; see [`batcher`]).
+//!
+//! [`CsrBlock`]: crate::sampler::CsrBlock
+
+pub mod batcher;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+use rayon::prelude::*;
+
+use crate::backend::native::{self, kind_of, Kind};
+use crate::backend::{gemm, Backend, Executor, ModelSpec, NativeExecutor, StepWorkspace};
+use crate::config::RunConfig;
+use crate::coordinator::exact::argmax;
+use crate::coordinator::methods::BetaConfig;
+use crate::coordinator::params::Params;
+use crate::graph::{load, Graph};
+use crate::history::History;
+use crate::runtime::ArchInfo;
+use crate::sampler::{
+    beta_vector, build_subgraph, gather_rows, AdjacencyPolicy, BetaScore, Buckets,
+};
+use crate::util::rng::Rng;
+
+pub use batcher::{BatchPolicy, MicroBatcher, ServeRequest};
+
+/// Which tile-assembly path answers a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeMode {
+    /// L-hop exact closure; bit-identical to the full-graph oracle.
+    Exact,
+    /// 1-hop core + cached-history halo (Eq. 9 combination).
+    Cached,
+}
+
+impl ServeMode {
+    pub fn parse(s: &str) -> Option<ServeMode> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "exact" | "oracle" => ServeMode::Exact,
+            "cached" | "history" | "lmc" => ServeMode::Cached,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeMode::Exact => "exact",
+            ServeMode::Cached => "cached",
+        }
+    }
+}
+
+/// Engine knobs (`serve_*` keys in the run config).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub mode: ServeMode,
+    /// Maximum core nodes per assembled tile; a larger request is split
+    /// into this many-node tiles (each requested node lands in exactly
+    /// one tile — `prop_serve_tiling_covers_each_requested_node_once`).
+    pub tile_nodes: usize,
+    /// Eq. 9 combination for the cached path: `alpha = 0` (the default)
+    /// serves pure history for halo rows; `alpha > 0` mixes in the
+    /// incomplete fresh value with the training-side score function.
+    pub beta: BetaConfig,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            mode: ServeMode::Cached,
+            tile_nodes: 256,
+            beta: BetaConfig { alpha: 0.0, score: BetaScore::TwoXMinusXSquared },
+        }
+    }
+}
+
+/// One served node: predicted class plus the full output-head logits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Prediction {
+    pub node: u32,
+    pub label: u16,
+    pub logits: Vec<f32>,
+}
+
+/// Split a sorted, deduplicated request set into tiles of at most
+/// `max_tile` core nodes. Tiles partition the set: union covers it and
+/// every node appears in exactly one tile.
+pub fn plan_tiles(sorted_unique: &[u32], max_tile: usize) -> Vec<Vec<u32>> {
+    debug_assert!(sorted_unique.windows(2).all(|w| w[0] < w[1]), "tiles need sorted unique ids");
+    sorted_unique.chunks(max_tile.max(1)).map(|c| c.to_vec()).collect()
+}
+
+/// Long-lived inference engine over the native backend.
+pub struct ServeEngine {
+    graph: Arc<Graph>,
+    model: ModelSpec,
+    opts: ServeOptions,
+    exec: NativeExecutor,
+    params: Params,
+    /// Warm per-layer embeddings Hbar^l (l = 1..L-1) for the cached path;
+    /// refreshed wholesale from an exact full forward.
+    history: History,
+    params_version: u64,
+    /// The params version the history was last refreshed at; `None`
+    /// until the first refresh and after every `set_params`.
+    warm_version: Option<u64>,
+    /// Steady-state tile buffers: repeated predicts reuse the same
+    /// workspace pool the train step uses.
+    ws: Mutex<StepWorkspace>,
+}
+
+impl ServeEngine {
+    /// Engine over explicit parts (tests, embedding into other runtimes).
+    pub fn new(
+        graph: Arc<Graph>,
+        model: ModelSpec,
+        params: Params,
+        opts: ServeOptions,
+    ) -> Result<ServeEngine> {
+        Self::with_exec(NativeExecutor::new(), graph, model, params, opts)
+    }
+
+    fn with_exec(
+        exec: NativeExecutor,
+        graph: Arc<Graph>,
+        model: ModelSpec,
+        params: Params,
+        opts: ServeOptions,
+    ) -> Result<ServeEngine> {
+        validate_params(&model.arch, &params)?;
+        let hist_dims: Vec<usize> = model.arch.dims[1..model.arch.l].to_vec();
+        let history = History::new(graph.n(), &hist_dims);
+        Ok(ServeEngine {
+            graph,
+            model,
+            opts,
+            exec,
+            params,
+            history,
+            params_version: 0,
+            warm_version: None,
+            ws: Mutex::new(StepWorkspace::new()),
+        })
+    }
+
+    /// Engine from a run config: loads the dataset, resolves the arch
+    /// through the native executor, and uses `params` when given (the
+    /// `lmc train --save-params` → `Params::load` round-trip) or fresh
+    /// seeded Glorot parameters otherwise.
+    pub fn from_config(cfg: &RunConfig, params: Option<Params>) -> Result<ServeEngine> {
+        if cfg.backend != Backend::Native {
+            bail!(
+                "the serve path runs on the native backend (got backend = \"{}\")",
+                cfg.backend.name()
+            );
+        }
+        let exec = NativeExecutor::new();
+        let graph = Arc::new(load(cfg.dataset, cfg.seed));
+        let profile = cfg.dataset.profile().to_string();
+        let prof = exec.resolve_profile(&profile)?;
+        if graph.d_x != prof.d_x || graph.n_class != prof.n_class {
+            bail!(
+                "dataset {} dims (d_x={}, c={}) do not match profile {} (d_x={}, c={})",
+                cfg.dataset.name(),
+                graph.d_x,
+                graph.n_class,
+                profile,
+                prof.d_x,
+                prof.n_class
+            );
+        }
+        let arch = exec.resolve_arch(&profile, &cfg.arch)?;
+        let params =
+            params.unwrap_or_else(|| Params::init(&arch, &mut Rng::new(cfg.seed ^ 0x7E57)));
+        let model = ModelSpec { profile, arch_name: cfg.arch.clone(), arch };
+        let opts = ServeOptions {
+            mode: cfg.serve_mode,
+            tile_nodes: cfg.serve_max_batch,
+            beta: BetaConfig { alpha: cfg.serve_beta, score: cfg.beta.score },
+        };
+        Self::with_exec(exec, graph, model, params, opts)
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    pub fn opts(&self) -> &ServeOptions {
+        &self.opts
+    }
+
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    pub fn params_version(&self) -> u64 {
+        self.params_version
+    }
+
+    /// Backend executor (exec-clock telemetry: `exec.exec_secs()`).
+    pub fn exec(&self) -> &NativeExecutor {
+        &self.exec
+    }
+
+    /// True when the cached-history rows were computed at the current
+    /// parameters.
+    pub fn is_warm(&self) -> bool {
+        self.warm_version == Some(self.params_version)
+    }
+
+    /// Swap in updated parameters (e.g. from a concurrent training run).
+    /// Bumps the params version and invalidates the warm history — every
+    /// cached row was computed under the old parameters, so the cached
+    /// path refuses to serve until [`ServeEngine::refresh_history`] runs.
+    pub fn set_params(&mut self, params: Params) -> Result<()> {
+        validate_params(&self.model.arch, &params)?;
+        self.params = params;
+        self.params_version += 1;
+        self.warm_version = None;
+        Ok(())
+    }
+
+    /// The history-refresh hook: recompute every cached row from an exact
+    /// full-graph forward at the current parameters. Deterministic — two
+    /// refreshes at the same params produce bit-identical rows — so an
+    /// update → invalidate → refresh → re-predict sequence replays
+    /// exactly (`param_update_then_repredict_is_deterministic`).
+    pub fn refresh_history(&mut self) -> Result<()> {
+        let hs = self.exec.full_forward(self.graph.as_ref(), &self.params, &self.model)?;
+        for l in 1..self.model.arch.l {
+            self.history.h[l - 1].data.copy_from_slice(&hs[l]);
+        }
+        // every cached row is freshly written as of this refresh
+        self.history.iter += 1;
+        let it = self.history.iter;
+        self.history.last_update.iter_mut().for_each(|t| *t = it);
+        self.warm_version = Some(self.params_version);
+        Ok(())
+    }
+
+    /// Predict the configured mode for a list of node ids (duplicates
+    /// allowed; output is aligned with the input order).
+    pub fn predict(&self, nodes: &[u32]) -> Result<Vec<Prediction>> {
+        self.predict_in_mode(nodes, self.opts.mode)
+    }
+
+    /// Predict with an explicit mode (benches A/B the two paths).
+    pub fn predict_in_mode(&self, nodes: &[u32], mode: ServeMode) -> Result<Vec<Prediction>> {
+        if nodes.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = self.graph.n() as u32;
+        for &u in nodes {
+            if u >= n {
+                bail!("node id {u} out of range (graph has {n} nodes)");
+            }
+        }
+        if mode == ServeMode::Cached && !self.is_warm() {
+            bail!(
+                "cached-history serve path is stale (params at version {}, history warmed at \
+                 {:?}): call refresh_history() after set_params()",
+                self.params_version,
+                self.warm_version
+            );
+        }
+        // tiles are a partition of the deduplicated request set, so every
+        // requested node is assembled and served exactly once
+        let mut unique = nodes.to_vec();
+        unique.sort_unstable();
+        unique.dedup();
+        let mut logits: Vec<f32> = Vec::new();
+        for tile in plan_tiles(&unique, self.opts.tile_nodes) {
+            logits.extend(self.tile_logits(&tile, mode)?);
+        }
+        let c = logits.len() / unique.len();
+        Ok(nodes
+            .iter()
+            .map(|&u| {
+                let i = unique.binary_search(&u).expect("requested node was tiled");
+                let row = &logits[i * c..(i + 1) * c];
+                Prediction { node: u, label: argmax(row) as u16, logits: row.to_vec() }
+            })
+            .collect())
+    }
+
+    /// Answer a micro-batch drained from [`MicroBatcher`] in one engine
+    /// pass: all requests' nodes are tiled together, then results are
+    /// routed back per request id.
+    pub fn answer(&self, batch: &[ServeRequest]) -> Result<Vec<(u64, Vec<Prediction>)>> {
+        let all: Vec<u32> = batch.iter().flat_map(|r| r.nodes.iter().copied()).collect();
+        let preds = self.predict(&all)?;
+        let mut out = Vec::with_capacity(batch.len());
+        let mut off = 0;
+        for r in batch {
+            out.push((r.id, preds[off..off + r.nodes.len()].to_vec()));
+            off += r.nodes.len();
+        }
+        Ok(out)
+    }
+
+    /// Full-graph output-head logits (`[n, c]`) through the exact oracle
+    /// forward — the reference the integration tests compare served
+    /// logits against.
+    pub fn oracle_logits(&self) -> Result<Vec<f32>> {
+        let hs = self.exec.full_forward(self.graph.as_ref(), &self.params, &self.model)?;
+        self.head_logits(&hs[self.model.arch.l], self.graph.n())
+    }
+
+    fn tile_logits(&self, tile: &[u32], mode: ServeMode) -> Result<Vec<f32>> {
+        match mode {
+            ServeMode::Exact => self.exec.time_scope(|| self.exact_tile_logits(tile)),
+            ServeMode::Cached => self.cached_tile_logits(tile),
+        }
+    }
+
+    /// 1-hop tile through the sampler's CSR-block machinery: core rows are
+    /// computed with full in-tile messages, halo rows come from the warm
+    /// history via the Eq. 9 combination inside the forward-only backend
+    /// entry.
+    fn cached_tile_logits(&self, tile: &[u32]) -> Result<Vec<f32>> {
+        let l_total = self.model.arch.l;
+        // unbounded buckets never consume randomness, so the stream is inert
+        let mut rng = Rng::new(0);
+        let sb = build_subgraph(
+            self.graph.as_ref(),
+            tile,
+            AdjacencyPolicy::GlobalWithHalo,
+            &Buckets::unbounded(),
+            &mut rng,
+        )?;
+        let hist_h: Vec<Vec<f32>> = (1..l_total)
+            .map(|l| self.history.gather_h(l, &sb.halo, sb.halo.len()))
+            .collect();
+        let beta = if self.opts.beta.alpha > 0.0 {
+            beta_vector(&sb, self.opts.beta.alpha, self.opts.beta.score)
+        } else {
+            vec![0f32; sb.halo.len()]
+        };
+        self.exec.forward_logits(
+            self.graph.as_ref(),
+            &sb,
+            &self.model,
+            &self.params,
+            &hist_h,
+            &beta,
+            Some(&self.ws),
+        )
+    }
+
+    /// Exact L-hop tile: evaluate layer l only on the closure set that
+    /// still influences the requested rows, mirroring the full-graph
+    /// oracle's per-row operations exactly (same GEMM kernels, identical
+    /// per-row aggregation order: self-loop first, then neighbors in
+    /// global CSR order), so served logits are bit-identical to
+    /// [`ServeEngine::oracle_logits`] rows.
+    fn exact_tile_logits(&self, tile: &[u32]) -> Result<Vec<f32>> {
+        let g = self.graph.as_ref();
+        let arch = &self.model.arch;
+        let dims = &arch.dims;
+        let l_total = arch.l;
+        let kind = kind_of(&self.model.arch_name)?;
+
+        // sets[l] = nodes whose exact H^l must be materialized;
+        // sets[l_total] is the request tile, sets[l-1] = sets[l] ∪ N(sets[l])
+        let mut sets: Vec<Vec<u32>> = Vec::with_capacity(l_total + 1);
+        sets.push(tile.to_vec());
+        for _ in 0..l_total {
+            let wider = expand_one_hop(g, sets.last().unwrap());
+            sets.push(wider);
+        }
+        sets.reverse();
+
+        let p = |name: &str| {
+            self.params.get(name).ok_or_else(|| anyhow!("missing parameter {name}"))
+        };
+
+        // H^0 rows over the widest set; GCNII keeps the embed0 output and
+        // its position map for the α·h0 initial residual
+        let s0 = &sets[0];
+        let mut pos0: Vec<u32> = Vec::new();
+        let (mut h_prev, h0_rows) = match kind {
+            Kind::Gcn => (gather_rows(&g.features, g.d_x, s0, s0.len()), Vec::new()),
+            Kind::Gcnii => {
+                let (w0, b0) = (p("W0")?, p("b0")?);
+                let x = gather_rows(&g.features, g.d_x, s0, s0.len());
+                let mut h0 = gemm::matmul(&x, s0.len(), g.d_x, &w0.data, dims[0]);
+                native::add_bias_rows(&mut h0, &b0.data);
+                native::relu_inplace(&mut h0);
+                pos0 = vec![u32::MAX; g.n()];
+                for (i, &u) in s0.iter().enumerate() {
+                    pos0[u as usize] = i as u32;
+                }
+                (h0.clone(), h0)
+            }
+        };
+
+        let mut pos = vec![u32::MAX; g.n()];
+        for l in 1..=l_total {
+            let cur = &sets[l];
+            let prev = &sets[l - 1];
+            let d_prev = dims[l - 1];
+            let d_l = dims[l];
+            for (i, &u) in prev.iter().enumerate() {
+                pos[u as usize] = i as u32;
+            }
+            // per-row aggregation in exactly full_aggregate's order; every
+            // neighbor of a cur node is in prev by closure construction
+            let mut agg = vec![0f32; cur.len() * d_prev];
+            agg.par_chunks_mut(d_prev).enumerate().for_each(|(r, row)| {
+                let u = cur[r] as usize;
+                let sw = g.self_w[u];
+                let src = row_of(&h_prev, pos[u], d_prev);
+                for (o, &s) in row.iter_mut().zip(src) {
+                    *o = sw * s;
+                }
+                for ei in g.csr.offsets[u] as usize..g.csr.offsets[u + 1] as usize {
+                    let v = g.csr.neighbors[ei] as usize;
+                    let w = g.edge_w[ei];
+                    let src = row_of(&h_prev, pos[v], d_prev);
+                    for (o, &s) in row.iter_mut().zip(src) {
+                        *o += w * s;
+                    }
+                }
+            });
+            let mut act = match kind {
+                Kind::Gcn => {
+                    let (w, b) = (p(&format!("W{l}"))?, p(&format!("b{l}"))?);
+                    let mut z = gemm::matmul(&agg, cur.len(), d_prev, &w.data, d_l);
+                    native::add_bias_rows(&mut z, &b.data);
+                    z
+                }
+                Kind::Gcnii => {
+                    let w = p(&format!("W{l}"))?;
+                    let gam = native::gcnii_gamma(l);
+                    let mut s = agg;
+                    for (i, &u) in cur.iter().enumerate() {
+                        let h0row = row_of(&h0_rows, pos0[u as usize], d_prev);
+                        for (sv, &h0v) in
+                            s[i * d_prev..(i + 1) * d_prev].iter_mut().zip(h0row)
+                        {
+                            *sv = (1.0 - native::GCNII_ALPHA) * *sv + native::GCNII_ALPHA * h0v;
+                        }
+                    }
+                    let sw = gemm::matmul(&s, cur.len(), d_prev, &w.data, d_l);
+                    let mut z = vec![0f32; cur.len() * d_l];
+                    for ((zv, &sv), &swv) in z.iter_mut().zip(&s).zip(&sw) {
+                        *zv = (1.0 - gam) * sv + gam * swv;
+                    }
+                    z
+                }
+            };
+            if l < l_total || kind == Kind::Gcnii {
+                native::relu_inplace(&mut act);
+            }
+            h_prev = act;
+        }
+        self.head_logits(&h_prev, sets[l_total].len())
+    }
+
+    /// Output head over `[rows, d_last]` representations: the backend's
+    /// own `logits_of`, so tiles, the oracle reference, and training-side
+    /// evaluation all share one head implementation (per-row identity is
+    /// structural, not maintained by hand).
+    fn head_logits(&self, h: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let d_last = self.model.arch.dims[self.model.arch.l];
+        native::logits_of(kind_of(&self.model.arch_name)?, &self.params, h, rows, d_last)
+    }
+}
+
+fn row_of(buf: &[f32], pos: u32, d: usize) -> &[f32] {
+    let i = pos as usize;
+    &buf[i * d..(i + 1) * d]
+}
+
+/// `nodes ∪ N(nodes)`, sorted unique — one closure-expansion step.
+fn expand_one_hop(g: &Graph, nodes: &[u32]) -> Vec<u32> {
+    let mut mark = vec![false; g.n()];
+    let mut out: Vec<u32> = Vec::with_capacity(nodes.len() * 2);
+    for &u in nodes {
+        if !mark[u as usize] {
+            mark[u as usize] = true;
+            out.push(u);
+        }
+        for &v in g.csr.neighbors(u as usize) {
+            if !mark[v as usize] {
+                mark[v as usize] = true;
+                out.push(v);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+fn validate_params(arch: &ArchInfo, params: &Params) -> Result<()> {
+    if params.names.len() != arch.params.len() {
+        bail!(
+            "parameter set has {} tensors, arch expects {}",
+            params.names.len(),
+            arch.params.len()
+        );
+    }
+    for ((name, shape), (pn, pt)) in
+        arch.params.iter().zip(params.names.iter().zip(&params.tensors))
+    {
+        if name != pn || shape != &pt.shape {
+            bail!(
+                "parameter mismatch: arch expects {name} {shape:?}, got {pn} {:?} \
+                 (were these params saved for a different arch/profile?)",
+                pt.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_mode_parses() {
+        assert_eq!(ServeMode::parse("exact"), Some(ServeMode::Exact));
+        assert_eq!(ServeMode::parse("CACHED"), Some(ServeMode::Cached));
+        assert_eq!(ServeMode::parse("lmc"), Some(ServeMode::Cached));
+        assert!(ServeMode::parse("nope").is_none());
+        assert_eq!(ServeMode::Exact.name(), "exact");
+        assert_eq!(ServeMode::Cached.name(), "cached");
+    }
+
+    #[test]
+    fn plan_tiles_partitions_and_caps() {
+        let ids: Vec<u32> = (0..10).collect();
+        let tiles = plan_tiles(&ids, 4);
+        assert_eq!(tiles.len(), 3);
+        assert!(tiles.iter().all(|t| t.len() <= 4 && !t.is_empty()));
+        let flat: Vec<u32> = tiles.into_iter().flatten().collect();
+        assert_eq!(flat, ids);
+        // exact boundary: one tile
+        assert_eq!(plan_tiles(&ids, 10).len(), 1);
+        // zero knob degenerates to single-node tiles instead of dividing by zero
+        assert_eq!(plan_tiles(&ids, 0).len(), 10);
+        // empty request: no tiles
+        assert!(plan_tiles(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn validate_params_rejects_mismatched_shapes() {
+        let arch = ArchInfo::gcn(2, 4, 8, 3);
+        let mut p = Params::init(&arch, &mut Rng::new(1));
+        assert!(validate_params(&arch, &p).is_ok());
+        p.tensors[0] = crate::runtime::Tensor::zeros(&[5, 5]);
+        assert!(validate_params(&arch, &p).is_err());
+        let q = Params { names: vec![], tensors: vec![] };
+        assert!(validate_params(&arch, &q).is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! Integration: the batched inference service end-to-end against the
+//! exact full-graph oracle, on the default native backend.
+//!
+//! The acceptance bar (ISSUE 5):
+//!   * exact-tile serve path is **bit-identical** to the full-graph exact
+//!     oracle;
+//!   * the cached-history path tracks the oracle within 1e-4 with a warm
+//!     history;
+//!   * a param-update → history-invalidation → re-predict sequence is
+//!     deterministic across two runs.
+
+use std::sync::Arc;
+
+use lmc::backend::NativeExecutor;
+use lmc::config::RunConfig;
+use lmc::coordinator::{Params, Trainer};
+use lmc::graph::DatasetId;
+use lmc::serve::{
+    BatchPolicy, MicroBatcher, Prediction, ServeEngine, ServeMode, ServeRequest,
+};
+use lmc::util::rng::Rng;
+
+fn engine(arch: &str, mode: ServeMode, tile: usize) -> ServeEngine {
+    let cfg = RunConfig {
+        dataset: DatasetId::CoraSim,
+        arch: arch.into(),
+        seed: 3,
+        serve_mode: mode,
+        serve_max_batch: tile,
+        ..Default::default()
+    };
+    ServeEngine::from_config(&cfg, None).unwrap()
+}
+
+fn logits_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: width mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{ctx}: logit {i}: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn exact_tile_serve_is_bit_identical_to_full_oracle() {
+    for arch in ["gcn", "gcnii"] {
+        // a small tile knob forces the request through several tiles
+        let eng = engine(arch, ServeMode::Exact, 48);
+        let oracle = eng.oracle_logits().unwrap();
+        let n = eng.graph().n();
+        let c = oracle.len() / n;
+        let nodes: Vec<u32> = (0..n as u32).step_by(7).collect();
+        let preds = eng.predict(&nodes).unwrap();
+        assert_eq!(preds.len(), nodes.len());
+        for p in &preds {
+            let u = p.node as usize;
+            assert_eq!(
+                p.logits,
+                &oracle[u * c..(u + 1) * c],
+                "{arch}: node {u} exact-tile logits differ from the oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn cached_history_path_tracks_oracle_within_1e4() {
+    for arch in ["gcn", "gcnii"] {
+        let mut eng = engine(arch, ServeMode::Cached, 64);
+        eng.refresh_history().unwrap();
+        assert!(eng.is_warm());
+        let oracle = eng.oracle_logits().unwrap();
+        let n = eng.graph().n();
+        let c = oracle.len() / n;
+        let nodes: Vec<u32> = (0..n as u32).step_by(3).collect();
+        let preds = eng.predict(&nodes).unwrap();
+        for p in &preds {
+            let u = p.node as usize;
+            logits_close(
+                &p.logits,
+                &oracle[u * c..(u + 1) * c],
+                1e-4,
+                &format!("{arch}: node {u} cached vs oracle"),
+            );
+        }
+    }
+}
+
+#[test]
+fn cached_path_refuses_stale_history_and_exact_path_does_not() {
+    let mut eng = engine("gcn", ServeMode::Cached, 64);
+    // never warmed: the cached path must refuse rather than serve zeros
+    let err = eng.predict(&[0, 1, 2]).unwrap_err();
+    assert!(err.to_string().contains("stale"), "{err}");
+    // the exact path needs no history at all
+    assert_eq!(eng.predict_in_mode(&[0, 1, 2], ServeMode::Exact).unwrap().len(), 3);
+    eng.refresh_history().unwrap();
+    assert!(eng.predict(&[0, 1, 2]).is_ok());
+    // a params swap invalidates again
+    let fresh = Params::init(&eng.model().arch, &mut Rng::new(0xFEED));
+    eng.set_params(fresh).unwrap();
+    assert!(!eng.is_warm());
+    assert!(eng.predict(&[0, 1, 2]).is_err());
+}
+
+#[test]
+fn param_update_then_repredict_is_deterministic() {
+    // The whole update → invalidate → refresh → re-predict sequence must
+    // replay bit-identically in a fresh engine.
+    let run = || {
+        let mut eng = engine("gcn", ServeMode::Cached, 64);
+        eng.refresh_history().unwrap();
+        let nodes: Vec<u32> = (0..160u32).collect();
+        let before: Vec<Prediction> = eng.predict(&nodes).unwrap();
+        let v0 = eng.params_version();
+        let next = Params::init(&eng.model().arch, &mut Rng::new(0xBEEF));
+        eng.set_params(next).unwrap();
+        assert_eq!(eng.params_version(), v0 + 1);
+        eng.refresh_history().unwrap();
+        let after: Vec<Prediction> = eng.predict(&nodes).unwrap();
+        (before, after)
+    };
+    let (b1, a1) = run();
+    let (b2, a2) = run();
+    assert_eq!(b1, b2, "pre-update predictions not reproducible");
+    assert_eq!(a1, a2, "post-update predictions not reproducible");
+    // the parameter swap is actually visible in the served logits
+    assert_ne!(
+        b1.iter().map(|p| p.logits.clone()).collect::<Vec<_>>(),
+        a1.iter().map(|p| p.logits.clone()).collect::<Vec<_>>(),
+        "updated params served identical logits"
+    );
+}
+
+#[test]
+fn trained_params_roundtrip_through_disk_into_the_engine() {
+    // train a couple of epochs, save, reload bitwise, serve with the
+    // loaded params: cached path still tracks that engine's own oracle.
+    let cfg = RunConfig {
+        dataset: DatasetId::CoraSim,
+        arch: "gcn".into(),
+        epochs: 2,
+        eval_every: usize::MAX,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(Arc::new(NativeExecutor::new()), cfg).unwrap();
+    for _ in 0..2 {
+        t.train_epoch().unwrap();
+    }
+    let path = std::env::temp_dir()
+        .join(format!("lmc_serve_roundtrip_{}.params", std::process::id()));
+    t.params.save(&path).unwrap();
+    let loaded = Params::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    for (a, b) in t.params.tensors.iter().zip(&loaded.tensors) {
+        assert_eq!(a.shape, b.shape);
+        assert_eq!(a.data, b.data, "save/load round-trip not bitwise");
+    }
+
+    let serve_cfg = RunConfig {
+        dataset: DatasetId::CoraSim,
+        arch: "gcn".into(),
+        seed: 5,
+        serve_max_batch: 96,
+        ..Default::default()
+    };
+    let mut eng = ServeEngine::from_config(&serve_cfg, Some(loaded)).unwrap();
+    eng.refresh_history().unwrap();
+    let oracle = eng.oracle_logits().unwrap();
+    let n = eng.graph().n();
+    let c = oracle.len() / n;
+    let nodes: Vec<u32> = (0..n as u32).step_by(5).collect();
+    for p in &eng.predict(&nodes).unwrap() {
+        let u = p.node as usize;
+        logits_close(
+            &p.logits,
+            &oracle[u * c..(u + 1) * c],
+            1e-4,
+            &format!("trained-params node {u}"),
+        );
+    }
+}
+
+#[test]
+fn micro_batched_requests_route_back_per_request() {
+    let eng = engine("gcn", ServeMode::Exact, 32);
+    let mut mb = MicroBatcher::new(BatchPolicy { max_nodes: 8, max_wait: 10 });
+    assert!(mb
+        .push(ServeRequest { id: 1, nodes: vec![5, 3, 5] }, 0)
+        .is_none());
+    // 3 + 6 = 9 >= 8 queued nodes: size flush
+    let batch = mb
+        .push(ServeRequest { id: 2, nodes: vec![1, 2, 3, 4, 9, 10] }, 1)
+        .expect("size flush");
+    let answers = eng.answer(&batch).unwrap();
+    assert_eq!(answers.len(), 2);
+    let (id1, preds1) = &answers[0];
+    let (id2, preds2) = &answers[1];
+    assert_eq!((*id1, *id2), (1, 2));
+    // request order and duplicates are preserved per request
+    assert_eq!(preds1.iter().map(|p| p.node).collect::<Vec<_>>(), vec![5, 3, 5]);
+    assert_eq!(
+        preds2.iter().map(|p| p.node).collect::<Vec<_>>(),
+        vec![1, 2, 3, 4, 9, 10]
+    );
+    // a duplicated node is served the same logits
+    assert_eq!(preds1[0].logits, preds1[2].logits);
+    // shared node across requests agrees too
+    assert_eq!(preds1[1].logits, preds2[2].logits);
+
+    // latency flush path: a lone small request drains on deadline
+    assert!(mb.push(ServeRequest { id: 3, nodes: vec![0] }, 20).is_none());
+    assert!(mb.poll(29).is_none());
+    let late = mb.poll(30).expect("deadline flush");
+    assert_eq!(eng.answer(&late).unwrap()[0].1.len(), 1);
+}
+
+#[test]
+fn serve_rejects_out_of_range_nodes() {
+    let eng = engine("gcn", ServeMode::Exact, 32);
+    let n = eng.graph().n() as u32;
+    let err = eng.predict(&[0, n]).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+}

@@ -7,6 +7,7 @@ use lmc::backend::gemm::{self, Kernels};
 use lmc::backend::simd::{self, SimdLevel};
 use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspace};
 use lmc::coordinator::params::{grad_rel_err, Params};
+use lmc::serve::{plan_tiles, ServeEngine, ServeMode, ServeOptions};
 use lmc::graph::{gcn_normalize, load, random_graph, Csr, DatasetId, Graph};
 use lmc::history::History;
 use lmc::partition::{edge_cut, partition, quality::quality, shard_views, PartitionConfig};
@@ -788,6 +789,122 @@ fn prop_fixed_groups_rebuild_identically() {
             assert_eq!(sb1.a_bh, sb2.a_bh, "group {i}");
             assert_eq!(sb1.a_hh, sb2.a_hh, "group {i}");
             assert_eq!(sb1.a_hb, sb2.a_hb, "group {i}");
+        }
+    }
+}
+
+/// Serve-path micro-batch tiling invariants: tiles partition the
+/// deduplicated request set — every requested node lands in exactly one
+/// tile, the union covers the request set, no tile exceeds the knob, and
+/// tiles stay sorted (the sampler requires sorted batches).
+#[test]
+fn prop_serve_tiling_covers_each_requested_node_once() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed * 91 + 3);
+        let n = 30 + rng.below(500);
+        let k = 1 + rng.below(2 * n);
+        // requests arrive with duplicates and in arbitrary order
+        let requested: Vec<u32> = (0..k).map(|_| rng.below(n) as u32).collect();
+        let max_tile = 1 + rng.below(64);
+        let mut unique = requested.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        let tiles = plan_tiles(&unique, max_tile);
+        let mut count = vec![0usize; n];
+        for t in &tiles {
+            assert!(!t.is_empty(), "seed {seed}: empty tile");
+            assert!(t.len() <= max_tile, "seed {seed}: tile over the knob");
+            assert!(t.windows(2).all(|w| w[0] < w[1]), "seed {seed}: tile unsorted");
+            for &u in t {
+                count[u as usize] += 1;
+            }
+        }
+        for &u in &unique {
+            assert_eq!(count[u as usize], 1, "seed {seed}: node {u} not served exactly once");
+        }
+        let covered: usize = count.iter().sum();
+        assert_eq!(covered, unique.len(), "seed {seed}: tile union != request set");
+    }
+}
+
+/// Serving the same request set in any order (and with duplicates) gives
+/// identical per-node outputs: tiling is a function of the deduplicated
+/// sorted set only.
+#[test]
+fn prop_serve_request_order_is_irrelevant() {
+    for (case, arch_name) in [(0u64, "gcn"), (1u64, "gcnii")] {
+        let mut rng = Rng::new(case * 47 + 11);
+        let n = 120 + rng.below(120);
+        let csr = random_graph(n, 0.05, &mut rng);
+        let g = attr_graph(csr, case + 31);
+        let arch = match arch_name {
+            "gcn" => ArchInfo::gcn(2, g.d_x, 12, g.n_class),
+            _ => ArchInfo::gcnii(2, g.d_x, 12, g.n_class),
+        };
+        let model = ModelSpec { profile: "custom".into(), arch_name: arch_name.into(), arch };
+        let params = Params::init(&model.arch, &mut Rng::new(case ^ 0x5E12));
+        // a tiny tile knob forces multi-tile assembly
+        let opts = ServeOptions { mode: ServeMode::Exact, tile_nodes: 17, ..Default::default() };
+        let eng = ServeEngine::new(std::sync::Arc::new(g), model, params, opts).unwrap();
+        let mut nodes: Vec<u32> = (0..n as u32).step_by(2).collect();
+        nodes.push(0); // duplicate
+        let forward = eng.predict(&nodes).unwrap();
+        let mut shuffled = nodes.clone();
+        Rng::new(case + 99).shuffle(&mut shuffled);
+        let back = eng.predict(&shuffled).unwrap();
+        let by_node = |preds: &[lmc::serve::Prediction]| {
+            let mut m = std::collections::HashMap::new();
+            for p in preds {
+                let prev = m.insert(p.node, p.logits.clone());
+                if let Some(prev) = prev {
+                    assert_eq!(prev, p.logits, "{arch_name}: duplicate served differently");
+                }
+            }
+            m
+        };
+        assert_eq!(by_node(&forward), by_node(&back), "{arch_name}: order changed outputs");
+    }
+}
+
+/// Params save/load is bitwise: every f32 bit pattern (signed zero,
+/// subnormals, NaN payloads) survives the disk round-trip for random
+/// architectures of both families.
+#[test]
+fn prop_params_save_load_roundtrip_is_bitwise() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed * 17 + 5);
+        let l = 2 + rng.below(3);
+        let d_x = 1 + rng.below(40);
+        let hidden = 1 + rng.below(48);
+        let c = 2 + rng.below(12);
+        let arch = if seed % 2 == 0 {
+            ArchInfo::gcn(l, d_x, hidden, c)
+        } else {
+            ArchInfo::gcnii(l, d_x, hidden, c)
+        };
+        let mut p = Params::init(&arch, &mut Rng::new(seed ^ 0xD15C));
+        // plant bit patterns a lossy round-trip would destroy
+        let d0 = &mut p.tensors[0].data;
+        d0[0] = -0.0;
+        if d0.len() > 3 {
+            d0[1] = f32::from_bits(0x7fc0_0abc); // NaN payload
+            d0[2] = f32::from_bits(0x0000_0001); // smallest subnormal
+            d0[3] = f32::NEG_INFINITY;
+        }
+        let path = std::env::temp_dir().join(format!(
+            "lmc_params_prop_{}_{}.bin",
+            std::process::id(),
+            seed
+        ));
+        p.save(&path).unwrap();
+        let q = Params::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(p.names, q.names, "seed {seed}");
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a.shape, b.shape, "seed {seed}");
+            let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "seed {seed}: bit patterns drifted");
         }
     }
 }
