@@ -1,6 +1,8 @@
-//! Bench: historical value store gather/scatter/momentum paths.
+//! Bench: historical value store gather/scatter/momentum paths, at every
+//! storage dtype — f32 rows move full-width, bf16/f16 rows encode on
+//! scatter and decode on gather (momentum accumulates in f32 throughout).
 
-use lmc::history::History;
+use lmc::history::{HistDtype, History};
 use lmc::util::bench::{black_box, Bencher};
 use lmc::util::rng::Rng;
 
@@ -9,24 +11,32 @@ fn main() {
     println!("== history store ==");
     let n = 3000;
     let dims = [64usize, 64];
-    let mut h = History::new(n, &dims);
     let mut rng = Rng::new(0);
-    for &k in &[256usize, 1024] {
-        let idx: Vec<u32> = {
-            let mut v: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|x| x as u32).collect();
-            v.sort_unstable();
-            v
-        };
-        let src: Vec<f32> = (0..k * 64).map(|_| rng.normal() as f32).collect();
-        b.run(&format!("gather_h/{k}x64"), || {
-            black_box(h.gather_h(1, &idx, k + 64));
-        });
-        b.run(&format!("scatter_h/{k}x64"), || {
-            h.scatter_h(1, &idx, &src);
-        });
-        b.run(&format!("momentum_h/{k}x64"), || {
-            h.momentum_h(1, &idx, &src, 0.3);
-        });
+    for dtype in [HistDtype::F32, HistDtype::Bf16, HistDtype::F16] {
+        let mut h = History::with_dtype(n, &dims, dtype);
+        let tag = dtype.name();
+        for &k in &[256usize, 1024] {
+            let idx: Vec<u32> = {
+                let mut v: Vec<u32> =
+                    rng.sample_indices(n, k).into_iter().map(|x| x as u32).collect();
+                v.sort_unstable();
+                v
+            };
+            let src: Vec<f32> = (0..k * 64).map(|_| rng.normal() as f32).collect();
+            b.run(&format!("gather_h/{tag}/{k}x64"), || {
+                black_box(h.gather_h(1, &idx, k + 64));
+            });
+            b.run(&format!("scatter_h/{tag}/{k}x64"), || {
+                h.scatter_h(1, &idx, &src);
+            });
+            b.run(&format!("momentum_h/{tag}/{k}x64"), || {
+                h.momentum_h(1, &idx, &src, 0.3);
+            });
+        }
+        println!(
+            "    {tag}: {:.1} MB resident ({} bytes/node)",
+            h.bytes() as f64 / 1e6,
+            h.bytes_per_node()
+        );
     }
-    println!("store bytes: {:.1} MB", h.bytes() as f64 / 1e6);
 }

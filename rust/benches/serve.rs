@@ -30,6 +30,11 @@ fn main() {
         eng.model().arch_name,
         lmc::backend::simd::level().name()
     );
+    println!(
+        "    history store: dtype {}, {} bytes/node",
+        eng.history_dtype().name(),
+        eng.history_bytes_per_node()
+    );
 
     let sizes: &[usize] = if smoke { &[1, 16, 128] } else { &[1, 16, 128, 1024] };
     let mut rows: Vec<(usize, f64, f64)> = Vec::new();
@@ -58,6 +63,8 @@ fn main() {
     let _ = writeln!(json, "  \"smoke\": {smoke},");
     let _ = writeln!(json, "  \"arch\": \"{}\",", eng.model().arch_name);
     let _ = writeln!(json, "  \"nodes\": {n},");
+    let _ = writeln!(json, "  \"history_dtype\": \"{}\",", eng.history_dtype().name());
+    let _ = writeln!(json, "  \"history_bytes_per_node\": {},", eng.history_bytes_per_node());
     let _ = writeln!(json, "  \"refresh_history_s\": {:.6e},", warm.mean_s);
     json.push_str("  \"batches\": [\n");
     for (i, (bs, cached_s, exact_s)) in rows.iter().enumerate() {

@@ -1,5 +1,7 @@
 //! Bench: per-phase train-step breakdown (sample / gather / aggregate /
-//! gemm / compensate) with per-kernel scalar-vs-SIMD-vs-fused timings, plus
+//! gemm / compensate / history-gather at f32 and bf16, plus the resident
+//! `history_bytes_per_node` accounting) with per-kernel
+//! scalar-vs-SIMD-vs-fused timings, plus
 //! the end-to-end single-step comparison across three configurations:
 //!
 //!   * `step_naive_s`     — serial reference kernels, rebuild-per-step,
@@ -25,7 +27,7 @@ use lmc::backend::simd::{self, SimdLevel};
 use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspace};
 use lmc::coordinator::params::Params;
 use lmc::graph::{load, DatasetId};
-use lmc::history::History;
+use lmc::history::{HistDtype, History};
 use lmc::partition::{partition, PartitionConfig};
 use lmc::runtime::ArchInfo;
 use lmc::sampler::{
@@ -169,6 +171,31 @@ fn main() {
         black_box(combine(&beta[..nh], &hist_rows, xh, nh, D_HIDDEN));
     });
 
+    // ---- phase: history gather (halo reads through the dtype seam) ------
+    // identical row data in an f32 store and a bf16 store; the bf16 path
+    // decodes on the fly (dequant-fused gather) so it moves half the bytes
+    // per halo row and never round-trips through a full-width scratch
+    let hist_src: Vec<f32> = (0..g.n() * D_HIDDEN).map(|i| (i % 17) as f32 * 0.1 - 0.8).collect();
+    let mut hist_f32 = History::with_dtype(g.n(), &hist_dims, HistDtype::F32);
+    let mut hist_bf16 = History::with_dtype(g.n(), &hist_dims, HistDtype::Bf16);
+    hist_f32.fill_h(1, &hist_src);
+    hist_bf16.fill_h(1, &hist_src);
+    let mut hbuf = vec![0f32; nh * D_HIDDEN];
+    let hist_gather_f32 = b.run("phase/history-gather/f32", || {
+        hist_f32.gather_h_into(1, &sb.halo, &mut hbuf);
+        black_box(&hbuf);
+    });
+    let hist_gather_bf16 = b.run("phase/history-gather/bf16(dequant-fused)", || {
+        hist_bf16.gather_h_into(1, &sb.halo, &mut hbuf);
+        black_box(&hbuf);
+    });
+    let bpn_f32 = hist_f32.bytes_per_node();
+    let bpn_bf16 = hist_bf16.bytes_per_node();
+    println!(
+        "    history bytes/node: {bpn_f32} f32, {bpn_bf16} bf16 ({:.2}x gather)",
+        hist_gather_f32.mean_s / hist_gather_bf16.mean_s
+    );
+
     // ---- end-to-end single step -----------------------------------------
     // pre-PR 2 configuration: reference kernels, rebuild the subgraph every
     // step, allocate every buffer
@@ -297,8 +324,15 @@ fn main() {
     let _ = writeln!(json, "    \"gemm_s\": {:.6e},", gemm_opt.mean_s);
     let _ = writeln!(json, "    \"gemm_bias_relu_unfused_s\": {:.6e},", gemm_unfused.mean_s);
     let _ = writeln!(json, "    \"gemm_bias_relu_fused_s\": {:.6e},", gemm_fused.mean_s);
-    let _ = writeln!(json, "    \"compensate_s\": {:.6e}", compensate.mean_s);
+    let _ = writeln!(json, "    \"compensate_s\": {:.6e},", compensate.mean_s);
+    let _ = writeln!(json, "    \"history_gather_f32_s\": {:.6e},", hist_gather_f32.mean_s);
+    let _ = writeln!(json, "    \"history_gather_bf16_s\": {:.6e}", hist_gather_bf16.mean_s);
     json.push_str("  },\n");
+    // the gated bytes/node figure is the quantized (bf16) store — the
+    // memory claim this round makes; the *_f32/_bf16 variants document both
+    let _ = writeln!(json, "  \"history_bytes_per_node\": {bpn_bf16},");
+    let _ = writeln!(json, "  \"history_bytes_per_node_f32\": {bpn_f32},");
+    let _ = writeln!(json, "  \"history_bytes_per_node_bf16\": {bpn_bf16},");
     let _ = writeln!(json, "  \"step_naive_s\": {:.6e},", step_naive.mean_s);
     let _ = writeln!(json, "  \"step_scalar_s\": {:.6e},", step_scalar.mean_s);
     let _ = writeln!(json, "  \"step_optimized_s\": {:.6e},", step_opt.mean_s);
@@ -334,7 +368,11 @@ fn main() {
             base.push_str("  \"metrics\": {\n");
             let _ = writeln!(base, "    \"gemm_s\": {:.6e},", gemm_opt.mean_s);
             let _ = writeln!(base, "    \"aggregate_s\": {:.6e},", agg_opt.mean_s);
-            let _ = writeln!(base, "    \"step_optimized_s\": {:.6e}", step_opt.mean_s);
+            let _ = writeln!(base, "    \"step_optimized_s\": {:.6e},", step_opt.mean_s);
+            let _ = writeln!(base, "    \"history_gather_f32_s\": {:.6e},", hist_gather_f32.mean_s);
+            let _ =
+                writeln!(base, "    \"history_gather_bf16_s\": {:.6e},", hist_gather_bf16.mean_s);
+            let _ = writeln!(base, "    \"history_bytes_per_node\": {bpn_bf16}");
             base.push_str("  }\n}\n");
             let bpath = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_baseline.json");
             std::fs::write(bpath, &base).expect("write BENCH_baseline.json");

@@ -10,9 +10,12 @@
 //! Each kernel tiles over output row blocks ([`ROW_BLOCK`] rows per rayon
 //! task) and, for the N/N and T/N layouts, over k-panels ([`K_PANEL`]) so
 //! the `b`/`c` panel in flight stays cache-resident while it is reused
-//! across the block's rows. The innermost loops run through the
-//! [`SimdOps`] dispatch table (8-wide AVX2/FMA on x86_64, NEON on aarch64,
-//! scalar fallback): per output element the accumulation *order* is
+//! across the block's rows; within a block those rows are processed in
+//! register-blocked *pairs* (`SimdOps::axpy2` rank-1 updates: one panel-row
+//! load feeds two accumulator rows, halving panel traffic). The innermost
+//! loops run through the [`SimdOps`] dispatch table (16-wide AVX-512F or
+//! 8-wide AVX2/FMA on x86_64, NEON on aarch64, scalar fallback): per
+//! output element the accumulation *order* is
 //! identical to the naive kernel (`k` resp. `i` ascending), so results are
 //! deterministic and thread-count independent at every level. At the
 //! scalar level the N/N and T/N kernels are bit-identical to the
@@ -421,14 +424,39 @@ fn fill_bias(orows: &mut [f32], n: usize, bias: &[f32]) {
 }
 
 /// Accumulate `arows @ b` into `orows` (one row block), k-paneled so the
-/// active `b` panel is reused across the block's rows.
+/// active `b` panel is reused across the block's rows, and register-blocked
+/// across output-row *pairs*: each `b` panel row is loaded once per pair
+/// and rank-1-updates both accumulator rows (`SimdOps::axpy2`). Per output
+/// element the accumulation order is unchanged (`k` ascending) and `axpy2`
+/// is bitwise equal to two `axpy` calls at every SIMD level, so pairing
+/// never changes results; rows whose `a` coefficient is zero keep the
+/// skip-entirely behaviour of the unpaired kernel.
 fn nn_block(ops: &SimdOps, orows: &mut [f32], arows: &[f32], k: usize, b: &[f32], n: usize) {
     let rows = orows.len() / n;
     let axpy = ops.axpy;
+    let axpy2 = ops.axpy2;
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + K_PANEL).min(k);
-        for r in 0..rows {
+        let mut r = 0;
+        while r + 2 <= rows {
+            let (o0, rest) = orows[r * n..].split_at_mut(n);
+            let o1 = &mut rest[..n];
+            let a0row = &arows[r * k + k0..r * k + k1];
+            let a1row = &arows[(r + 1) * k + k0..(r + 1) * k + k1];
+            for (i, (&a0, &a1)) in a0row.iter().zip(a1row).enumerate() {
+                let brow = &b[(k0 + i) * n..(k0 + i + 1) * n];
+                if a0 != 0.0 && a1 != 0.0 {
+                    axpy2(o0, o1, brow, a0, a1);
+                } else if a0 != 0.0 {
+                    axpy(o0, brow, a0);
+                } else if a1 != 0.0 {
+                    axpy(o1, brow, a1);
+                }
+            }
+            r += 2;
+        }
+        if r < rows {
             let arow = &arows[r * k + k0..r * k + k1];
             let orow = &mut orows[r * n..(r + 1) * n];
             for (i, &av) in arow.iter().enumerate() {
@@ -517,7 +545,10 @@ fn matmul_tn_into_with(
     });
 }
 
-/// Accumulate rows `kk0..kk0 + orows.len()/n` of `a^T @ c` into `orows`.
+/// Accumulate rows `kk0..kk0 + orows.len()/n` of `a^T @ c` into `orows`,
+/// register-blocked across output-row pairs (one `crow` load feeds both
+/// accumulator rows via `SimdOps::axpy2`; `i` order per output element is
+/// unchanged, so results are identical to the unpaired kernel).
 #[allow(clippy::too_many_arguments)]
 fn tn_block(
     ops: &SimdOps,
@@ -531,10 +562,25 @@ fn tn_block(
 ) {
     let kb = orows.len() / n;
     let axpy = ops.axpy;
+    let axpy2 = ops.axpy2;
     for i in 0..m {
         let crow = &c[i * n..(i + 1) * n];
         let arow = &a[i * k + kk0..i * k + kk0 + kb];
-        for (r, &av) in arow.iter().enumerate() {
+        let mut r = 0;
+        while r + 2 <= kb {
+            let (a0, a1) = (arow[r], arow[r + 1]);
+            if a0 != 0.0 && a1 != 0.0 {
+                let (o0, rest) = orows[r * n..].split_at_mut(n);
+                axpy2(o0, &mut rest[..n], crow, a0, a1);
+            } else if a0 != 0.0 {
+                axpy(&mut orows[r * n..(r + 1) * n], crow, a0);
+            } else if a1 != 0.0 {
+                axpy(&mut orows[(r + 1) * n..(r + 2) * n], crow, a1);
+            }
+            r += 2;
+        }
+        if r < kb {
+            let av = arow[r];
             if av != 0.0 {
                 axpy(&mut orows[r * n..(r + 1) * n], crow, av);
             }
@@ -717,6 +763,30 @@ mod tests {
             let mut out = vec![0f32; 4];
             kern.matmul_tn_into(&mut out, &a, 4, 2, &b, 2);
             assert_eq!(out, reference::matmul_tn(&a, 4, 2, &b, 2), "{kern:?}");
+        }
+    }
+
+    #[test]
+    fn row_pair_blocking_matches_reference_on_odd_shapes() {
+        // Odd row counts exercise the unpaired remainder row; interleaved
+        // zero coefficients exercise every branch of the paired loop
+        // (both-nonzero, first-only, second-only, both-zero). Integer
+        // values keep the arithmetic exact at every SIMD level.
+        let m = 17;
+        let k = 9;
+        let n = 13;
+        let a: Vec<f32> = (0..m * k)
+            .map(|i| if i % 4 == 1 { 0.0 } else { (i % 7) as f32 - 3.0 })
+            .collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let c: Vec<f32> = (0..m * n).map(|i| ((i % 3) as f32 - 1.0) * (i % 2) as f32).collect();
+        for kern in [Kernels::blocked(), Kernels::blocked_scalar()] {
+            let mut out = vec![0f32; m * n];
+            kern.matmul_into(&mut out, &a, m, k, &b, n);
+            assert_eq!(out, reference::matmul(&a, m, k, &b, n), "{kern:?} nn");
+            let mut out = vec![0f32; k * n];
+            kern.matmul_tn_into(&mut out, &a, m, k, &c, n);
+            assert_eq!(out, reference::matmul_tn(&a, m, k, &c, n), "{kern:?} tn");
         }
     }
 

@@ -1,11 +1,14 @@
 //! Runtime-dispatched, SIMD-explicit elementwise primitives for the native
 //! backend's hot loops (GEMM microkernels, SpMM row loops, the fused
-//! bias/ReLU/residual epilogues, and the Eq. 9/12 convex combination).
+//! bias/ReLU/residual epilogues, the Eq. 9/12 convex combination, and the
+//! bf16 history-row decode).
 //!
-//! Three dispatch levels:
+//! Four dispatch levels:
 //!
-//!   * [`SimdLevel::Avx2Fma`] — 8-wide f32 `std::arch` AVX2 + FMA on
-//!     x86_64, selected at runtime via `is_x86_feature_detected!`;
+//!   * [`SimdLevel::Avx512`] — 16-wide f32 `std::arch` AVX-512F on x86_64,
+//!     selected at runtime via `is_x86_feature_detected!("avx512f")`;
+//!   * [`SimdLevel::Avx2Fma`] — 8-wide f32 AVX2 + FMA on x86_64 (also the
+//!     fallback when `avx512` is requested on hardware without it);
 //!   * [`SimdLevel::Neon`] — 8-wide (2 × 4-lane) NEON on aarch64;
 //!   * [`SimdLevel::Scalar`] — the portable scalar kernels, bit-identical
 //!     to the pre-SIMD blocked kernels. Always available; the property-test
@@ -20,17 +23,22 @@
 //! accumulating primitives computes `fma(a, x, acc)` with a single rounding
 //! (`f32::mul_add` in the tails), so results are **independent of vector
 //! width, tile boundaries, and slice alignment** — the serial and tiled
-//! SpMM paths stay bitwise equal to each other at any level. Relative to
-//! the scalar level, FMA removes one rounding per multiply-add (≤ 1 ulp per
-//! op); only `dot` additionally reassociates (multiple accumulators). Force
-//! the scalar level with `LMC_SIMD=scalar` to reproduce pre-SIMD bits
-//! exactly (see rust/README.md § Kernel dispatch).
+//! SpMM paths stay bitwise equal to each other at any level, and `axpy2`
+//! (the register-blocked row-pair rank-1 update) is bitwise equal to two
+//! `axpy` calls at every level. Relative to the scalar level, FMA removes
+//! one rounding per multiply-add (≤ 1 ulp per op); only `dot` additionally
+//! reassociates (multiple accumulators). `widen_bf16` is exact at every
+//! level (bf16 → f32 widening is a bit shift, never a rounding). Force the
+//! scalar level with `LMC_SIMD=scalar` to reproduce pre-SIMD bits exactly
+//! (see rust/README.md § Kernel dispatch).
 
 use std::sync::OnceLock;
 
 /// Which SIMD instruction family the dispatched primitives use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimdLevel {
+    /// 16-wide AVX-512F (x86_64, runtime-detected).
+    Avx512,
     /// 8-wide AVX2 + FMA (x86_64, runtime-detected).
     Avx2Fma,
     /// 2 × 4-lane NEON (aarch64).
@@ -42,6 +50,7 @@ pub enum SimdLevel {
 impl SimdLevel {
     pub fn name(&self) -> &'static str {
         match self {
+            SimdLevel::Avx512 => "avx512",
             SimdLevel::Avx2Fma => "avx2+fma",
             SimdLevel::Neon => "neon",
             SimdLevel::Scalar => "scalar",
@@ -49,46 +58,104 @@ impl SimdLevel {
     }
 }
 
-/// Parse the `LMC_SIMD` env knob. Only an explicit request for the scalar
-/// path is honored ("scalar" / "off" / "0"); anything else means "auto".
-pub fn parse_level(s: &str) -> Option<SimdLevel> {
-    match s.to_ascii_lowercase().as_str() {
-        "scalar" | "off" | "0" => Some(SimdLevel::Scalar),
-        _ => None,
+// Per-family runtime support checks, cfg-duplicated so non-matching
+// architectures compile them to a constant `false` (the avx512 bodies
+// themselves are cfg-gated off non-x86_64 entirely — see the CI
+// check-aarch64 lane).
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f") && avx2_supported()
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn avx512_supported() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_supported() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_supported() -> bool {
+    false
+}
+
+/// Whether the running hardware can execute `level`'s instruction family.
+pub fn supported(level: SimdLevel) -> bool {
+    match level {
+        SimdLevel::Avx512 => avx512_supported(),
+        SimdLevel::Avx2Fma => avx2_supported(),
+        SimdLevel::Neon => neon_supported(),
+        SimdLevel::Scalar => true,
     }
+}
+
+/// Parse + validate an `LMC_SIMD` request. `Ok(None)` means "auto"
+/// (hardware detection); `Ok(Some(level))` is an honored explicit request;
+/// `Err` carries a clear message for an unknown name or a level the running
+/// hardware cannot execute — an explicit request is never silently
+/// downgraded (the silent avx512 → avx2 fallback applies only to
+/// *hardware-detected* dispatch, see [`ops`]).
+pub fn requested_level(s: &str) -> Result<Option<SimdLevel>, String> {
+    let lvl = match s.to_ascii_lowercase().as_str() {
+        "" | "auto" => return Ok(None),
+        "scalar" | "off" | "0" => SimdLevel::Scalar,
+        "avx2" | "avx2+fma" => SimdLevel::Avx2Fma,
+        "avx512" => SimdLevel::Avx512,
+        "neon" => SimdLevel::Neon,
+        other => {
+            return Err(format!(
+                "unknown SIMD level '{other}' (expected auto|scalar|avx2|avx512|neon)"
+            ))
+        }
+    };
+    if !supported(lvl) {
+        return Err(format!(
+            "requested SIMD level '{}' is not supported on this hardware (best available: '{}')",
+            lvl.name(),
+            hw_level().name()
+        ));
+    }
+    Ok(Some(lvl))
 }
 
 /// Best level the running hardware supports (no env override).
 pub fn hw_level() -> SimdLevel {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
-        {
-            return SimdLevel::Avx2Fma;
-        }
+    if avx512_supported() {
+        return SimdLevel::Avx512;
     }
-    #[cfg(target_arch = "aarch64")]
-    {
-        if std::arch::is_aarch64_feature_detected!("neon") {
-            return SimdLevel::Neon;
-        }
+    if avx2_supported() {
+        return SimdLevel::Avx2Fma;
+    }
+    if neon_supported() {
+        return SimdLevel::Neon;
     }
     SimdLevel::Scalar
 }
 
 /// The process-wide dispatch level: hardware detection, overridden by
-/// `LMC_SIMD=scalar` (forces the portable scalar kernels — for debugging
-/// and for A/B timing outside the in-process bench handles). Cached after
-/// first use.
+/// `LMC_SIMD=scalar|avx2|avx512|neon` (an explicit request; panics with a
+/// clear message when the name is unknown or the hardware cannot execute
+/// the requested family, rather than silently running something else).
+/// Cached after first use.
 pub fn level() -> SimdLevel {
     static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
-    *LEVEL.get_or_init(|| {
-        if let Ok(v) = std::env::var("LMC_SIMD") {
-            if parse_level(&v) == Some(SimdLevel::Scalar) {
-                return SimdLevel::Scalar;
-            }
-        }
-        hw_level()
+    *LEVEL.get_or_init(|| match std::env::var("LMC_SIMD") {
+        Ok(v) => match requested_level(&v) {
+            Ok(Some(lvl)) => lvl,
+            Ok(None) => hw_level(),
+            Err(e) => panic!("LMC_SIMD: {e}"),
+        },
+        Err(_) => hw_level(),
     })
 }
 
@@ -99,6 +166,11 @@ pub struct SimdOps {
     pub level: SimdLevel,
     /// `dst[i] += a * src[i]` — the GEMM/SpMM accumulation inner loop.
     pub axpy: fn(&mut [f32], &[f32], f32),
+    /// `dst0[i] += a0 * src[i]; dst1[i] += a1 * src[i]` — the
+    /// register-blocked rank-1 update across an output-row pair: `src` is
+    /// loaded once per lane and fed to both accumulator rows. Bitwise equal
+    /// to two `axpy` calls at every level.
+    pub axpy2: fn(&mut [f32], &mut [f32], &[f32], f32, f32),
     /// `dst[i] = a * src[i]` — the GCNII `α·h0` residual prefill.
     pub scale: fn(&mut [f32], &[f32], f32),
     /// Dot product (reassociates across accumulators) — the N/T kernel.
@@ -110,18 +182,28 @@ pub struct SimdOps {
     pub mix_relu: fn(&mut [f32], &mut [f32], &[f32], f32),
     /// `out[i] = (1-b)·hist[i] + b·fresh[i]` — one Eq. 9/12 row.
     pub combine: fn(&mut [f32], &[f32], &[f32], f32),
+    /// `dst[i] = f32::from_bits((src[i] as u32) << 16)` — the bf16 → f32
+    /// history-row decode, fused into the halo gather so half-width rows
+    /// widen straight into the destination buffer (exact, no rounding).
+    pub widen_bf16: fn(&mut [f32], &[u16]),
 }
 
-/// The ops table for `level`, falling back to scalar when the requested
-/// level is not supported by the running hardware (so a deserialized or
-/// hard-coded level can never dispatch into unsupported instructions).
+/// The ops table for `level`. A level the running hardware cannot execute
+/// degrades along the ladder ([`SimdLevel::Avx512`] → [`SimdLevel::Avx2Fma`]
+/// → [`SimdLevel::Scalar`]) so a deserialized or hard-coded level can never
+/// dispatch into unsupported instructions.
 pub fn ops(level: SimdLevel) -> &'static SimdOps {
     #[cfg(target_arch = "x86_64")]
-    if level == SimdLevel::Avx2Fma && hw_level() == SimdLevel::Avx2Fma {
-        return &AVX2_OPS;
+    {
+        if level == SimdLevel::Avx512 && avx512_supported() {
+            return &AVX512_OPS;
+        }
+        if (level == SimdLevel::Avx512 || level == SimdLevel::Avx2Fma) && avx2_supported() {
+            return &AVX2_OPS;
+        }
     }
     #[cfg(target_arch = "aarch64")]
-    if level == SimdLevel::Neon && hw_level() == SimdLevel::Neon {
+    if level == SimdLevel::Neon && neon_supported() {
         return &NEON_OPS;
     }
     let _ = level;
@@ -140,11 +222,13 @@ pub fn ops_auto() -> &'static SimdOps {
 static SCALAR_OPS: SimdOps = SimdOps {
     level: SimdLevel::Scalar,
     axpy: scalar::axpy,
+    axpy2: scalar::axpy2,
     scale: scalar::scale,
     dot: scalar::dot,
     relu_copy: scalar::relu_copy,
     mix_relu: scalar::mix_relu,
     combine: scalar::combine,
+    widen_bf16: scalar::widen_bf16,
 };
 
 mod scalar {
@@ -152,6 +236,16 @@ mod scalar {
         let n = dst.len().min(src.len());
         for (d, &s) in dst[..n].iter_mut().zip(&src[..n]) {
             *d += a * s;
+        }
+    }
+
+    /// Row-pair rank-1 update; per element identical to two `axpy` passes
+    /// (same plain mul+add), so pairing never changes scalar-level bits.
+    pub fn axpy2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], a0: f32, a1: f32) {
+        let n = dst0.len().min(dst1.len()).min(src.len());
+        for ((d0, d1), &s) in dst0[..n].iter_mut().zip(dst1[..n].iter_mut()).zip(&src[..n]) {
+            *d0 += a0 * s;
+            *d1 += a1 * s;
         }
     }
 
@@ -207,6 +301,15 @@ mod scalar {
             *o = (1.0 - b) * h + b * f;
         }
     }
+
+    /// The bf16 decode oracle: widening is exact (bf16 is the upper half of
+    /// an f32's bits), so every SIMD level must match this **bitwise**.
+    pub fn widen_bf16(dst: &mut [f32], src: &[u16]) {
+        let n = dst.len().min(src.len());
+        for (d, &s) in dst[..n].iter_mut().zip(&src[..n]) {
+            *d = f32::from_bits((s as u32) << 16);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -217,19 +320,25 @@ mod scalar {
 static AVX2_OPS: SimdOps = SimdOps {
     level: SimdLevel::Avx2Fma,
     axpy: axpy_avx2,
+    axpy2: axpy2_avx2,
     scale: scale_avx2,
     dot: dot_avx2,
     relu_copy: relu_copy_avx2,
     mix_relu: mix_relu_avx2,
     combine: combine_avx2,
+    widen_bf16: widen_bf16_avx2,
 };
 
-// Safe shims. SAFETY (all six): these fn pointers are only installed in
+// Safe shims. SAFETY (all eight): these fn pointers are only installed in
 // `AVX2_OPS`, which `ops()` returns only after `is_x86_feature_detected!`
 // confirmed avx2+fma on the running CPU.
 #[cfg(target_arch = "x86_64")]
 fn axpy_avx2(dst: &mut [f32], src: &[f32], a: f32) {
     unsafe { x86::axpy(dst, src, a) }
+}
+#[cfg(target_arch = "x86_64")]
+fn axpy2_avx2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], a0: f32, a1: f32) {
+    unsafe { x86::axpy2(dst0, dst1, src, a0, a1) }
 }
 #[cfg(target_arch = "x86_64")]
 fn scale_avx2(dst: &mut [f32], src: &[f32], a: f32) {
@@ -250,6 +359,10 @@ fn mix_relu_avx2(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
 #[cfg(target_arch = "x86_64")]
 fn combine_avx2(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
     unsafe { x86::combine(out, hist, fresh, b) }
+}
+#[cfg(target_arch = "x86_64")]
+fn widen_bf16_avx2(dst: &mut [f32], src: &[u16]) {
+    unsafe { x86::widen_bf16(dst, src) }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -276,6 +389,33 @@ mod x86 {
         }
         while i < n {
             *dp.add(i) = a.mul_add(*sp.add(i), *dp.add(i));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], a0: f32, a1: f32) {
+        let n = dst0.len().min(dst1.len()).min(src.len());
+        let d0p = dst0.as_mut_ptr();
+        let d1p = dst1.as_mut_ptr();
+        let sp = src.as_ptr();
+        let a0v = _mm256_set1_ps(a0);
+        let a1v = _mm256_set1_ps(a1);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let s = _mm256_loadu_ps(sp.add(i));
+            let d0 = _mm256_loadu_ps(d0p.add(i));
+            let d1 = _mm256_loadu_ps(d1p.add(i));
+            _mm256_storeu_ps(d0p.add(i), _mm256_fmadd_ps(a0v, s, d0));
+            _mm256_storeu_ps(d1p.add(i), _mm256_fmadd_ps(a1v, s, d1));
+            i += 8;
+        }
+        while i < n {
+            let s = *sp.add(i);
+            *d0p.add(i) = a0.mul_add(s, *d0p.add(i));
+            *d1p.add(i) = a1.mul_add(s, *d1p.add(i));
             i += 1;
         }
     }
@@ -404,6 +544,299 @@ mod x86 {
             i += 1;
         }
     }
+
+    /// bf16 → f32 widen: zero-extend 8 u16 lanes to u32, shift into the
+    /// high half, bit-cast to f32 (exact — must match the scalar oracle
+    /// bitwise).
+    ///
+    /// # Safety
+    /// Requires avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn widen_bf16(dst: &mut [f32], src: &[u16]) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(sp.add(i) as *const __m128i);
+            let w = _mm256_slli_epi32(_mm256_cvtepu16_epi32(h), 16);
+            _mm256_storeu_ps(dp.add(i), _mm256_castsi256_ps(w));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = f32::from_bits((*sp.add(i) as u32) << 16);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512F (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+static AVX512_OPS: SimdOps = SimdOps {
+    level: SimdLevel::Avx512,
+    axpy: axpy_avx512,
+    axpy2: axpy2_avx512,
+    scale: scale_avx512,
+    dot: dot_avx512,
+    relu_copy: relu_copy_avx512,
+    mix_relu: mix_relu_avx512,
+    combine: combine_avx512,
+    widen_bf16: widen_bf16_avx512,
+};
+
+// Safe shims. SAFETY (all eight): these fn pointers are only installed in
+// `AVX512_OPS`, which `ops()` returns only after `is_x86_feature_detected!`
+// confirmed avx512f (plus avx2+fma for the sub-width loops) on the running
+// CPU.
+#[cfg(target_arch = "x86_64")]
+fn axpy_avx512(dst: &mut [f32], src: &[f32], a: f32) {
+    unsafe { x86_512::axpy(dst, src, a) }
+}
+#[cfg(target_arch = "x86_64")]
+fn axpy2_avx512(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], a0: f32, a1: f32) {
+    unsafe { x86_512::axpy2(dst0, dst1, src, a0, a1) }
+}
+#[cfg(target_arch = "x86_64")]
+fn scale_avx512(dst: &mut [f32], src: &[f32], a: f32) {
+    unsafe { x86_512::scale(dst, src, a) }
+}
+#[cfg(target_arch = "x86_64")]
+fn dot_avx512(x: &[f32], y: &[f32]) -> f32 {
+    unsafe { x86_512::dot(x, y) }
+}
+#[cfg(target_arch = "x86_64")]
+fn relu_copy_avx512(act: &mut [f32], z: &[f32]) {
+    unsafe { x86_512::relu_copy(act, z) }
+}
+#[cfg(target_arch = "x86_64")]
+fn mix_relu_avx512(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
+    unsafe { x86_512::mix_relu(z, act, s, gam) }
+}
+#[cfg(target_arch = "x86_64")]
+fn combine_avx512(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
+    unsafe { x86_512::combine(out, hist, fresh, b) }
+}
+#[cfg(target_arch = "x86_64")]
+fn widen_bf16_avx512(dst: &mut [f32], src: &[u16]) {
+    unsafe { x86_512::widen_bf16(dst, src) }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86_512 {
+    //! 16-wide AVX-512F bodies (stable `_mm512_*` intrinsics). Every `fn`
+    //! here requires avx512f (+ avx2+fma for the 8-wide sub-loops) at
+    //! runtime; they are reachable only through the `AVX512_OPS` table.
+    //! Same numerics contract as the avx2 bodies: single-rounded fma in
+    //! every lane and every scalar tail, so results are independent of
+    //! vector width.
+
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires avx512f + avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let av = _mm512_set1_ps(a);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let d = _mm512_loadu_ps(dp.add(i));
+            let s = _mm512_loadu_ps(sp.add(i));
+            _mm512_storeu_ps(dp.add(i), _mm512_fmadd_ps(av, s, d));
+            i += 16;
+        }
+        if i + 8 <= n {
+            let av8 = _mm256_set1_ps(a);
+            let d = _mm256_loadu_ps(dp.add(i));
+            let s = _mm256_loadu_ps(sp.add(i));
+            _mm256_storeu_ps(dp.add(i), _mm256_fmadd_ps(av8, s, d));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = a.mul_add(*sp.add(i), *dp.add(i));
+            i += 1;
+        }
+    }
+
+    /// Register-blocked rank-1 update across a row pair: one 16-wide load
+    /// of `src` feeds two fma accumulator rows, halving panel-row traffic.
+    ///
+    /// # Safety
+    /// Requires avx512f + avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn axpy2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], a0: f32, a1: f32) {
+        let n = dst0.len().min(dst1.len()).min(src.len());
+        let d0p = dst0.as_mut_ptr();
+        let d1p = dst1.as_mut_ptr();
+        let sp = src.as_ptr();
+        let a0v = _mm512_set1_ps(a0);
+        let a1v = _mm512_set1_ps(a1);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let s = _mm512_loadu_ps(sp.add(i));
+            let d0 = _mm512_loadu_ps(d0p.add(i));
+            let d1 = _mm512_loadu_ps(d1p.add(i));
+            _mm512_storeu_ps(d0p.add(i), _mm512_fmadd_ps(a0v, s, d0));
+            _mm512_storeu_ps(d1p.add(i), _mm512_fmadd_ps(a1v, s, d1));
+            i += 16;
+        }
+        while i < n {
+            let s = *sp.add(i);
+            *d0p.add(i) = a0.mul_add(s, *d0p.add(i));
+            *d1p.add(i) = a1.mul_add(s, *d1p.add(i));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx512f + avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn scale(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let av = _mm512_set1_ps(a);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            _mm512_storeu_ps(dp.add(i), _mm512_mul_ps(av, _mm512_loadu_ps(sp.add(i))));
+            i += 16;
+        }
+        while i < n {
+            *dp.add(i) = a * *sp.add(i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx512f + avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = _mm512_setzero_ps();
+        let mut acc1 = _mm512_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm512_fmadd_ps(_mm512_loadu_ps(xp.add(i)), _mm512_loadu_ps(yp.add(i)), acc0);
+            acc1 = _mm512_fmadd_ps(
+                _mm512_loadu_ps(xp.add(i + 16)),
+                _mm512_loadu_ps(yp.add(i + 16)),
+                acc1,
+            );
+            i += 32;
+        }
+        while i + 16 <= n {
+            acc0 = _mm512_fmadd_ps(_mm512_loadu_ps(xp.add(i)), _mm512_loadu_ps(yp.add(i)), acc0);
+            i += 16;
+        }
+        let mut total = _mm512_reduce_add_ps(_mm512_add_ps(acc0, acc1));
+        while i < n {
+            total = (*xp.add(i)).mul_add(*yp.add(i), total);
+            i += 1;
+        }
+        total
+    }
+
+    /// # Safety
+    /// Requires avx512f + avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn relu_copy(act: &mut [f32], z: &[f32]) {
+        let n = act.len().min(z.len());
+        let ap = act.as_mut_ptr();
+        let zp = z.as_ptr();
+        let zero = _mm512_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            _mm512_storeu_ps(ap.add(i), _mm512_max_ps(_mm512_loadu_ps(zp.add(i)), zero));
+            i += 16;
+        }
+        while i < n {
+            let v = *zp.add(i);
+            *ap.add(i) = if v > 0.0 { v } else { 0.0 };
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx512f + avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn mix_relu(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
+        let n = z.len().min(act.len()).min(s.len());
+        let zp = z.as_mut_ptr();
+        let ap = act.as_mut_ptr();
+        let sp = s.as_ptr();
+        let g = _mm512_set1_ps(gam);
+        let omg = _mm512_set1_ps(1.0 - gam);
+        let zero = _mm512_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let zv = _mm512_loadu_ps(zp.add(i));
+            let sv = _mm512_loadu_ps(sp.add(i));
+            let mixed = _mm512_fmadd_ps(g, zv, _mm512_mul_ps(omg, sv));
+            _mm512_storeu_ps(zp.add(i), mixed);
+            _mm512_storeu_ps(ap.add(i), _mm512_max_ps(mixed, zero));
+            i += 16;
+        }
+        while i < n {
+            let m = gam.mul_add(*zp.add(i), (1.0 - gam) * *sp.add(i));
+            *zp.add(i) = m;
+            *ap.add(i) = if m > 0.0 { m } else { 0.0 };
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx512f + avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn combine(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
+        let n = out.len().min(hist.len()).min(fresh.len());
+        let op = out.as_mut_ptr();
+        let hp = hist.as_ptr();
+        let fp = fresh.as_ptr();
+        let bv = _mm512_set1_ps(b);
+        let omb = _mm512_set1_ps(1.0 - b);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let hv = _mm512_loadu_ps(hp.add(i));
+            let fv = _mm512_loadu_ps(fp.add(i));
+            _mm512_storeu_ps(op.add(i), _mm512_fmadd_ps(bv, fv, _mm512_mul_ps(omb, hv)));
+            i += 16;
+        }
+        while i < n {
+            *op.add(i) = b.mul_add(*fp.add(i), (1.0 - b) * *hp.add(i));
+            i += 1;
+        }
+    }
+
+    /// bf16 → f32 widen, 16 lanes per iteration: zero-extend 16 u16 lanes
+    /// to u32 (`vpmovzxwd zmm, ymm`, avx512f), shift into the high half,
+    /// bit-cast to f32 (exact — must match the scalar oracle bitwise).
+    ///
+    /// # Safety
+    /// Requires avx512f + avx2 + fma (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "avx512f,avx2,fma")]
+    pub unsafe fn widen_bf16(dst: &mut [f32], src: &[u16]) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let h = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            let w = _mm512_slli_epi32(_mm512_cvtepu16_epi32(h), 16);
+            _mm512_storeu_ps(dp.add(i), _mm512_castsi512_ps(w));
+            i += 16;
+        }
+        while i < n {
+            *dp.add(i) = f32::from_bits((*sp.add(i) as u32) << 16);
+            i += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -414,18 +847,24 @@ mod x86 {
 static NEON_OPS: SimdOps = SimdOps {
     level: SimdLevel::Neon,
     axpy: axpy_neon,
+    axpy2: axpy2_neon,
     scale: scale_neon,
     dot: dot_neon,
     relu_copy: relu_copy_neon,
     mix_relu: mix_relu_neon,
     combine: combine_neon,
+    widen_bf16: widen_bf16_neon,
 };
 
-// Safe shims. SAFETY (all six): installed only in `NEON_OPS`, which `ops()`
-// returns only after `is_aarch64_feature_detected!("neon")`.
+// Safe shims. SAFETY (all eight): installed only in `NEON_OPS`, which
+// `ops()` returns only after `is_aarch64_feature_detected!("neon")`.
 #[cfg(target_arch = "aarch64")]
 fn axpy_neon(dst: &mut [f32], src: &[f32], a: f32) {
     unsafe { neon::axpy(dst, src, a) }
+}
+#[cfg(target_arch = "aarch64")]
+fn axpy2_neon(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], a0: f32, a1: f32) {
+    unsafe { neon::axpy2(dst0, dst1, src, a0, a1) }
 }
 #[cfg(target_arch = "aarch64")]
 fn scale_neon(dst: &mut [f32], src: &[f32], a: f32) {
@@ -446,6 +885,10 @@ fn mix_relu_neon(z: &mut [f32], act: &mut [f32], s: &[f32], gam: f32) {
 #[cfg(target_arch = "aarch64")]
 fn combine_neon(out: &mut [f32], hist: &[f32], fresh: &[f32], b: f32) {
     unsafe { neon::combine(out, hist, fresh, b) }
+}
+#[cfg(target_arch = "aarch64")]
+fn widen_bf16_neon(dst: &mut [f32], src: &[u16]) {
+    unsafe { neon::widen_bf16(dst, src) }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -480,6 +923,33 @@ mod neon {
         }
         while i < n {
             *dp.add(i) = a.mul_add(*sp.add(i), *dp.add(i));
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires neon (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy2(dst0: &mut [f32], dst1: &mut [f32], src: &[f32], a0: f32, a1: f32) {
+        let n = dst0.len().min(dst1.len()).min(src.len());
+        let d0p = dst0.as_mut_ptr();
+        let d1p = dst1.as_mut_ptr();
+        let sp = src.as_ptr();
+        let a0v = vdupq_n_f32(a0);
+        let a1v = vdupq_n_f32(a1);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let s = vld1q_f32(sp.add(i));
+            let d0 = vld1q_f32(d0p.add(i));
+            let d1 = vld1q_f32(d1p.add(i));
+            vst1q_f32(d0p.add(i), vfmaq_f32(d0, a0v, s));
+            vst1q_f32(d1p.add(i), vfmaq_f32(d1, a1v, s));
+            i += 4;
+        }
+        while i < n {
+            let s = *sp.add(i);
+            *d0p.add(i) = a0.mul_add(s, *d0p.add(i));
+            *d1p.add(i) = a1.mul_add(s, *d1p.add(i));
             i += 1;
         }
     }
@@ -600,6 +1070,32 @@ mod neon {
             i += 1;
         }
     }
+
+    /// bf16 → f32 widen: zero-extend 2 × 4 u16 lanes to u32, shift into
+    /// the high half, bit-cast to f32 (exact — must match the scalar
+    /// oracle bitwise).
+    ///
+    /// # Safety
+    /// Requires neon (guaranteed by the dispatch in `ops()`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn widen_bf16(dst: &mut [f32], src: &[u16]) {
+        let n = dst.len().min(src.len());
+        let dp = dst.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h = vld1q_u16(sp.add(i));
+            let lo = vshlq_n_u32::<16>(vmovl_u16(vget_low_u16(h)));
+            let hi = vshlq_n_u32::<16>(vmovl_u16(vget_high_u16(h)));
+            vst1q_f32(dp.add(i), vreinterpretq_f32_u32(lo));
+            vst1q_f32(dp.add(i + 4), vreinterpretq_f32_u32(hi));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) = f32::from_bits((*sp.add(i) as u32) << 16);
+            i += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -607,13 +1103,65 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_level_only_forces_scalar() {
-        assert_eq!(parse_level("scalar"), Some(SimdLevel::Scalar));
-        assert_eq!(parse_level("OFF"), Some(SimdLevel::Scalar));
-        assert_eq!(parse_level("0"), Some(SimdLevel::Scalar));
-        assert_eq!(parse_level("auto"), None);
-        assert_eq!(parse_level(""), None);
-        assert_eq!(parse_level("avx512"), None);
+    fn requested_level_honors_explicit_requests_or_errors_clearly() {
+        // auto sentinels
+        assert_eq!(requested_level(""), Ok(None));
+        assert_eq!(requested_level("auto"), Ok(None));
+        // scalar is always supported, under every historical alias
+        assert_eq!(requested_level("scalar"), Ok(Some(SimdLevel::Scalar)));
+        assert_eq!(requested_level("OFF"), Ok(Some(SimdLevel::Scalar)));
+        assert_eq!(requested_level("0"), Ok(Some(SimdLevel::Scalar)));
+        // unknown names error with the accepted vocabulary
+        let err = requested_level("avx1024").unwrap_err();
+        assert!(err.contains("avx1024") && err.contains("avx512"), "{err}");
+        // explicit avx2/avx512/neon requests: honored exactly when the
+        // hardware supports them, a clear error otherwise — never a silent
+        // downgrade
+        for (name, lvl) in [
+            ("avx2", SimdLevel::Avx2Fma),
+            ("avx2+fma", SimdLevel::Avx2Fma),
+            ("AVX512", SimdLevel::Avx512),
+            ("neon", SimdLevel::Neon),
+        ] {
+            match requested_level(name) {
+                Ok(got) => {
+                    assert!(supported(lvl), "honored '{name}' without hardware support");
+                    assert_eq!(got, Some(lvl));
+                }
+                Err(e) => {
+                    assert!(!supported(lvl), "rejected supported level '{name}': {e}");
+                    assert!(e.contains(lvl.name()), "{e}");
+                    assert!(e.contains(hw_level().name()), "{e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hw_level_is_supported_and_tops_the_ladder() {
+        let hw = hw_level();
+        assert!(supported(hw));
+        // hw_level never under-reports: if avx512 is supported it is picked
+        if supported(SimdLevel::Avx512) {
+            assert_eq!(hw, SimdLevel::Avx512);
+        } else if supported(SimdLevel::Avx2Fma) {
+            assert_eq!(hw, SimdLevel::Avx2Fma);
+        }
+    }
+
+    #[test]
+    fn ops_degrades_unsupported_levels_along_the_ladder() {
+        assert_eq!(ops(SimdLevel::Scalar).level, SimdLevel::Scalar);
+        // an avx512 request on avx2-only hardware runs the avx2 table; on
+        // non-x86 it runs scalar — never unsupported instructions
+        let lvl = ops(SimdLevel::Avx512).level;
+        if supported(SimdLevel::Avx512) {
+            assert_eq!(lvl, SimdLevel::Avx512);
+        } else if supported(SimdLevel::Avx2Fma) {
+            assert_eq!(lvl, SimdLevel::Avx2Fma);
+        } else {
+            assert_eq!(lvl, SimdLevel::Scalar);
+        }
     }
 
     #[test]
@@ -629,8 +1177,8 @@ mod tests {
     fn active_level_exact_on_integer_values() {
         let active = ops_auto();
         let scalar = ops(SimdLevel::Scalar);
-        let src: Vec<f32> = (0..21).map(|i| (i % 7) as f32 - 3.0).collect();
-        let base: Vec<f32> = (0..21).map(|i| (i % 5) as f32).collect();
+        let src: Vec<f32> = (0..37).map(|i| (i % 7) as f32 - 3.0).collect();
+        let base: Vec<f32> = (0..37).map(|i| (i % 5) as f32).collect();
 
         let mut a1 = base.clone();
         (active.axpy)(&mut a1, &src, 2.0);
@@ -638,17 +1186,54 @@ mod tests {
         (scalar.axpy)(&mut a2, &src, 2.0);
         assert_eq!(a1, a2);
 
-        let mut s1 = vec![0f32; 21];
+        let mut s1 = vec![0f32; 37];
         (active.scale)(&mut s1, &src, -1.5);
-        let mut s2 = vec![0f32; 21];
+        let mut s2 = vec![0f32; 37];
         (scalar.scale)(&mut s2, &src, -1.5);
         assert_eq!(s1, s2);
 
         assert_eq!((active.dot)(&src, &base), (scalar.dot)(&src, &base));
 
-        let mut r1 = vec![7f32; 21];
+        let mut r1 = vec![7f32; 37];
         (active.relu_copy)(&mut r1, &src);
         assert!(r1.iter().zip(&src).all(|(&r, &z)| r == if z > 0.0 { z } else { 0.0 }));
+    }
+
+    /// `axpy2` must be bitwise equal to two `axpy` calls at every level —
+    /// that is the contract that lets the GEMM pair rows without changing
+    /// results (odd length exercises the scalar tails).
+    #[test]
+    fn axpy2_is_bitwise_two_axpys() {
+        for lvl in [SimdLevel::Avx512, SimdLevel::Avx2Fma, SimdLevel::Neon, SimdLevel::Scalar] {
+            let t = ops(lvl);
+            let src: Vec<f32> = (0..37).map(|i| (i as f32) * 0.17 - 3.0).collect();
+            let base0: Vec<f32> = (0..37).map(|i| (i as f32) * 0.05 - 1.0).collect();
+            let base1: Vec<f32> = (0..37).map(|i| (i as f32) * -0.03 + 0.5).collect();
+            let (mut p0, mut p1) = (base0.clone(), base1.clone());
+            (t.axpy2)(&mut p0, &mut p1, &src, 0.7, -1.3);
+            let (mut q0, mut q1) = (base0, base1);
+            (t.axpy)(&mut q0, &src, 0.7);
+            (t.axpy)(&mut q1, &src, -1.3);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&p0), bits(&q0), "level {}", t.level.name());
+            assert_eq!(bits(&p1), bits(&q1), "level {}", t.level.name());
+        }
+    }
+
+    /// bf16 widening is exact, so every level must match the scalar oracle
+    /// bitwise — including NaN payloads, infinities, and signed zeros.
+    #[test]
+    fn widen_bf16_matches_scalar_bitwise_at_every_level() {
+        let mut src: Vec<u16> = (0..997u32).map(|i| (i.wrapping_mul(2654435761) >> 16) as u16).collect();
+        src.extend_from_slice(&[0x0000, 0x8000, 0x7F80, 0xFF80, 0x7FC1, 0x0001, 0x3F80]);
+        for lvl in [SimdLevel::Avx512, SimdLevel::Avx2Fma, SimdLevel::Neon, SimdLevel::Scalar] {
+            let t = ops(lvl);
+            let mut got = vec![0f32; src.len()];
+            (t.widen_bf16)(&mut got, &src);
+            for (g, &s) in got.iter().zip(&src) {
+                assert_eq!(g.to_bits(), (s as u32) << 16, "level {}", t.level.name());
+            }
+        }
     }
 
     #[test]
@@ -675,5 +1260,8 @@ mod tests {
         assert_eq!(&dst[..3], &[2.0, 2.0, 2.0]);
         assert!(dst[3..].iter().all(|&v| v == 1.0));
         assert_eq!((ops.dot)(&[1.0, 2.0], &[3.0, 4.0, 100.0]), 11.0);
+        let mut short = vec![0f32; 3];
+        (ops.widen_bf16)(&mut short, &[0x3F80u16; 8]);
+        assert_eq!(short, vec![1.0, 1.0, 1.0]);
     }
 }

@@ -8,6 +8,7 @@ use crate::backend::Backend;
 use crate::coordinator::methods::{BetaConfig, Method};
 use crate::coordinator::sharded::SyncMode;
 use crate::graph::DatasetId;
+use crate::history::HistDtype;
 use crate::sampler::{BatcherMode, BetaScore};
 use crate::serve::ServeMode;
 use crate::util::cli::Args;
@@ -65,6 +66,10 @@ pub struct RunConfig {
     pub serve_max_wait_ms: u64,
     /// Eq. 9 β strength on the cached serve path (0 = pure history).
     pub serve_beta: f32,
+    /// At-rest element type of the history store (`Hbar`/`Vbar` rows):
+    /// "f32" (bit-identical default), "bf16" (half the bytes/node, ≤ 2⁻⁸
+    /// relative quantization error), or "f16". Accumulation stays f32.
+    pub history_dtype: HistDtype,
     /// Ablation (Fig. 4): run LMC with only the forward compensation C_f by
     /// forcing the backward compensation off.
     pub force_bwd_off: bool,
@@ -99,6 +104,7 @@ impl Default for RunConfig {
             serve_max_batch: 256,
             serve_max_wait_ms: 4,
             serve_beta: 0.0,
+            history_dtype: HistDtype::F32,
             force_bwd_off: false,
             verbose: false,
         }
@@ -205,6 +211,9 @@ impl RunConfig {
         if let Some(v) = get("serve_beta").and_then(|v| v.as_f64()) {
             self.serve_beta = v as f32;
         }
+        if let Some(v) = get("history_dtype").and_then(|v| v.as_str()) {
+            self.history_dtype = HistDtype::parse(v).map_err(|e| anyhow!(e))?;
+        }
         Ok(())
     }
 
@@ -278,6 +287,9 @@ impl RunConfig {
         }
         if let Some(v) = args.opt_f64("serve-beta") {
             self.serve_beta = v as f32;
+        }
+        if let Some(v) = args.opt("history-dtype") {
+            self.history_dtype = HistDtype::parse(v).map_err(|e| anyhow!(e))?;
         }
         if args.has_flag("fixed-batches") {
             self.batcher_mode = BatcherMode::Fixed;
@@ -389,6 +401,29 @@ mod tests {
         assert_eq!(cfg.serve_max_wait_ms, 2);
         assert!((cfg.serve_beta - 0.1).abs() < 1e-6);
         assert!(ServeMode::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn history_dtype_knob_parses() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.history_dtype, HistDtype::F32); // bit-identical default
+        let doc = toml_parse("history_dtype = \"bf16\"\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.history_dtype, HistDtype::Bf16);
+        // train.-scoped key works like every other knob
+        let doc = toml_parse("[train]\nhistory_dtype = \"f16\"\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.history_dtype, HistDtype::F16);
+        let args = Args::parse(
+            ["train", "--history-dtype", "f32"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert_eq!(cfg.history_dtype, HistDtype::F32);
+        // bad names error instead of silently defaulting
+        let doc = toml_parse("history_dtype = \"int8\"\n").unwrap();
+        let err = cfg.apply_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("int8") && err.contains("bf16"), "{err}");
+        assert!(HistDtype::parse("f64").is_err());
     }
 
     #[test]

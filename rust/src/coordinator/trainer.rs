@@ -124,7 +124,7 @@ impl Trainer {
             AdamConfig { lr: cfg.lr, weight_decay: cfg.weight_decay, ..Default::default() },
         );
         let hist_dims: Vec<usize> = arch.dims[1..arch.l].to_vec();
-        let history = History::new(graph.n(), &hist_dims);
+        let history = History::with_dtype(graph.n(), &hist_dims, cfg.history_dtype);
         let batcher = Batcher::new(
             clusters.clone(),
             cfg.clusters_per_batch,

@@ -10,18 +10,310 @@
 //! As in GAS, the store lives in host memory ("RAM or hard drive storage"),
 //! so its footprint does not count against the simulated accelerator memory
 //! (see coordinator::memory).
+//!
+//! ## Quantized storage ([`HistDtype`])
+//!
+//! The history is the dominant O(n·L·d) memory term and the halo gather is
+//! bandwidth-bound on it, so rows can optionally be stored in bf16 or f16
+//! (`history_dtype` config knob). The paper's convergence argument already
+//! tolerates bounded *staleness* error in `Hbar`/`Vbar` (the Eq. 9/12
+//! combination bounds); a ≤ 2⁻⁸-relative *quantization* error per element
+//! is strictly smaller than typical inter-iteration drift, so it slots into
+//! the same bound (see rust/README.md § Memory & precision).
+//!
+//! Every read/write goes through the private [`HistStore`] seam — the train
+//! step's halo gathers, serve's cached-mode reads and `refresh_history`
+//! bulk fill, and the sharded boundary exchange (`export_rows` /
+//! `import_rows`) all encode/decode in one place:
+//!
+//!   * reads decode **directly into the caller's f32 destination** (the
+//!     dequant-fused gather: bf16 rows widen via the dispatched SIMD
+//!     [`simd::SimdOps::widen_bf16`], exact) — half-width rows never
+//!     round-trip through a full-width scratch buffer;
+//!   * writes encode with round-to-nearest-even; all arithmetic between a
+//!     read and a write (momentum pushes included) runs in f32;
+//!   * `HistDtype::F32` keeps the exact pre-quantization code path
+//!     (`gather_rows`/`copy_from_slice`), so f32 mode stays bit-identical
+//!     to the unquantized store.
 
-use crate::sampler::{gather_rows, gather_rows_into};
+use crate::backend::simd;
+use crate::sampler::gather_rows_into;
+
+/// Element type of the history store rows. Accumulation is always f32;
+/// this only selects the at-rest encoding.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HistDtype {
+    /// 4 bytes/elem, bit-identical to the unquantized store (default).
+    #[default]
+    F32,
+    /// 2 bytes/elem, f32's upper half: ~3 significant decimal digits,
+    /// full f32 exponent range. Relative error ≤ 2⁻⁸ per element.
+    Bf16,
+    /// 2 bytes/elem IEEE half: ~3.3 digits but range capped at ±65504 —
+    /// only safe when activations are known-bounded. Secondary option.
+    F16,
+}
+
+impl HistDtype {
+    pub fn parse(s: &str) -> Result<HistDtype, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(HistDtype::F32),
+            "bf16" | "bfloat16" => Ok(HistDtype::Bf16),
+            "f16" | "fp16" | "float16" | "half" => Ok(HistDtype::F16),
+            other => Err(format!("unknown history dtype '{other}' (expected f32|bf16|f16)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HistDtype::F32 => "f32",
+            HistDtype::Bf16 => "bf16",
+            HistDtype::F16 => "f16",
+        }
+    }
+
+    pub fn bytes_per_elem(&self) -> usize {
+        match self {
+            HistDtype::F32 => 4,
+            HistDtype::Bf16 | HistDtype::F16 => 2,
+        }
+    }
+}
+
+/// bf16 encode (round-to-nearest-even on the discarded 16 mantissa bits).
+/// NaN payloads are squashed onto a canonical quiet NaN so rounding can
+/// never turn a NaN into an infinity.
+#[inline]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bf16 decode — exact (bf16 is the upper half of an f32's bits). The
+/// scalar oracle for the SIMD `widen_bf16` primitive.
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// IEEE binary16 encode (round-to-nearest-even; overflow → ±inf, underflow
+/// through the subnormal range to ±0).
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / NaN (force a mantissa bit so NaN stays NaN)
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00;
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign;
+        }
+        // subnormal: significand = (implicit-1 mantissa) >> (14 - e), RNE
+        let full = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && half & 1 != 0) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    // normal: drop 13 mantissa bits with RNE (a carry naturally overflows
+    // into the exponent field, including 0x7BFF + 1 = inf)
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && half & 1 != 0) { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// IEEE binary16 decode — exact (every half value is representable in f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // subnormal: man × 2⁻²⁴ (exact in f32)
+        let v = man as f32 * (1.0 / 16_777_216.0);
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// At-rest row storage behind one encode/decode seam. The `F32` variant is
+/// the original store verbatim; the half variants hold raw 16-bit words.
+#[derive(Clone, Debug)]
+enum HistStore {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    F16(Vec<u16>),
+}
 
 #[derive(Clone, Debug)]
 pub struct LayerStore {
     pub d: usize,
-    pub data: Vec<f32>, // [n, d] row-major
+    store: HistStore, // [n, d] row-major
 }
 
 impl LayerStore {
-    fn new(n: usize, d: usize) -> Self {
-        LayerStore { d, data: vec![0f32; n * d] }
+    fn new(n: usize, d: usize, dtype: HistDtype) -> Self {
+        let store = match dtype {
+            HistDtype::F32 => HistStore::F32(vec![0f32; n * d]),
+            HistDtype::Bf16 => HistStore::Bf16(vec![0u16; n * d]),
+            HistDtype::F16 => HistStore::F16(vec![0u16; n * d]),
+        };
+        LayerStore { d, store }
+    }
+
+    pub fn dtype(&self) -> HistDtype {
+        match self.store {
+            HistStore::F32(_) => HistDtype::F32,
+            HistStore::Bf16(_) => HistDtype::Bf16,
+            HistStore::F16(_) => HistDtype::F16,
+        }
+    }
+
+    /// Decode rows `idx` into the head of `out` (the dequant-fused gather):
+    /// row `i` of `out` receives the decoded row `idx[i]`; rows past
+    /// `idx.len()` are the caller's padding and stay untouched.
+    fn gather_into(&self, idx: &[u32], out: &mut [f32]) {
+        let d = self.d;
+        match &self.store {
+            HistStore::F32(data) => gather_rows_into(data, d, idx, out),
+            HistStore::Bf16(data) => {
+                let widen = simd::ops_auto().widen_bf16;
+                for (i, &u) in idx.iter().enumerate() {
+                    let u = u as usize;
+                    widen(&mut out[i * d..(i + 1) * d], &data[u * d..(u + 1) * d]);
+                }
+            }
+            HistStore::F16(data) => {
+                for (i, &u) in idx.iter().enumerate() {
+                    let u = u as usize;
+                    let dst = &mut out[i * d..(i + 1) * d];
+                    for (o, &h) in dst.iter_mut().zip(&data[u * d..(u + 1) * d]) {
+                        *o = f16_to_f32(h);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Encode the first `idx.len()` rows of `src` into rows `idx`.
+    fn scatter(&mut self, idx: &[u32], src: &[f32]) {
+        let d = self.d;
+        debug_assert!(src.len() >= idx.len() * d, "scatter src too small");
+        match &mut self.store {
+            HistStore::F32(data) => {
+                for (i, &u) in idx.iter().enumerate() {
+                    let u = u as usize;
+                    data[u * d..(u + 1) * d].copy_from_slice(&src[i * d..(i + 1) * d]);
+                }
+            }
+            HistStore::Bf16(data) => {
+                for (i, &u) in idx.iter().enumerate() {
+                    let u = u as usize;
+                    let row = &mut data[u * d..(u + 1) * d];
+                    for (r, &x) in row.iter_mut().zip(&src[i * d..(i + 1) * d]) {
+                        *r = bf16_from_f32(x);
+                    }
+                }
+            }
+            HistStore::F16(data) => {
+                for (i, &u) in idx.iter().enumerate() {
+                    let u = u as usize;
+                    let row = &mut data[u * d..(u + 1) * d];
+                    for (r, &x) in row.iter_mut().zip(&src[i * d..(i + 1) * d]) {
+                        *r = f16_from_f32(x);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bulk-encode a dense `[n, d]` buffer into the whole store — serve's
+    /// `refresh_history` write path, routed through the same seam.
+    fn fill(&mut self, src: &[f32]) {
+        match &mut self.store {
+            HistStore::F32(data) => data.copy_from_slice(src),
+            HistStore::Bf16(data) => {
+                debug_assert_eq!(data.len(), src.len());
+                for (r, &x) in data.iter_mut().zip(src) {
+                    *r = bf16_from_f32(x);
+                }
+            }
+            HistStore::F16(data) => {
+                debug_assert_eq!(data.len(), src.len());
+                for (r, &x) in data.iter_mut().zip(src) {
+                    *r = f16_from_f32(x);
+                }
+            }
+        }
+    }
+
+    /// FM momentum push rows: `row <- (1-m)·row + m·fresh`, accumulated in
+    /// f32 (half rows decode, mix, re-encode — one rounding per write).
+    fn momentum_rows(&mut self, idx: &[u32], fresh: &[f32], m: f32) {
+        let d = self.d;
+        match &mut self.store {
+            HistStore::F32(data) => {
+                for (i, &u) in idx.iter().enumerate() {
+                    let u = u as usize;
+                    let row = &mut data[u * d..(u + 1) * d];
+                    for (r, &x) in row.iter_mut().zip(&fresh[i * d..(i + 1) * d]) {
+                        *r = (1.0 - m) * *r + m * x;
+                    }
+                }
+            }
+            HistStore::Bf16(data) => {
+                let widen = simd::ops_auto().widen_bf16;
+                let mut tmp = vec![0f32; d];
+                for (i, &u) in idx.iter().enumerate() {
+                    let u = u as usize;
+                    widen(&mut tmp, &data[u * d..(u + 1) * d]);
+                    for (t, &x) in tmp.iter_mut().zip(&fresh[i * d..(i + 1) * d]) {
+                        *t = (1.0 - m) * *t + m * x;
+                    }
+                    let row = &mut data[u * d..(u + 1) * d];
+                    for (r, &t) in row.iter_mut().zip(&tmp) {
+                        *r = bf16_from_f32(t);
+                    }
+                }
+            }
+            HistStore::F16(data) => {
+                for (i, &u) in idx.iter().enumerate() {
+                    let u = u as usize;
+                    let row = &mut data[u * d..(u + 1) * d];
+                    for (r, &x) in row.iter_mut().zip(&fresh[i * d..(i + 1) * d]) {
+                        let t = (1.0 - m) * f16_to_f32(*r) + m * x;
+                        *r = f16_from_f32(t);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Host bytes held by this store.
+    fn bytes(&self) -> usize {
+        match &self.store {
+            HistStore::F32(data) => std::mem::size_of_val(data.as_slice()),
+            HistStore::Bf16(data) | HistStore::F16(data) => {
+                std::mem::size_of_val(data.as_slice())
+            }
+        }
     }
 }
 
@@ -35,16 +327,24 @@ pub struct History {
     /// Iteration at which each node's histories were last written.
     pub last_update: Vec<u64>,
     pub iter: u64,
+    dtype: HistDtype,
 }
 
 impl History {
+    /// f32 store — bit-identical to the pre-quantization `History`.
     pub fn new(n: usize, layer_dims: &[usize]) -> History {
+        History::with_dtype(n, layer_dims, HistDtype::F32)
+    }
+
+    /// Store with an explicit at-rest dtype (`history_dtype` config knob).
+    pub fn with_dtype(n: usize, layer_dims: &[usize], dtype: HistDtype) -> History {
         History {
             n,
-            h: layer_dims.iter().map(|&d| LayerStore::new(n, d)).collect(),
-            v: layer_dims.iter().map(|&d| LayerStore::new(n, d)).collect(),
+            h: layer_dims.iter().map(|&d| LayerStore::new(n, d, dtype)).collect(),
+            v: layer_dims.iter().map(|&d| LayerStore::new(n, d, dtype)).collect(),
             last_update: vec![0; n],
             iter: 0,
+            dtype,
         }
     }
 
@@ -52,43 +352,59 @@ impl History {
         self.h.len()
     }
 
+    pub fn dtype(&self) -> HistDtype {
+        self.dtype
+    }
+
     /// Gather halo rows of layer `l` (1-based) into a padded [rows, d] buffer.
     pub fn gather_h(&self, l: usize, idx: &[u32], rows: usize) -> Vec<f32> {
         let s = &self.h[l - 1];
-        gather_rows(&s.data, s.d, idx, rows)
+        let mut out = vec![0f32; rows * s.d];
+        s.gather_into(idx, &mut out);
+        out
     }
 
     pub fn gather_v(&self, l: usize, idx: &[u32], rows: usize) -> Vec<f32> {
         let s = &self.v[l - 1];
-        gather_rows(&s.data, s.d, idx, rows)
+        let mut out = vec![0f32; rows * s.d];
+        s.gather_into(idx, &mut out);
+        out
     }
 
     /// [`History::gather_h`] into a caller-provided (pre-zeroed) buffer —
     /// the workspace-reuse path: no allocation, rows past `idx.len()` are
-    /// the caller's padding.
+    /// the caller's padding. Half-width rows decode directly into `out`
+    /// (no full-width scratch round-trip).
     pub fn gather_h_into(&self, l: usize, idx: &[u32], out: &mut [f32]) {
-        let s = &self.h[l - 1];
-        gather_rows_into(&s.data, s.d, idx, out);
+        self.h[l - 1].gather_into(idx, out);
     }
 
     pub fn gather_v_into(&self, l: usize, idx: &[u32], out: &mut [f32]) {
-        let s = &self.v[l - 1];
-        gather_rows_into(&s.data, s.d, idx, out);
+        self.v[l - 1].gather_into(idx, out);
     }
 
-    /// Scatter the first `idx.len()` rows of `src` (padded buffer) into
-    /// layer `l`'s H store.
+    /// Scatter (encode) the first `idx.len()` rows of `src` (padded buffer)
+    /// into layer `l`'s H store.
     pub fn scatter_h(&mut self, l: usize, idx: &[u32], src: &[f32]) {
-        scatter(&mut self.h[l - 1], idx, src);
+        self.h[l - 1].scatter(idx, src);
     }
 
     pub fn scatter_v(&mut self, l: usize, idx: &[u32], src: &[f32]) {
-        scatter(&mut self.v[l - 1], idx, src);
+        self.v[l - 1].scatter(idx, src);
     }
 
-    /// Pack layer-`l` H and V rows `idx` into dense `[idx.len(), d]`
+    /// Bulk-encode a dense `[n, d]` buffer into layer `l`'s H store —
+    /// serve's `refresh_history` write path (full-graph forward output).
+    pub fn fill_h(&mut self, l: usize, src: &[f32]) {
+        self.h[l - 1].fill(src);
+    }
+
+    /// Pack layer-`l` H and V rows `idx` into dense `[idx.len(), d]` f32
     /// buffers — the send side of the cross-shard boundary exchange (a
-    /// shard exports the rows other shards see as halo).
+    /// shard exports the rows other shards see as halo). Rows are exported
+    /// *decoded*, so shards agree on boundary values whatever the at-rest
+    /// dtype, and re-encoding an exported row is lossless (the values are
+    /// already on the dtype's grid).
     pub fn export_rows(&self, l: usize, idx: &[u32]) -> (Vec<f32>, Vec<f32>) {
         (self.gather_h(l, idx, idx.len()), self.gather_v(l, idx, idx.len()))
     }
@@ -108,15 +424,7 @@ impl History {
 
     /// FM momentum push: hist <- (1-m) * hist + m * fresh for halo rows.
     pub fn momentum_h(&mut self, l: usize, idx: &[u32], fresh: &[f32], m: f32) {
-        let store = &mut self.h[l - 1];
-        let d = store.d;
-        for (i, &u) in idx.iter().enumerate() {
-            let row = &mut store.data[u as usize * d..(u as usize + 1) * d];
-            let f = &fresh[i * d..(i + 1) * d];
-            for (r, &x) in row.iter_mut().zip(f) {
-                *r = (1.0 - m) * *r + m * x;
-            }
-        }
+        self.h[l - 1].momentum_rows(idx, fresh, m);
     }
 
     /// Mark in-batch nodes updated at the current iteration, then advance.
@@ -138,20 +446,17 @@ impl History {
 
     /// Total host bytes held by the store.
     pub fn bytes(&self) -> usize {
+        self.h.iter().chain(self.v.iter()).map(|s| s.bytes()).sum()
+    }
+
+    /// At-rest bytes per node: `2 · Σ_l d_l · sizeof(dtype)` (H and V
+    /// stores) — the capacity-per-machine number the perf gate tracks.
+    pub fn bytes_per_node(&self) -> usize {
         self.h
             .iter()
             .chain(self.v.iter())
-            .map(|s| s.data.len() * std::mem::size_of::<f32>())
+            .map(|s| s.d * s.dtype().bytes_per_elem())
             .sum()
-    }
-}
-
-fn scatter(store: &mut LayerStore, idx: &[u32], src: &[f32]) {
-    let d = store.d;
-    debug_assert!(src.len() >= idx.len() * d, "scatter src too small");
-    for (i, &u) in idx.iter().enumerate() {
-        store.data[u as usize * d..(u as usize + 1) * d]
-            .copy_from_slice(&src[i * d..(i + 1) * d]);
     }
 }
 
@@ -171,6 +476,70 @@ mod tests {
         // untouched rows stay zero
         let other = h.gather_h(1, &[0, 1], 2);
         assert!(other.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn half_stores_roundtrip_exact_on_grid_values() {
+        // small integers are exactly representable in bf16 and f16, so the
+        // quantized stores must round-trip them bit-for-bit
+        for dtype in [HistDtype::Bf16, HistDtype::F16] {
+            let mut h = History::with_dtype(10, &[3, 4], dtype);
+            assert_eq!(h.dtype(), dtype);
+            let idx = [2u32, 5, 7];
+            let src: Vec<f32> = (0..12).map(|x| x as f32).collect();
+            h.scatter_h(1, &idx, &src);
+            let back = h.gather_h(1, &idx, 5);
+            assert_eq!(&back[..9], &src[..9], "{}", dtype.name());
+            assert!(back[9..].iter().all(|&x| x == 0.0));
+            // gather_into leaves padding rows untouched
+            let mut out = vec![7f32; 4 * 3];
+            h.gather_h_into(1, &idx, &mut out);
+            assert_eq!(&out[..9], &src[..9]);
+            assert!(out[9..].iter().all(|&x| x == 7.0));
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_is_bounded() {
+        // RNE to 8 significand bits: relative error ≤ 2⁻⁸ per element
+        // (half-ULP bound; the proptest in tests/ sweeps this broadly)
+        for &x in &[1.0f32, -1.0, 3.14159, 1e-3, -2.7e4, 6.55e4, 1e-30, -1e30] {
+            let back = bf16_to_f32(bf16_from_f32(x));
+            assert!(
+                (back - x).abs() <= x.abs() / 256.0,
+                "bf16 roundtrip of {x} gave {back}"
+            );
+        }
+        // specials survive
+        assert!(bf16_to_f32(bf16_from_f32(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(bf16_from_f32(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_from_f32(0.0), 0);
+        assert_eq!(bf16_from_f32(-0.0), 0x8000);
+    }
+
+    #[test]
+    fn f16_roundtrip_matches_ieee_half() {
+        // exactly-representable halves round-trip bitwise
+        for &x in &[0.0f32, -0.0, 1.0, -2.0, 0.5, 65504.0, 6.103515625e-5] {
+            assert_eq!(f16_to_f32(f16_from_f32(x)), x);
+        }
+        // known encodings
+        assert_eq!(f16_from_f32(1.0), 0x3C00);
+        assert_eq!(f16_from_f32(-2.0), 0xC000);
+        assert_eq!(f16_from_f32(65504.0), 0x7BFF);
+        // overflow → inf; tiny → zero; subnormals exact
+        assert_eq!(f16_from_f32(1e6), 0x7C00);
+        assert_eq!(f16_from_f32(1e-10), 0);
+        let sub = f16_to_f32(0x0001);
+        assert_eq!(sub, 1.0 / 16_777_216.0);
+        assert_eq!(f16_from_f32(sub), 0x0001);
+        // RNE at 11 significand bits: relative error ≤ 2⁻¹¹ in range
+        for &x in &[3.14159f32, 0.1, -123.456, 999.9] {
+            let back = f16_to_f32(f16_from_f32(x));
+            assert!((back - x).abs() <= x.abs() / 2048.0, "f16 roundtrip of {x} gave {back}");
+        }
+        assert!(f16_to_f32(f16_from_f32(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f16_from_f32(f32::INFINITY)), f32::INFINITY);
     }
 
     #[test]
@@ -199,12 +568,55 @@ mod tests {
     }
 
     #[test]
+    fn export_import_is_lossless_between_same_dtype_stores() {
+        // the sharded boundary-sync equivalence check compares export_rows
+        // outputs: exported rows sit on the dtype grid, so a second
+        // encode/decode hop must be the identity
+        for dtype in [HistDtype::F32, HistDtype::Bf16, HistDtype::F16] {
+            let mut a = History::with_dtype(6, &[3], dtype);
+            a.scatter_h(1, &[1, 4], &[1.0, 0.333, 3.0, 4.0, 5.5, 6.0]);
+            a.scatter_v(1, &[1, 4], &[6.0, 5.0, 0.777, 3.0, 2.0, 1.0]);
+            let (h, v) = a.export_rows(1, &[1, 4]);
+            let mut b = History::with_dtype(6, &[3], dtype);
+            b.import_rows(1, &[1, 4], &h, &v);
+            let (h2, v2) = b.export_rows(1, &[1, 4]);
+            assert_eq!(h, h2, "{}", dtype.name());
+            assert_eq!(v, v2, "{}", dtype.name());
+        }
+    }
+
+    #[test]
     fn momentum_push() {
         let mut h = History::new(4, &[2]);
         h.scatter_h(1, &[1], &[1.0, 1.0]);
         h.momentum_h(1, &[1], &[3.0, 5.0], 0.5);
         let row = h.gather_h(1, &[1], 1);
         assert_eq!(row, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn momentum_push_accumulates_in_f32_on_half_stores() {
+        // grid-exact inputs and m = 0.5 keep the f32 mix exact, so the
+        // re-encoded result must equal the f32-store result exactly
+        for dtype in [HistDtype::Bf16, HistDtype::F16] {
+            let mut h = History::with_dtype(4, &[2], dtype);
+            h.scatter_h(1, &[1], &[1.0, 1.0]);
+            h.momentum_h(1, &[1], &[3.0, 5.0], 0.5);
+            assert_eq!(h.gather_h(1, &[1], 1), vec![2.0, 3.0], "{}", dtype.name());
+        }
+    }
+
+    #[test]
+    fn fill_h_routes_through_encode() {
+        let mut h = History::with_dtype(3, &[2], HistDtype::Bf16);
+        h.fill_h(1, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(h.gather_h(1, &[0, 1, 2], 3), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // non-grid values land on the bf16 grid
+        let mut q = History::with_dtype(1, &[1], HistDtype::Bf16);
+        q.fill_h(1, &[1.0 + 1.0 / 1024.0]);
+        let got = q.gather_h(1, &[0], 1)[0];
+        assert_eq!(got.to_bits() & 0xFFFF, 0, "bf16 store held low mantissa bits");
+        assert!((got - 1.0).abs() <= 1.0 / 256.0);
     }
 
     #[test]
@@ -220,5 +632,11 @@ mod tests {
     fn bytes_accounting() {
         let h = History::new(100, &[8, 8]);
         assert_eq!(h.bytes(), 2 * 2 * 100 * 8 * 4);
+        assert_eq!(h.bytes_per_node(), 2 * 2 * 8 * 4);
+        // bf16 halves both numbers
+        let q = History::with_dtype(100, &[8, 8], HistDtype::Bf16);
+        assert_eq!(q.bytes(), 2 * 2 * 100 * 8 * 2);
+        assert_eq!(q.bytes_per_node(), 2 * 2 * 8 * 2);
+        assert_eq!(q.bytes() * 2, h.bytes());
     }
 }

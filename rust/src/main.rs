@@ -78,6 +78,7 @@ subcommands:
                    [--clusters-per-batch C] [--parts K]
                    [--shards S] [--sync-every K] [--sync-mode avg|hist]
                    [--beta-alpha F] [--beta-score x2|2x-x2|x|1|sinx]
+                   [--history-dtype f32|bf16|f16]
                    [--target-acc F] [--config file.toml] [--seed N]
                    [--save-params FILE] [--verbose]
   eval             exact inference with fresh params (pipeline smoke test)
@@ -89,7 +90,7 @@ subcommands:
                    per request on stdout, status on stderr)
                    [--params FILE] [--serve-mode exact|cached]
                    [--serve-max-batch N] [--serve-max-wait-ms MS]
-                   [--serve-beta F]
+                   [--serve-beta F] [--history-dtype f32|bf16|f16]
   partition-stats  --dataset D [--parts K] [--seed N]
   datasets         list registered datasets
   programs         list artifact programs (--artifacts DIR; pjrt builds only)
@@ -315,6 +316,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.opts().tile_nodes,
         cfg.serve_max_batch,
         cfg.serve_max_wait_ms
+    );
+    eprintln!(
+        "history store: dtype {}, {} bytes/node resident",
+        engine.history_dtype().name(),
+        engine.history_bytes_per_node()
     );
     let policy = BatchPolicy { max_nodes: cfg.serve_max_batch, max_wait: cfg.serve_max_wait_ms };
     let mut mb = MicroBatcher::new(policy);

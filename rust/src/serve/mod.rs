@@ -44,7 +44,7 @@ use crate::coordinator::exact::argmax;
 use crate::coordinator::methods::BetaConfig;
 use crate::coordinator::params::Params;
 use crate::graph::{load, Graph};
-use crate::history::History;
+use crate::history::{HistDtype, History};
 use crate::runtime::ArchInfo;
 use crate::sampler::{
     beta_vector, build_subgraph, gather_rows, AdjacencyPolicy, BetaScore, Buckets,
@@ -91,6 +91,11 @@ pub struct ServeOptions {
     /// serves pure history for halo rows; `alpha > 0` mixes in the
     /// incomplete fresh value with the training-side score function.
     pub beta: BetaConfig,
+    /// Storage dtype for the warm history rows (`history_dtype` knob):
+    /// halo reads on the cached path decode through the same
+    /// [`History`] seam training uses, so bf16/f16 serving halves the
+    /// resident bytes per node at a bounded per-element decode error.
+    pub history_dtype: HistDtype,
 }
 
 impl Default for ServeOptions {
@@ -99,6 +104,7 @@ impl Default for ServeOptions {
             mode: ServeMode::Cached,
             tile_nodes: 256,
             beta: BetaConfig { alpha: 0.0, score: BetaScore::TwoXMinusXSquared },
+            history_dtype: HistDtype::F32,
         }
     }
 }
@@ -158,7 +164,7 @@ impl ServeEngine {
     ) -> Result<ServeEngine> {
         validate_params(&model.arch, &params)?;
         let hist_dims: Vec<usize> = model.arch.dims[1..model.arch.l].to_vec();
-        let history = History::new(graph.n(), &hist_dims);
+        let history = History::with_dtype(graph.n(), &hist_dims, opts.history_dtype);
         Ok(ServeEngine {
             graph,
             model,
@@ -206,6 +212,7 @@ impl ServeEngine {
             mode: cfg.serve_mode,
             tile_nodes: cfg.serve_max_batch,
             beta: BetaConfig { alpha: cfg.serve_beta, score: cfg.beta.score },
+            history_dtype: cfg.history_dtype,
         };
         Self::with_exec(exec, graph, model, params, opts)
     }
@@ -235,6 +242,17 @@ impl ServeEngine {
         &self.exec
     }
 
+    /// Storage dtype of the warm history rows.
+    pub fn history_dtype(&self) -> HistDtype {
+        self.history.dtype()
+    }
+
+    /// Resident history bytes per graph node (`2·(H+V)·Σ d_l·sizeof`,
+    /// the startup-log / BENCH_serve accounting figure).
+    pub fn history_bytes_per_node(&self) -> usize {
+        self.history.bytes_per_node()
+    }
+
     /// True when the cached-history rows were computed at the current
     /// parameters.
     pub fn is_warm(&self) -> bool {
@@ -261,7 +279,10 @@ impl ServeEngine {
     pub fn refresh_history(&mut self) -> Result<()> {
         let hs = self.exec.full_forward(self.graph.as_ref(), &self.params, &self.model)?;
         for l in 1..self.model.arch.l {
-            self.history.h[l - 1].data.copy_from_slice(&hs[l]);
+            // bulk write through the dtype seam: quantized stores encode
+            // here and halo gathers decode on the fly, so cached-path
+            // reads never see a full-width scratch copy of these rows
+            self.history.fill_h(l, &hs[l]);
         }
         // every cached row is freshly written as of this refresh
         self.history.iter += 1;

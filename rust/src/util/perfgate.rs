@@ -4,8 +4,10 @@
 //! Policy (see rust/README.md § Perf gate):
 //!
 //!   * only the metrics listed in the baseline's `gate.metrics` are gated
-//!     (currently `gemm_s`, `aggregate_s`, `step_optimized_s`) — every
-//!     other phase in `BENCH_step.json` stays informational;
+//!     (currently `gemm_s`, `aggregate_s`, `step_optimized_s`, the
+//!     `history_gather_{f32,bf16}_s` pair, and the dimensionless
+//!     `history_bytes_per_node` footprint) — every other phase in
+//!     `BENCH_step.json` stays informational;
 //!   * a metric fails only when `measured / baseline > gate.max_slowdown`
 //!     (a generous noise band, default [`DEFAULT_MAX_SLOWDOWN`], so runner
 //!     jitter and modest machine differences never flake the gate — it
@@ -37,8 +39,18 @@ pub const MEASURED_MAX_SLOWDOWN: f64 = 1.45;
 
 /// The phases a regenerated baseline gates (single source of truth shared
 /// with `benches/step_breakdown.rs --write-baseline`; a committed baseline
-/// may list a different set — `compare` follows the file).
-pub const GATED_METRICS: [&str; 3] = ["gemm_s", "aggregate_s", "step_optimized_s"];
+/// may list a different set — `compare` follows the file). Names ending in
+/// `_s` are phase timings in seconds; `history_bytes_per_node` gates the
+/// resident history footprint the same way (ratio over baseline), so a
+/// change that silently widens the quantized store fails the gate.
+pub const GATED_METRICS: [&str; 6] = [
+    "gemm_s",
+    "aggregate_s",
+    "step_optimized_s",
+    "history_gather_f32_s",
+    "history_gather_bf16_s",
+    "history_bytes_per_node",
+];
 
 /// One gated metric's comparison.
 #[derive(Debug, Clone)]
@@ -79,11 +91,18 @@ impl GateReport {
         s.push_str("| metric | baseline | measured | ratio | status |\n");
         s.push_str("|---|---:|---:|---:|---|\n");
         for r in &self.rows {
+            // only `_s`-suffixed metrics are durations; counters like
+            // `history_bytes_per_node` print as plain numbers
+            let (b, m) = if r.name.ends_with("_s") {
+                (fmt_secs(r.baseline_s), fmt_secs(r.measured_s))
+            } else {
+                (format!("{}", r.baseline_s), format!("{}", r.measured_s))
+            };
             s.push_str(&format!(
                 "| {} | {} | {} | {:.2}x | {} |\n",
                 r.name,
-                fmt_secs(r.baseline_s),
-                fmt_secs(r.measured_s),
+                b,
+                m,
                 r.ratio,
                 if r.pass { "ok" } else { "**REGRESSION**" },
             ));
@@ -299,6 +318,32 @@ mod tests {
             compare(&baseline_json(), &bench_json(1.0e-3, 2.0e-4, 8.0e-3, false)).unwrap();
         assert!(!report.baseline_estimated);
         assert!(!report.markdown().contains("warning"));
+    }
+
+    #[test]
+    fn bytes_per_node_gates_by_ratio_and_prints_plain() {
+        // the footprint counter rides the same ratio machinery: holding at
+        // or below baseline passes, silently widening the store fails
+        let base = Json::parse(
+            r#"{
+              "gate": {"max_slowdown": 1.45, "metrics": ["history_bytes_per_node"]},
+              "metrics": {"history_bytes_per_node": 1024}
+            }"#,
+        )
+        .unwrap();
+        let bench = |v: u32| {
+            Json::parse(&format!(
+                r#"{{"smoke": false, "phases": {{}}, "history_bytes_per_node": {v}}}"#
+            ))
+            .unwrap()
+        };
+        let ok = compare(&base, &bench(1024)).unwrap();
+        assert!(ok.passed());
+        // plain-number formatting, not fmt_secs (no "µs"/"ms" suffix)
+        let md = ok.markdown();
+        assert!(md.contains("| history_bytes_per_node | 1024 | 1024 |"), "{md}");
+        let fail = compare(&base, &bench(2048)).unwrap();
+        assert!(!fail.passed(), "doubling the footprint must fail the gate");
     }
 
     #[test]

@@ -9,7 +9,9 @@ use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspac
 use lmc::coordinator::params::{grad_rel_err, Params};
 use lmc::serve::{plan_tiles, ServeEngine, ServeMode, ServeOptions};
 use lmc::graph::{gcn_normalize, load, random_graph, Csr, DatasetId, Graph};
-use lmc::history::History;
+use lmc::config::RunConfig;
+use lmc::coordinator::{Method, Trainer};
+use lmc::history::{bf16_from_f32, bf16_to_f32, f16_from_f32, f16_to_f32, HistDtype, History};
 use lmc::partition::{edge_cut, partition, quality::quality, shard_views, PartitionConfig};
 use lmc::runtime::ArchInfo;
 use lmc::sampler::{
@@ -907,6 +909,116 @@ fn prop_params_save_load_roundtrip_is_bitwise() {
             assert_eq!(ab, bb, "seed {seed}: bit patterns drifted");
         }
     }
+}
+
+/// The quantization error bar the bf16 history store documents: encode →
+/// decode of any normal f32 is within 2^-8 relative of the input (bf16
+/// keeps 8 significand bits, so round-to-nearest-even lands within half a
+/// ulp = 2^-9 ≤ 2^-8), and the f16 store within 2^-10 over its normal
+/// range. Zeros, infinities, and NaN-ness survive both.
+#[test]
+fn prop_half_roundtrip_error_is_bounded() {
+    let mut rng = Rng::new(0xBF16);
+    for case in 0..4000u32 {
+        // magnitudes across the shared normal range of both formats
+        let exp = rng.uniform(-14.0, 15.0);
+        let x = (rng.normal() as f32) * (2f32).powf(exp as f32);
+        // stay inside f16's finite range: past 65504 it rounds to inf and
+        // the relative-error claim no longer applies (bf16 reaches f32 max)
+        if x == 0.0 || !x.is_finite() || x.abs() > 32768.0 {
+            continue;
+        }
+        let xb = bf16_to_f32(bf16_from_f32(x));
+        assert!(
+            (xb - x).abs() <= x.abs() * (1.0 / 256.0),
+            "case {case}: bf16 {x} -> {xb} off by more than 2^-8 relative"
+        );
+        let xh = f16_to_f32(f16_from_f32(x));
+        assert!(
+            (xh - x).abs() <= x.abs() * (1.0 / 1024.0) + f32::EPSILON,
+            "case {case}: f16 {x} -> {xh} off by more than 2^-10 relative"
+        );
+    }
+    // specials survive exactly
+    for v in [0.0f32, -0.0, f32::INFINITY, f32::NEG_INFINITY, 1.0, -2.0, 0.5] {
+        assert_eq!(bf16_to_f32(bf16_from_f32(v)).to_bits(), v.to_bits(), "bf16 {v}");
+        assert_eq!(f16_to_f32(f16_from_f32(v)), v, "f16 {v}");
+    }
+    assert!(bf16_to_f32(bf16_from_f32(f32::NAN)).is_nan());
+    assert!(f16_to_f32(f16_from_f32(f32::NAN)).is_nan());
+}
+
+/// The SIMD decode path (the dequant-fused gather behind
+/// `History::gather_h_into` on a bf16 store) agrees bitwise with the
+/// scalar encode/decode oracle on random rows — the bf16 half of the
+/// satellite "scalar oracle vs SIMD decode" pin.
+#[test]
+fn prop_bf16_store_gather_matches_scalar_decode_bitwise() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed * 131 + 7);
+        let n = 30 + rng.below(200);
+        let dims = vec![1 + rng.below(40)];
+        let d = dims[0];
+        let mut h = History::with_dtype(n, &dims, HistDtype::Bf16);
+        let k = 1 + rng.below(n);
+        let idx: Vec<u32> = {
+            let mut v: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|x| x as u32).collect();
+            v.sort_unstable();
+            v
+        };
+        let src: Vec<f32> =
+            (0..k * d).map(|_| (rng.normal() as f32) * 8.0).collect();
+        h.scatter_h(1, &idx, &src);
+        let mut got = vec![0f32; k * d];
+        h.gather_h_into(1, &idx, &mut got);
+        for (i, (&g, &s)) in got.iter().zip(&src).enumerate() {
+            let want = bf16_to_f32(bf16_from_f32(s));
+            assert_eq!(
+                g.to_bits(),
+                want.to_bits(),
+                "seed {seed} elem {i}: SIMD decode {g} != scalar oracle {want}"
+            );
+        }
+    }
+}
+
+/// One short LMC training run on cora-sim with `history_dtype = bf16`
+/// tracks the f32 run: the quantization error (≤ 2^-8 relative per cached
+/// element) is absorbed the same way bounded staleness is, so the epoch
+/// losses stay within a 5% relative band — the documented tolerance the
+/// README "Memory & precision" section pins. (The runs are not bitwise
+/// comparable: halo compensation reads decoded rows.)
+#[test]
+fn prop_bf16_history_training_tracks_f32_loss() {
+    let run = |dtype: HistDtype| {
+        let cfg = RunConfig {
+            dataset: DatasetId::CoraSim,
+            arch: "gcn".into(),
+            method: Method::Lmc,
+            epochs: 2,
+            eval_every: 2,
+            seed: 1,
+            history_dtype: dtype,
+            ..Default::default()
+        };
+        let mut t =
+            Trainer::new(std::sync::Arc::new(NativeExecutor::new()), cfg).unwrap();
+        t.run().unwrap()
+    };
+    let full = run(HistDtype::F32);
+    let quant = run(HistDtype::Bf16);
+    assert_eq!(full.records.len(), quant.records.len());
+    for (f, q) in full.records.iter().zip(&quant.records) {
+        let (lf, lq) = (f.train_loss, q.train_loss);
+        assert!(
+            (lf - lq).abs() <= 0.05 * (1.0 + lf.abs()),
+            "bf16 history diverged from f32: epoch loss {lq} vs {lf}"
+        );
+    }
+    // and it still learns: same drop criterion the integration suite uses
+    let first = quant.records.first().unwrap().train_loss;
+    let last = quant.records.last().unwrap().train_loss;
+    assert!(last < first, "bf16 run did not learn ({first} -> {last})");
 }
 
 #[test]
