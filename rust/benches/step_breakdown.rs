@@ -19,13 +19,15 @@
 //! `perf-gate` job diffs against; see rust/README.md § Perf gate).
 
 use std::fmt::Write as _;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use lmc::backend::gemm::{self, Kernels};
 use lmc::backend::native::combine;
 use lmc::backend::simd::{self, SimdLevel};
 use lmc::backend::{Executor, ModelSpec, NativeExecutor, StepInputs, StepWorkspace};
-use lmc::coordinator::params::Params;
+use lmc::checkpoint;
+use lmc::config::RunConfig;
+use lmc::coordinator::{params::Params, Method, Trainer};
 use lmc::graph::{load, DatasetId};
 use lmc::history::{HistDtype, History};
 use lmc::partition::{partition, PartitionConfig};
@@ -301,6 +303,34 @@ fn main() {
         println!("    workspace: {} grabs, {} misses", w.grabs(), w.misses());
     }
 
+    // ---- checkpoint IO (informational; never part of the perf gate) -----
+    // one LMCCKPT1 save/load cycle of a warm cora-sim trainer: the cost a
+    // `checkpoint_every = 1` cadence adds per epoch boundary
+    let ckpt_dir = std::env::temp_dir().join(format!("lmc_bench_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let ckpt_cfg = RunConfig {
+        dataset: DatasetId::CoraSim,
+        arch: "gcn".into(),
+        method: Method::Lmc,
+        epochs: 1,
+        eval_every: usize::MAX,
+        seed: 1,
+        ..Default::default()
+    };
+    let mut ckpt_t = Trainer::new(Arc::new(NativeExecutor::new()), ckpt_cfg.clone()).unwrap();
+    ckpt_t.train_epoch().expect("warm trainer for checkpoint bench");
+    let ckpt_state = checkpoint::TrainerState::capture(&ckpt_t);
+    let ckpt_fp = checkpoint::config_fingerprint(&ckpt_cfg);
+    let ckpt_run = checkpoint::RunState { epochs_done: 1, metrics: Default::default() };
+    let ckpt_save = b.run("phase/checkpoint-save(atomic: tmp, fsync, rename)", || {
+        checkpoint::save(&ckpt_dir, &ckpt_fp, 1, std::slice::from_ref(&ckpt_state), &ckpt_run)
+            .expect("checkpoint save");
+    });
+    let ckpt_load = b.run("phase/checkpoint-load(verify + decode)", || {
+        black_box(checkpoint::load(&ckpt_dir, &ckpt_fp, 1).expect("checkpoint load"));
+    });
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
     // ---- emit BENCH_step[.smoke].json at the repo root ------------------
     let prov = provenance();
     let mut json = String::from("{\n  \"bench\": \"step_breakdown\",\n");
@@ -333,6 +363,9 @@ fn main() {
     let _ = writeln!(json, "  \"history_bytes_per_node\": {bpn_bf16},");
     let _ = writeln!(json, "  \"history_bytes_per_node_f32\": {bpn_f32},");
     let _ = writeln!(json, "  \"history_bytes_per_node_bf16\": {bpn_bf16},");
+    // informational only — checkpoint cadence cost; never a gated metric
+    let _ = writeln!(json, "  \"checkpoint_save_s\": {:.6e},", ckpt_save.mean_s);
+    let _ = writeln!(json, "  \"checkpoint_load_s\": {:.6e},", ckpt_load.mean_s);
     let _ = writeln!(json, "  \"step_naive_s\": {:.6e},", step_naive.mean_s);
     let _ = writeln!(json, "  \"step_scalar_s\": {:.6e},", step_scalar.mean_s);
     let _ = writeln!(json, "  \"step_optimized_s\": {:.6e},", step_opt.mean_s);

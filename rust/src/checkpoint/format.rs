@@ -1,0 +1,385 @@
+//! `LMCCKPT1` binary encoding: full trainer state (params, Adam moments,
+//! history at its at-rest dtype, RNG stream positions, step counter,
+//! SPIDER state) and the run-level trace, each as one self-delimiting
+//! little-endian blob ending in the shared CRC32 trailer.
+//!
+//! History stores are persisted as their **raw at-rest words** (f32 bits,
+//! or the 16-bit bf16/f16 words) — a checkpointed quantized store
+//! round-trips bit-exactly, never through a decode/re-encode hop.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::metrics::{EpochRecord, RunMetrics};
+use crate::coordinator::params::Params;
+use crate::coordinator::Trainer;
+use crate::history::{HistDtype, HistRaw, History};
+use crate::runtime::Tensor;
+use crate::util::bytes::{
+    append_crc_trailer, check_crc_trailer, push_f32_slice, push_f64, push_str, push_u16_slice,
+    push_u32, push_u64, Cursor,
+};
+use crate::util::rng::Rng;
+
+/// File magic of the `lmc` checkpoint format (version 1).
+pub const CKPT_MAGIC: &[u8; 8] = b"LMCCKPT1";
+pub const CKPT_VERSION: u32 = 1;
+
+const KIND_SHARD: u8 = 1;
+const KIND_RUN: u8 = 2;
+
+/// Everything a [`Trainer`] needs to continue a run bit-identically:
+/// params, Adam moments + step counter, the full history store, both RNG
+/// stream positions, and SPIDER state. Also the sharded recovery
+/// snapshot — workers roll back to a captured state when an epoch fails.
+pub struct TrainerState {
+    pub params: Params,
+    pub adam_m: Vec<Vec<f32>>,
+    pub adam_v: Vec<Vec<f32>>,
+    pub adam_t: u64,
+    pub history: History,
+    pub rng: [u64; 4],
+    pub batcher_rng: [u64; 4],
+    pub step_count: u64,
+    pub spider: Option<(Params, Vec<Tensor>)>,
+}
+
+impl TrainerState {
+    pub fn capture(t: &Trainer) -> TrainerState {
+        let (m, v, at) = t.opt.state();
+        TrainerState {
+            params: t.params.clone(),
+            adam_m: m.to_vec(),
+            adam_v: v.to_vec(),
+            adam_t: at,
+            history: t.history.clone(),
+            rng: t.rng.state(),
+            batcher_rng: t.batcher.rng_state(),
+            step_count: t.step_count(),
+            spider: t.spider_state().cloned(),
+        }
+    }
+
+    /// Install this state into `t`, which must have been built from the
+    /// same config (shapes are re-validated here as a defense in depth —
+    /// the fingerprint check on load is the primary gate). Transient
+    /// caches are reset; they rebuild deterministically.
+    pub fn restore_into(&self, t: &mut Trainer) -> Result<()> {
+        if self.params.names != t.params.names {
+            bail!(
+                "checkpoint param names do not match the model ({} vs {} tensors)",
+                self.params.names.len(),
+                t.params.names.len()
+            );
+        }
+        for ((name, a), b) in
+            self.params.names.iter().zip(&self.params.tensors).zip(&t.params.tensors)
+        {
+            if a.shape != b.shape {
+                bail!("checkpoint tensor {name} shape {:?} != model {:?}", a.shape, b.shape);
+            }
+        }
+        let (h, m) = (&self.history, &t.history);
+        if h.n != m.n || h.num_layers() != m.num_layers() || h.dtype() != m.dtype() {
+            bail!(
+                "checkpoint history (n={}, layers={}, {}) does not match the model \
+                 (n={}, layers={}, {})",
+                h.n,
+                h.num_layers(),
+                h.dtype().name(),
+                m.n,
+                m.num_layers(),
+                m.dtype().name()
+            );
+        }
+        for (a, b) in h.h.iter().zip(&m.h) {
+            if a.d != b.d {
+                bail!("checkpoint history layer width {} != model {}", a.d, b.d);
+            }
+        }
+        t.params = self.params.clone();
+        t.opt.restore_state(self.adam_m.clone(), self.adam_v.clone(), self.adam_t)?;
+        t.history = self.history.clone();
+        t.rng = Rng::from_state(self.rng);
+        t.batcher.restore_rng_state(self.batcher_rng);
+        t.set_step_count(self.step_count);
+        t.set_spider_state(self.spider.clone());
+        t.reset_transient_state();
+        Ok(())
+    }
+}
+
+/// Run-level progress: the completed-epoch counter the resumed loop
+/// continues from, plus the metrics trace so far.
+pub struct RunState {
+    pub epochs_done: usize,
+    pub metrics: RunMetrics,
+}
+
+fn dtype_code(d: HistDtype) -> u8 {
+    match d {
+        HistDtype::F32 => 0,
+        HistDtype::Bf16 => 1,
+        HistDtype::F16 => 2,
+    }
+}
+
+fn dtype_from_code(c: u8) -> Result<HistDtype> {
+    match c {
+        0 => Ok(HistDtype::F32),
+        1 => Ok(HistDtype::Bf16),
+        2 => Ok(HistDtype::F16),
+        other => bail!("unknown history dtype code {other}"),
+    }
+}
+
+fn push_header(out: &mut Vec<u8>, kind: u8, fingerprint: &str) {
+    out.extend_from_slice(CKPT_MAGIC);
+    push_u32(out, CKPT_VERSION);
+    out.push(kind);
+    push_str(out, fingerprint);
+}
+
+/// Parse and validate the common header; returns a cursor positioned
+/// after it. The fingerprint check is what refuses resume under an
+/// incompatible config.
+fn open_payload<'a>(
+    bytes: &'a [u8],
+    kind: u8,
+    expect_fingerprint: &str,
+    what: &str,
+) -> Result<Cursor<'a>> {
+    let payload = check_crc_trailer(bytes, what)?;
+    let mut cur = Cursor::new(payload);
+    if cur.take(CKPT_MAGIC.len())? != CKPT_MAGIC {
+        bail!("{what}: not an lmc checkpoint (bad magic)");
+    }
+    let version = cur.u32()?;
+    if version != CKPT_VERSION {
+        bail!("{what}: unsupported checkpoint version {version} (this build reads {CKPT_VERSION})");
+    }
+    let k = cur.take(1)?[0];
+    if k != kind {
+        bail!("{what}: wrong section kind {k} (expected {kind})");
+    }
+    let fp = cur.str()?;
+    if fp != expect_fingerprint {
+        bail!(
+            "{what}: checkpoint was written under an incompatible config and cannot be \
+             resumed with this one\n  checkpoint: {fp}\n  current:    {expect_fingerprint}"
+        );
+    }
+    Ok(cur)
+}
+
+fn push_params(out: &mut Vec<u8>, p: &Params) {
+    let b = p.to_bytes();
+    push_u32(out, b.len() as u32);
+    out.extend_from_slice(&b);
+}
+
+fn read_params(cur: &mut Cursor) -> Result<Params> {
+    let len = cur.u32()? as usize;
+    Params::from_bytes(cur.take(len)?)
+}
+
+fn push_history(out: &mut Vec<u8>, h: &History) {
+    push_u64(out, h.n as u64);
+    out.push(dtype_code(h.dtype()));
+    push_u32(out, h.num_layers() as u32);
+    for ls in &h.h {
+        push_u32(out, ls.d as u32);
+    }
+    for ls in h.h.iter().chain(h.v.iter()) {
+        match ls.raw_words() {
+            HistRaw::F32(w) => push_f32_slice(out, w),
+            HistRaw::U16(w) => push_u16_slice(out, w),
+        }
+    }
+    for &t in &h.last_update {
+        push_u64(out, t);
+    }
+    push_u64(out, h.iter);
+}
+
+fn read_history(cur: &mut Cursor) -> Result<History> {
+    let n = cur.u64()? as usize;
+    let dtype = dtype_from_code(cur.take(1)?[0])?;
+    let layers = cur.u32()? as usize;
+    let mut dims = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        dims.push(cur.u32()? as usize);
+    }
+    let mut h = History::with_dtype(n, &dims, dtype);
+    for li in 0..2 * layers {
+        let d = dims[li % layers];
+        let ls = if li < layers { &mut h.h[li] } else { &mut h.v[li - layers] };
+        let res = match dtype {
+            HistDtype::F32 => ls.set_raw_f32(&cur.f32_vec(n * d)?),
+            _ => ls.set_raw_u16(&cur.u16_vec(n * d)?),
+        };
+        res.map_err(|e| anyhow!("history layer {li}: {e}"))?;
+    }
+    h.last_update = cur.u64_vec(n)?;
+    h.iter = cur.u64()?;
+    Ok(h)
+}
+
+fn push_tensors(out: &mut Vec<u8>, ts: &[Tensor]) {
+    push_u32(out, ts.len() as u32);
+    for t in ts {
+        push_u32(out, t.shape.len() as u32);
+        for &d in &t.shape {
+            push_u32(out, d as u32);
+        }
+        push_f32_slice(out, &t.data);
+    }
+}
+
+fn read_tensors(cur: &mut Cursor) -> Result<Vec<Tensor>> {
+    let count = cur.u32()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let rank = cur.u32()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(cur.u32()? as usize);
+        }
+        let elems = shape.iter().product::<usize>();
+        out.push(Tensor::from_vec(&shape, cur.f32_vec(elems)?));
+    }
+    Ok(out)
+}
+
+/// Encode one trainer's state (one shard file's contents).
+pub fn encode_state(s: &TrainerState, fingerprint: &str) -> Vec<u8> {
+    let mut out = Vec::new();
+    push_header(&mut out, KIND_SHARD, fingerprint);
+    push_u64(&mut out, s.step_count);
+    for &w in s.rng.iter().chain(s.batcher_rng.iter()) {
+        push_u64(&mut out, w);
+    }
+    push_params(&mut out, &s.params);
+    push_u32(&mut out, s.adam_m.len() as u32);
+    for moments in [&s.adam_m, &s.adam_v] {
+        for m in moments.iter() {
+            push_u32(&mut out, m.len() as u32);
+            push_f32_slice(&mut out, m);
+        }
+    }
+    push_u64(&mut out, s.adam_t);
+    push_history(&mut out, &s.history);
+    match &s.spider {
+        None => out.push(0),
+        Some((prev, est)) => {
+            out.push(1);
+            push_params(&mut out, prev);
+            push_tensors(&mut out, est);
+        }
+    }
+    append_crc_trailer(&mut out);
+    out
+}
+
+/// Decode a shard-state blob written by [`encode_state`], refusing a
+/// mismatched fingerprint or a failed checksum.
+pub fn decode_state(bytes: &[u8], expect_fingerprint: &str) -> Result<TrainerState> {
+    let mut cur = open_payload(bytes, KIND_SHARD, expect_fingerprint, "checkpoint state")?;
+    let step_count = cur.u64()?;
+    let mut rng = [0u64; 4];
+    let mut batcher_rng = [0u64; 4];
+    for w in rng.iter_mut().chain(batcher_rng.iter_mut()) {
+        *w = cur.u64()?;
+    }
+    let params = read_params(&mut cur)?;
+    let n_tensors = cur.u32()? as usize;
+    let read_moments = |cur: &mut Cursor| -> Result<Vec<Vec<f32>>> {
+        (0..n_tensors)
+            .map(|_| {
+                let len = cur.u32()? as usize;
+                cur.f32_vec(len)
+            })
+            .collect()
+    };
+    let adam_m = read_moments(&mut cur)?;
+    let adam_v = read_moments(&mut cur)?;
+    let adam_t = cur.u64()?;
+    let history = read_history(&mut cur)?;
+    let spider = match cur.take(1)?[0] {
+        0 => None,
+        1 => Some((read_params(&mut cur)?, read_tensors(&mut cur)?)),
+        other => bail!("bad spider-state flag {other}"),
+    };
+    if cur.remaining() != 0 {
+        bail!("checkpoint state: {} trailing bytes", cur.remaining());
+    }
+    Ok(TrainerState {
+        params,
+        adam_m,
+        adam_v,
+        adam_t,
+        history,
+        rng,
+        batcher_rng,
+        step_count,
+        spider,
+    })
+}
+
+/// Encode the run-level file (epoch counter + metrics trace).
+pub fn encode_run_state(r: &RunState, fingerprint: &str) -> Vec<u8> {
+    let mut out = Vec::new();
+    push_header(&mut out, KIND_RUN, fingerprint);
+    push_u64(&mut out, r.epochs_done as u64);
+    push_u32(&mut out, r.metrics.records.len() as u32);
+    for rec in &r.metrics.records {
+        push_u64(&mut out, rec.epoch as u64);
+        push_f64(&mut out, rec.wall_secs);
+        push_f64(&mut out, rec.epoch_secs);
+        push_f64(&mut out, rec.train_loss);
+        push_f64(&mut out, rec.train_acc);
+        push_f64(&mut out, rec.val_acc);
+        push_f64(&mut out, rec.test_acc);
+        push_u64(&mut out, rec.active_bytes as u64);
+        push_f64(&mut out, rec.staleness);
+    }
+    match r.metrics.reached_target {
+        None => out.push(0),
+        Some((epoch, secs)) => {
+            out.push(1);
+            push_u64(&mut out, epoch as u64);
+            push_f64(&mut out, secs);
+        }
+    }
+    append_crc_trailer(&mut out);
+    out
+}
+
+/// Decode a run-state blob written by [`encode_run_state`].
+pub fn decode_run_state(bytes: &[u8], expect_fingerprint: &str) -> Result<RunState> {
+    let mut cur = open_payload(bytes, KIND_RUN, expect_fingerprint, "checkpoint run state")?;
+    let epochs_done = cur.u64()? as usize;
+    let n_records = cur.u32()? as usize;
+    let mut metrics = RunMetrics::default();
+    for _ in 0..n_records {
+        metrics.push(EpochRecord {
+            epoch: cur.u64()? as usize,
+            wall_secs: cur.f64()?,
+            epoch_secs: cur.f64()?,
+            train_loss: cur.f64()?,
+            train_acc: cur.f64()?,
+            val_acc: cur.f64()?,
+            test_acc: cur.f64()?,
+            active_bytes: cur.u64()? as usize,
+            staleness: cur.f64()?,
+        });
+    }
+    metrics.reached_target = match cur.take(1)?[0] {
+        0 => None,
+        1 => Some((cur.u64()? as usize, cur.f64()?)),
+        other => bail!("bad reached-target flag {other}"),
+    };
+    if cur.remaining() != 0 {
+        bail!("checkpoint run state: {} trailing bytes", cur.remaining());
+    }
+    Ok(RunState { epochs_done, metrics })
+}

@@ -1,0 +1,296 @@
+//! Crash-safe checkpoint/resume for the trainer (`LMCCKPT1`).
+//!
+//! A checkpoint directory after epoch `E` of an `S`-shard run holds
+//!
+//! ```text
+//! MANIFEST.json          # renamed into place LAST — the commit point
+//! run.eE.ckpt            # epoch counter + metrics trace
+//! shard-0.eE.ckpt        # per-trainer state (params, Adam, history, RNG)
+//! ...
+//! shard-{S-1}.eE.ckpt
+//! ```
+//!
+//! Every file is written atomically (temp file → fsync → rename → dir
+//! fsync), so a crash at any instant leaves either the previous complete
+//! checkpoint or the new one — never a torn live file. The manifest is
+//! written last: until it lands, a resume still sees the previous epoch.
+//! Old-epoch files are garbage-collected only after the new manifest is
+//! durable.
+//!
+//! Checkpoints are taken at epoch-sync barriers. Because every stream of
+//! randomness is captured (trainer RNG, batcher RNG) and the transient
+//! caches rebuild deterministically, a run killed at an arbitrary step
+//! and resumed from the last checkpoint replays the remaining epochs
+//! **bit-identically** to the uninterrupted run (see
+//! `tests/integration_faults.rs`). A config fingerprint stored in the
+//! manifest and in every state file refuses resume under an incompatible
+//! config.
+
+mod format;
+
+pub use format::{
+    decode_run_state, decode_state, encode_run_state, encode_state, RunState, TrainerState,
+    CKPT_MAGIC, CKPT_VERSION,
+};
+
+use std::collections::BTreeMap;
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::RunConfig;
+use crate::util::failpoint::{self, Action};
+use crate::util::json::Json;
+
+/// The commit-point file; a directory without it has no checkpoint.
+pub const MANIFEST_NAME: &str = "MANIFEST.json";
+
+/// Whether epoch `epoch` (1-based) should be checkpointed under cadence
+/// `every` (clamped to ≥ 1). The final epoch is always checkpointed so a
+/// finished run can be reloaded regardless of cadence.
+pub fn due(epoch: usize, every: usize, total_epochs: usize) -> bool {
+    epoch % every.max(1) == 0 || epoch == total_epochs
+}
+
+/// Canonical string of every config knob that shapes the training
+/// trajectory. Presentation- and cadence-only knobs (eval cadence,
+/// artifact/checkpoint dirs, serve settings, `epochs` itself) are
+/// deliberately excluded so they may differ across a resume — e.g.
+/// resuming with a larger `--epochs` to extend a finished run.
+pub fn config_fingerprint(cfg: &RunConfig) -> String {
+    let fields: Vec<String> = vec![
+        format!("dataset={}", cfg.dataset.name()),
+        format!("arch={}", cfg.arch),
+        format!("method={}", cfg.method.name()),
+        format!("backend={}", cfg.backend.name()),
+        format!("seed={}", cfg.seed),
+        format!("parts={}", cfg.parts_or_default()),
+        format!("cpb={}", cfg.clusters_per_batch),
+        format!("lr={}", cfg.lr),
+        format!("wd={}", cfg.weight_decay),
+        format!("balpha={}", cfg.beta.alpha),
+        format!("bscore={}", cfg.beta.score.name()),
+        format!("batcher={:?}", cfg.batcher_mode),
+        format!("shards={}", cfg.shards.max(1)),
+        format!("sync_every={}", cfg.sync_every),
+        format!("sync_mode={}", cfg.sync_mode.name()),
+        format!("spider={}", cfg.spider_period),
+        format!("hist={}", cfg.history_dtype.name()),
+        format!("bwd_off={}", cfg.force_bwd_off),
+    ];
+    format!("v1;{}", fields.join(";"))
+}
+
+/// A decoded checkpoint: the epoch it was taken at, one state per shard
+/// (index = shard id; serial runs have exactly one), and the run trace.
+pub struct Loaded {
+    pub epoch: usize,
+    pub states: Vec<TrainerState>,
+    pub run: RunState,
+}
+
+fn shard_file(epoch: usize, shard: usize) -> String {
+    format!("shard-{shard}.e{epoch}.ckpt")
+}
+
+fn run_file(epoch: usize) -> String {
+    format!("run.e{epoch}.ckpt")
+}
+
+/// Write `bytes` to `dir/name` atomically: temp file, fsync, rename,
+/// best-effort directory fsync. The `ckpt.write` failpoint sits here —
+/// its `torn-write` action emulates a crash mid-write (half the bytes in
+/// the temp file, no rename), which must leave the previous checkpoint
+/// intact and loadable.
+fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    let path = dir.join(name);
+    match failpoint::check("ckpt.write") {
+        None => {}
+        Some(Action::TornWrite) => {
+            let _ = fs::write(&tmp, &bytes[..bytes.len() / 2]);
+            bail!("failpoint ckpt.write: injected torn write of {name} (temp file left truncated)");
+        }
+        Some(Action::Panic) => panic!("failpoint ckpt.write: injected panic"),
+        Some(Action::IoError) => bail!("failpoint ckpt.write: injected io error"),
+        Some(Action::Sleep) => {
+            eprintln!("failpoint ckpt.write: sleeping (waiting to be killed)");
+            std::thread::sleep(std::time::Duration::from_secs(120));
+        }
+    }
+    let mut f = File::create(&tmp).map_err(|e| anyhow!("creating {}: {e}", tmp.display()))?;
+    f.write_all(bytes).map_err(|e| anyhow!("writing {}: {e}", tmp.display()))?;
+    f.sync_all().map_err(|e| anyhow!("fsyncing {}: {e}", tmp.display()))?;
+    drop(f);
+    fs::rename(&tmp, &path)
+        .map_err(|e| anyhow!("renaming {} into place: {e}", path.display()))?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Take a checkpoint of `states` (one per shard) at `epoch`. Files land
+/// in this order: shard states, run state, then — the commit point —
+/// the manifest. Only after the manifest is durable are the previous
+/// epoch's files garbage-collected.
+pub fn save(
+    dir: &Path,
+    fingerprint: &str,
+    epoch: usize,
+    states: &[TrainerState],
+    run: &RunState,
+) -> Result<()> {
+    fs::create_dir_all(dir)
+        .map_err(|e| anyhow!("creating checkpoint dir {}: {e}", dir.display()))?;
+    failpoint::fire("ckpt.save")?;
+    for (i, s) in states.iter().enumerate() {
+        write_atomic(dir, &shard_file(epoch, i), &format::encode_state(s, fingerprint))?;
+    }
+    write_atomic(dir, &run_file(epoch), &format::encode_run_state(run, fingerprint))?;
+    let mut m = BTreeMap::new();
+    m.insert("format".to_string(), Json::Str("LMCCKPT1".to_string()));
+    m.insert("version".to_string(), Json::Num(CKPT_VERSION as f64));
+    m.insert("epoch".to_string(), Json::Num(epoch as f64));
+    m.insert("shards".to_string(), Json::Num(states.len() as f64));
+    m.insert("fingerprint".to_string(), Json::Str(fingerprint.to_string()));
+    m.insert("run_file".to_string(), Json::Str(run_file(epoch)));
+    m.insert(
+        "shard_files".to_string(),
+        Json::Arr((0..states.len()).map(|i| Json::Str(shard_file(epoch, i))).collect()),
+    );
+    write_atomic(dir, MANIFEST_NAME, Json::Obj(m).to_string().as_bytes())?;
+    gc_old_epochs(dir, epoch);
+    Ok(())
+}
+
+/// Epoch encoded in a checkpoint file name (`shard-3.e12.ckpt` → 12).
+fn file_epoch(name: &str) -> Option<usize> {
+    if !(name.starts_with("shard-") || name.starts_with("run.")) {
+        return None;
+    }
+    let stem = name.strip_suffix(".ckpt")?;
+    let (_, e) = stem.rsplit_once(".e")?;
+    e.parse().ok()
+}
+
+/// Best-effort removal of state files from epochs other than `keep`,
+/// plus any stale `.tmp` leftovers from an interrupted write. Failures
+/// are ignored — stale files are harmless; the manifest names the live
+/// set.
+fn gc_old_epochs(dir: &Path, keep: usize) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stale_tmp = name.ends_with(".tmp");
+        let old_epoch = file_epoch(name).map(|e| e != keep).unwrap_or(false);
+        if stale_tmp || old_epoch {
+            let _ = fs::remove_file(entry.path());
+        }
+    }
+}
+
+/// Load the checkpoint committed in `dir`'s manifest, refusing a
+/// fingerprint mismatch or a shard-count mismatch. Integrity (CRC32) and
+/// the fingerprint are re-verified on every state file, not just the
+/// manifest.
+pub fn load(dir: &Path, fingerprint: &str, expect_shards: usize) -> Result<Loaded> {
+    failpoint::fire("ckpt.load")?;
+    let mpath = dir.join(MANIFEST_NAME);
+    let text = fs::read_to_string(&mpath)
+        .map_err(|e| anyhow!("no resumable checkpoint at {}: {e}", dir.display()))?;
+    let m = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", mpath.display()))?;
+    let fmt = m.get("format").and_then(Json::as_str).unwrap_or("");
+    if fmt != "LMCCKPT1" {
+        bail!("{}: not an lmc checkpoint manifest (format {fmt:?})", mpath.display());
+    }
+    let version = m.get("version").and_then(Json::as_usize).unwrap_or(0);
+    if version != CKPT_VERSION as usize {
+        bail!(
+            "{}: unsupported checkpoint version {version} (this build reads {CKPT_VERSION})",
+            mpath.display()
+        );
+    }
+    let mfp = m.get("fingerprint").and_then(Json::as_str).unwrap_or("");
+    if mfp != fingerprint {
+        bail!(
+            "checkpoint at {} was written under an incompatible config and cannot be \
+             resumed with this one\n  checkpoint: {mfp}\n  current:    {fingerprint}",
+            dir.display()
+        );
+    }
+    let epoch = m
+        .get("epoch")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("{}: missing epoch", mpath.display()))?;
+    let shard_files: Vec<&str> = m
+        .get("shard_files")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_str).collect())
+        .unwrap_or_default();
+    if shard_files.len() != expect_shards {
+        bail!(
+            "checkpoint at {} holds {} shard state(s) but this run needs {expect_shards} — \
+             resume with a matching --shards",
+            dir.display(),
+            shard_files.len()
+        );
+    }
+    let mut states = Vec::with_capacity(shard_files.len());
+    for f in &shard_files {
+        let bytes =
+            fs::read(dir.join(f)).map_err(|e| anyhow!("reading checkpoint file {f}: {e}"))?;
+        states.push(decode_state(&bytes, fingerprint).map_err(|e| anyhow!("{f}: {e}"))?);
+    }
+    let rf = m
+        .get("run_file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{}: missing run_file", mpath.display()))?;
+    let bytes = fs::read(dir.join(rf)).map_err(|e| anyhow!("reading checkpoint file {rf}: {e}"))?;
+    let run = decode_run_state(&bytes, fingerprint).map_err(|e| anyhow!("{rf}: {e}"))?;
+    Ok(Loaded { epoch, states, run })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn due_respects_cadence_and_always_fires_on_the_last_epoch() {
+        assert!(due(1, 1, 10));
+        assert!(due(2, 1, 10));
+        assert!(!due(1, 3, 10));
+        assert!(!due(2, 3, 10));
+        assert!(due(3, 3, 10));
+        assert!(due(10, 3, 10), "final epoch is always checkpointed");
+        assert!(due(4, 0, 10), "a zero cadence clamps to every epoch");
+    }
+
+    #[test]
+    fn fingerprint_tracks_trajectory_knobs_only() {
+        let a = config_fingerprint(&RunConfig::default());
+        let reseeded = RunConfig { seed: 99, ..Default::default() };
+        assert_ne!(a, config_fingerprint(&reseeded), "seed must change the fingerprint");
+        let cadence_only = RunConfig {
+            epochs: RunConfig::default().epochs + 5,
+            eval_every: 1,
+            checkpoint_every: 7,
+            checkpoint_dir: Some("elsewhere".into()),
+            ..Default::default()
+        };
+        assert_eq!(a, config_fingerprint(&cadence_only), "cadence knobs must not block a resume");
+    }
+
+    #[test]
+    fn file_epoch_parses_checkpoint_names_only() {
+        assert_eq!(file_epoch("shard-0.e12.ckpt"), Some(12));
+        assert_eq!(file_epoch("shard-13.e7.ckpt"), Some(7));
+        assert_eq!(file_epoch("run.e3.ckpt"), Some(3));
+        assert_eq!(file_epoch("MANIFEST.json"), None);
+        assert_eq!(file_epoch("shard-0.e12.ckpt.tmp"), None);
+        assert_eq!(file_epoch("unrelated.e4.ckpt"), None);
+    }
+}

@@ -74,6 +74,17 @@ pub struct RunConfig {
     /// forcing the backward compensation off.
     pub force_bwd_off: bool,
     pub verbose: bool,
+    /// Directory for epoch-boundary `LMCCKPT1` checkpoints (and the
+    /// `lmc train --resume` source). `None` (default) disables
+    /// checkpointing entirely — the train loop stays untouched.
+    pub checkpoint_dir: Option<String>,
+    /// Epochs between checkpoints when `checkpoint_dir` is set (the final
+    /// epoch is always checkpointed).
+    pub checkpoint_every: usize,
+    /// Sharded recovery: how many times a failed worker epoch may be
+    /// rolled back to the sync-barrier snapshot and retried before the
+    /// run errors out. 0 disables recovery.
+    pub worker_retries: usize,
 }
 
 impl Default for RunConfig {
@@ -107,6 +118,9 @@ impl Default for RunConfig {
             history_dtype: HistDtype::F32,
             force_bwd_off: false,
             verbose: false,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            worker_retries: 2,
         }
     }
 }
@@ -214,6 +228,15 @@ impl RunConfig {
         if let Some(v) = get("history_dtype").and_then(|v| v.as_str()) {
             self.history_dtype = HistDtype::parse(v).map_err(|e| anyhow!(e))?;
         }
+        if let Some(v) = get("checkpoint_dir").and_then(|v| v.as_str()) {
+            self.checkpoint_dir = Some(v.to_string());
+        }
+        if let Some(v) = get("checkpoint_every").and_then(|v| v.as_i64()) {
+            self.checkpoint_every = v.max(0) as usize;
+        }
+        if let Some(v) = get("worker_retries").and_then(|v| v.as_i64()) {
+            self.worker_retries = v.max(0) as usize;
+        }
         Ok(())
     }
 
@@ -290,6 +313,15 @@ impl RunConfig {
         }
         if let Some(v) = args.opt("history-dtype") {
             self.history_dtype = HistDtype::parse(v).map_err(|e| anyhow!(e))?;
+        }
+        if let Some(v) = args.opt("checkpoint-dir") {
+            self.checkpoint_dir = Some(v.to_string());
+        }
+        if let Some(v) = args.opt_usize("checkpoint-every") {
+            self.checkpoint_every = v;
+        }
+        if let Some(v) = args.opt_usize("worker-retries") {
+            self.worker_retries = v;
         }
         if args.has_flag("fixed-batches") {
             self.batcher_mode = BatcherMode::Fixed;
@@ -424,6 +456,43 @@ mod tests {
         let err = cfg.apply_toml(&doc).unwrap_err().to_string();
         assert!(err.contains("int8") && err.contains("bf16"), "{err}");
         assert!(HistDtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn checkpoint_knobs_parse() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.checkpoint_dir, None); // checkpointing off by default
+        assert_eq!(cfg.checkpoint_every, 1);
+        assert_eq!(cfg.worker_retries, 2);
+        let doc = toml_parse(
+            "checkpoint_dir = \"ckpt\"\ncheckpoint_every = 5\nworker_retries = 3\n",
+        )
+        .unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some("ckpt"));
+        assert_eq!(cfg.checkpoint_every, 5);
+        assert_eq!(cfg.worker_retries, 3);
+        // train.-scoped keys work like every other knob
+        let doc = toml_parse("[train]\ncheckpoint_every = 2\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.checkpoint_every, 2);
+        let args = Args::parse(
+            [
+                "train",
+                "--checkpoint-dir",
+                "other",
+                "--checkpoint-every",
+                "7",
+                "--worker-retries",
+                "0",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some("other"));
+        assert_eq!(cfg.checkpoint_every, 7);
+        assert_eq!(cfg.worker_retries, 0);
     }
 
     #[test]

@@ -8,6 +8,9 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::{ArchInfo, Tensor};
+use crate::util::bytes::{
+    append_crc_trailer, check_crc_trailer, push_u32, Cursor, CRC_TRAILER_MAGIC,
+};
 use crate::util::rng::Rng;
 
 /// File magic of the `lmc` binary params format (version 1).
@@ -62,9 +65,10 @@ impl Params {
     }
 
     /// Serialize to the `lmc` binary params format: magic, tensor count,
-    /// then per tensor name / shape / little-endian f32 bit patterns. The
-    /// round-trip is **bitwise** — every float (including -0.0, subnormals
-    /// and NaN payloads) reloads with identical bits
+    /// per tensor name / shape / little-endian f32 bit patterns, then a
+    /// CRC32 integrity trailer over the whole payload. The round-trip is
+    /// **bitwise** — every float (including -0.0, subnormals and NaN
+    /// payloads) reloads with identical bits
     /// (`prop_params_save_load_roundtrip_is_bitwise`).
     pub fn to_bytes(&self) -> Vec<u8> {
         let payload: usize = self
@@ -72,7 +76,7 @@ impl Params {
             .iter()
             .map(|t| 8 + 4 * t.shape.len() + 4 * t.elems())
             .sum();
-        let mut out = Vec::with_capacity(PARAMS_MAGIC.len() + 4 + payload + 16 * self.names.len());
+        let mut out = Vec::with_capacity(PARAMS_MAGIC.len() + 12 + payload + 16 * self.names.len());
         out.extend_from_slice(PARAMS_MAGIC);
         push_u32(&mut out, self.tensors.len() as u32);
         for (name, t) in self.names.iter().zip(&self.tensors) {
@@ -86,13 +90,31 @@ impl Params {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
+        append_crc_trailer(&mut out);
         out
     }
 
-    /// Parse the [`Params::to_bytes`] format, validating magic, bounds
-    /// and shape/data consistency.
+    /// Parse the [`Params::to_bytes`] format, validating the checksum
+    /// trailer (when present — trailer-less legacy files are accepted
+    /// with a warning), magic, bounds and shape/data consistency.
     pub fn from_bytes(bytes: &[u8]) -> Result<Params> {
-        let mut cur = Cursor { b: bytes, i: 0 };
+        // Integrity first: files written since the checksum round end in
+        // `LMCC` + CRC32; a mismatch means truncation or bit-flips and
+        // must surface as a readable error, never as garbage params.
+        let has_trailer =
+            bytes.len() >= 8 && &bytes[bytes.len() - 8..bytes.len() - 4] == CRC_TRAILER_MAGIC;
+        let payload = if has_trailer {
+            check_crc_trailer(bytes, "params file")?
+        } else {
+            if bytes.len() >= PARAMS_MAGIC.len() && &bytes[..PARAMS_MAGIC.len()] == PARAMS_MAGIC {
+                eprintln!(
+                    "warning: params file has no CRC trailer (pre-checksum format); \
+                     loading unverified — re-save to add integrity checking"
+                );
+            }
+            bytes
+        };
+        let mut cur = Cursor::new(payload);
         let magic = cur.take(PARAMS_MAGIC.len())?;
         if magic != PARAMS_MAGIC {
             bail!("not an lmc params file (bad magic)");
@@ -119,7 +141,7 @@ impl Params {
             names.push(name);
             tensors.push(Tensor::from_vec(&shape, data));
         }
-        if cur.i != bytes.len() {
+        if cur.i != payload.len() {
             bail!("trailing bytes after tensor {} of {}", count, count);
         }
         Ok(Params { names, tensors })
@@ -138,32 +160,6 @@ impl Params {
         let bytes = std::fs::read(path)
             .map_err(|e| anyhow!("reading params from {}: {e}", path.display()))?;
         Params::from_bytes(&bytes).map_err(|e| anyhow!("{}: {e}", path.display()))
-    }
-}
-
-fn push_u32(out: &mut Vec<u8>, v: u32) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-/// Bounds-checked byte reader for [`Params::from_bytes`].
-struct Cursor<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
-            bail!("truncated params file at byte {} (wanted {} more)", self.i, n);
-        }
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
-        Ok(s)
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        let s = self.take(4)?;
-        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 }
 
@@ -216,6 +212,30 @@ impl Adam {
             v: params.tensors.iter().map(|t| vec![0f32; t.elems()]).collect(),
             t: 0,
         }
+    }
+
+    /// Optimizer state snapshot — first/second moments and the step
+    /// counter — for checkpointing.
+    pub fn state(&self) -> (&[Vec<f32>], &[Vec<f32>], u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Restore a snapshot captured by [`Adam::state`]; moment shapes
+    /// must match the params this optimizer was built for.
+    pub fn restore_state(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, t: u64) -> Result<()> {
+        let shape = |x: &[Vec<f32>]| x.iter().map(|e| e.len()).collect::<Vec<_>>();
+        if shape(&m) != shape(&self.m) || shape(&v) != shape(&self.v) {
+            bail!(
+                "adam moment shapes do not match the model: checkpoint {:?}/{:?}, model {:?}",
+                shape(&m),
+                shape(&v),
+                shape(&self.m)
+            );
+        }
+        self.m = m;
+        self.v = v;
+        self.t = t;
+        Ok(())
     }
 
     pub fn step(&mut self, params: &mut Params, grads: &[Tensor]) {
@@ -370,6 +390,58 @@ mod tests {
         let mut bad = good;
         bad[0] ^= 0xFF;
         assert!(Params::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn params_crc_detects_payload_corruption() {
+        let good = Params {
+            names: vec!["w".into()],
+            tensors: vec![Tensor::from_vec(&[2], vec![1.0, 2.0])],
+        }
+        .to_bytes();
+        // flip one bit inside a tensor's data: the trailer parses, the
+        // checksum doesn't — a readable error, not garbage floats
+        let mut flipped = good.clone();
+        let mid = good.len() - 12;
+        flipped[mid] ^= 0x01;
+        let err = Params::from_bytes(&flipped).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn params_legacy_files_without_trailer_still_load() {
+        let p = Params {
+            names: vec!["w".into()],
+            tensors: vec![Tensor::from_vec(&[2], vec![1.5, -2.5])],
+        };
+        let full = p.to_bytes();
+        // a pre-checksum file is exactly the payload without the trailer
+        let legacy = &full[..full.len() - 8];
+        let q = Params::from_bytes(legacy).unwrap();
+        assert_eq!(p.names, q.names);
+        assert_eq!(p.tensors[0].data, q.tensors[0].data);
+    }
+
+    #[test]
+    fn adam_state_roundtrip_and_shape_check() {
+        let mut p = quad_params();
+        let mut opt = Adam::new(&p, AdamConfig { lr: 0.1, ..Default::default() });
+        for _ in 0..3 {
+            let g = Tensor::from_vec(&[2], p.tensors[0].data.iter().map(|&x| 2.0 * x).collect());
+            opt.step(&mut p, &[g]);
+        }
+        let (m, v, t) = opt.state();
+        let (m, v) = (m.to_vec(), v.to_vec());
+        let mut opt2 = Adam::new(&quad_params(), AdamConfig { lr: 0.1, ..Default::default() });
+        opt2.restore_state(m.clone(), v.clone(), t).unwrap();
+        let mut pa = p.clone();
+        let mut pb = p.clone();
+        let g = Tensor::from_vec(&[2], vec![0.5, -0.25]);
+        opt.step(&mut pa, &[g.clone()]);
+        opt2.step(&mut pb, &[g]);
+        assert_eq!(pa.tensors[0].data, pb.tensors[0].data, "restored adam diverged");
+        // wrong moment shapes must be refused
+        assert!(opt2.restore_state(vec![vec![0.0; 3]], v, t).is_err());
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //! (`shards_one_is_bit_identical_to_plain_trainer`).
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -38,9 +39,11 @@ use super::metrics::RunMetrics;
 use super::params::Params;
 use super::trainer::{record_epoch, EpochObs, StepStats, Trainer};
 use crate::backend::{Executor, ModelSpec};
+use crate::checkpoint;
 use crate::config::RunConfig;
 use crate::graph::{load, Graph};
 use crate::partition::{partition, shard_graph, shard_views, PartitionConfig, ShardView};
+use crate::util::failpoint;
 use crate::util::Stopwatch;
 
 /// How sharded workers are synchronized at epoch barriers.
@@ -227,14 +230,70 @@ impl ShardedTrainer {
     /// One sharded epoch: every worker trains one epoch concurrently on the
     /// rayon pool, then the coordinator synchronizes at the barrier.
     /// Returns labeled-weighted aggregate stats across shards.
+    ///
+    /// When `cfg.worker_retries > 0`, the epoch is crash-tolerant: each
+    /// worker's state is snapshotted at the barrier before the epoch
+    /// starts, a worker that panics or errors is rolled back to that
+    /// snapshot and retried (its panic is caught; the other workers'
+    /// results stand), and only after the retry budget is exhausted does
+    /// the epoch fail with a readable error. Because workers interact only
+    /// at barriers, a recovered epoch is bit-identical to one that never
+    /// failed. Recovery is skipped at one worker so `shards = 1` stays
+    /// bit-identical to (and as cheap as) the plain serial trainer.
     pub fn train_epoch(&mut self) -> Result<StepStats> {
-        let stats: Vec<StepStats> = self
-            .workers
-            .par_iter_mut()
-            .map(|w| w.trainer.train_epoch())
-            .collect::<Result<Vec<_>>>()?;
+        let snapshot: Option<Vec<checkpoint::TrainerState>> =
+            if self.cfg.worker_retries > 0 && self.workers.len() > 1 {
+                Some(
+                    self.workers
+                        .iter()
+                        .map(|w| checkpoint::TrainerState::capture(&w.trainer))
+                        .collect(),
+                )
+            } else {
+                None
+            };
+        let mut results: Vec<Result<StepStats, String>> =
+            self.workers.par_iter_mut().map(run_worker_epoch).collect();
+        let mut retries_left = self.cfg.worker_retries;
+        while results.iter().any(|r| r.is_err()) {
+            let failed: Vec<(usize, String)> = results
+                .iter()
+                .enumerate()
+                .filter_map(|(i, r)| r.as_ref().err().map(|e| (i, e.clone())))
+                .collect();
+            let Some(snap) = &snapshot else {
+                return Err(anyhow!("{}", failed[0].1));
+            };
+            if retries_left == 0 {
+                let who: Vec<String> = failed.iter().map(|(i, _)| format!("worker {i}")).collect();
+                return Err(anyhow!(
+                    "sharded epoch {} failed after {} rollback retr{}: {} still failing \
+                     (last error: {}); raise --worker-retries or resume from the last \
+                     checkpoint with --resume",
+                    self.epochs_done + 1,
+                    self.cfg.worker_retries,
+                    if self.cfg.worker_retries == 1 { "y" } else { "ies" },
+                    who.join(", "),
+                    failed[0].1
+                ));
+            }
+            retries_left -= 1;
+            for (i, msg) in &failed {
+                eprintln!(
+                    "warning: {msg}; rolling back to the epoch-start snapshot and retrying \
+                     ({retries_left} more after this)"
+                );
+                snap[*i]
+                    .restore_into(&mut self.workers[*i].trainer)
+                    .map_err(|e| anyhow!("rolling back worker {i}: {e}"))?;
+                results[*i] = run_worker_epoch(&mut self.workers[*i]);
+            }
+        }
+        let stats: Vec<StepStats> =
+            results.into_iter().map(|r| r.expect("all failures handled above")).collect();
         self.epochs_done += 1;
         if self.cfg.sync_mode == SyncMode::HistoryExchange {
+            failpoint::fire("sharded.exchange")?;
             self.exchange_boundary_histories();
         }
         if self.epochs_done % self.cfg.sync_every.max(1) == 0 {
@@ -344,9 +403,15 @@ impl ShardedTrainer {
     /// Full sharded training run: the same epoch protocol as
     /// [`Trainer::run`] (shared via `record_epoch`), with evaluation of the
     /// averaged model on the parent graph.
+    ///
+    /// Starts after [`ShardedTrainer::epochs_done`] (0 on a fresh trainer,
+    /// the checkpoint epoch after [`ShardedTrainer::resume`]) and writes an
+    /// epoch-sync-barrier checkpoint — one manifest plus one state file per
+    /// shard — whenever `checkpoint_dir` is set and the epoch lands on the
+    /// `checkpoint_every` grid.
     pub fn run(&mut self) -> Result<RunMetrics> {
         let sw = Stopwatch::start();
-        for epoch in 1..=self.cfg.epochs {
+        for epoch in (self.epochs_done + 1)..=self.cfg.epochs {
             let es = Stopwatch::start();
             let stats = self.train_epoch()?;
             let epoch_secs = es.secs();
@@ -364,8 +429,82 @@ impl ShardedTrainer {
             if record_epoch(&mut self.metrics, &self.cfg, &sw, obs) {
                 break;
             }
+            self.maybe_checkpoint(epoch)?;
         }
         Ok(self.metrics.clone())
+    }
+
+    /// Completed sharded epochs ([`ShardedTrainer::run`] continues after
+    /// this count).
+    pub fn epochs_done(&self) -> usize {
+        self.epochs_done
+    }
+
+    /// Write an epoch-sync-barrier checkpoint (all workers) when one is
+    /// due.
+    fn maybe_checkpoint(&self, epoch: usize) -> Result<()> {
+        let Some(dir) = &self.cfg.checkpoint_dir else {
+            return Ok(());
+        };
+        if !checkpoint::due(epoch, self.cfg.checkpoint_every, self.cfg.epochs) {
+            return Ok(());
+        }
+        let states: Vec<checkpoint::TrainerState> =
+            self.workers.iter().map(|w| checkpoint::TrainerState::capture(&w.trainer)).collect();
+        let run = checkpoint::RunState { epochs_done: epoch, metrics: self.metrics.clone() };
+        checkpoint::save(
+            std::path::Path::new(dir),
+            &checkpoint::config_fingerprint(&self.cfg),
+            epoch,
+            &states,
+            &run,
+        )
+    }
+
+    /// Rebuild a sharded trainer from the latest checkpoint in `dir` —
+    /// one state per shard, written at an epoch-sync barrier — verifying
+    /// the config fingerprint and shard count. The resumed run continues
+    /// at `checkpoint epoch + 1`, bit-identically to the uninterrupted
+    /// run (`sharded_interrupt_then_resume_is_bit_identical`).
+    pub fn resume(
+        exec: Arc<dyn Executor>,
+        cfg: RunConfig,
+        dir: &std::path::Path,
+    ) -> Result<ShardedTrainer> {
+        let mut st = ShardedTrainer::new(exec, cfg)?;
+        let loaded =
+            checkpoint::load(dir, &checkpoint::config_fingerprint(&st.cfg), st.workers.len())?;
+        for (w, s) in st.workers.iter_mut().zip(&loaded.states) {
+            s.restore_into(&mut w.trainer)
+                .map_err(|e| anyhow!("restoring worker {}: {e}", w.id))?;
+        }
+        st.epochs_done = loaded.epoch;
+        st.metrics = loaded.run.metrics;
+        Ok(st)
+    }
+}
+
+/// Run one worker's epoch with the `sharded.worker` failpoint armed at
+/// the top, catching panics so a crashing worker can be rolled back and
+/// retried by the coordinator instead of aborting the whole run. The
+/// `Err` string carries the worker id and the panic payload (or training
+/// error) for the retry-budget report.
+fn run_worker_epoch(w: &mut WorkerState) -> Result<StepStats, String> {
+    let wid = w.id;
+    match catch_unwind(AssertUnwindSafe(|| {
+        failpoint::fire("sharded.worker")?;
+        w.trainer.train_epoch()
+    })) {
+        Ok(Ok(stats)) => Ok(stats),
+        Ok(Err(e)) => Err(format!("worker {wid} failed: {e:#}")),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err(format!("worker {wid} panicked: {msg}"))
+        }
     }
 }
 

@@ -12,6 +12,7 @@ use super::methods::Method;
 use super::metrics::{EpochRecord, RunMetrics};
 use super::params::{sgd_step, Adam, AdamConfig, Params};
 use crate::backend::{Executor, ModelSpec, StepInputs, StepWorkspace};
+use crate::checkpoint;
 use crate::config::RunConfig;
 use crate::graph::{load, Graph};
 use crate::history::History;
@@ -20,6 +21,7 @@ use crate::runtime::Tensor;
 use crate::sampler::{
     beta_vector, beta_vector_into, build_subgraph, Batcher, Buckets, SubgraphBatch, SubgraphCache,
 };
+use crate::util::failpoint;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -58,6 +60,9 @@ pub struct Trainer {
     /// SPIDER state (Appendix F): previous params + running estimator.
     spider_prev: Option<(Params, Vec<Tensor>)>,
     step_count: u64,
+    /// Completed-epoch counter; [`Trainer::run`] continues after it, so a
+    /// checkpoint-restored trainer resumes at the right epoch.
+    epochs_done: usize,
 }
 
 /// One mini-batch step's host-visible results.
@@ -158,11 +163,68 @@ impl Trainer {
             orig_of: perm,
             spider_prev: None,
             step_count: 0,
+            epochs_done: 0,
         })
+    }
+
+    /// Rebuild a trainer from the latest checkpoint in `dir`, verifying
+    /// the config fingerprint. The resumed run continues at
+    /// `checkpoint epoch + 1`; with an f32 history it is bit-identical to
+    /// the uninterrupted run (quantized stores round-trip their raw
+    /// words, so they too resume from exactly the bits they saved).
+    pub fn resume(
+        exec: Arc<dyn Executor>,
+        cfg: RunConfig,
+        dir: &std::path::Path,
+    ) -> Result<Trainer> {
+        let mut t = Trainer::new(exec, cfg)?;
+        let loaded = checkpoint::load(dir, &checkpoint::config_fingerprint(&t.cfg), 1)?;
+        loaded.states[0].restore_into(&mut t)?;
+        t.epochs_done = loaded.epoch;
+        t.metrics = loaded.run.metrics;
+        Ok(t)
     }
 
     pub fn arch_l(&self) -> usize {
         self.model.arch.l
+    }
+
+    /// Optimizer/SPIDER step counter (checkpointed).
+    pub fn step_count(&self) -> u64 {
+        self.step_count
+    }
+
+    pub(crate) fn set_step_count(&mut self, c: u64) {
+        self.step_count = c;
+    }
+
+    /// Completed epochs ([`Trainer::run`] continues after this count).
+    pub fn epochs_done(&self) -> usize {
+        self.epochs_done
+    }
+
+    pub(crate) fn set_epochs_done(&mut self, e: usize) {
+        self.epochs_done = e;
+    }
+
+    pub(crate) fn spider_state(&self) -> Option<&(Params, Vec<Tensor>)> {
+        self.spider_prev.as_ref()
+    }
+
+    pub(crate) fn set_spider_state(&mut self, s: Option<(Params, Vec<Tensor>)>) {
+        self.spider_prev = s;
+    }
+
+    /// Replace caches and scratch that a checkpoint restore invalidates —
+    /// or that a caught worker panic may have left poisoned (the
+    /// workspace mutex) or half-filled (the subgraph cache). Both rebuild
+    /// lazily and deterministically without consuming trainer RNG, so
+    /// replacing them never changes results.
+    pub(crate) fn reset_transient_state(&mut self) {
+        self.ws = Mutex::new(StepWorkspace::new());
+        let cache_ok =
+            SubgraphCache::applicable(self.cfg.subgraph_cache, self.batcher.mode(), &self.buckets);
+        self.sg_cache = SubgraphCache::new(cache_ok);
     }
 
     /// Run one mini-batch step end-to-end (sample -> execute -> write-back ->
@@ -181,6 +243,7 @@ impl Trainer {
     /// Step on a pre-built subgraph: gradients, then the method's optimizer
     /// update (Adam, or the SPIDER estimator for LMC-SPIDER).
     fn step_on(&mut self, sb: &SubgraphBatch) -> Result<(StepStats, Vec<Tensor>)> {
+        failpoint::fire("trainer.step")?;
         let (stats, grads) = self.grads_for_subgraph(sb, None, true)?;
         if self.cfg.method == Method::LmcSpider {
             self.spider_step(sb, &grads)?;
@@ -494,11 +557,17 @@ impl Trainer {
 
     /// Full training run with periodic evaluation; honors `target_acc` early
     /// stop (Table 2 protocol). Returns the metrics trace.
+    ///
+    /// Starts after [`Trainer::epochs_done`] (0 on a fresh trainer, the
+    /// checkpoint epoch after [`Trainer::resume`]) and writes an
+    /// epoch-boundary checkpoint whenever `checkpoint_dir` is set and the
+    /// epoch lands on the `checkpoint_every` grid.
     pub fn run(&mut self) -> Result<RunMetrics> {
         let sw = Stopwatch::start();
-        for epoch in 1..=self.cfg.epochs {
+        for epoch in (self.epochs_done + 1)..=self.cfg.epochs {
             let es = Stopwatch::start();
             let stats = self.train_epoch()?;
+            self.epochs_done = epoch;
             let epoch_secs = es.secs();
             let do_eval = epoch % self.cfg.eval_every.max(1) == 0 || epoch == self.cfg.epochs;
             let eval = if do_eval { Some(self.evaluate()?) } else { None };
@@ -514,8 +583,28 @@ impl Trainer {
             if record_epoch(&mut self.metrics, &self.cfg, &sw, obs) {
                 break;
             }
+            self.maybe_checkpoint(epoch)?;
         }
         Ok(self.metrics.clone())
+    }
+
+    /// Write an epoch-boundary checkpoint when one is due.
+    fn maybe_checkpoint(&self, epoch: usize) -> Result<()> {
+        let Some(dir) = &self.cfg.checkpoint_dir else {
+            return Ok(());
+        };
+        if !checkpoint::due(epoch, self.cfg.checkpoint_every, self.cfg.epochs) {
+            return Ok(());
+        }
+        let state = checkpoint::TrainerState::capture(self);
+        let run = checkpoint::RunState { epochs_done: epoch, metrics: self.metrics.clone() };
+        checkpoint::save(
+            std::path::Path::new(dir),
+            &checkpoint::config_fingerprint(&self.cfg),
+            epoch,
+            std::slice::from_ref(&state),
+            &run,
+        )
     }
 }
 

@@ -162,6 +162,15 @@ enum HistStore {
     F16(Vec<u16>),
 }
 
+/// Borrowed raw at-rest words of a [`LayerStore`] — the checkpoint
+/// serialization view. Which 16-bit encoding a `U16` view holds (bf16 or
+/// f16) is the store's [`HistDtype`]; the words are persisted verbatim so
+/// quantized stores round-trip bit-exactly.
+pub enum HistRaw<'a> {
+    F32(&'a [f32]),
+    U16(&'a [u16]),
+}
+
 #[derive(Clone, Debug)]
 pub struct LayerStore {
     pub d: usize,
@@ -303,6 +312,46 @@ impl LayerStore {
                     }
                 }
             }
+        }
+    }
+
+    /// Borrowed view of the raw at-rest words — the checkpoint encode
+    /// path, which must persist the store bit-exactly at its configured
+    /// dtype (no decode/re-encode round trip).
+    pub fn raw_words(&self) -> HistRaw<'_> {
+        match &self.store {
+            HistStore::F32(data) => HistRaw::F32(data),
+            HistStore::Bf16(data) | HistStore::F16(data) => HistRaw::U16(data),
+        }
+    }
+
+    /// Overwrite an f32 store from raw words (checkpoint decode); the
+    /// store's dtype and element count must match.
+    pub fn set_raw_f32(&mut self, words: &[f32]) -> Result<(), String> {
+        match &mut self.store {
+            HistStore::F32(data) if data.len() == words.len() => {
+                data.copy_from_slice(words);
+                Ok(())
+            }
+            HistStore::F32(data) => {
+                Err(format!("raw f32 word count {} != store size {}", words.len(), data.len()))
+            }
+            _ => Err(format!("raw f32 words offered to a {} store", self.dtype().name())),
+        }
+    }
+
+    /// Overwrite a bf16/f16 store from raw 16-bit words (checkpoint
+    /// decode); the store's dtype and element count must match.
+    pub fn set_raw_u16(&mut self, words: &[u16]) -> Result<(), String> {
+        match &mut self.store {
+            HistStore::Bf16(data) | HistStore::F16(data) if data.len() == words.len() => {
+                data.copy_from_slice(words);
+                Ok(())
+            }
+            HistStore::Bf16(data) | HistStore::F16(data) => {
+                Err(format!("raw u16 word count {} != store size {}", words.len(), data.len()))
+            }
+            _ => Err("raw u16 words offered to an f32 store".to_string()),
         }
     }
 
@@ -617,6 +666,35 @@ mod tests {
         let got = q.gather_h(1, &[0], 1)[0];
         assert_eq!(got.to_bits() & 0xFFFF, 0, "bf16 store held low mantissa bits");
         assert!((got - 1.0).abs() <= 1.0 / 256.0);
+    }
+
+    #[test]
+    fn raw_words_roundtrip_preserves_quantized_bits() {
+        for dtype in [HistDtype::F32, HistDtype::Bf16, HistDtype::F16] {
+            let mut a = History::with_dtype(5, &[3], dtype);
+            a.scatter_h(1, &[0, 2, 4], &[0.1, -2.7, 3.3, 1e-8, -0.0, 7.25, 0.333, 9.9, -1.5]);
+            let mut b = History::with_dtype(5, &[3], dtype);
+            match a.h[0].raw_words() {
+                HistRaw::F32(w) => b.h[0].set_raw_f32(w).unwrap(),
+                HistRaw::U16(w) => b.h[0].set_raw_u16(w).unwrap(),
+            }
+            // the copy is word-exact, not value-approximate
+            match (a.h[0].raw_words(), b.h[0].raw_words()) {
+                (HistRaw::F32(x), HistRaw::F32(y)) => assert_eq!(
+                    x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    y.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                ),
+                (HistRaw::U16(x), HistRaw::U16(y)) => assert_eq!(x, y),
+                _ => panic!("dtype drifted"),
+            }
+        }
+        // mismatched dtype or length is refused
+        let mut f32s = History::with_dtype(2, &[2], HistDtype::F32);
+        assert!(f32s.h[0].set_raw_u16(&[0, 0, 0, 0]).is_err());
+        assert!(f32s.h[0].set_raw_f32(&[0.0; 3]).is_err());
+        let mut halves = History::with_dtype(2, &[2], HistDtype::Bf16);
+        assert!(halves.h[0].set_raw_f32(&[0.0; 4]).is_err());
+        assert!(halves.h[0].set_raw_u16(&[0; 5]).is_err());
     }
 
     #[test]

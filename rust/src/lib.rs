@@ -15,6 +15,7 @@
 //!     compensation kernels.
 
 pub mod backend;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

@@ -31,6 +31,7 @@ use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, quality::quality, PartitionConfig};
 use lmc::serve::{BatchPolicy, MicroBatcher, ServeEngine, ServeMode, ServeRequest};
 use lmc::util::cli::Args;
+use lmc::util::failpoint;
 use lmc::util::json::Json;
 
 fn main() {
@@ -77,8 +78,11 @@ subcommands:
                    [--backend native|pjrt] [--epochs N] [--lr F]
                    [--clusters-per-batch C] [--parts K]
                    [--shards S] [--sync-every K] [--sync-mode avg|hist]
+                   [--worker-retries N]
                    [--beta-alpha F] [--beta-score x2|2x-x2|x|1|sinx]
                    [--history-dtype f32|bf16|f16]
+                   [--checkpoint-dir DIR] [--checkpoint-every N]
+                   [--resume DIR]   continue from the last checkpoint in DIR
                    [--target-acc F] [--config file.toml] [--seed N]
                    [--save-params FILE] [--verbose]
   eval             exact inference with fresh params (pipeline smoke test)
@@ -87,7 +91,9 @@ subcommands:
                    [--serve-mode exact|cached] [--serve-beta F]
   serve            JSONL request loop on stdin ('[ids...]' or
                    '{\"id\":N,\"nodes\":[ids...]}' per line; one JSON response
-                   per request on stdout, status on stderr)
+                   per request on stdout, status on stderr; on stdin EOF or
+                   SIGTERM the queue is drained and answered, then a final
+                   {\"op\":\"shutdown\",\"served\":N} line is emitted)
                    [--params FILE] [--serve-mode exact|cached]
                    [--serve-max-batch N] [--serve-max-wait-ms MS]
                    [--serve-beta F] [--history-dtype f32|bf16|f16]
@@ -99,6 +105,11 @@ subcommands:
                    [--summary FILE]   diff gated phases, exit 1 on regression
   experiment ID    table1|table2|table3|table6|table7|table8|table9|
                    fig2|fig3|fig4|fig5|sharded|all   [--out results/]
+
+environment:
+  LMC_FAILPOINTS   fault-injection seam for crash-safety testing:
+                   site:when:action[,...] (see rust/README.md § Fault
+                   tolerance for the site list and grammar)
 ";
 
 fn make_trainer(args: &Args) -> Result<Trainer> {
@@ -111,9 +122,24 @@ fn make_trainer(args: &Args) -> Result<Trainer> {
 fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = RunConfig::default();
     cfg.apply_cli(args)?;
+    let resume_dir = args.opt("resume");
+    if let Some(dir) = resume_dir {
+        // resuming implies continued checkpointing into the same directory
+        // unless --checkpoint-dir points elsewhere
+        if cfg.checkpoint_dir.is_none() {
+            cfg.checkpoint_dir = Some(dir.to_string());
+        }
+    }
     let exec = make_executor(&cfg)?;
     if cfg.shards > 1 {
-        let mut st = ShardedTrainer::new(exec, cfg)?;
+        let mut st = match resume_dir {
+            Some(dir) => {
+                let st = ShardedTrainer::resume(exec, cfg, Path::new(dir))?;
+                println!("resumed from {dir} (epoch {})", st.epochs_done());
+                st
+            }
+            None => ShardedTrainer::new(exec, cfg)?,
+        };
         println!(
             "training {} / {} / {} on {} backend — {} nodes, {} shards, sync {} every {} epoch(s), {} epochs",
             st.cfg.dataset.name(),
@@ -139,7 +165,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             args,
         );
     }
-    let mut trainer = Trainer::new(exec, cfg)?;
+    let mut trainer = match resume_dir {
+        Some(dir) => {
+            let t = Trainer::resume(exec, cfg, Path::new(dir))?;
+            println!("resumed from {dir} (epoch {})", t.epochs_done());
+            t
+        }
+        None => Trainer::new(exec, cfg)?,
+    };
     println!(
         "training {} / {} / {} on {} backend — {} nodes, {} clusters, {} epochs",
         trainer.cfg.dataset.name(),
@@ -287,6 +320,14 @@ fn print_answers(answers: &[(u64, Vec<lmc::serve::Prediction>)]) -> usize {
 /// each request is retried alone and only the offender gets an error
 /// response.
 fn answer_batch(engine: &ServeEngine, batch: &[ServeRequest]) -> usize {
+    if let Err(e) = failpoint::fire("serve.request") {
+        // injected request-path failure: every request in the batch gets
+        // an error response, the loop itself stays up
+        for r in batch {
+            print_error_line(Some(r.id), &format!("{e:#}"));
+        }
+        return 0;
+    }
     match engine.answer(batch) {
         Ok(answers) => print_answers(&answers),
         Err(_) => {
@@ -302,10 +343,81 @@ fn answer_batch(engine: &ServeEngine, batch: &[ServeRequest]) -> usize {
     }
 }
 
+/// SIGTERM handling without a libc crate: a direct `extern "C"` binding
+/// to `signal(2)` flips an atomic flag the serve loop polls, so a
+/// terminated service drains and answers its queue before exiting
+/// instead of dropping requests on the floor.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    type Handler = extern "C" fn(i32);
+
+    extern "C" {
+        fn signal(signum: i32, handler: Handler) -> usize;
+    }
+
+    extern "C" fn on_term(_signum: i32) {
+        // async-signal-safe: a single atomic store
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    const SIGTERM: i32 = 15;
+
+    pub fn install_term_handler() {
+        unsafe {
+            signal(SIGTERM, on_term);
+        }
+    }
+
+    pub fn term_requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install_term_handler() {}
+
+    pub fn term_requested() -> bool {
+        false
+    }
+}
+
+/// Parse and enqueue one stdin line; returns the number of predictions
+/// served by any batch this line flushed.
+fn handle_line(
+    engine: &ServeEngine,
+    mb: &mut MicroBatcher,
+    line: &str,
+    next_id: &mut u64,
+    clock: Instant,
+) -> usize {
+    if line.trim().is_empty() {
+        return 0;
+    }
+    let now = clock.elapsed().as_millis() as u64;
+    match parse_request(line, next_id) {
+        Ok(req) => match mb.push(req, now) {
+            Some(batch) => answer_batch(engine, &batch),
+            None => 0,
+        },
+        // a malformed line gets an error response, not a service abort:
+        // queued requests stay alive
+        Err(e) => {
+            print_error_line(None, &format!("{e:#}"));
+            0
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = RunConfig::default();
     cfg.apply_cli(args)?;
     let engine = make_engine(args)?;
+    sig::install_term_handler();
     eprintln!(
         "serving {} / {} on the native backend — {} nodes, {} mode, tiles of {} node(s), \
          flush at {} queued node(s) or {} ms",
@@ -342,23 +454,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     });
     let wait = Duration::from_millis(cfg.serve_max_wait_ms.max(1));
+    let reason;
     loop {
+        if sig::term_requested() {
+            reason = "sigterm";
+            break;
+        }
         match rx.recv_timeout(wait) {
             Ok(line) => {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let now = clock.elapsed().as_millis() as u64;
-                match parse_request(&line, &mut next_id) {
-                    Ok(req) => {
-                        if let Some(batch) = mb.push(req, now) {
-                            served += answer_batch(&engine, &batch);
-                        }
-                    }
-                    // a malformed line gets an error response, not a
-                    // service abort: queued requests stay alive
-                    Err(e) => print_error_line(None, &format!("{e:#}")),
-                }
+                served += handle_line(&engine, &mut mb, &line, &mut next_id, clock);
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 let now = clock.elapsed().as_millis() as u64;
@@ -366,15 +470,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     served += answer_batch(&engine, &batch);
                 }
             }
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                reason = "eof";
+                break;
+            }
+        }
+    }
+    // Graceful shutdown: requests already read from stdin are still
+    // answered. On SIGTERM the channel may hold lines the loop never got
+    // to; drain them first, then flush whatever sits in the micro-batcher.
+    if reason == "sigterm" {
+        while let Ok(line) = rx.try_recv() {
+            served += handle_line(&engine, &mut mb, &line, &mut next_id, clock);
         }
     }
     if let Some(batch) = mb.flush() {
         served += answer_batch(&engine, &batch);
     }
-    let _ = reader.join();
+    if reason == "eof" {
+        // after SIGTERM the reader may be blocked in stdin.read forever;
+        // join only on EOF, where it is guaranteed to have exited
+        let _ = reader.join();
+    }
+    let mut top = BTreeMap::new();
+    top.insert("op".to_string(), Json::Str("shutdown".to_string()));
+    top.insert("reason".to_string(), Json::Str(reason.to_string()));
+    top.insert("served".to_string(), Json::Num(served as f64));
+    println!("{}", Json::Obj(top));
     eprintln!(
-        "served {served} node prediction(s) in {:.3}s (backend busy {:.3}s)",
+        "served {served} node prediction(s) in {:.3}s (backend busy {:.3}s, shutdown: {reason})",
         clock.elapsed().as_secs_f64(),
         engine.exec().exec_secs()
     );

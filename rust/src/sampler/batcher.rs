@@ -69,6 +69,17 @@ impl Batcher {
         self.clusters.len() as f32 / self.clusters_per_batch as f32
     }
 
+    /// Raw RNG stream position — checkpointed so a resumed run replays
+    /// the exact epoch shuffles the uninterrupted run would have drawn.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore a stream position saved by [`Batcher::rng_state`].
+    pub fn restore_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
     /// Mini-batches (node-id lists) for one epoch.
     pub fn epoch_batches(&mut self) -> Vec<Vec<u32>> {
         match self.mode {

@@ -1,0 +1,201 @@
+//! Little-endian byte-stream helpers shared by the on-disk formats
+//! (`LMCPAR1` params, `LMCCKPT1` checkpoints): push/read primitives, a
+//! bounds-checked cursor, and the CRC32 integrity trailer both formats
+//! append so truncation or bit-flips surface as a readable error instead
+//! of garbage state.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+pub fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// f64 as raw LE bits — bitwise round-trip, NaN payloads included.
+pub fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn push_f32_slice(out: &mut Vec<u8>, vs: &[f32]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn push_u16_slice(out: &mut Vec<u8>, vs: &[u16]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn push_str(out: &mut Vec<u8>, s: &str) {
+    push_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked reader over a byte slice; every decode error is a
+/// readable `anyhow` message rather than a panic or silent wrap.
+pub struct Cursor<'a> {
+    pub b: &'a [u8],
+    pub i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, i: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!(
+                "truncated input: wanted {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            );
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn u16_vec(&mut self, n: usize) -> Result<Vec<u16>> {
+        let raw = self.take(n * 2)?;
+        Ok(raw.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn u64_vec(&mut self, n: usize) -> Result<Vec<u64>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        Ok(String::from_utf8(raw.to_vec())?)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+}
+
+/// Magic prefix of the 8-byte integrity trailer: `b"LMCC"` + CRC32 (LE)
+/// of every byte before the trailer.
+pub const CRC_TRAILER_MAGIC: &[u8; 4] = b"LMCC";
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), byte-at-a-time table
+/// driven — plenty for integrity checking at checkpoint sizes.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Append the `LMCC` + CRC32 trailer covering everything currently in
+/// `out`.
+pub fn append_crc_trailer(out: &mut Vec<u8>) {
+    let c = crc32(out);
+    out.extend_from_slice(CRC_TRAILER_MAGIC);
+    out.extend_from_slice(&c.to_le_bytes());
+}
+
+/// Verify and strip a required `LMCC` trailer, returning the payload.
+pub fn check_crc_trailer<'a>(bytes: &'a [u8], what: &str) -> Result<&'a [u8]> {
+    if bytes.len() < 8 {
+        bail!("{what}: too short to carry the CRC trailer ({} bytes)", bytes.len());
+    }
+    let (payload, trailer) = bytes.split_at(bytes.len() - 8);
+    if &trailer[..4] != CRC_TRAILER_MAGIC {
+        bail!("{what}: missing CRC trailer magic (file truncated or not this format)");
+    }
+    let stored = u32::from_le_bytes(trailer[4..].try_into().unwrap());
+    let actual = crc32(payload);
+    if stored != actual {
+        bail!(
+            "{what}: checksum mismatch (stored {stored:08x}, computed {actual:08x}) — \
+             the file is truncated or bit-flipped"
+        );
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard check value for the IEEE polynomial.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn trailer_roundtrip_and_corruption_detection() {
+        let mut buf = b"some payload bytes".to_vec();
+        append_crc_trailer(&mut buf);
+        let payload = check_crc_trailer(&buf, "test").unwrap();
+        assert_eq!(payload, b"some payload bytes");
+        // flip one payload bit
+        let mut bad = buf.clone();
+        bad[3] ^= 0x40;
+        let err = check_crc_trailer(&bad, "test").unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // truncate into the trailer
+        bad = buf[..buf.len() - 1].to_vec();
+        assert!(check_crc_trailer(&bad, "test").is_err());
+    }
+
+    #[test]
+    fn cursor_reports_truncation() {
+        let mut out = Vec::new();
+        push_u32(&mut out, 7);
+        push_str(&mut out, "hi");
+        let mut cur = Cursor::new(&out);
+        assert_eq!(cur.u32().unwrap(), 7);
+        assert_eq!(cur.str().unwrap(), "hi");
+        assert_eq!(cur.remaining(), 0);
+        let err = cur.u64().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+}

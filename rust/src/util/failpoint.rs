@@ -1,0 +1,239 @@
+//! Env-driven fault-injection seam for crash-safety testing.
+//!
+//! `LMC_FAILPOINTS=site:when:action[,site:when:action...]` arms named
+//! sites in the trainer step loop, sharded worker bodies, history
+//! exchange, checkpoint IO, and the serve request path:
+//!
+//! * `when` — `N` (the Nth hit of that site, 1-based), `N+` (every hit
+//!   from the Nth on), or `*` (every hit);
+//! * `action` — `panic` (unwind at the site), `io-error` (the site
+//!   returns an injected `Err`), `torn-write` (file-write sites only:
+//!   write half the bytes to the temp file, then fail), or `sleep`
+//!   (block ~120 s so an external harness can SIGKILL the process
+//!   mid-run).
+//!
+//! When the variable is unset the seam is a single relaxed atomic load
+//! per site visit — effectively free in the hot loop. Malformed entries
+//! are reported to stderr and ignored rather than silently arming.
+//!
+//! Sites currently wired: `trainer.step`, `sharded.worker`,
+//! `sharded.exchange`, `ckpt.save`, `ckpt.load`, `ckpt.write`,
+//! `serve.request` (see rust/README.md § Fault tolerance).
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    Panic,
+    IoError,
+    TornWrite,
+    Sleep,
+}
+
+struct Rule {
+    site: String,
+    /// 1-based inclusive hit window `[from, to]` this rule triggers in.
+    from: u64,
+    to: u64,
+    action: Action,
+    hits: AtomicU64,
+}
+
+const ST_UNINIT: u8 = 0;
+const ST_DISARMED: u8 = 1;
+const ST_ARMED: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(ST_UNINIT);
+
+fn rules() -> &'static RwLock<Vec<Rule>> {
+    static RULES: OnceLock<RwLock<Vec<Rule>>> = OnceLock::new();
+    RULES.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+fn parse_when(s: &str) -> Option<(u64, u64)> {
+    if s == "*" {
+        return Some((1, u64::MAX));
+    }
+    if let Some(n) = s.strip_suffix('+') {
+        return n.parse::<u64>().ok().filter(|&n| n > 0).map(|n| (n, u64::MAX));
+    }
+    s.parse::<u64>().ok().filter(|&n| n > 0).map(|n| (n, n))
+}
+
+fn parse_spec(spec: &str) -> Vec<Rule> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let parts: Vec<&str> = entry.split(':').collect();
+        let parsed = match parts.as_slice() {
+            [site, when, action] => {
+                let action = match *action {
+                    "panic" => Some(Action::Panic),
+                    "io-error" => Some(Action::IoError),
+                    "torn-write" => Some(Action::TornWrite),
+                    "sleep" => Some(Action::Sleep),
+                    _ => None,
+                };
+                parse_when(when).zip(action).map(|((from, to), action)| Rule {
+                    site: site.to_string(),
+                    from,
+                    to,
+                    action,
+                    hits: AtomicU64::new(0),
+                })
+            }
+            _ => None,
+        };
+        match parsed {
+            Some(rule) => out.push(rule),
+            None => eprintln!(
+                "warning: ignoring malformed LMC_FAILPOINTS entry {entry:?} \
+                 (expected site:when:action, when = N|N+|*, \
+                 action = panic|io-error|torn-write|sleep)"
+            ),
+        }
+    }
+    out
+}
+
+fn install(parsed: Vec<Rule>) {
+    let mut w = rules().write().unwrap();
+    let armed = !parsed.is_empty();
+    *w = parsed;
+    STATE.store(if armed { ST_ARMED } else { ST_DISARMED }, Ordering::SeqCst);
+}
+
+fn init_from_env() {
+    install(parse_spec(&std::env::var("LMC_FAILPOINTS").unwrap_or_default()));
+}
+
+/// Replace the armed rules (tests; bypasses the env). An empty spec
+/// disarms every site.
+pub fn set_for_test(spec: &str) {
+    install(parse_spec(spec));
+}
+
+fn check_slow(site: &str) -> Option<Action> {
+    let r = rules().read().unwrap();
+    let mut fire = None;
+    for rule in r.iter().filter(|r| r.site == site) {
+        // Every matching rule's hit counter advances on every visit, so
+        // exact-N windows stay aligned even when several rules share a
+        // site; the first rule whose window contains this visit wins.
+        let hit = rule.hits.fetch_add(1, Ordering::SeqCst) + 1;
+        if fire.is_none() && hit >= rule.from && hit <= rule.to {
+            fire = Some(rule.action);
+        }
+    }
+    fire
+}
+
+/// Consult the seam at `site`. `None` means proceed normally; callers
+/// with special handling (the torn-write file sites) branch on the
+/// action themselves, everyone else goes through [`fire`].
+#[inline]
+pub fn check(site: &str) -> Option<Action> {
+    match STATE.load(Ordering::Relaxed) {
+        ST_DISARMED => None,
+        ST_UNINIT => {
+            init_from_env();
+            check_slow(site)
+        }
+        _ => check_slow(site),
+    }
+}
+
+/// Visit the seam at `site` and perform the armed action, if any:
+/// panic, return an injected error, or sleep. A `torn-write` rule on a
+/// non-write site degrades to an injected error.
+#[inline]
+pub fn fire(site: &str) -> Result<()> {
+    match check(site) {
+        None => Ok(()),
+        Some(Action::Panic) => panic!("failpoint {site}: injected panic"),
+        Some(Action::IoError) => Err(anyhow!("failpoint {site}: injected io error")),
+        Some(Action::TornWrite) => {
+            Err(anyhow!("failpoint {site}: torn-write armed at a non-write site"))
+        }
+        Some(Action::Sleep) => {
+            eprintln!("failpoint {site}: sleeping (waiting to be killed)");
+            std::thread::sleep(std::time::Duration::from_secs(120));
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex;
+
+    use super::*;
+
+    // The rule table is process-global; tests that arm it must not
+    // interleave.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disarmed_seam_is_a_noop() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_for_test("");
+        for _ in 0..100 {
+            assert!(fire("trainer.step").is_ok());
+        }
+    }
+
+    #[test]
+    fn exact_hit_window_fires_once() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_for_test("a.site:3:io-error");
+        assert!(fire("a.site").is_ok());
+        assert!(fire("other.site").is_ok(), "site names must not cross-fire");
+        assert!(fire("a.site").is_ok());
+        let err = fire("a.site").unwrap_err().to_string();
+        assert!(err.contains("a.site") && err.contains("injected"), "{err}");
+        assert!(fire("a.site").is_ok(), "exact window must not refire");
+        set_for_test("");
+    }
+
+    #[test]
+    fn from_hit_window_fires_repeatedly() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_for_test("b.site:2+:io-error");
+        assert!(fire("b.site").is_ok());
+        assert!(fire("b.site").is_err());
+        assert!(fire("b.site").is_err());
+        set_for_test("");
+    }
+
+    #[test]
+    fn panic_action_unwinds_with_site_name() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_for_test("c.site:1:panic");
+        let r = std::panic::catch_unwind(|| fire("c.site"));
+        set_for_test("");
+        let payload = r.unwrap_err();
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("c.site"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_entries_are_ignored() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_for_test("nonsense,too:few,x.site:0:panic,y.site:abc:panic,z.site:1:explode");
+        assert!(fire("x.site").is_ok());
+        assert!(fire("y.site").is_ok());
+        assert!(fire("z.site").is_ok());
+        set_for_test("");
+    }
+
+    #[test]
+    fn check_exposes_raw_action_for_write_sites() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        set_for_test("w.site:1:torn-write");
+        assert_eq!(check("w.site"), Some(Action::TornWrite));
+        assert_eq!(check("w.site"), None);
+        set_for_test("");
+    }
+}

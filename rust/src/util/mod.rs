@@ -3,7 +3,9 @@
 //! bench timing (`criterion`), CSV/markdown table emission.
 
 pub mod bench;
+pub mod bytes;
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod perfgate;
 pub mod rng;

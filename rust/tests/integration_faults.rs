@@ -1,0 +1,342 @@
+//! Integration: crash safety. Kill-and-resume bit-identity for the serial
+//! and sharded trainers (in-process via failpoints and out-of-process via
+//! SIGKILL of a spawned `lmc train`), sharded worker rollback recovery,
+//! retry-budget exhaustion, torn checkpoint writes leaving the previous
+//! epoch resumable, and config-fingerprint refusal.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use lmc::backend::{Executor, NativeExecutor};
+use lmc::checkpoint;
+use lmc::config::RunConfig;
+use lmc::coordinator::{Method, Params, ShardedTrainer, Trainer};
+use lmc::graph::DatasetId;
+use lmc::util::failpoint;
+use lmc::util::json::Json;
+
+/// The failpoint rule table is process-global; every test that trains
+/// in-process must hold this so an armed rule never leaks into a
+/// neighbouring test's run.
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new())
+}
+
+/// cora-sim defaults: 8 parts, 2 clusters/batch — 4 `trainer.step` hits
+/// per serial epoch, 16 per sharded epoch at shards=4 (4 per worker).
+fn cfg(epochs: usize, shards: usize) -> RunConfig {
+    RunConfig {
+        dataset: DatasetId::CoraSim,
+        arch: "gcn".into(),
+        method: Method::Lmc,
+        epochs,
+        eval_every: usize::MAX,
+        seed: 1,
+        shards,
+        ..Default::default()
+    }
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lmc_faults_{}_{}", name, std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+fn bits(p: &Params) -> Vec<Vec<u32>> {
+    p.tensors.iter().map(|t| t.data.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// Kill a serial run at `trainer.step` hit `hit` via an injected io error,
+/// resume from the last epoch checkpoint, and require the finished run to
+/// be bit-identical to an uninterrupted control.
+fn serial_kill_resume_at(hit: u64, name: &str) {
+    let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = temp_dir(name);
+
+    let mut control = Trainer::new(exec(), cfg(5, 1)).unwrap();
+    let control_metrics = control.run().unwrap();
+
+    let mut c = cfg(5, 1);
+    c.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    failpoint::set_for_test(&format!("trainer.step:{hit}:io-error"));
+    let mut victim = Trainer::new(exec(), c.clone()).unwrap();
+    let err = victim.run().unwrap_err();
+    failpoint::set_for_test("");
+    assert!(format!("{err:#}").contains("injected io error"), "unexpected error: {err:#}");
+    drop(victim);
+
+    let mut resumed = Trainer::resume(exec(), c, &dir).unwrap();
+    let resumed_metrics = resumed.run().unwrap();
+
+    assert_eq!(bits(&control.params), bits(&resumed.params), "params diverged after resume");
+    assert_eq!(control_metrics.records.len(), resumed_metrics.records.len());
+    for (a, b) in control_metrics.records.iter().zip(&resumed_metrics.records) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "epoch {} loss", a.epoch);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serial_kill_mid_epoch_resume_is_bit_identical() {
+    // Hit 6 = epoch 2, step 2: dies mid-epoch, resumes from epoch 1.
+    serial_kill_resume_at(6, "serial_mid");
+}
+
+#[test]
+fn serial_kill_at_epoch_start_resume_is_bit_identical() {
+    // Hit 9 = epoch 3, step 1: dies on the first step after a checkpoint.
+    serial_kill_resume_at(9, "serial_start");
+}
+
+#[test]
+fn sharded_interrupt_then_resume_is_bit_identical() {
+    let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = temp_dir("sharded_resume");
+
+    let mut control = ShardedTrainer::new(exec(), cfg(4, 4)).unwrap();
+    control.run().unwrap();
+
+    // retries=0 so the injected failure aborts the run instead of being
+    // rolled back; hit 9 = the first worker body of epoch 3.
+    let mut c = cfg(4, 4);
+    c.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    c.worker_retries = 0;
+    failpoint::set_for_test("sharded.worker:9:io-error");
+    let mut victim = ShardedTrainer::new(exec(), c.clone()).unwrap();
+    let err = victim.run().unwrap_err();
+    failpoint::set_for_test("");
+    assert!(format!("{err:#}").contains("worker"), "unexpected error: {err:#}");
+    drop(victim);
+
+    let mut resumed = ShardedTrainer::resume(exec(), c, &dir).unwrap();
+    assert_eq!(resumed.epochs_done(), 2, "should resume from the epoch-2 barrier");
+    resumed.run().unwrap();
+
+    for w in 0..control.num_workers() {
+        assert_eq!(
+            bits(&control.workers[w].trainer.params),
+            bits(&resumed.workers[w].trainer.params),
+            "worker {w} params diverged after resume"
+        );
+    }
+    assert_eq!(bits(&control.averaged_params()), bits(&resumed.averaged_params()));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_worker_panic_at_epoch_start_recovers_bit_identically() {
+    let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+
+    let mut control = ShardedTrainer::new(exec(), cfg(3, 4)).unwrap();
+    control.run().unwrap();
+
+    // Hit 6 = the second worker body of epoch 2 panics before training;
+    // the default retry budget rebuilds it from the barrier snapshot.
+    failpoint::set_for_test("sharded.worker:6:panic");
+    let mut t = ShardedTrainer::new(exec(), cfg(3, 4)).unwrap();
+    let r = t.run();
+    failpoint::set_for_test("");
+    r.unwrap();
+
+    for w in 0..control.num_workers() {
+        assert_eq!(
+            bits(&control.workers[w].trainer.params),
+            bits(&t.workers[w].trainer.params),
+            "worker {w} params diverged after recovery"
+        );
+    }
+    assert_eq!(bits(&control.averaged_params()), bits(&t.averaged_params()));
+}
+
+#[test]
+fn sharded_worker_panic_mid_epoch_rolls_back_partial_state() {
+    let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+
+    let mut control = ShardedTrainer::new(exec(), cfg(3, 4)).unwrap();
+    control.run().unwrap();
+
+    // 16 trainer.step hits per sharded epoch: hit 20 panics some worker
+    // partway through epoch 2, after it has already advanced params and
+    // history. Recovery must discard that partial progress.
+    failpoint::set_for_test("trainer.step:20:panic");
+    let mut t = ShardedTrainer::new(exec(), cfg(3, 4)).unwrap();
+    let r = t.run();
+    failpoint::set_for_test("");
+    r.unwrap();
+
+    for w in 0..control.num_workers() {
+        assert_eq!(
+            bits(&control.workers[w].trainer.params),
+            bits(&t.workers[w].trainer.params),
+            "worker {w} params diverged after mid-epoch rollback"
+        );
+    }
+}
+
+#[test]
+fn sharded_retry_budget_exhaustion_is_a_readable_error() {
+    let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+
+    failpoint::set_for_test("sharded.worker:1+:panic");
+    let mut t = ShardedTrainer::new(exec(), cfg(2, 4)).unwrap();
+    let err = t.run().unwrap_err();
+    failpoint::set_for_test("");
+
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--worker-retries"), "not actionable: {msg}");
+    assert!(msg.contains("panicked"), "should carry the last worker error: {msg}");
+}
+
+#[test]
+fn torn_shard_write_preserves_previous_checkpoint() {
+    let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = temp_dir("torn_shard");
+
+    // 3 ckpt.write hits per serial checkpoint (shard, run, manifest):
+    // hit 4 tears the epoch-2 shard file mid-write.
+    let mut c = cfg(3, 1);
+    c.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    failpoint::set_for_test("ckpt.write:4:torn-write");
+    let mut victim = Trainer::new(exec(), c.clone()).unwrap();
+    let err = victim.run().unwrap_err();
+    failpoint::set_for_test("");
+    assert!(format!("{err:#}").contains("torn write"), "unexpected error: {err:#}");
+    drop(victim);
+
+    // The epoch-1 checkpoint is untouched and loadable.
+    let loaded = checkpoint::load(&dir, &checkpoint::config_fingerprint(&c), 1).unwrap();
+    assert_eq!(loaded.epoch, 1);
+
+    let mut control = Trainer::new(exec(), cfg(3, 1)).unwrap();
+    control.run().unwrap();
+    let mut resumed = Trainer::resume(exec(), c, &dir).unwrap();
+    resumed.run().unwrap();
+    assert_eq!(bits(&control.params), bits(&resumed.params));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_manifest_write_keeps_manifest_on_previous_epoch() {
+    let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = temp_dir("torn_manifest");
+
+    // Hit 6 tears the epoch-2 manifest: the epoch-2 state files land but
+    // the commit point never moves, so epoch 1 stays the live checkpoint.
+    let mut c = cfg(3, 1);
+    c.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    failpoint::set_for_test("ckpt.write:6:torn-write");
+    let mut victim = Trainer::new(exec(), c.clone()).unwrap();
+    assert!(victim.run().is_err());
+    failpoint::set_for_test("");
+    drop(victim);
+
+    let loaded = checkpoint::load(&dir, &checkpoint::config_fingerprint(&c), 1).unwrap();
+    assert_eq!(loaded.epoch, 1, "manifest must still point at epoch 1");
+
+    let mut resumed = Trainer::resume(exec(), c, &dir).unwrap();
+    resumed.run().unwrap();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_refuses_incompatible_config_and_missing_checkpoint() {
+    let _g = FP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = temp_dir("fp_mismatch");
+
+    let mut c = cfg(2, 1);
+    c.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    Trainer::new(exec(), c.clone()).unwrap().run().unwrap();
+
+    let mut c2 = c.clone();
+    c2.seed = 2;
+    let err = Trainer::resume(exec(), c2, &dir).unwrap_err();
+    assert!(format!("{err:#}").contains("incompatible config"), "{err:#}");
+
+    let missing = temp_dir("fp_missing");
+    let err = Trainer::resume(exec(), c, &missing).unwrap_err();
+    assert!(format!("{err:#}").contains("no resumable checkpoint"), "{err:#}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Out-of-process crash: spawn `lmc train`, SIGKILL it mid-epoch-3 while
+/// a failpoint holds it asleep, resume in a fresh process, and require
+/// the saved params file to be byte-identical to an uninterrupted run
+/// (LMCPAR1 files are deterministic, so byte equality ⟺ param equality).
+#[test]
+fn external_sigkill_and_resume_matches_uninterrupted_run() {
+    use std::process::{Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    let base = temp_dir("extkill");
+    fs::create_dir_all(&base).unwrap();
+    let ckpt = base.join("ckpt");
+    let ctrl = base.join("ctrl.bin");
+    let res = base.join("res.bin");
+    let bin = env!("CARGO_BIN_EXE_lmc");
+    fn train_cmd(bin: &str) -> Command {
+        let mut c = Command::new(bin);
+        c.args(["train", "--dataset", "cora-sim", "--arch", "gcn"]);
+        c.args(["--method", "lmc", "--epochs", "6", "--seed", "1"]);
+        c
+    }
+
+    let status = train_cmd(bin)
+        .arg("--save-params")
+        .arg(&ctrl)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "control run failed");
+
+    // Victim checkpoints epochs 1 and 2, then sleeps at epoch 3, step 2.
+    let mut child = train_cmd(bin)
+        .arg("--checkpoint-dir")
+        .arg(&ckpt)
+        .env("LMC_FAILPOINTS", "trainer.step:10:sleep")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+
+    let manifest = ckpt.join("MANIFEST.json");
+    let deadline = Instant::now() + Duration::from_secs(110);
+    loop {
+        let epoch = fs::read_to_string(&manifest)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .and_then(|j| j.get("epoch").and_then(Json::as_usize));
+        if epoch == Some(2) {
+            break;
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            panic!("victim never committed the epoch-2 checkpoint");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    child.kill().unwrap(); // SIGKILL: no destructors, no flush
+    let _ = child.wait();
+
+    let status = train_cmd(bin)
+        .arg("--resume")
+        .arg(&ckpt)
+        .arg("--save-params")
+        .arg(&res)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .unwrap();
+    assert!(status.success(), "resumed run failed");
+
+    assert_eq!(
+        fs::read(&ctrl).unwrap(),
+        fs::read(&res).unwrap(),
+        "resumed params file differs from the uninterrupted run"
+    );
+    let _ = fs::remove_dir_all(&base);
+}

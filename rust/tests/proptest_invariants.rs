@@ -1021,6 +1021,55 @@ fn prop_bf16_history_training_tracks_f32_loss() {
     assert!(last < first, "bf16 run did not learn ({first} -> {last})");
 }
 
+/// `LMCCKPT1` state blocks round-trip bitwise across random architectures
+/// and every history dtype: encode → decode → re-encode is byte-identical
+/// (including the raw quantized history words, which never pass through
+/// f32), and a fresh trainer restored from the decoded state continues
+/// bit-identically to the original.
+#[test]
+fn prop_checkpoint_state_roundtrips_bitwise() {
+    use lmc::checkpoint::{decode_state, encode_state, TrainerState};
+    for case in 0u64..6 {
+        let arch = if case % 2 == 0 { "gcn" } else { "gcnii" };
+        let dtype = match case % 3 {
+            0 => HistDtype::F32,
+            1 => HistDtype::Bf16,
+            _ => HistDtype::F16,
+        };
+        let cfg = RunConfig {
+            dataset: DatasetId::CoraSim,
+            arch: arch.into(),
+            method: Method::Lmc,
+            epochs: 4,
+            eval_every: usize::MAX,
+            seed: 10 + case,
+            history_dtype: dtype,
+            ..Default::default()
+        };
+        let mut a = Trainer::new(std::sync::Arc::new(NativeExecutor::new()), cfg.clone()).unwrap();
+        for _ in 0..2 {
+            a.train_epoch().unwrap();
+        }
+
+        let state = TrainerState::capture(&a);
+        let fp = format!("case-{case}");
+        let bytes = encode_state(&state, &fp);
+        let decoded = decode_state(&bytes, &fp).unwrap();
+        let bytes2 = encode_state(&decoded, &fp);
+        assert_eq!(bytes, bytes2, "case {case} ({arch}): re-encode differs");
+
+        let mut b = Trainer::new(std::sync::Arc::new(NativeExecutor::new()), cfg).unwrap();
+        decoded.restore_into(&mut b).unwrap();
+        a.train_epoch().unwrap();
+        b.train_epoch().unwrap();
+        for (ta, tb) in a.params.tensors.iter().zip(&b.params.tensors) {
+            let ba: Vec<u32> = ta.data.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = tb.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ba, bb, "case {case} ({arch}): diverged after restore");
+        }
+    }
+}
+
 #[test]
 fn prop_datasets_deterministic_across_loads() {
     for &id in DatasetId::all() {
