@@ -66,6 +66,19 @@ pub struct RunConfig {
     pub serve_max_wait_ms: u64,
     /// Eq. 9 β strength on the cached serve path (0 = pure history).
     pub serve_beta: f32,
+    /// TCP listen address (`host:port`) for the networked serve
+    /// front-end; `None` (default) keeps the stdin/stdout transport.
+    pub serve_listen: Option<String>,
+    /// Loadtest: target open-loop arrival rate, requests/second across
+    /// all connections.
+    pub loadtest_qps: f64,
+    /// Loadtest: concurrent client connections.
+    pub loadtest_conns: usize,
+    /// Loadtest: duration of the arrival schedule, seconds.
+    pub loadtest_secs: f64,
+    /// Loadtest: request sizes (node ids per request), cycled across the
+    /// schedule so batches mix small and large requests.
+    pub loadtest_sizes: Vec<usize>,
     /// At-rest element type of the history store (`Hbar`/`Vbar` rows):
     /// "f32" (bit-identical default), "bf16" (half the bytes/node, ≤ 2⁻⁸
     /// relative quantization error), or "f16". Accumulation stays f32.
@@ -115,6 +128,11 @@ impl Default for RunConfig {
             serve_max_batch: 256,
             serve_max_wait_ms: 4,
             serve_beta: 0.0,
+            serve_listen: None,
+            loadtest_qps: 500.0,
+            loadtest_conns: 8,
+            loadtest_secs: 5.0,
+            loadtest_sizes: vec![1, 4, 16],
             history_dtype: HistDtype::F32,
             force_bwd_off: false,
             verbose: false,
@@ -225,6 +243,21 @@ impl RunConfig {
         if let Some(v) = get("serve_beta").and_then(|v| v.as_f64()) {
             self.serve_beta = v as f32;
         }
+        if let Some(v) = get("serve_listen").and_then(|v| v.as_str()) {
+            self.serve_listen = Some(v.to_string());
+        }
+        if let Some(v) = get("loadtest_qps").and_then(|v| v.as_f64()) {
+            self.loadtest_qps = v;
+        }
+        if let Some(v) = get("loadtest_conns").and_then(|v| v.as_i64()) {
+            self.loadtest_conns = v.max(0) as usize;
+        }
+        if let Some(v) = get("loadtest_secs").and_then(|v| v.as_f64()) {
+            self.loadtest_secs = v;
+        }
+        if let Some(v) = get("loadtest_sizes").and_then(|v| v.as_str()) {
+            self.loadtest_sizes = parse_sizes(v)?;
+        }
         if let Some(v) = get("history_dtype").and_then(|v| v.as_str()) {
             self.history_dtype = HistDtype::parse(v).map_err(|e| anyhow!(e))?;
         }
@@ -311,6 +344,21 @@ impl RunConfig {
         if let Some(v) = args.opt_f64("serve-beta") {
             self.serve_beta = v as f32;
         }
+        if let Some(v) = args.opt("listen") {
+            self.serve_listen = Some(v.to_string());
+        }
+        if let Some(v) = args.opt_f64("loadtest-qps") {
+            self.loadtest_qps = v;
+        }
+        if let Some(v) = args.opt_usize("loadtest-conns") {
+            self.loadtest_conns = v;
+        }
+        if let Some(v) = args.opt_f64("loadtest-secs") {
+            self.loadtest_secs = v;
+        }
+        if let Some(v) = args.opt("loadtest-sizes") {
+            self.loadtest_sizes = parse_sizes(v)?;
+        }
         if let Some(v) = args.opt("history-dtype") {
             self.history_dtype = HistDtype::parse(v).map_err(|e| anyhow!(e))?;
         }
@@ -337,6 +385,20 @@ impl RunConfig {
         }
         Ok(())
     }
+}
+
+/// Comma-separated request-size list (`"1,4,16"`) for the loadtest knob.
+fn parse_sizes(s: &str) -> Result<Vec<usize>> {
+    let v: Vec<usize> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().map_err(|e| anyhow!("bad request size '{t}': {e}")))
+        .collect::<Result<_>>()?;
+    if v.is_empty() {
+        return Err(anyhow!("loadtest_sizes needs at least one request size"));
+    }
+    Ok(v)
 }
 
 #[cfg(test)]
@@ -433,6 +495,51 @@ mod tests {
         assert_eq!(cfg.serve_max_wait_ms, 2);
         assert!((cfg.serve_beta - 0.1).abs() < 1e-6);
         assert!(ServeMode::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn listen_and_loadtest_knobs_parse() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.serve_listen, None); // stdin transport by default
+        assert_eq!(cfg.loadtest_conns, 8);
+        assert_eq!(cfg.loadtest_sizes, vec![1, 4, 16]);
+        let doc = toml_parse(
+            "serve_listen = \"127.0.0.1:7070\"\nloadtest_qps = 250.0\nloadtest_conns = 4\n\
+             loadtest_secs = 1.5\nloadtest_sizes = \"2,8\"\n",
+        )
+        .unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.serve_listen.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(cfg.loadtest_qps, 250.0);
+        assert_eq!(cfg.loadtest_conns, 4);
+        assert_eq!(cfg.loadtest_secs, 1.5);
+        assert_eq!(cfg.loadtest_sizes, vec![2, 8]);
+        let args = Args::parse(
+            [
+                "loadtest",
+                "--listen",
+                "0.0.0.0:9090",
+                "--loadtest-qps",
+                "1000",
+                "--loadtest-conns",
+                "16",
+                "--loadtest-secs",
+                "3",
+                "--loadtest-sizes",
+                "1, 32",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert_eq!(cfg.serve_listen.as_deref(), Some("0.0.0.0:9090"));
+        assert_eq!(cfg.loadtest_qps, 1000.0);
+        assert_eq!(cfg.loadtest_conns, 16);
+        assert_eq!(cfg.loadtest_secs, 3.0);
+        assert_eq!(cfg.loadtest_sizes, vec![1, 32]);
+        // malformed size lists error instead of silently defaulting
+        assert!(parse_sizes("1,x").is_err());
+        assert!(parse_sizes("").is_err());
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //!                     on a gated-phase slowdown (CI perf-gate job)
 //!   predict           one-shot batched inference over the serve engine
 //!   serve             long-lived inference loop: JSONL requests on stdin,
-//!                     micro-batched through the serve engine
+//!                     or length-prefixed JSONL over TCP with --listen,
+//!                     micro-batched through the shared serve loop
+//!   loadtest          open-loop load generator + latency harness against
+//!                     a serve server (emits BENCH_serve_e2e.json)
 //!   experiment <id>   regenerate a paper table/figure (table1, table2,
 //!                     table3, table6, table7, table8, table9, fig2, fig3,
 //!                     fig4, fig5, sharded, all)
@@ -19,8 +22,8 @@
 use std::collections::BTreeMap;
 use std::io::BufRead;
 use std::path::Path;
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -29,9 +32,8 @@ use lmc::config::RunConfig;
 use lmc::coordinator::{grad_check, Params, RunMetrics, ShardedTrainer, Trainer};
 use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, quality::quality, PartitionConfig};
-use lmc::serve::{BatchPolicy, MicroBatcher, ServeEngine, ServeMode, ServeRequest};
+use lmc::serve::{net, BatchPolicy, ServeEngine, ServeLoop, ServeMode};
 use lmc::util::cli::Args;
-use lmc::util::failpoint;
 use lmc::util::json::Json;
 
 fn main() {
@@ -57,6 +59,7 @@ fn run(args: &Args) -> Result<()> {
         "bench-gate" => cmd_bench_gate(args),
         "predict" => cmd_predict(args),
         "serve" => cmd_serve(args),
+        "loadtest" => cmd_loadtest(args),
         "experiment" => lmc::experiments::dispatch(args),
         "" | "help" => {
             print!("{}", HELP);
@@ -89,14 +92,28 @@ subcommands:
   predict          one-shot serve-engine inference: --nodes 1,2,3
                    [--dataset D] [--arch A] [--params FILE]
                    [--serve-mode exact|cached] [--serve-beta F]
-  serve            JSONL request loop on stdin ('[ids...]' or
-                   '{\"id\":N,\"nodes\":[ids...]}' per line; one JSON response
-                   per request on stdout, status on stderr; on stdin EOF or
-                   SIGTERM the queue is drained and answered, then a final
-                   {\"op\":\"shutdown\",\"served\":N} line is emitted)
-                   [--params FILE] [--serve-mode exact|cached]
+  serve            JSONL request loop ('[ids...]', '{\"id\":N,\"nodes\":[ids...]}',
+                   or '{\"op\":\"shutdown\"}' per line; one JSON response per
+                   request; on stdin EOF, SIGTERM, SIGINT, or a shutdown op
+                   the queue is drained and answered, then a final
+                   {\"op\":\"shutdown\",...} status line is emitted). Default
+                   transport is stdin/stdout; --listen HOST:PORT serves the
+                   same protocol as length-prefixed frames (u32 LE byte
+                   count + JSON) over TCP, micro-batching across
+                   connections.
+                   [--listen ADDR] [--params FILE] [--serve-mode exact|cached]
                    [--serve-max-batch N] [--serve-max-wait-ms MS]
                    [--serve-beta F] [--history-dtype f32|bf16|f16]
+  loadtest         open-loop load generator against a serve server: spawns
+                   an in-process `serve --listen` twin (or targets --addr),
+                   sends --loadtest-qps requests/s over --loadtest-conns
+                   connections for --loadtest-secs seconds (sizes cycled
+                   from --loadtest-sizes), then drains the server and
+                   writes p50/p95/p99 latency, achieved qps, and mean batch
+                   occupancy to BENCH_serve_e2e.json.
+                   [--addr HOST:PORT] [--out FILE] [--smoke]
+                   [--require-occupancy F]   exit 1 when the mean batch
+                   occupancy comes in below F requests/batch
   partition-stats  --dataset D [--parts K] [--seed N]
   datasets         list registered datasets
   programs         list artifact programs (--artifacts DIR; pjrt builds only)
@@ -251,107 +268,18 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// One stdin request line: a bare JSON array of node ids, or an object
-/// `{"id": N, "nodes": [ids...]}`. Requests without an id get sequential
-/// ones.
-fn parse_request(line: &str, next_id: &mut u64) -> Result<ServeRequest> {
-    let v = Json::parse(line).map_err(|e| anyhow!("bad request line: {e}"))?;
-    let (id, nodes) = match v.as_arr() {
-        Some(arr) => (None, arr),
-        None => {
-            let nodes = v.get("nodes").and_then(Json::as_arr).ok_or_else(|| {
-                anyhow!("request must be '[ids...]' or '{{\"nodes\": [ids...]}}'")
-            })?;
-            (v.get("id").and_then(Json::as_f64).map(|x| x as u64), nodes)
-        }
-    };
-    let nodes: Vec<u32> = nodes
-        .iter()
-        .map(|j| {
-            j.as_f64()
-                .map(|x| x as u32)
-                .ok_or_else(|| anyhow!("node ids must be numbers, got {j}"))
-        })
-        .collect::<Result<_>>()?;
-    let id = id.unwrap_or(*next_id);
-    *next_id += 1;
-    Ok(ServeRequest { id, nodes })
-}
-
-/// One JSON error response line (`{"id": N, "error": "..."}`; id omitted
-/// when the request never got one).
-fn print_error_line(id: Option<u64>, msg: &str) {
-    let mut top = BTreeMap::new();
-    if let Some(id) = id {
-        top.insert("id".to_string(), Json::Num(id as f64));
-    }
-    top.insert("error".to_string(), Json::Str(msg.to_string()));
-    println!("{}", Json::Obj(top));
-}
-
-fn print_answers(answers: &[(u64, Vec<lmc::serve::Prediction>)]) -> usize {
-    let mut served = 0usize;
-    for (id, preds) in answers {
-        let items: Vec<Json> = preds
-            .iter()
-            .map(|p| {
-                let mut m = BTreeMap::new();
-                m.insert("node".to_string(), Json::Num(p.node as f64));
-                m.insert("label".to_string(), Json::Num(p.label as f64));
-                m.insert(
-                    "logit".to_string(),
-                    Json::Num(p.logits[p.label as usize] as f64),
-                );
-                Json::Obj(m)
-            })
-            .collect();
-        served += preds.len();
-        let mut top = BTreeMap::new();
-        top.insert("id".to_string(), Json::Num(*id as f64));
-        top.insert("predictions".to_string(), Json::Arr(items));
-        println!("{}", Json::Obj(top));
-    }
-    served
-}
-
-/// Answer one drained micro-batch: a JSON response line per request. A
-/// failing request (e.g. an out-of-range node id) must not take the batch
-/// — or the long-lived loop — down with it, so on a batch-level error
-/// each request is retried alone and only the offender gets an error
-/// response.
-fn answer_batch(engine: &ServeEngine, batch: &[ServeRequest]) -> usize {
-    if let Err(e) = failpoint::fire("serve.request") {
-        // injected request-path failure: every request in the batch gets
-        // an error response, the loop itself stays up
-        for r in batch {
-            print_error_line(Some(r.id), &format!("{e:#}"));
-        }
-        return 0;
-    }
-    match engine.answer(batch) {
-        Ok(answers) => print_answers(&answers),
-        Err(_) => {
-            let mut served = 0usize;
-            for r in batch {
-                match engine.answer(std::slice::from_ref(r)) {
-                    Ok(answers) => served += print_answers(&answers),
-                    Err(e) => print_error_line(Some(r.id), &format!("{e:#}")),
-                }
-            }
-            served
-        }
-    }
-}
-
-/// SIGTERM handling without a libc crate: a direct `extern "C"` binding
-/// to `signal(2)` flips an atomic flag the serve loop polls, so a
-/// terminated service drains and answers its queue before exiting
-/// instead of dropping requests on the floor.
+/// SIGTERM/SIGINT handling without a libc crate: a direct `extern "C"`
+/// binding to `signal(2)` records the delivered signal in an atomic the
+/// serve loop polls, so a terminated (or Ctrl-C'd) service drains and
+/// answers its queue before exiting instead of dropping requests on the
+/// floor. SIGINT used to take the default kill-the-process disposition —
+/// an interactive Ctrl-C lost queued requests a SIGTERM would have
+/// answered (ISSUE 8).
 #[cfg(unix)]
 mod sig {
-    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::atomic::{AtomicI32, Ordering};
 
-    static TERM: AtomicBool = AtomicBool::new(false);
+    static SIGNUM: AtomicI32 = AtomicI32::new(0);
 
     type Handler = extern "C" fn(i32);
 
@@ -359,65 +287,45 @@ mod sig {
         fn signal(signum: i32, handler: Handler) -> usize;
     }
 
-    extern "C" fn on_term(_signum: i32) {
+    extern "C" fn on_signal(signum: i32) {
         // async-signal-safe: a single atomic store
-        TERM.store(true, Ordering::SeqCst);
+        SIGNUM.store(signum, Ordering::SeqCst);
     }
 
+    const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
 
-    pub fn install_term_handler() {
+    pub fn install_handlers() {
         unsafe {
-            signal(SIGTERM, on_term);
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
         }
     }
 
-    pub fn term_requested() -> bool {
-        TERM.load(Ordering::SeqCst)
+    /// Shutdown reason when a handled signal has been delivered.
+    pub fn signal_reason() -> Option<&'static str> {
+        match SIGNUM.load(Ordering::SeqCst) {
+            SIGTERM => Some("sigterm"),
+            SIGINT => Some("sigint"),
+            _ => None,
+        }
     }
 }
 
 #[cfg(not(unix))]
 mod sig {
-    pub fn install_term_handler() {}
+    pub fn install_handlers() {}
 
-    pub fn term_requested() -> bool {
-        false
-    }
-}
-
-/// Parse and enqueue one stdin line; returns the number of predictions
-/// served by any batch this line flushed.
-fn handle_line(
-    engine: &ServeEngine,
-    mb: &mut MicroBatcher,
-    line: &str,
-    next_id: &mut u64,
-    clock: Instant,
-) -> usize {
-    if line.trim().is_empty() {
-        return 0;
-    }
-    let now = clock.elapsed().as_millis() as u64;
-    match parse_request(line, next_id) {
-        Ok(req) => match mb.push(req, now) {
-            Some(batch) => answer_batch(engine, &batch),
-            None => 0,
-        },
-        // a malformed line gets an error response, not a service abort:
-        // queued requests stay alive
-        Err(e) => {
-            print_error_line(None, &format!("{e:#}"));
-            0
-        }
+    pub fn signal_reason() -> Option<&'static str> {
+        None
     }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = RunConfig::default();
     cfg.apply_cli(args)?;
-    let engine = make_engine(args)?;
-    sig::install_term_handler();
+    let engine = Arc::new(make_engine(args)?);
+    sig::install_handlers();
     eprintln!(
         "serving {} / {} on the native backend — {} nodes, {} mode, tiles of {} node(s), \
          flush at {} queued node(s) or {} ms",
@@ -435,73 +343,173 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.history_bytes_per_node()
     );
     let policy = BatchPolicy { max_nodes: cfg.serve_max_batch, max_wait: cfg.serve_max_wait_ms };
-    let mut mb = MicroBatcher::new(policy);
     let clock = Instant::now();
-    let mut next_id = 0u64;
-    let mut served = 0usize;
-    // stdin is read on its own thread so the main loop can wake on the
-    // micro-batcher's latency deadline even while no input arrives — a
-    // queued sub-threshold request is answered within ~serve_max_wait_ms,
-    // not held hostage until the next line or EOF.
-    let (tx, rx) = mpsc::channel::<String>();
-    let reader = std::thread::spawn(move || {
-        let stdin = std::io::stdin();
-        for line in stdin.lock().lines() {
-            let Ok(line) = line else { break };
-            if tx.send(line).is_err() {
-                break;
+    let listen = args.opt("listen").map(str::to_string).or_else(|| cfg.serve_listen.clone());
+    let stats = match listen {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(&addr)
+                .map_err(|e| anyhow!("cannot listen on {addr}: {e}"))?;
+            // tests and loadtest bind port 0; the resolved address must be
+            // discoverable, so it goes to stderr before the first accept
+            eprintln!("listening on {}", listener.local_addr()?);
+            net::serve_tcp(Arc::clone(&engine), policy, listener, sig::signal_reason)?
+        }
+        None => {
+            // stdin transport: a reader thread feeds the shared loop so it
+            // can wake on the micro-batcher's latency deadline even while
+            // no input arrives — a queued sub-threshold request is
+            // answered within ~serve_max_wait_ms, not held hostage until
+            // the next line or EOF.
+            let (tx, rx) = mpsc::channel::<net::Event>();
+            let reader = std::thread::spawn(move || {
+                let stdin = std::io::stdin();
+                for line in stdin.lock().lines() {
+                    let Ok(line) = line else { break };
+                    if tx.send(net::Event { sink: net::Sink::Stdout, line }).is_err() {
+                        break;
+                    }
+                }
+            });
+            let stats = ServeLoop::new(Arc::clone(&engine), policy).run(&rx, sig::signal_reason);
+            if stats.reason == "eof" {
+                // after a signal the reader may be blocked in stdin.read
+                // forever; join only on EOF, where it is guaranteed to
+                // have exited
+                let _ = reader.join();
             }
+            stats
+        }
+    };
+    // both transports end with the status line on stdout (the TCP path
+    // additionally broadcast it to every open connection)
+    println!("{}", net::shutdown_line(&stats));
+    eprintln!(
+        "served {} node prediction(s) in {:.3}s (backend busy {:.3}s, shutdown: {})",
+        stats.served,
+        clock.elapsed().as_secs_f64(),
+        engine.exec().exec_secs(),
+        stats.reason
+    );
+    Ok(())
+}
+
+/// Finite-or-zero JSON number: percentiles over an empty latency set are
+/// NaN, which is not representable in JSON.
+fn json_num(x: f64) -> Json {
+    Json::Num(if x.is_finite() { x } else { 0.0 })
+}
+
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_cli(args)?;
+    let smoke = args.has_flag("smoke") || std::env::var("BENCH_SMOKE").is_ok();
+    let (qps, secs) = if smoke {
+        // CI smoke caps: a few seconds of load, numbers recorded but never
+        // gated (namespaced *.smoke.json, like the other benches)
+        (cfg.loadtest_qps.min(400.0), cfg.loadtest_secs.min(2.0))
+    } else {
+        (cfg.loadtest_qps, cfg.loadtest_secs)
+    };
+    let policy = BatchPolicy { max_nodes: cfg.serve_max_batch, max_wait: cfg.serve_max_wait_ms };
+    // target an external server with --addr, or spin up an in-process
+    // `serve --listen` twin on a loopback port
+    let (addr, server, n_nodes) = match args.opt("addr") {
+        Some(a) => (a.to_string(), None, load(cfg.dataset, cfg.seed).n() as u32),
+        None => {
+            let engine = Arc::new(make_engine(args)?);
+            let n = engine.graph().n() as u32;
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?.to_string();
+            let h = std::thread::spawn(move || net::serve_tcp(engine, policy, listener, || None));
+            (addr, Some(h), n)
+        }
+    };
+    let opts = net::LoadtestOptions {
+        addr,
+        conns: cfg.loadtest_conns.max(1),
+        qps,
+        secs,
+        sizes: cfg.loadtest_sizes.clone(),
+        seed: cfg.seed,
+        n_nodes,
+    };
+    eprintln!(
+        "loadtest: {} conns at {} qps for {}s against {} (sizes {:?})",
+        opts.conns, opts.qps, opts.secs, opts.addr, opts.sizes
+    );
+    let report = net::run_loadtest(&opts)?;
+    if let Some(h) = server {
+        // run_loadtest sent the shutdown op; the server thread drains and
+        // exits on it
+        h.join().map_err(|_| anyhow!("serve thread panicked"))??;
+    }
+    let occupancy = report.server.map(|s| {
+        if s.batches > 0 {
+            s.requests as f64 / s.batches as f64
+        } else {
+            0.0
         }
     });
-    let wait = Duration::from_millis(cfg.serve_max_wait_ms.max(1));
-    let reason;
-    loop {
-        if sig::term_requested() {
-            reason = "sigterm";
-            break;
-        }
-        match rx.recv_timeout(wait) {
-            Ok(line) => {
-                served += handle_line(&engine, &mut mb, &line, &mut next_id, clock);
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                let now = clock.elapsed().as_millis() as u64;
-                if let Some(batch) = mb.poll(now) {
-                    served += answer_batch(&engine, &batch);
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                reason = "eof";
-                break;
-            }
-        }
-    }
-    // Graceful shutdown: requests already read from stdin are still
-    // answered. On SIGTERM the channel may hold lines the loop never got
-    // to; drain them first, then flush whatever sits in the micro-batcher.
-    if reason == "sigterm" {
-        while let Ok(line) = rx.try_recv() {
-            served += handle_line(&engine, &mut mb, &line, &mut next_id, clock);
-        }
-    }
-    if let Some(batch) = mb.flush() {
-        served += answer_batch(&engine, &batch);
-    }
-    if reason == "eof" {
-        // after SIGTERM the reader may be blocked in stdin.read forever;
-        // join only on EOF, where it is guaranteed to have exited
-        let _ = reader.join();
-    }
-    let mut top = BTreeMap::new();
-    top.insert("op".to_string(), Json::Str("shutdown".to_string()));
-    top.insert("reason".to_string(), Json::Str(reason.to_string()));
-    top.insert("served".to_string(), Json::Num(served as f64));
-    println!("{}", Json::Obj(top));
-    eprintln!(
-        "served {served} node prediction(s) in {:.3}s (backend busy {:.3}s, shutdown: {reason})",
-        clock.elapsed().as_secs_f64(),
-        engine.exec().exec_secs()
+    println!(
+        "sent {} completed {} errors {} in {:.2}s — achieved {:.1} qps (target {})",
+        report.sent, report.completed, report.errors, report.wall_s, report.achieved_qps, qps
     );
+    println!(
+        "latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  mean {:.2}  max {:.2}",
+        report.p50_ms, report.p95_ms, report.p99_ms, report.mean_ms, report.max_ms
+    );
+    if let (Some(s), Some(occ)) = (report.server, occupancy) {
+        println!(
+            "server: {} requests in {} batches (mean occupancy {:.2} requests/batch), \
+             {} predictions served",
+            s.requests, s.batches, occ, s.served
+        );
+    }
+
+    let out_default =
+        if smoke { "../BENCH_serve_e2e.smoke.json" } else { "../BENCH_serve_e2e.json" };
+    let out = args.opt_or("out", out_default);
+    let mut lat = BTreeMap::new();
+    lat.insert("p50".to_string(), json_num(report.p50_ms));
+    lat.insert("p95".to_string(), json_num(report.p95_ms));
+    lat.insert("p99".to_string(), json_num(report.p99_ms));
+    lat.insert("mean".to_string(), json_num(report.mean_ms));
+    lat.insert("max".to_string(), json_num(report.max_ms));
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serve_e2e".to_string()));
+    top.insert("provenance".to_string(), Json::Str(lmc::util::bench::provenance()));
+    top.insert("smoke".to_string(), Json::Bool(smoke));
+    top.insert("dataset".to_string(), Json::Str(cfg.dataset.name().to_string()));
+    top.insert("serve_mode".to_string(), Json::Str(cfg.serve_mode.name().to_string()));
+    top.insert("conns".to_string(), Json::Num(opts.conns as f64));
+    top.insert("target_qps".to_string(), json_num(qps));
+    top.insert("duration_s".to_string(), json_num(secs));
+    top.insert("sent".to_string(), Json::Num(report.sent as f64));
+    top.insert("completed".to_string(), Json::Num(report.completed as f64));
+    top.insert("errors".to_string(), Json::Num(report.errors as f64));
+    top.insert("achieved_qps".to_string(), json_num(report.achieved_qps));
+    top.insert("latency_ms".to_string(), Json::Obj(lat));
+    if let (Some(s), Some(occ)) = (report.server, occupancy) {
+        let mut srv = BTreeMap::new();
+        srv.insert("served".to_string(), Json::Num(s.served as f64));
+        srv.insert("requests".to_string(), Json::Num(s.requests as f64));
+        srv.insert("batches".to_string(), Json::Num(s.batches as f64));
+        srv.insert("mean_batch_occupancy".to_string(), json_num(occ));
+        top.insert("server".to_string(), Json::Obj(srv));
+    }
+    std::fs::write(out, format!("{}\n", Json::Obj(top)))?;
+    println!("wrote {out}");
+
+    if let Some(min) = args.opt_f64("require-occupancy") {
+        let occ = occupancy
+            .ok_or_else(|| anyhow!("server stats missing from the shutdown broadcast"))?;
+        if occ < min {
+            return Err(anyhow!(
+                "mean batch occupancy {occ:.2} is below the required {min} requests/batch — \
+                 cross-stream batching is not forming"
+            ));
+        }
+    }
     Ok(())
 }
 

@@ -82,6 +82,14 @@ impl MicroBatcher {
         }
     }
 
+    /// Logical time at which the oldest queued request's `max_wait`
+    /// deadline expires (`None` on an empty queue) — the serve loop's
+    /// wake-up time, so a sub-threshold request is answered on schedule
+    /// without polling.
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.queue.first().map(|&(t0, _)| t0.saturating_add(self.policy.max_wait))
+    }
+
     /// Queued requests.
     pub fn queued(&self) -> usize {
         self.queue.len()
@@ -150,6 +158,22 @@ mod tests {
         let batch = mb.flush().expect("explicit flush");
         assert_eq!(batch.len(), 2);
         assert!(mb.flush().is_none());
+    }
+
+    #[test]
+    fn next_deadline_tracks_the_oldest_request() {
+        let mut mb = MicroBatcher::new(BatchPolicy { max_nodes: 100, max_wait: 10 });
+        assert_eq!(mb.next_deadline(), None);
+        mb.push(req(1, &[0]), 5);
+        mb.push(req(2, &[1]), 9);
+        // the oldest request sets the deadline
+        assert_eq!(mb.next_deadline(), Some(15));
+        assert!(mb.poll(15).is_some());
+        assert_eq!(mb.next_deadline(), None);
+        // saturates instead of overflowing at the end of logical time
+        let mut mb = MicroBatcher::new(BatchPolicy { max_nodes: 100, max_wait: u64::MAX });
+        mb.push(req(3, &[2]), 7);
+        assert_eq!(mb.next_deadline(), Some(u64::MAX));
     }
 
     #[test]

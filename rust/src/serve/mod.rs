@@ -31,7 +31,9 @@
 //! [`CsrBlock`]: crate::sampler::CsrBlock
 
 pub mod batcher;
+pub mod net;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
@@ -52,6 +54,7 @@ use crate::sampler::{
 use crate::util::rng::Rng;
 
 pub use batcher::{BatchPolicy, MicroBatcher, ServeRequest};
+pub use net::{serve_tcp, LoopStats, ServeLoop, Sink};
 
 /// Which tile-assembly path answers a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -142,6 +145,72 @@ pub struct ServeEngine {
     /// Steady-state tile buffers: repeated predicts reuse the same
     /// workspace pool the train step uses.
     ws: Mutex<StepWorkspace>,
+    /// Exact-path scratch pool: epoch-stamped visited buffers and position
+    /// maps, checked out per tile so steady-state serve does no O(n)
+    /// allocations (the old `expand_one_hop` zeroed an O(n) bitmap per
+    /// call, L times per tile).
+    tile_ws: Mutex<Vec<TileWorkspace>>,
+    tile_ws_misses: AtomicU64,
+}
+
+/// Exact-path tile workspaces retained for reuse; beyond this the engine is
+/// answering that many tiles concurrently and extra workspaces are dropped
+/// back to the allocator rather than hoarded.
+const MAX_TILE_WS: usize = 8;
+
+/// Reusable scratch for one exact-tile evaluation.
+#[derive(Default)]
+struct TileWorkspace {
+    /// `visited[u] == epoch` ⟺ `u` is in the set being built this pass;
+    /// bumping the epoch invalidates the whole buffer in O(1) instead of
+    /// re-zeroing O(n) bytes per expansion.
+    visited: Vec<u32>,
+    epoch: u32,
+    /// Scatter maps node id → row index in the current layer's (`pos`) and
+    /// embed0's (`pos0`) row blocks. Stale entries are never read — every
+    /// lookup is for a node the same pass just scattered (closure
+    /// property) — so reuse needs no clearing and stays bit-identical.
+    pos: Vec<u32>,
+    pos0: Vec<u32>,
+}
+
+impl TileWorkspace {
+    fn ensure(&mut self, n: usize) {
+        if self.visited.len() < n {
+            self.visited.resize(n, 0);
+            self.pos.resize(n, u32::MAX);
+            self.pos0.resize(n, u32::MAX);
+        }
+    }
+
+    /// `nodes ∪ N(nodes)`, sorted unique — one closure-expansion step.
+    fn expand_one_hop(&mut self, g: &Graph, nodes: &[u32]) -> Vec<u32> {
+        self.ensure(g.n());
+        self.epoch = match self.epoch.checked_add(1) {
+            Some(e) => e,
+            None => {
+                // epoch wrap: one O(n) re-zero every u32::MAX expansions
+                self.visited.iter_mut().for_each(|v| *v = 0);
+                1
+            }
+        };
+        let ep = self.epoch;
+        let mut out: Vec<u32> = Vec::with_capacity(nodes.len() * 2);
+        for &u in nodes {
+            if self.visited[u as usize] != ep {
+                self.visited[u as usize] = ep;
+                out.push(u);
+            }
+            for &v in g.csr.neighbors(u as usize) {
+                if self.visited[v as usize] != ep {
+                    self.visited[v as usize] = ep;
+                    out.push(v);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
 }
 
 impl ServeEngine {
@@ -175,6 +244,8 @@ impl ServeEngine {
             params_version: 0,
             warm_version: None,
             ws: Mutex::new(StepWorkspace::new()),
+            tile_ws: Mutex::new(Vec::new()),
+            tile_ws_misses: AtomicU64::new(0),
         })
     }
 
@@ -251,6 +322,13 @@ impl ServeEngine {
     /// the startup-log / BENCH_serve accounting figure).
     pub fn history_bytes_per_node(&self) -> usize {
         self.history.bytes_per_node()
+    }
+
+    /// Times the exact path allocated a fresh tile workspace because the
+    /// pool was empty. Steady-state serve must not climb — pinned by
+    /// `exact_serve_tile_workspace_misses_stay_flat`.
+    pub fn tile_ws_misses(&self) -> u64 {
+        self.tile_ws_misses.load(Ordering::Relaxed)
     }
 
     /// True when the cached-history rows were computed at the current
@@ -408,21 +486,41 @@ impl ServeEngine {
     /// global CSR order), so served logits are bit-identical to
     /// [`ServeEngine::oracle_logits`] rows.
     fn exact_tile_logits(&self, tile: &[u32]) -> Result<Vec<f32>> {
+        // check a workspace out of the pool (allocating only when every
+        // pooled one is in use by a concurrent tile), return it after
+        let mut ws = match self.tile_ws.lock().unwrap_or_else(|p| p.into_inner()).pop() {
+            Some(ws) => ws,
+            None => {
+                self.tile_ws_misses.fetch_add(1, Ordering::Relaxed);
+                TileWorkspace::default()
+            }
+        };
+        let out = self.exact_tile_logits_in(tile, &mut ws);
+        let mut pool = self.tile_ws.lock().unwrap_or_else(|p| p.into_inner());
+        if pool.len() < MAX_TILE_WS {
+            pool.push(ws);
+        }
+        out
+    }
+
+    fn exact_tile_logits_in(&self, tile: &[u32], ws: &mut TileWorkspace) -> Result<Vec<f32>> {
         let g = self.graph.as_ref();
         let arch = &self.model.arch;
         let dims = &arch.dims;
         let l_total = arch.l;
         let kind = kind_of(&self.model.arch_name)?;
+        ws.ensure(g.n());
 
         // sets[l] = nodes whose exact H^l must be materialized;
         // sets[l_total] is the request tile, sets[l-1] = sets[l] ∪ N(sets[l])
         let mut sets: Vec<Vec<u32>> = Vec::with_capacity(l_total + 1);
         sets.push(tile.to_vec());
         for _ in 0..l_total {
-            let wider = expand_one_hop(g, sets.last().unwrap());
+            let wider = ws.expand_one_hop(g, sets.last().unwrap());
             sets.push(wider);
         }
         sets.reverse();
+        let TileWorkspace { pos, pos0, .. } = ws;
 
         let p = |name: &str| {
             self.params.get(name).ok_or_else(|| anyhow!("missing parameter {name}"))
@@ -431,7 +529,6 @@ impl ServeEngine {
         // H^0 rows over the widest set; GCNII keeps the embed0 output and
         // its position map for the α·h0 initial residual
         let s0 = &sets[0];
-        let mut pos0: Vec<u32> = Vec::new();
         let (mut h_prev, h0_rows) = match kind {
             Kind::Gcn => (gather_rows(&g.features, g.d_x, s0, s0.len()), Vec::new()),
             Kind::Gcnii => {
@@ -440,7 +537,6 @@ impl ServeEngine {
                 let mut h0 = gemm::matmul(&x, s0.len(), g.d_x, &w0.data, dims[0]);
                 native::add_bias_rows(&mut h0, &b0.data);
                 native::relu_inplace(&mut h0);
-                pos0 = vec![u32::MAX; g.n()];
                 for (i, &u) in s0.iter().enumerate() {
                     pos0[u as usize] = i as u32;
                 }
@@ -448,7 +544,6 @@ impl ServeEngine {
             }
         };
 
-        let mut pos = vec![u32::MAX; g.n()];
         for l in 1..=l_total {
             let cur = &sets[l];
             let prev = &sets[l - 1];
@@ -526,26 +621,6 @@ fn row_of(buf: &[f32], pos: u32, d: usize) -> &[f32] {
     &buf[i * d..(i + 1) * d]
 }
 
-/// `nodes ∪ N(nodes)`, sorted unique — one closure-expansion step.
-fn expand_one_hop(g: &Graph, nodes: &[u32]) -> Vec<u32> {
-    let mut mark = vec![false; g.n()];
-    let mut out: Vec<u32> = Vec::with_capacity(nodes.len() * 2);
-    for &u in nodes {
-        if !mark[u as usize] {
-            mark[u as usize] = true;
-            out.push(u);
-        }
-        for &v in g.csr.neighbors(u as usize) {
-            if !mark[v as usize] {
-                mark[v as usize] = true;
-                out.push(v);
-            }
-        }
-    }
-    out.sort_unstable();
-    out
-}
-
 fn validate_params(arch: &ArchInfo, params: &Params) -> Result<()> {
     if params.names.len() != arch.params.len() {
         bail!(
@@ -596,6 +671,40 @@ mod tests {
         assert_eq!(plan_tiles(&ids, 0).len(), 10);
         // empty request: no tiles
         assert!(plan_tiles(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn tile_workspace_expand_matches_naive_and_survives_epoch_wrap() {
+        let g = load(crate::graph::DatasetId::CoraSim, 0);
+        let naive = |nodes: &[u32]| -> Vec<u32> {
+            let mut mark = vec![false; g.n()];
+            let mut out = Vec::new();
+            for &u in nodes {
+                if !mark[u as usize] {
+                    mark[u as usize] = true;
+                    out.push(u);
+                }
+                for &v in g.csr.neighbors(u as usize) {
+                    if !mark[v as usize] {
+                        mark[v as usize] = true;
+                        out.push(v);
+                    }
+                }
+            }
+            out.sort_unstable();
+            out
+        };
+        let mut ws = TileWorkspace::default();
+        let seeds: Vec<u32> = (0..g.n() as u32).step_by(97).collect();
+        assert_eq!(ws.expand_one_hop(&g, &seeds), naive(&seeds));
+        // repeated expansions reuse the stamped buffer, no re-zeroing
+        assert_eq!(ws.expand_one_hop(&g, &seeds), naive(&seeds));
+        // force the epoch counter to wrap: the visited buffer re-zeroes
+        // once and results stay correct
+        ws.epoch = u32::MAX;
+        assert_eq!(ws.expand_one_hop(&g, &seeds), naive(&seeds));
+        assert_eq!(ws.epoch, 1);
+        assert_eq!(ws.expand_one_hop(&g, &[0]), naive(&[0]));
     }
 
     #[test]

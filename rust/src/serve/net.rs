@@ -1,0 +1,841 @@
+//! Networked front-end for the serve path, plus the transport-agnostic
+//! [`ServeLoop`] core both the stdin JSONL loop and the TCP server drive.
+//!
+//! Wire protocol (`lmc serve --listen ADDR`): length-prefixed JSONL — each
+//! frame is a little-endian `u32` byte count followed by that many bytes of
+//! UTF-8 JSON, one request or response per frame. Requests are the same
+//! shapes the stdin loop accepts (`[ids...]`, `{"id":N,"nodes":[ids...]}`,
+//! `{"op":"shutdown"}`); responses are the same JSON lines the stdin loop
+//! prints. Many client connections feed one shared [`MicroBatcher`] through
+//! an mpsc channel, so micro-batches form *across* streams; each response
+//! is routed back to the connection its request arrived on (the route queue
+//! is FIFO-aligned with the batcher queue, which always drains whole
+//! batches in push order).
+//!
+//! Shutdown reuses the stdin loop's graceful-drain semantics: on
+//! SIGTERM/SIGINT (`should_stop`) or an `{"op":"shutdown"}` frame from any
+//! connection, input already received is still parsed and answered, the
+//! queue is flushed, and a final `{"op":"shutdown",...}` line carrying the
+//! loop stats is broadcast to every open connection.
+//!
+//! Failpoint sites (`LMC_FAILPOINTS`): `serve.net.accept` rejects incoming
+//! connections at the accept loop, `serve.net.read` injects a read failure
+//! on an established connection — both leave the server itself up.
+//!
+//! [`run_loadtest`] is the `lmc loadtest` harness: open-loop arrival (every
+//! request has a precomputed send time derived from the target qps, so a
+//! slow server cannot slow the arrival process down) across N connections
+//! with mixed request sizes, measuring per-request latency from the
+//! *scheduled* send time to the response frame.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::serve::{BatchPolicy, MicroBatcher, Prediction, ServeEngine, ServeRequest};
+use crate::util::failpoint;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// frame protocol
+// ---------------------------------------------------------------------------
+
+/// Hard cap on a single frame payload; a corrupt or hostile length prefix
+/// must not trigger a multi-gigabyte allocation.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Write one length-prefixed frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> io::Result<()> {
+    let bytes = payload.as_bytes();
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one frame. `Ok(None)` is a clean close (EOF at a frame boundary);
+/// EOF inside a frame, an oversized length prefix, or non-UTF-8 payload are
+/// errors.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<String>> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid frame header",
+                ))
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {n} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+// ---------------------------------------------------------------------------
+// request parsing and response formatting (shared by both transports)
+// ---------------------------------------------------------------------------
+
+/// One parsed input line.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Parsed {
+    Request(ServeRequest),
+    /// The documented `{"op":"shutdown"}` control line: graceful drain.
+    Shutdown,
+}
+
+/// A rejected input line; `id` is the request's own id when it carried one,
+/// so the error response can be correlated client-side.
+#[derive(Debug)]
+pub struct ParseErr {
+    pub id: Option<u64>,
+    pub msg: String,
+}
+
+fn node_id(j: &Json) -> Result<u32, String> {
+    let x = j
+        .as_f64()
+        .ok_or_else(|| format!("node ids must be numbers, got {j}"))?;
+    // `x as u32` would saturate -1 to 0 and truncate 3.7 to 3 — a silently
+    // *wrong* prediction; non-integers and out-of-range values are errors
+    if !x.is_finite() || x.fract() != 0.0 {
+        return Err(format!("node id {j} is not an integer"));
+    }
+    if !(0.0..=u32::MAX as f64).contains(&x) {
+        return Err(format!("node id {j} is out of u32 range"));
+    }
+    Ok(x as u32)
+}
+
+/// Parse one input line: a bare JSON array of node ids, an object
+/// `{"id": N, "nodes": [ids...]}`, or the `{"op":"shutdown"}` control
+/// line. Requests without an id get sequential ones.
+pub fn parse_line(line: &str, next_id: &mut u64) -> Result<Parsed, ParseErr> {
+    let bad = |id: Option<u64>, msg: String| ParseErr { id, msg };
+    let v = Json::parse(line).map_err(|e| bad(None, format!("bad request line: {e}")))?;
+    let id = v.get("id").and_then(Json::as_f64).map(|x| x as u64);
+    if let Some(op) = v.get("op").and_then(Json::as_str) {
+        return match op {
+            "shutdown" => Ok(Parsed::Shutdown),
+            other => Err(bad(id, format!("unknown op \"{other}\" (supported: \"shutdown\")"))),
+        };
+    }
+    let nodes = match v.as_arr() {
+        Some(arr) => arr,
+        None => v.get("nodes").and_then(Json::as_arr).ok_or_else(|| {
+            bad(
+                id,
+                "request must be '[ids...]', '{\"nodes\": [ids...]}', or '{\"op\": \"shutdown\"}'"
+                    .to_string(),
+            )
+        })?,
+    };
+    let nodes: Vec<u32> = nodes
+        .iter()
+        .map(|j| node_id(j).map_err(|msg| bad(id, msg)))
+        .collect::<Result<_, _>>()?;
+    let id = id.unwrap_or(*next_id);
+    *next_id += 1;
+    Ok(Parsed::Request(ServeRequest { id, nodes }))
+}
+
+/// One JSON error response (`{"id": N, "error": "..."}`; id omitted when
+/// the request never got one).
+pub fn error_line(id: Option<u64>, msg: &str) -> String {
+    let mut top = BTreeMap::new();
+    if let Some(id) = id {
+        top.insert("id".to_string(), Json::Num(id as f64));
+    }
+    top.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(top).to_string()
+}
+
+/// One JSON response line for an answered request.
+pub fn response_line(id: u64, preds: &[Prediction]) -> String {
+    let items: Vec<Json> = preds
+        .iter()
+        .map(|p| {
+            let mut m = BTreeMap::new();
+            m.insert("node".to_string(), Json::Num(p.node as f64));
+            m.insert("label".to_string(), Json::Num(p.label as f64));
+            m.insert("logit".to_string(), Json::Num(p.logits[p.label as usize] as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("id".to_string(), Json::Num(id as f64));
+    top.insert("predictions".to_string(), Json::Arr(items));
+    Json::Obj(top).to_string()
+}
+
+/// Counters a finished [`ServeLoop`] reports; `served / batches` and
+/// `requests / batches` are the batch-occupancy figures the loadtest and
+/// the final shutdown line expose.
+#[derive(Clone, Debug)]
+pub struct LoopStats {
+    pub reason: &'static str,
+    /// Node predictions answered.
+    pub served: usize,
+    /// Requests answered.
+    pub requests: usize,
+    /// Engine passes (micro-batch flushes).
+    pub batches: usize,
+}
+
+/// The final `{"op":"shutdown",...}` status line (a superset of the PR 7
+/// format: `op`/`reason`/`served` plus the batching counters).
+pub fn shutdown_line(stats: &LoopStats) -> String {
+    let mut top = BTreeMap::new();
+    top.insert("op".to_string(), Json::Str("shutdown".to_string()));
+    top.insert("reason".to_string(), Json::Str(stats.reason.to_string()));
+    top.insert("served".to_string(), Json::Num(stats.served as f64));
+    top.insert("requests".to_string(), Json::Num(stats.requests as f64));
+    top.insert("batches".to_string(), Json::Num(stats.batches as f64));
+    Json::Obj(top).to_string()
+}
+
+// ---------------------------------------------------------------------------
+// transport seam
+// ---------------------------------------------------------------------------
+
+/// Where a request's responses go. Cheap to clone; one per input line.
+#[derive(Clone)]
+pub enum Sink {
+    /// The stdin transport: responses print to the process stdout.
+    Stdout,
+    /// A TCP connection: responses queue to its writer thread.
+    Chan(Sender<String>),
+}
+
+impl Sink {
+    pub fn send(&self, line: String) {
+        match self {
+            Sink::Stdout => println!("{line}"),
+            // a connection that died cannot stall the loop; its responses
+            // are dropped with it
+            Sink::Chan(tx) => {
+                let _ = tx.send(line);
+            }
+        }
+    }
+}
+
+/// One input line tagged with the transport it arrived on.
+pub struct Event {
+    pub sink: Sink,
+    pub line: String,
+}
+
+// ---------------------------------------------------------------------------
+// the shared serve loop
+// ---------------------------------------------------------------------------
+
+/// Transport-agnostic serve loop: parses request lines, feeds one shared
+/// [`MicroBatcher`], answers drained batches through the engine, and routes
+/// each response to the sink its request arrived on. The stdin loop and
+/// the TCP server are both thin transports over this core, so the two
+/// paths cannot drift.
+pub struct ServeLoop {
+    engine: Arc<ServeEngine>,
+    mb: MicroBatcher,
+    /// One sink per queued request, FIFO-aligned with the batcher queue:
+    /// the batcher always drains whole batches in push order, so the first
+    /// `batch.len()` routes always belong to the drained batch.
+    routes: VecDeque<Sink>,
+    clock: Instant,
+    next_id: u64,
+    served: usize,
+    requests: usize,
+    batches: usize,
+}
+
+impl ServeLoop {
+    pub fn new(engine: Arc<ServeEngine>, policy: BatchPolicy) -> ServeLoop {
+        ServeLoop {
+            engine,
+            mb: MicroBatcher::new(policy),
+            routes: VecDeque::new(),
+            clock: Instant::now(),
+            next_id: 0,
+            served: 0,
+            requests: 0,
+            batches: 0,
+        }
+    }
+
+    fn now(&self) -> u64 {
+        self.clock.elapsed().as_millis() as u64
+    }
+
+    /// Parse and enqueue one input line, answering any batch it flushes.
+    /// Returns `true` when the line was an `{"op":"shutdown"}` request.
+    pub fn handle_line(&mut self, sink: &Sink, line: &str) -> bool {
+        if line.trim().is_empty() {
+            return false;
+        }
+        let now = self.now();
+        match parse_line(line, &mut self.next_id) {
+            Ok(Parsed::Shutdown) => true,
+            Ok(Parsed::Request(req)) => {
+                self.routes.push_back(sink.clone());
+                if let Some(batch) = self.mb.push(req, now) {
+                    self.answer(&batch);
+                }
+                false
+            }
+            // a malformed line gets an error response, not a service
+            // abort: queued requests stay alive
+            Err(e) => {
+                sink.send(error_line(e.id, &e.msg));
+                false
+            }
+        }
+    }
+
+    fn poll(&mut self) {
+        let now = self.now();
+        if let Some(batch) = self.mb.poll(now) {
+            self.answer(&batch);
+        }
+    }
+
+    /// Answer one drained micro-batch: a response line per request, routed
+    /// to its own sink. A failing request (e.g. an out-of-range node id)
+    /// must not take the batch — or the loop — down with it, so on a
+    /// batch-level error each request is retried alone and only the
+    /// offender gets an error response.
+    fn answer(&mut self, batch: &[ServeRequest]) {
+        let sinks: Vec<Sink> = self.routes.drain(..batch.len()).collect();
+        self.batches += 1;
+        self.requests += batch.len();
+        if let Err(e) = failpoint::fire("serve.request") {
+            // injected request-path failure: every request in the batch
+            // gets an error response, the loop itself stays up
+            for (r, sink) in batch.iter().zip(&sinks) {
+                sink.send(error_line(Some(r.id), &format!("{e:#}")));
+            }
+            return;
+        }
+        match self.engine.answer(batch) {
+            Ok(answers) => {
+                for ((id, preds), sink) in answers.iter().zip(&sinks) {
+                    self.served += preds.len();
+                    sink.send(response_line(*id, preds));
+                }
+            }
+            Err(_) => {
+                for (r, sink) in batch.iter().zip(&sinks) {
+                    match self.engine.answer(std::slice::from_ref(r)) {
+                        Ok(answers) => {
+                            for (id, preds) in &answers {
+                                self.served += preds.len();
+                                sink.send(response_line(*id, preds));
+                            }
+                        }
+                        Err(e) => sink.send(error_line(Some(r.id), &format!("{e:#}"))),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drive the loop over an event stream until shutdown: `should_stop`
+    /// returns a reason (signal delivery), any sink sends
+    /// `{"op":"shutdown"}` (reason `"op"`), or the stream disconnects
+    /// (stdin EOF, reason `"eof"`). Input already received is still parsed
+    /// and answered, and the queue is flushed, before the stats return —
+    /// graceful drain on every path.
+    pub fn run<F: Fn() -> Option<&'static str>>(
+        mut self,
+        rx: &Receiver<Event>,
+        should_stop: F,
+    ) -> LoopStats {
+        let max_wait = Duration::from_millis(self.mb.policy().max_wait.max(1));
+        let reason;
+        loop {
+            if let Some(r) = should_stop() {
+                reason = r;
+                break;
+            }
+            // wake exactly when the oldest queued request's latency
+            // deadline expires; with an empty queue, max_wait bounds the
+            // signal-poll cadence
+            let wait = match self.mb.next_deadline() {
+                Some(dl) => {
+                    Duration::from_millis(dl.saturating_sub(self.now()).max(1)).min(max_wait)
+                }
+                None => max_wait,
+            };
+            match rx.recv_timeout(wait) {
+                Ok(ev) => {
+                    if self.handle_line(&ev.sink, &ev.line) {
+                        reason = "op";
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => self.poll(),
+                Err(RecvTimeoutError::Disconnected) => {
+                    reason = "eof";
+                    break;
+                }
+            }
+        }
+        // graceful drain: the channel may hold lines the loop never got
+        // to; answer them, then flush whatever sits in the micro-batcher
+        while let Ok(ev) = rx.try_recv() {
+            let _ = self.handle_line(&ev.sink, &ev.line);
+        }
+        if let Some(batch) = self.mb.flush() {
+            self.answer(&batch);
+        }
+        LoopStats {
+            reason,
+            served: self.served,
+            requests: self.requests,
+            batches: self.batches,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP server
+// ---------------------------------------------------------------------------
+
+type SinkRegistry = Arc<Mutex<Vec<Sender<String>>>>;
+
+/// Serve over TCP: every accepted connection gets a reader thread (frames →
+/// the shared event channel) and a writer thread (response queue → frames),
+/// all feeding one [`ServeLoop`]. Returns after a graceful drain; the final
+/// shutdown line is broadcast to every open connection so clients observe
+/// the drain completing.
+pub fn serve_tcp<F: Fn() -> Option<&'static str>>(
+    engine: Arc<ServeEngine>,
+    policy: BatchPolicy,
+    listener: TcpListener,
+    should_stop: F,
+) -> Result<LoopStats> {
+    let (tx, rx) = mpsc::channel::<Event>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let sinks: SinkRegistry = Arc::new(Mutex::new(Vec::new()));
+    // non-blocking accept so the thread can notice `stop` between clients
+    listener.set_nonblocking(true)?;
+    let accept = {
+        let stop = Arc::clone(&stop);
+        let sinks = Arc::clone(&sinks);
+        std::thread::spawn(move || {
+            // `tx` lives on this thread, so the loop's receiver can only
+            // disconnect after shutdown is already under way
+            let tx = tx;
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if let Err(e) = failpoint::fire("serve.net.accept") {
+                            eprintln!("accept: {e:#}");
+                            continue;
+                        }
+                        if let Err(e) = spawn_connection(stream, tx.clone(), &sinks) {
+                            eprintln!("connection setup failed: {e:#}");
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        eprintln!("accept failed: {e}");
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                }
+            }
+        })
+    };
+    let stats = ServeLoop::new(engine, policy).run(&rx, should_stop);
+    // stop accepting, then broadcast the final status line: every response
+    // was already queued to its sink, and per-sink channels are FIFO, so
+    // clients always see their answers before the shutdown frame
+    stop.store(true, Ordering::SeqCst);
+    let line = shutdown_line(&stats);
+    for out in sinks.lock().unwrap_or_else(|p| p.into_inner()).drain(..) {
+        let _ = out.send(line.clone());
+    }
+    let _ = accept.join();
+    Ok(stats)
+}
+
+fn spawn_connection(stream: TcpStream, events: Sender<Event>, sinks: &SinkRegistry) -> Result<()> {
+    // accepted sockets can inherit the listener's O_NONBLOCK on some
+    // platforms; both per-connection threads want blocking IO
+    stream.set_nonblocking(false)?;
+    let (out_tx, out_rx) = mpsc::channel::<String>();
+    sinks.lock().unwrap_or_else(|p| p.into_inner()).push(out_tx.clone());
+    let mut writer = stream.try_clone()?;
+    std::thread::spawn(move || {
+        // ends when every sender is gone (reader exited and the server
+        // broadcast its shutdown line) or the client stopped reading
+        while let Ok(line) = out_rx.recv() {
+            if write_frame(&mut writer, &line).is_err() {
+                break;
+            }
+        }
+        let _ = writer.shutdown(std::net::Shutdown::Both);
+    });
+    let mut reader = stream;
+    std::thread::spawn(move || {
+        let sink = Sink::Chan(out_tx);
+        loop {
+            if let Err(e) = failpoint::fire("serve.net.read") {
+                sink.send(error_line(None, &format!("{e:#}")));
+                break;
+            }
+            match read_frame(&mut reader) {
+                Ok(Some(line)) => {
+                    if events.send(Event { sink: sink.clone(), line }).is_err() {
+                        break; // loop already shut down
+                    }
+                }
+                Ok(None) => break, // clean close
+                Err(e) => {
+                    sink.send(error_line(None, &format!("connection error: {e}")));
+                    break;
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// loadtest harness
+// ---------------------------------------------------------------------------
+
+/// `lmc loadtest` knobs.
+#[derive(Clone, Debug)]
+pub struct LoadtestOptions {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent client connections.
+    pub conns: usize,
+    /// Target open-loop arrival rate, requests/second across all
+    /// connections.
+    pub qps: f64,
+    /// Duration of the arrival schedule, seconds.
+    pub secs: f64,
+    /// Request sizes (node ids per request), cycled across requests.
+    pub sizes: Vec<usize>,
+    pub seed: u64,
+    /// Node-id space to sample requests from (the served graph's `n`).
+    pub n_nodes: u32,
+}
+
+/// Server-side counters parsed from the broadcast shutdown line.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub served: usize,
+    pub requests: usize,
+    pub batches: usize,
+}
+
+/// What one loadtest run measured.
+#[derive(Clone, Debug)]
+pub struct LoadtestReport {
+    pub sent: usize,
+    pub completed: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub achieved_qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    pub server: Option<ServerStats>,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i.min(sorted.len() - 1)]
+}
+
+/// Run the open-loop load generator against a `lmc serve --listen` server
+/// and shut the server down when done (the shutdown broadcast carries the
+/// server-side batching counters back). Latency is measured from each
+/// request's *scheduled* send time, so queueing delay from an overloaded
+/// server counts against it — the open-loop discipline.
+pub fn run_loadtest(opts: &LoadtestOptions) -> Result<LoadtestReport> {
+    if opts.conns == 0 || opts.qps <= 0.0 || opts.secs <= 0.0 || opts.sizes.is_empty() {
+        bail!("loadtest needs conns >= 1, qps > 0, secs > 0, and at least one request size");
+    }
+    let total = ((opts.qps * opts.secs).round() as usize).max(opts.conns);
+    // request k is sent at start + k/qps by connection k % conns
+    let offs: Arc<Vec<Duration>> =
+        Arc::new((0..total).map(|k| Duration::from_secs_f64(k as f64 / opts.qps)).collect());
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::with_capacity(total)));
+    let errors = Arc::new(AtomicUsize::new(0));
+
+    // the control connection goes first: it registers with the server
+    // before any load, sends the shutdown op at the end, and reads the
+    // broadcast stats line back
+    let mut control = TcpStream::connect(&opts.addr)
+        .with_context(|| format!("loadtest cannot connect to {}", opts.addr))?;
+    control.set_read_timeout(Some(Duration::from_secs(30)))?;
+
+    let start = Instant::now() + Duration::from_millis(50);
+    let mut writers = Vec::new();
+    let mut readers = Vec::new();
+    for c in 0..opts.conns {
+        let stream = TcpStream::connect(&opts.addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let mut rd = stream.try_clone()?;
+        let offs_r = Arc::clone(&offs);
+        let lat = Arc::clone(&latencies);
+        let errs = Arc::clone(&errors);
+        readers.push(std::thread::spawn(move || {
+            loop {
+                match read_frame(&mut rd) {
+                    Ok(Some(line)) => {
+                        let Ok(v) = Json::parse(&line) else {
+                            errs.fetch_add(1, Ordering::SeqCst);
+                            continue;
+                        };
+                        if v.get("op").and_then(Json::as_str) == Some("shutdown") {
+                            break; // server drained; this stream is done
+                        }
+                        match v.get("id").and_then(Json::as_f64) {
+                            Some(id) if (id as usize) < offs_r.len() => {
+                                if v.get("error").is_some() {
+                                    errs.fetch_add(1, Ordering::SeqCst);
+                                } else {
+                                    let ms = (start + offs_r[id as usize])
+                                        .elapsed()
+                                        .as_secs_f64()
+                                        * 1e3;
+                                    lat.lock().unwrap_or_else(|p| p.into_inner()).push(ms);
+                                }
+                            }
+                            _ => {
+                                errs.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }));
+        let mut wr = stream;
+        let offs_w = Arc::clone(&offs);
+        let sizes = opts.sizes.clone();
+        let (seed, n_nodes, conns) = (opts.seed, opts.n_nodes, opts.conns);
+        writers.push(std::thread::spawn(move || {
+            let mut sent = 0usize;
+            for k in (c..offs_w.len()).step_by(conns) {
+                // open-loop: sleep until the scheduled send time; never
+                // wait for responses
+                let target = start + offs_w[k];
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let mut rng = Rng::new(seed ^ (k as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let sz = sizes[k % sizes.len()].max(1);
+                let nodes: Vec<Json> = (0..sz)
+                    .map(|_| Json::Num(rng.below(n_nodes.max(1) as usize) as f64))
+                    .collect();
+                let mut top = BTreeMap::new();
+                top.insert("id".to_string(), Json::Num(k as f64));
+                top.insert("nodes".to_string(), Json::Arr(nodes));
+                if write_frame(&mut wr, &Json::Obj(top).to_string()).is_err() {
+                    break;
+                }
+                sent += 1;
+            }
+            sent
+        }));
+    }
+
+    let mut sent = 0usize;
+    for w in writers {
+        sent += w.join().map_err(|_| anyhow!("loadtest writer thread panicked"))?;
+    }
+    // give in-flight requests one batching window to be read and answered
+    // before asking the server to drain
+    std::thread::sleep(Duration::from_millis(300));
+    write_frame(&mut control, "{\"op\":\"shutdown\"}")?;
+    let mut server = None;
+    while let Ok(Some(line)) = read_frame(&mut control) {
+        let Ok(v) = Json::parse(&line) else { continue };
+        if v.get("op").and_then(Json::as_str) == Some("shutdown") {
+            let count = |k: &str| v.get(k).and_then(Json::as_usize).unwrap_or(0);
+            server = Some(ServerStats {
+                served: count("served"),
+                requests: count("requests"),
+                batches: count("batches"),
+            });
+            break;
+        }
+    }
+    for r in readers {
+        let _ = r.join();
+    }
+
+    let wall_s = start.elapsed().as_secs_f64();
+    let mut lat = Arc::try_unwrap(latencies)
+        .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+        .unwrap_or_else(|arc| arc.lock().unwrap_or_else(|p| p.into_inner()).clone());
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let completed = lat.len();
+    Ok(LoadtestReport {
+        sent,
+        completed,
+        errors: errors.load(Ordering::SeqCst),
+        wall_s,
+        achieved_qps: completed as f64 / wall_s.max(1e-9),
+        p50_ms: percentile(&lat, 0.50),
+        p95_ms: percentile(&lat, 0.95),
+        p99_ms: percentile(&lat, 0.99),
+        mean_ms: if lat.is_empty() {
+            f64::NAN
+        } else {
+            lat.iter().sum::<f64>() / lat.len() as f64
+        },
+        max_ms: lat.last().copied().unwrap_or(f64::NAN),
+        server,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_and_eof_is_clean() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "{\"id\":1}").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        let mut r = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("{\"id\":1}"));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(""));
+        assert!(read_frame(&mut r).unwrap().is_none(), "EOF at a boundary is a clean close");
+    }
+
+    #[test]
+    fn oversized_and_truncated_frames_are_errors() {
+        let mut huge = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        huge.extend_from_slice(b"x");
+        let err = read_frame(&mut io::Cursor::new(huge)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // header promises 9 bytes, stream holds 3
+        let mut torn = 9u32.to_le_bytes().to_vec();
+        torn.extend_from_slice(b"abc");
+        assert!(read_frame(&mut io::Cursor::new(torn)).is_err());
+        // EOF inside the header itself
+        assert!(read_frame(&mut io::Cursor::new(vec![1u8, 0])).is_err());
+    }
+
+    #[test]
+    fn parse_line_accepts_shutdown_op() {
+        // the documented control line must not be "bad request" (ISSUE 8)
+        let mut id = 0;
+        assert_eq!(parse_line("{\"op\":\"shutdown\"}", &mut id).unwrap(), Parsed::Shutdown);
+        assert_eq!(id, 0, "control lines must not consume request ids");
+        let err = parse_line("{\"op\":\"reboot\"}", &mut id).unwrap_err();
+        assert!(err.msg.contains("unknown op"), "{}", err.msg);
+    }
+
+    #[test]
+    fn parse_line_request_shapes_and_sequential_ids() {
+        let mut id = 0;
+        let Parsed::Request(r) = parse_line("[3,1,2]", &mut id).unwrap() else {
+            panic!("array form must parse as a request")
+        };
+        assert_eq!((r.id, r.nodes), (0, vec![3, 1, 2]));
+        let Parsed::Request(r) = parse_line("{\"id\":9,\"nodes\":[5]}", &mut id).unwrap() else {
+            panic!("object form must parse as a request")
+        };
+        assert_eq!((r.id, r.nodes), (9, vec![5]));
+        let Parsed::Request(r) = parse_line("{\"nodes\":[7]}", &mut id).unwrap() else {
+            panic!("id-less object form must parse as a request")
+        };
+        assert_eq!(r.id, 2, "ids stay sequential across explicit-id requests");
+        assert!(parse_line("not json", &mut id).is_err());
+        assert!(parse_line("{\"noodles\":[1]}", &mut id).is_err());
+    }
+
+    #[test]
+    fn parse_line_rejects_non_integer_and_out_of_range_ids() {
+        let mut id = 0;
+        // -1 used to saturate to node 0, 3.7 truncated to node 3: silently
+        // wrong predictions (ISSUE 8); both must be per-request errors now
+        for bad in ["[-1]", "[3.7]", "[4294967296]", "[1e300]", "[\"7\"]"] {
+            let err = parse_line(bad, &mut id).unwrap_err();
+            assert!(err.id.is_none(), "{bad}: bare arrays carry no id");
+            assert!(
+                err.msg.contains("node id") || err.msg.contains("numbers"),
+                "{bad}: {}",
+                err.msg
+            );
+        }
+        // the error response keeps the request's own id for correlation
+        let err = parse_line("{\"id\":42,\"nodes\":[-1]}", &mut id).unwrap_err();
+        assert_eq!(err.id, Some(42));
+        // boundary: u32::MAX itself is a valid id
+        let Parsed::Request(r) = parse_line("[4294967295]", &mut id).unwrap() else {
+            panic!("u32::MAX must parse")
+        };
+        assert_eq!(r.nodes, vec![u32::MAX]);
+    }
+
+    #[test]
+    fn shutdown_line_carries_stats() {
+        let line = shutdown_line(&LoopStats { reason: "op", served: 7, requests: 3, batches: 2 });
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("op").and_then(Json::as_str), Some("shutdown"));
+        assert_eq!(v.get("reason").and_then(Json::as_str), Some("op"));
+        assert_eq!(v.get("served").and_then(Json::as_usize), Some(7));
+        assert_eq!(v.get("requests").and_then(Json::as_usize), Some(3));
+        assert_eq!(v.get("batches").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn error_and_response_lines_format() {
+        assert_eq!(error_line(None, "boom"), "{\"error\":\"boom\"}");
+        assert_eq!(error_line(Some(4), "boom"), "{\"error\":\"boom\",\"id\":4}");
+        let p = Prediction { node: 3, label: 1, logits: vec![0.25, 0.5] };
+        let line = response_line(8, &[p]);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("id").and_then(Json::as_usize), Some(8));
+        assert_eq!(v.path("predictions.0.node").and_then(Json::as_usize), Some(3));
+        assert_eq!(v.path("predictions.0.logit").and_then(Json::as_f64), Some(0.5));
+    }
+
+    #[test]
+    fn percentiles_interpolate_to_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&s, 0.50), 51.0);
+        assert_eq!(percentile(&s, 0.99), 99.0);
+        assert_eq!(percentile(&s, 1.0), 100.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+}

@@ -18,7 +18,8 @@
 //!
 //! Sites currently wired: `trainer.step`, `sharded.worker`,
 //! `sharded.exchange`, `ckpt.save`, `ckpt.load`, `ckpt.write`,
-//! `serve.request` (see rust/README.md § Fault tolerance).
+//! `serve.request`, `serve.net.accept`, `serve.net.read`
+//! (see rust/README.md § Fault tolerance).
 
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{OnceLock, RwLock};

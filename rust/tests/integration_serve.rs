@@ -218,6 +218,31 @@ fn micro_batched_requests_route_back_per_request() {
 }
 
 #[test]
+fn tile_workspace_pool_is_stable_across_serial_predicts() {
+    // The exact path checks an epoch-stamped visited/scatter workspace out
+    // of a pool instead of allocating O(n) buffers per tile (ISSUE 8). A
+    // serial caller must miss the pool at most once — ever — and reused
+    // buffers must not perturb the served logits.
+    let eng = engine("gcn", ServeMode::Exact, 48);
+    let nodes: Vec<u32> = (0..eng.graph().n() as u32).step_by(11).collect();
+    let first = eng.predict(&nodes).unwrap();
+    let warm = eng.tile_ws_misses();
+    assert!(warm <= 1, "a serial caller needs at most one workspace, saw {warm} misses");
+    for _ in 0..16 {
+        assert_eq!(
+            eng.predict(&nodes).unwrap(),
+            first,
+            "workspace reuse changed served predictions"
+        );
+    }
+    assert_eq!(
+        eng.tile_ws_misses(),
+        warm,
+        "repeat predicts must reuse the pooled workspace, not allocate fresh ones"
+    );
+}
+
+#[test]
 fn serve_rejects_out_of_range_nodes() {
     let eng = engine("gcn", ServeMode::Exact, 32);
     let n = eng.graph().n() as u32;

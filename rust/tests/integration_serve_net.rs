@@ -1,0 +1,251 @@
+//! Integration: the networked serve front-end (ISSUE 8).
+//!
+//! The acceptance bar:
+//!   * responses over loopback TCP are **byte-identical** to the lines an
+//!     in-process `predict` would produce — the transport adds nothing and
+//!     loses nothing;
+//!   * requests from interleaved connections route back to their own
+//!     connection and share micro-batches across streams;
+//!   * `{"op":"shutdown"}` and SIGINT/SIGTERM all end in a graceful drain
+//!     (queued input answered, final status line emitted) on both the TCP
+//!     and stdin transports;
+//!   * malformed node ids get per-request error lines instead of silently
+//!     saturated/truncated predictions.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Command, Stdio};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use lmc::config::RunConfig;
+use lmc::graph::DatasetId;
+use lmc::serve::net::{self, read_frame, write_frame, Event};
+use lmc::serve::{BatchPolicy, LoopStats, ServeEngine, ServeLoop, ServeMode, Sink};
+use lmc::util::json::Json;
+
+fn engine(tile: usize) -> Arc<ServeEngine> {
+    let cfg = RunConfig {
+        dataset: DatasetId::CoraSim,
+        arch: "gcn".into(),
+        seed: 3,
+        serve_mode: ServeMode::Exact,
+        serve_max_batch: tile,
+        ..Default::default()
+    };
+    Arc::new(ServeEngine::from_config(&cfg, None).unwrap())
+}
+
+fn start_server(
+    eng: Arc<ServeEngine>,
+    policy: BatchPolicy,
+) -> (SocketAddr, thread::JoinHandle<LoopStats>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = thread::spawn(move || net::serve_tcp(eng, policy, listener, || None).unwrap());
+    (addr, h)
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    s
+}
+
+fn send_req(s: &mut TcpStream, id: u64, nodes: &[u32]) {
+    let csv = nodes.iter().map(|u| u.to_string()).collect::<Vec<_>>().join(",");
+    write_frame(s, &format!("{{\"id\":{id},\"nodes\":[{csv}]}}")).unwrap();
+}
+
+#[test]
+fn networked_exact_responses_are_bit_identical_to_in_process_predict() {
+    let eng = engine(48);
+    let local = Arc::clone(&eng);
+    let (addr, server) = start_server(eng, BatchPolicy { max_nodes: 64, max_wait: 2 });
+    let mut c = connect(addr);
+    let requests: Vec<(u64, Vec<u32>)> =
+        vec![(7, vec![0, 5, 5, 3]), (8, (0..40).collect()), (9, vec![11])];
+    for (id, nodes) in &requests {
+        send_req(&mut c, *id, nodes);
+    }
+    let mut got: BTreeMap<u64, String> = BTreeMap::new();
+    for _ in 0..requests.len() {
+        let line = read_frame(&mut c).unwrap().expect("response frame");
+        let id = Json::parse(&line).unwrap().get("id").and_then(Json::as_usize).unwrap() as u64;
+        got.insert(id, line);
+    }
+    for (id, nodes) in &requests {
+        // byte-for-byte equality with the response line an in-process
+        // predict would format for the same request
+        let preds = local.predict(nodes).unwrap();
+        assert_eq!(got[id], net::response_line(*id, &preds), "request {id}");
+    }
+    write_frame(&mut c, "{\"op\":\"shutdown\"}").unwrap();
+    let stats = server.join().unwrap();
+    assert_eq!(stats.reason, "op");
+    assert_eq!((stats.requests, stats.served), (3, 4 + 40 + 1));
+}
+
+#[test]
+fn interleaved_connections_route_responses_home_and_batch_across_streams() {
+    let eng = engine(64);
+    // the size threshold can only be crossed by pooling requests from BOTH
+    // connections; the latency deadline is effectively infinite
+    let (addr, server) = start_server(eng, BatchPolicy { max_nodes: 6, max_wait: 600_000 });
+    let mut a = connect(addr);
+    let mut b = connect(addr);
+    for i in 0..3u32 {
+        send_req(&mut a, (10 + 2 * i) as u64, &[i]);
+        send_req(&mut b, (11 + 2 * i) as u64, &[10 + i]);
+    }
+    let drain = |s: &mut TcpStream| -> Vec<(u64, u32)> {
+        (0..3)
+            .map(|_| {
+                let line = read_frame(s).unwrap().expect("response frame");
+                let v = Json::parse(&line).unwrap();
+                (
+                    v.get("id").and_then(Json::as_usize).unwrap() as u64,
+                    v.path("predictions.0.node").and_then(Json::as_usize).unwrap() as u32,
+                )
+            })
+            .collect()
+    };
+    let mut got_a = drain(&mut a);
+    let mut got_b = drain(&mut b);
+    got_a.sort_unstable();
+    got_b.sort_unstable();
+    // every response landed on the connection its request arrived on,
+    // carrying the node that request asked for
+    assert_eq!(got_a, vec![(10, 0), (12, 1), (14, 2)]);
+    assert_eq!(got_b, vec![(11, 10), (13, 11), (15, 12)]);
+    write_frame(&mut a, "{\"op\":\"shutdown\"}").unwrap();
+    // the drain broadcast reaches every open connection, not just the one
+    // that asked for shutdown
+    for s in [&mut a, &mut b] {
+        let line = read_frame(s).unwrap().expect("broadcast shutdown frame");
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("op").and_then(Json::as_str), Some("shutdown"));
+        assert_eq!(v.get("requests").and_then(Json::as_usize), Some(6));
+    }
+    let stats = server.join().unwrap();
+    assert_eq!((stats.requests, stats.served), (6, 6));
+    assert!(
+        stats.batches < stats.requests,
+        "6 single-node requests across 2 streams must share batches, got {} batches",
+        stats.batches
+    );
+}
+
+#[test]
+fn serve_loop_answers_bad_ids_with_errors_and_drains_on_shutdown_op() {
+    let eng = engine(64);
+    let (tx, rx) = mpsc::channel::<Event>();
+    let (out_tx, out_rx) = mpsc::channel::<String>();
+    let sink = Sink::Chan(out_tx);
+    for line in [
+        "{\"id\":1,\"nodes\":[2]}",  // valid: queued behind the huge thresholds
+        "{\"id\":2,\"nodes\":[-1]}", // used to saturate to node 0
+        "[3.7]",                     // used to truncate to node 3
+        "{\"op\":\"shutdown\"}",
+    ] {
+        tx.send(Event { sink: sink.clone(), line: line.to_string() }).unwrap();
+    }
+    let stats =
+        ServeLoop::new(eng, BatchPolicy { max_nodes: 1000, max_wait: 600_000 }).run(&rx, || None);
+    assert_eq!(stats.reason, "op");
+    // the valid request was answered during the drain, not dropped; the
+    // malformed ones never reached the engine
+    assert_eq!((stats.requests, stats.served, stats.batches), (1, 1, 1));
+    let lines: Vec<String> = out_rx.try_iter().collect();
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    let err2 = Json::parse(&lines[0]).unwrap();
+    assert_eq!(err2.get("id").and_then(Json::as_usize), Some(2), "error keeps the request id");
+    assert!(err2.get("error").and_then(Json::as_str).unwrap().contains("out of u32 range"));
+    let err3 = Json::parse(&lines[1]).unwrap();
+    assert!(err3.get("id").is_none(), "bare arrays carry no id");
+    assert!(err3.get("error").and_then(Json::as_str).unwrap().contains("not an integer"));
+    let resp = Json::parse(&lines[2]).unwrap();
+    assert_eq!(resp.get("id").and_then(Json::as_usize), Some(1));
+    assert_eq!(resp.path("predictions.0.node").and_then(Json::as_usize), Some(2));
+}
+
+#[test]
+fn serve_loop_signal_stop_still_drains_queued_input() {
+    let eng = engine(64);
+    let (tx, rx) = mpsc::channel::<Event>();
+    let (out_tx, out_rx) = mpsc::channel::<String>();
+    tx.send(Event { sink: Sink::Chan(out_tx), line: "{\"id\":5,\"nodes\":[1,2]}".into() })
+        .unwrap();
+    // should_stop fires before the event is ever received: the drain path
+    // must still parse and answer it — the SIGTERM/SIGINT semantics
+    let stats = ServeLoop::new(eng, BatchPolicy { max_nodes: 1000, max_wait: 600_000 })
+        .run(&rx, || Some("sigterm"));
+    assert_eq!(stats.reason, "sigterm");
+    assert_eq!((stats.requests, stats.served), (1, 2));
+    let lines: Vec<String> = out_rx.try_iter().collect();
+    assert_eq!(lines.len(), 1);
+    assert_eq!(Json::parse(&lines[0]).unwrap().get("id").and_then(Json::as_usize), Some(5));
+}
+
+fn serve_cmd() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_lmc"));
+    c.args(["serve", "--dataset", "cora-sim", "--arch", "gcn", "--seed", "3"]);
+    c.args(["--serve-max-wait-ms", "5"]);
+    c.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::null());
+    c
+}
+
+#[test]
+fn serve_binary_stdin_transport_drains_on_shutdown_op() {
+    let mut child = serve_cmd().spawn().unwrap();
+    let mut stdin = child.stdin.take().unwrap();
+    writeln!(stdin, "{{\"id\":3,\"nodes\":[0,1]}}").unwrap();
+    writeln!(stdin, "{{\"op\":\"shutdown\"}}").unwrap();
+    stdin.flush().unwrap();
+    // stdin stays open: the exit below must come from the op, not EOF
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8(out.stdout).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "{text}");
+    let resp = Json::parse(lines[0]).unwrap();
+    assert_eq!(resp.get("id").and_then(Json::as_usize), Some(3));
+    assert_eq!(resp.path("predictions.0.node").and_then(Json::as_usize), Some(0));
+    let down = Json::parse(lines[1]).unwrap();
+    assert_eq!(down.get("op").and_then(Json::as_str), Some("shutdown"));
+    assert_eq!(down.get("reason").and_then(Json::as_str), Some("op"));
+    assert_eq!(down.get("served").and_then(Json::as_usize), Some(2));
+    drop(stdin);
+}
+
+#[cfg(unix)]
+#[test]
+fn serve_binary_drains_on_sigint() {
+    use std::io::{BufRead, BufReader, Read};
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGINT: i32 = 2;
+    let mut child = serve_cmd().spawn().unwrap();
+    let mut stdin = child.stdin.take().unwrap();
+    writeln!(stdin, "[4]").unwrap();
+    stdin.flush().unwrap();
+    let mut out = BufReader::new(child.stdout.take().unwrap());
+    let mut line = String::new();
+    out.read_line(&mut line).unwrap();
+    let resp = Json::parse(&line).unwrap();
+    assert!(resp.get("predictions").is_some(), "first line should answer the request: {line}");
+    // Ctrl-C: the handler records the signal, the loop drains and exits 0
+    // instead of dying mid-service
+    assert_eq!(unsafe { kill(child.id() as i32, SIGINT) }, 0);
+    let mut rest = String::new();
+    out.read_to_string(&mut rest).unwrap();
+    let last = rest.lines().last().expect("shutdown status line");
+    let down = Json::parse(last).unwrap();
+    assert_eq!(down.get("op").and_then(Json::as_str), Some("shutdown"));
+    assert_eq!(down.get("reason").and_then(Json::as_str), Some("sigint"));
+    assert!(child.wait().unwrap().success());
+    drop(stdin);
+}
