@@ -228,6 +228,7 @@ fn main() {
             bwd_scale: 1.0,
             vscale,
             grad_scale: 1.0,
+            top: None,
             ws: None,
         };
         black_box(exec_ref.forward_backward(&inputs).unwrap());
@@ -264,6 +265,7 @@ fn main() {
                 bwd_scale: 1.0,
                 vscale,
                 grad_scale: 1.0,
+                top: None,
                 ws: Some(ws),
             };
             let mut outs = exec.forward_backward(&inputs).unwrap();

@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::compensation::TopFit;
 use crate::coordinator::exact::{EvalResult, OracleResult};
 use crate::coordinator::params::Params;
 use crate::graph::Graph;
@@ -91,6 +92,11 @@ pub struct StepInputs<'a> {
     pub vscale: f32,
     /// Cluster-sampling reweighting b/c (Eqs. 14-15).
     pub grad_scale: f32,
+    /// TOP message-invariance transforms (arXiv 2502.19693). When set, the
+    /// backend synthesizes halo values from fresh in-batch ones via the
+    /// learned per-layer transforms instead of the Eq. 9/12 history
+    /// combination (`hist_h`/`hist_v` are then zero placeholder buffers).
+    pub top: Option<TopStepInputs<'a>>,
     /// Optional reusable scratch pool (owned by the trainer). Backends that
     /// support it grab every per-layer buffer from here instead of
     /// allocating; `None` restores allocate-per-step behaviour. The escaped
@@ -98,6 +104,18 @@ pub struct StepInputs<'a> {
     /// `hist_h`/`hist_v`/`beta` come from the same pool and are recycled by
     /// the trainer after history write-back.
     pub ws: Option<&'a Mutex<StepWorkspace>>,
+}
+
+/// Borrowed view of a [`crate::compensation::Top`] policy's learned
+/// transforms for one step. `fwd[l-1]` is the `d_l × d_l` transform T_l
+/// applied to fresh layer-`l` activations; `bwd[l-2]` is the transform S_l
+/// applied to layer-`l` auxiliary cotangents. `fit` asks the backend to
+/// also return the in-batch least-squares fit gradients (skipped during
+/// pure measurement passes so grad-check never mutates the transforms).
+pub struct TopStepInputs<'a> {
+    pub fwd: &'a [Tensor],
+    pub bwd: &'a [Tensor],
+    pub fit: bool,
 }
 
 /// Host-visible results of one fused train step.
@@ -118,6 +136,9 @@ pub struct StepOutputs {
     pub htilde: Vec<Vec<f32>>,
     /// Simulated accelerator-resident bytes for this step.
     pub active_bytes: usize,
+    /// TOP transform fit gradients (present iff `StepInputs::top` was set
+    /// with `fit: true`); applied by the trainer via `Compensation::fit`.
+    pub top_fit: Option<TopFit>,
 }
 
 /// A pluggable execution backend: the fused subgraph train step plus the

@@ -51,6 +51,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 use rayon::prelude::*;
 
+use crate::compensation::TopFit;
 use crate::coordinator::exact::{acc, argmax, EvalResult, OracleResult};
 use crate::coordinator::memory;
 use crate::coordinator::params::Params;
@@ -545,6 +546,13 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
     let nh = sb.halo.len();
     let m = nb + nh;
 
+    if inp.top.is_some() && kind != Kind::Gcn {
+        bail!("TOP compensation is implemented for arch gcn only");
+    }
+    // TOP transform fit gradients, collected per layer when requested.
+    let mut fit_fwd: Vec<Tensor> = Vec::new();
+    let mut fit_bwd: Vec<Tensor> = Vec::new();
+
     // Scratch: the trainer-owned pool (held for the whole step), or a
     // step-local pool for callers without one (old allocate-per-step
     // behaviour, bit-identical results).
@@ -612,6 +620,27 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
                     kern.matmul_bias_into(&mut z, &agg, m, d_prev, &w.data, d_l, &b.data);
                     act.copy_from_slice(&z);
                 }
+                if let Some(top) = &inp.top {
+                    if top.fit && l < l_total {
+                        // TOP fit pair: the in-batch-only incomplete
+                        // activation (A_bb carries the self loops, so this
+                        // is exactly the message-dropped forward) against
+                        // the complete in-batch value just computed.
+                        let mut aggb = ws.grab(nb * d_prev);
+                        sb.a_bb.par_spmm_acc_tiled(&h[..nb * d_prev], d_prev, 1.0, &mut aggb);
+                        let mut zi = ws.grab_dirty(nb * d_l);
+                        let mut inc = ws.grab_dirty(nb * d_l);
+                        let (wd, bd) = (&w.data, &b.data);
+                        kern.matmul_bias_relu_into(
+                            &mut zi, &mut inc, &aggb, nb, d_prev, wd, d_l, bd,
+                        );
+                        let full = &act[..nb * d_l];
+                        fit_fwd.push(top_fit_grad(kern, ws, &inc, full, &top.fwd[l - 1], nb, d_l));
+                        ws.put(aggb);
+                        ws.put(zi);
+                        ws.put(inc);
+                    }
+                }
                 lin.push(agg);
                 (z, act)
             }
@@ -646,11 +675,26 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
         };
         pre.push(z);
         if l < l_total {
-            // Eq. (9): halo rows become a convex combination of the fresh
-            // incomplete value and the historical embedding.
             let mut ht = ws.grab_dirty(nh * d_l);
             ht.copy_from_slice(&act[nb * d_l..]);
-            combine_into(&mut act[nb * d_l..], &inp.beta[..nh], &inp.hist_h[l - 1], &ht, nh, d_l);
+            if let Some(top) = &inp.top {
+                // TOP (arXiv 2502.19693): halo rows are synthesized from
+                // the fresh incomplete values via the learned transform
+                // T_l — no history, no staleness.
+                let t = &top.fwd[l - 1];
+                kern.matmul_into(&mut act[nb * d_l..], &ht, nh, d_l, &t.data, d_l);
+            } else {
+                // Eq. (9): halo rows become a convex combination of the
+                // fresh incomplete value and the historical embedding.
+                combine_into(
+                    &mut act[nb * d_l..],
+                    &inp.beta[..nh],
+                    &inp.hist_h[l - 1],
+                    &ht,
+                    nh,
+                    d_l,
+                );
+            }
             let mut newh_l = ws.grab_dirty(nb * d_l);
             newh_l.copy_from_slice(&act[..nb * d_l]);
             new_h.push(newh_l);
@@ -756,6 +800,18 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
                 kern.matmul_nt_into(&mut dagg, &dz, m, d_l, &w.data, d_prev);
                 let mut vf = ws.grab(m * d_prev);
                 agg_full_scaled_into(kern, sb, &dagg, d_prev, 1.0, &mut vf);
+                if let Some(top) = &inp.top {
+                    if top.fit && l > 1 {
+                        // TOP fit pair: in-batch-only propagated cotangent
+                        // against the complete one (mirrors the forward).
+                        let mut incv = ws.grab(nb * d_prev);
+                        sb.a_bb.par_spmm_acc_tiled(&dagg[..nb * d_prev], d_prev, 1.0, &mut incv);
+                        let full = &vf[..nb * d_prev];
+                        let tr = &top.bwd[l - 2];
+                        fit_bwd.push(top_fit_grad(kern, ws, &incv, full, tr, nb, d_prev));
+                        ws.put(incv);
+                    }
+                }
                 ws.put(dagg);
                 vf
             }
@@ -784,16 +840,23 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
         };
         ws.put(dz);
         if l > 1 {
-            // Eq. (12): compensate halo auxiliary variables with history.
             let mut vh_next = ws.grab_dirty(nh * d_prev);
-            combine_into(
-                &mut vh_next,
-                &inp.beta[..nh],
-                &inp.hist_v[l - 2],
-                &v_full[nb * d_prev..],
-                nh,
-                d_prev,
-            );
+            if let Some(top) = &inp.top {
+                // TOP backward: synthesize the halo cotangents from the
+                // fresh propagated ones via the learned transform S_l.
+                let s = &top.bwd[l - 2];
+                kern.matmul_into(&mut vh_next, &v_full[nb * d_prev..], nh, d_prev, &s.data, d_prev);
+            } else {
+                // Eq. (12): compensate halo auxiliaries with history.
+                combine_into(
+                    &mut vh_next,
+                    &inp.beta[..nh],
+                    &inp.hist_v[l - 2],
+                    &v_full[nb * d_prev..],
+                    nh,
+                    d_prev,
+                );
+            }
             for v in vh_next.iter_mut() {
                 *v *= inp.bwd_scale;
             }
@@ -841,7 +904,46 @@ fn step_native(inp: &StepInputs, kern: Kernels) -> Result<StepOutputs> {
     ws.put_all(lin);
 
     let active_bytes = memory::sparse_step_active_bytes(sb, arch, g.d_x);
-    Ok(StepOutputs { loss_sum, correct, grads, new_h, new_v, htilde, active_bytes })
+    let top_fit = match &inp.top {
+        Some(t) if t.fit => {
+            // the backward loop runs l = L..2 descending; flip so
+            // `bwd[l-2]` lines up with the transform indexing
+            fit_bwd.reverse();
+            Some(TopFit { fwd: fit_fwd, bwd: fit_bwd })
+        }
+        _ => None,
+    };
+    Ok(StepOutputs { loss_sum, correct, grads, new_h, new_v, htilde, active_bytes, top_fit })
+}
+
+/// Normalized least-squares gradient for one TOP transform: with residual
+/// `R = inc·T − full`, returns `incᵀR / (‖inc‖_F²/d + ε)` — a relaxation
+/// step toward the in-batch least-squares fit whose scale is invariant to
+/// the magnitude of the incoming activations (exact relaxation in the
+/// scalar case).
+fn top_fit_grad(
+    kern: Kernels,
+    ws: &mut StepWorkspace,
+    inc: &[f32],
+    full: &[f32],
+    t: &Tensor,
+    nb: usize,
+    d: usize,
+) -> Tensor {
+    let mut resid = ws.grab_dirty(nb * d);
+    kern.matmul_into(&mut resid, inc, nb, d, &t.data, d);
+    for (r, &f) in resid.iter_mut().zip(full) {
+        *r -= f;
+    }
+    let mut g = Tensor::zeros(&[d, d]);
+    kern.matmul_tn_into(&mut g.data, inc, nb, d, &resid, d);
+    ws.put(resid);
+    let norm: f32 = inc.iter().map(|v| v * v).sum();
+    let scale = 1.0 / (norm / d as f32 + 1e-12);
+    for v in g.data.iter_mut() {
+        *v *= scale;
+    }
+    g
 }
 
 // ---------------------------------------------------------------------------

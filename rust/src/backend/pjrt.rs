@@ -59,6 +59,9 @@ impl Executor for PjrtExecutor {
     }
 
     fn forward_backward(&self, inp: &StepInputs) -> Result<StepOutputs> {
+        if inp.top.is_some() {
+            anyhow::bail!("the pjrt backend does not implement TOP compensation");
+        }
         let sb = inp.sb;
         let spec = self
             .rt
@@ -96,6 +99,7 @@ impl Executor for PjrtExecutor {
             new_v,
             htilde,
             active_bytes: memory::program_active_bytes(&spec),
+            top_fit: None,
         })
     }
 

@@ -20,9 +20,11 @@ use crate::util::bytes::{
 };
 use crate::util::rng::Rng;
 
-/// File magic of the `lmc` checkpoint format (version 1).
+/// File magic of the `lmc` checkpoint format. Version 2 appends the
+/// compensation-policy state blob (TOP transforms; empty for the
+/// stateless policies) after the SPIDER section.
 pub const CKPT_MAGIC: &[u8; 8] = b"LMCCKPT1";
-pub const CKPT_VERSION: u32 = 1;
+pub const CKPT_VERSION: u32 = 2;
 
 const KIND_SHARD: u8 = 1;
 const KIND_RUN: u8 = 2;
@@ -41,6 +43,9 @@ pub struct TrainerState {
     pub batcher_rng: [u64; 4],
     pub step_count: u64,
     pub spider: Option<(Params, Vec<Tensor>)>,
+    /// Opaque compensation-policy state (`Compensation::encode_state`):
+    /// the learned TOP transforms, or empty for stateless policies.
+    pub comp: Vec<u8>,
 }
 
 impl TrainerState {
@@ -56,6 +61,7 @@ impl TrainerState {
             batcher_rng: t.batcher.rng_state(),
             step_count: t.step_count(),
             spider: t.spider_state().cloned(),
+            comp: t.comp.encode_state(),
         }
     }
 
@@ -103,6 +109,7 @@ impl TrainerState {
         t.batcher.restore_rng_state(self.batcher_rng);
         t.set_step_count(self.step_count);
         t.set_spider_state(self.spider.clone());
+        t.comp.decode_state(&self.comp)?;
         t.reset_transient_state();
         Ok(())
     }
@@ -276,6 +283,8 @@ pub fn encode_state(s: &TrainerState, fingerprint: &str) -> Vec<u8> {
             push_tensors(&mut out, est);
         }
     }
+    push_u32(&mut out, s.comp.len() as u32);
+    out.extend_from_slice(&s.comp);
     append_crc_trailer(&mut out);
     out
 }
@@ -309,6 +318,8 @@ pub fn decode_state(bytes: &[u8], expect_fingerprint: &str) -> Result<TrainerSta
         1 => Some((read_params(&mut cur)?, read_tensors(&mut cur)?)),
         other => bail!("bad spider-state flag {other}"),
     };
+    let comp_len = cur.u32()? as usize;
+    let comp = cur.take(comp_len)?.to_vec();
     if cur.remaining() != 0 {
         bail!("checkpoint state: {} trailing bytes", cur.remaining());
     }
@@ -322,6 +333,7 @@ pub fn decode_state(bytes: &[u8], expect_fingerprint: &str) -> Result<TrainerSta
         batcher_rng,
         step_count,
         spider,
+        comp,
     })
 }
 

@@ -79,6 +79,13 @@ pub fn config_fingerprint(cfg: &RunConfig) -> String {
         format!("spider={}", cfg.spider_period),
         format!("hist={}", cfg.history_dtype.name()),
         format!("bwd_off={}", cfg.force_bwd_off),
+        // compensation override + TOP fit rate shape the trajectory;
+        // `comp_beta` is serve-only and deliberately excluded
+        format!(
+            "comp={}",
+            cfg.compensation.map(|k| k.name()).unwrap_or("method")
+        ),
+        format!("toplr={}", cfg.top_lr),
     ];
     format!("v1;{}", fields.join(";"))
 }

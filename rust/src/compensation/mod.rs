@@ -1,0 +1,549 @@
+//! Pluggable message-compensation API (ROADMAP "Message-invariance
+//! compensation (TOP)" / ISSUE 9).
+//!
+//! Subgraph-wise training discards messages from out-of-batch neighbors;
+//! every method in this repo is a policy for *compensating* that loss.
+//! Until now the policy was hard-wired through `backend/native.rs`
+//! (Eq. 9 forward combine, Eq. 12 backward combine), `Method`'s boolean
+//! knobs, and serve's `serve_beta` special case. The [`Compensation`]
+//! trait pulls all of it behind one seam:
+//!
+//!   * [`LmcHistory`] — the paper's Eq. 9/12 path over the [`History`]
+//!     store. Covers LMC (forward + backward compensation), GAS (forward
+//!     history only, `beta = 0`), and FM (GAS + momentum push), which
+//!     differ only in the [`CompensationSpec`] flags. Bit-identical to
+//!     the pre-trait trainer (`tests/integration_compensation.rs`).
+//!   * [`NoComp`] — CLUSTER / GD: no halo compensation, no state.
+//!   * [`Top`] — message invariance ("Accurate and Scalable GNNs via
+//!     Message Invariance", arXiv 2502.19693, the LMC authors'
+//!     follow-up): a per-layer learned linear transform synthesizes
+//!     out-of-batch contributions from *fresh in-batch* quantities
+//!     instead of reading a stale history. Forward halo rows become
+//!     `htilde @ T_l`; backward halo cotangents become
+//!     `v_full @ S_l`. The transforms are fitted online, alongside the
+//!     GNN parameters, by regressing the *incomplete* (A_bb-only)
+//!     in-batch quantities onto the complete ones — pairs the batch
+//!     itself provides, no extra supervision. No O(n) memory, no
+//!     staleness; state is `2·(L-1)·d²` floats.
+//!
+//! The trainer owns a `Box<dyn Compensation>` next to its `History`
+//! store: the trait carries the *policy* and any learned state, the
+//! store stays where the sharded exchange / checkpoint / serve plumbing
+//! already expects it. Compensation state is checkpointed as an opaque
+//! section under `LMCCKPT1` ([`Compensation::encode_state`]).
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::params::Params;
+use crate::history::History;
+use crate::runtime::{ArchInfo, Tensor};
+use crate::sampler::{beta_vector, BetaScore, SubgraphBatch};
+
+/// Which compensation family a run uses (the `compensation` config knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompKind {
+    /// History-based Eq. 9/12 (LMC / GAS / FM).
+    Lmc,
+    /// Learned message-invariance transforms (TOP).
+    Top,
+    /// No halo compensation (CLUSTER / GD; serve: pure history halo).
+    None,
+}
+
+impl CompKind {
+    pub fn parse(s: &str) -> Option<CompKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "lmc" | "history" => CompKind::Lmc,
+            "top" | "mi" | "message-invariance" => CompKind::Top,
+            "none" | "off" => CompKind::None,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompKind::Lmc => "lmc",
+            CompKind::Top => "top",
+            CompKind::None => "none",
+        }
+    }
+}
+
+/// Flat description of a compensation policy — the knobs the step kernels
+/// and the trainer's gather/write-back sequence key on. One method = one
+/// spec ([`crate::coordinator::methods::Method::compensation`]), so the
+/// old scattered predicates (`uses_beta`, `bwd_scale`, `uses_history`,
+/// `stores_aux`, `halo_momentum`) live in a single table.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompensationSpec {
+    pub kind: CompKind,
+    /// Forward Eq. 9 combination on? (beta > 0 allowed)
+    pub uses_beta: bool,
+    /// Backward compensation strength (Eqs. 11-13); 0 disables C_b.
+    pub bwd_scale: f32,
+    /// Read historical embeddings for the halo?
+    pub uses_history: bool,
+    /// Store auxiliary-variable histories (Vbar)?
+    pub stores_aux: bool,
+    /// FM's momentum push of incomplete fresh halo values into history.
+    pub halo_momentum: Option<f32>,
+}
+
+impl CompensationSpec {
+    /// The full LMC policy (forward + backward history compensation).
+    pub fn lmc() -> CompensationSpec {
+        CompensationSpec {
+            kind: CompKind::Lmc,
+            uses_beta: true,
+            bwd_scale: 1.0,
+            uses_history: true,
+            stores_aux: true,
+            halo_momentum: None,
+        }
+    }
+
+    /// GAS: historical halo values, beta = 0, no backward compensation.
+    pub fn gas() -> CompensationSpec {
+        CompensationSpec { uses_beta: false, bwd_scale: 0.0, stores_aux: false, ..Self::lmc() }
+    }
+
+    /// FM: GAS + momentum-0.3 push of fresh halo values into the store.
+    pub fn fm() -> CompensationSpec {
+        CompensationSpec { halo_momentum: Some(0.3), ..Self::gas() }
+    }
+
+    /// TOP: learned transforms, full backward compensation, no history.
+    pub fn top() -> CompensationSpec {
+        CompensationSpec {
+            kind: CompKind::Top,
+            uses_beta: false,
+            bwd_scale: 1.0,
+            uses_history: false,
+            stores_aux: false,
+            halo_momentum: None,
+        }
+    }
+
+    /// CLUSTER / GD: nothing to compensate.
+    pub fn none() -> CompensationSpec {
+        CompensationSpec {
+            kind: CompKind::None,
+            uses_beta: false,
+            bwd_scale: 0.0,
+            uses_history: false,
+            stores_aux: false,
+            halo_momentum: None,
+        }
+    }
+}
+
+/// Per-step fitting gradients for TOP's transforms, computed by the
+/// backend on the in-batch regression pairs (see `backend/native.rs`):
+/// one `d_l × d_l` gradient per message-passing boundary `l = 1..L-1`,
+/// already normalized so a unit learning rate is a full relaxation step
+/// toward the per-batch least-squares transform.
+#[derive(Clone, Debug, Default)]
+pub struct TopFit {
+    /// Gradients for the forward transforms `T_l`.
+    pub fwd: Vec<Tensor>,
+    /// Gradients for the backward transforms `S_l`.
+    pub bwd: Vec<Tensor>,
+}
+
+/// A compensation policy plus its method-specific learned state.
+///
+/// `Send + Sync` because the serve engine shares itself across request
+/// threads and sharded workers own one per worker.
+pub trait Compensation: Send + Sync {
+    /// The flat policy flags the step kernels and trainer key on.
+    fn spec(&self) -> CompensationSpec;
+
+    /// Serve-side Eq. 9 β vector for a cached tile (one entry per halo
+    /// row). All-zero means halo rows are served purely from the warm
+    /// history — the pre-trait `serve_beta = 0` default.
+    fn serve_beta(&self, sb: &SubgraphBatch) -> Vec<f32>;
+
+    /// TOP's learned per-layer transforms `(forward T, backward S)`;
+    /// `None` for policies without learned state.
+    fn transforms(&self) -> Option<(&[Tensor], &[Tensor])> {
+        None
+    }
+
+    /// Apply one online fitting step from the backend's in-batch
+    /// regression gradients. No-op for stateless policies.
+    fn fit(&mut self, _fit: &TopFit) {}
+
+    /// Resident bytes of compensation state for a trainer holding
+    /// `hist` — the memory column of the grad-error shoot-out.
+    fn state_bytes(&self, hist: &History) -> usize;
+
+    /// Serialize learned state for the `LMCCKPT1` compensation section.
+    /// Empty for stateless policies.
+    fn encode_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state written by [`Compensation::encode_state`]. The
+    /// checkpoint config fingerprint already guarantees the same method,
+    /// so a payload mismatch is corruption, not a config change.
+    fn decode_state(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            bail!(
+                "checkpoint carries {} bytes of compensation state but this \
+                 method keeps none",
+                bytes.len()
+            )
+        }
+    }
+}
+
+/// The paper's Eq. 9/12 history path (LMC / GAS / FM — the spec flags
+/// select the sub-policy). The `History` store itself stays owned by the
+/// trainer / serve engine; this type carries the β policy.
+pub struct LmcHistory {
+    spec: CompensationSpec,
+    alpha: f32,
+    score: BetaScore,
+}
+
+impl LmcHistory {
+    pub fn new(spec: CompensationSpec, alpha: f32, score: BetaScore) -> LmcHistory {
+        LmcHistory { spec, alpha, score }
+    }
+}
+
+impl Compensation for LmcHistory {
+    fn spec(&self) -> CompensationSpec {
+        self.spec
+    }
+
+    fn serve_beta(&self, sb: &SubgraphBatch) -> Vec<f32> {
+        if self.alpha > 0.0 {
+            beta_vector(sb, self.alpha, self.score)
+        } else {
+            vec![0f32; sb.halo.len()]
+        }
+    }
+
+    fn state_bytes(&self, hist: &History) -> usize {
+        // Hbar always; Vbar only when the backward path stores aux rows.
+        if self.spec.stores_aux {
+            hist.bytes()
+        } else {
+            hist.bytes() / 2
+        }
+    }
+}
+
+/// No compensation (CLUSTER / GD). On the serve path this is the default
+/// cached mode: halo rows come purely from the warm history (β ≡ 0).
+pub struct NoComp;
+
+impl Compensation for NoComp {
+    fn spec(&self) -> CompensationSpec {
+        CompensationSpec::none()
+    }
+
+    fn serve_beta(&self, sb: &SubgraphBatch) -> Vec<f32> {
+        vec![0f32; sb.halo.len()]
+    }
+
+    fn state_bytes(&self, _hist: &History) -> usize {
+        0
+    }
+}
+
+/// TOP message invariance: per-boundary learned linear transforms.
+///
+/// `fwd[l-1]` (`T_l`, `d_l × d_l`) maps the incomplete fresh halo
+/// activations `htilde` (Eq. 10) to synthesized complete ones; `bwd[l-2]`
+/// (`S_{l-1}`, `d_{l-1} × d_{l-1}`) maps fresh incomplete halo cotangents
+/// to synthesized complete ones. Identity-initialized, so step 0 equals
+/// the pure `β = 1` fresh-value policy and fitting only improves on it.
+pub struct Top {
+    spec: CompensationSpec,
+    fwd: Vec<Tensor>,
+    bwd: Vec<Tensor>,
+    lr: f32,
+}
+
+impl Top {
+    /// `widths` are the hidden-layer dims `arch.dims[1..arch.l]` — the
+    /// same per-boundary widths the history store uses.
+    pub fn new(widths: &[usize], lr: f32) -> Top {
+        let ident = |d: usize| {
+            let mut t = Tensor::zeros(&[d, d]);
+            for i in 0..d {
+                t.data[i * d + i] = 1.0;
+            }
+            t
+        };
+        Top {
+            spec: CompensationSpec::top(),
+            fwd: widths.iter().map(|&d| ident(d)).collect(),
+            bwd: widths.iter().map(|&d| ident(d)).collect(),
+            lr,
+        }
+    }
+
+    /// Transform state as a named `Params` set — reuses the bitwise
+    /// `LMCPAR1` wire format (CRC-trailed) for checkpointing.
+    fn as_params(&self) -> Params {
+        let mut names = Vec::with_capacity(self.fwd.len() + self.bwd.len());
+        let mut tensors = Vec::with_capacity(self.fwd.len() + self.bwd.len());
+        for (i, t) in self.fwd.iter().enumerate() {
+            names.push(format!("T{}", i + 1));
+            tensors.push(t.clone());
+        }
+        for (i, s) in self.bwd.iter().enumerate() {
+            names.push(format!("S{}", i + 1));
+            tensors.push(s.clone());
+        }
+        Params { names, tensors }
+    }
+}
+
+impl Compensation for Top {
+    fn spec(&self) -> CompensationSpec {
+        self.spec
+    }
+
+    fn serve_beta(&self, sb: &SubgraphBatch) -> Vec<f32> {
+        // unreachable in practice: for_serve refuses TOP (transforms are
+        // not persisted with --save-params); pure history is the safe
+        // degenerate answer
+        vec![0f32; sb.halo.len()]
+    }
+
+    fn transforms(&self) -> Option<(&[Tensor], &[Tensor])> {
+        Some((&self.fwd, &self.bwd))
+    }
+
+    fn fit(&mut self, fit: &TopFit) {
+        let lr = self.lr;
+        for (t, g) in self.fwd.iter_mut().zip(&fit.fwd) {
+            debug_assert_eq!(t.shape, g.shape);
+            for (tv, &gv) in t.data.iter_mut().zip(&g.data) {
+                *tv -= lr * gv;
+            }
+        }
+        for (s, g) in self.bwd.iter_mut().zip(&fit.bwd) {
+            debug_assert_eq!(s.shape, g.shape);
+            for (sv, &gv) in s.data.iter_mut().zip(&g.data) {
+                *sv -= lr * gv;
+            }
+        }
+    }
+
+    fn state_bytes(&self, _hist: &History) -> usize {
+        let scalars: usize = self
+            .fwd
+            .iter()
+            .chain(self.bwd.iter())
+            .map(|t| t.data.len())
+            .sum();
+        scalars * std::mem::size_of::<f32>()
+    }
+
+    fn encode_state(&self) -> Vec<u8> {
+        self.as_params().to_bytes()
+    }
+
+    fn decode_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let p = Params::from_bytes(bytes)?;
+        let expect = self.as_params();
+        if p.names != expect.names {
+            bail!(
+                "TOP compensation state mismatch: checkpoint has {:?}, \
+                 this run expects {:?}",
+                p.names,
+                expect.names
+            );
+        }
+        for (have, want) in p.tensors.iter().zip(&expect.tensors) {
+            if have.shape != want.shape {
+                bail!(
+                    "TOP transform shape mismatch: checkpoint {:?} vs arch {:?}",
+                    have.shape,
+                    want.shape
+                );
+            }
+        }
+        let k = self.fwd.len();
+        self.fwd = p.tensors[..k].to_vec();
+        self.bwd = p.tensors[k..].to_vec();
+        Ok(())
+    }
+}
+
+/// Training-side constructor: the method determines the policy; the
+/// `compensation` knob, when set, must agree (it exists so configs can be
+/// explicit and so serve — which has no method — can select a policy).
+pub fn for_training(cfg: &RunConfig, arch: &ArchInfo) -> Result<Box<dyn Compensation>> {
+    let spec = cfg.method.compensation();
+    if let Some(k) = cfg.compensation {
+        if k != spec.kind {
+            bail!(
+                "compensation = \"{}\" conflicts with --method {} (which implies \
+                 \"{}\"): pick the method that matches, e.g. --method {}",
+                k.name(),
+                cfg.method.name(),
+                spec.kind.name(),
+                match k {
+                    CompKind::Lmc => "lmc",
+                    CompKind::Top => "top",
+                    CompKind::None => "cluster",
+                }
+            );
+        }
+    }
+    match spec.kind {
+        CompKind::Lmc => {
+            Ok(Box::new(LmcHistory::new(spec, cfg.beta.alpha, cfg.beta.score)))
+        }
+        CompKind::None => Ok(Box::new(NoComp)),
+        CompKind::Top => {
+            if cfg.arch != "gcn" {
+                bail!(
+                    "--method top implements the message-invariance fit for \
+                     --arch gcn only (got --arch {})",
+                    cfg.arch
+                );
+            }
+            Ok(Box::new(Top::new(&arch.dims[1..arch.l], cfg.top_lr)))
+        }
+    }
+}
+
+/// Serve-side constructor for the cached tile path. With the knob unset
+/// this reproduces the pre-trait behavior bit-for-bit: `comp_beta > 0`
+/// (the old `serve_beta`) serves the Eq. 9 combination, otherwise halo
+/// rows come purely from the warm history.
+pub fn for_serve(cfg: &RunConfig) -> Result<Box<dyn Compensation>> {
+    let kind = match cfg.compensation {
+        Some(k) => k,
+        None => {
+            if cfg.comp_beta > 0.0 {
+                CompKind::Lmc
+            } else {
+                CompKind::None
+            }
+        }
+    };
+    match kind {
+        CompKind::Lmc => Ok(Box::new(LmcHistory::new(
+            CompensationSpec::lmc(),
+            cfg.comp_beta,
+            cfg.beta.score,
+        ))),
+        CompKind::None => Ok(Box::new(NoComp)),
+        CompKind::Top => bail!(
+            "serve supports compensation = lmc|none: TOP's learned transforms \
+             are training state and are not persisted with --save-params"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comp_kind_parses_all_aliases() {
+        for (alias, kind) in [
+            ("lmc", CompKind::Lmc),
+            ("history", CompKind::Lmc),
+            ("top", CompKind::Top),
+            ("MI", CompKind::Top),
+            ("message-invariance", CompKind::Top),
+            ("none", CompKind::None),
+            ("off", CompKind::None),
+        ] {
+            assert_eq!(CompKind::parse(alias), Some(kind), "{alias}");
+        }
+        assert!(CompKind::parse("bogus").is_none());
+        for k in [CompKind::Lmc, CompKind::Top, CompKind::None] {
+            assert_eq!(CompKind::parse(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn top_initializes_to_identity() {
+        let top = Top::new(&[3, 5], 0.25);
+        let (fwd, bwd) = top.transforms().unwrap();
+        assert_eq!(fwd.len(), 2);
+        assert_eq!(bwd.len(), 2);
+        for t in fwd.iter().chain(bwd) {
+            let d = t.shape[0];
+            assert_eq!(t.shape, vec![d, d]);
+            for i in 0..d {
+                for j in 0..d {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert_eq!(t.data[i * d + j], want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_fit_applies_scaled_gradient_step() {
+        let mut top = Top::new(&[2], 0.5);
+        let mut g = Tensor::zeros(&[2, 2]);
+        g.data.copy_from_slice(&[1.0, -2.0, 0.0, 4.0]);
+        let fit = TopFit { fwd: vec![g.clone()], bwd: vec![g] };
+        top.fit(&fit);
+        let (fwd, bwd) = top.transforms().unwrap();
+        // identity - 0.5 * g
+        assert_eq!(fwd[0].data, vec![0.5, 1.0, 0.0, -1.0]);
+        assert_eq!(bwd[0].data, vec![0.5, 1.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn top_state_roundtrips_bitwise() {
+        let mut top = Top::new(&[4, 3], 0.25);
+        // perturb away from identity so the payload is non-trivial
+        let mut g = Tensor::zeros(&[4, 4]);
+        for (i, v) in g.data.iter_mut().enumerate() {
+            *v = (i as f32 - 7.5) * 0.125;
+        }
+        let mut g2 = Tensor::zeros(&[3, 3]);
+        for (i, v) in g2.data.iter_mut().enumerate() {
+            *v = (i as f32).sin();
+        }
+        top.fit(&TopFit { fwd: vec![g.clone(), g2.clone()], bwd: vec![g, g2] });
+        let bytes = top.encode_state();
+        let mut fresh = Top::new(&[4, 3], 0.25);
+        fresh.decode_state(&bytes).unwrap();
+        assert_eq!(fresh.encode_state(), bytes);
+        let (a_f, a_b) = top.transforms().unwrap();
+        let (b_f, b_b) = fresh.transforms().unwrap();
+        for (x, y) in a_f.iter().chain(a_b).zip(b_f.iter().chain(b_b)) {
+            assert_eq!(x.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       y.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn top_decode_rejects_wrong_shape_and_garbage() {
+        let top = Top::new(&[4], 0.25);
+        let bytes = top.encode_state();
+        let mut wrong = Top::new(&[5], 0.25);
+        assert!(wrong.decode_state(&bytes).is_err());
+        let mut ok = Top::new(&[4], 0.25);
+        assert!(ok.decode_state(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn stateless_policies_reject_nonempty_state() {
+        let mut nc = NoComp;
+        assert!(nc.decode_state(&[]).is_ok());
+        assert!(nc.decode_state(&[1, 2, 3]).is_err());
+        let mut lmc = LmcHistory::new(CompensationSpec::lmc(), 0.4, BetaScore::TwoXMinusXSquared);
+        assert!(lmc.decode_state(&[]).is_ok());
+        assert!(lmc.decode_state(&[9]).is_err());
+        assert!(lmc.encode_state().is_empty());
+    }
+}

@@ -5,6 +5,7 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::backend::Backend;
+use crate::compensation::CompKind;
 use crate::coordinator::methods::{BetaConfig, Method};
 use crate::coordinator::sharded::SyncMode;
 use crate::graph::DatasetId;
@@ -64,8 +65,18 @@ pub struct RunConfig {
     /// Serve-path micro-batching: flush once the oldest queued request
     /// has waited this many milliseconds.
     pub serve_max_wait_ms: u64,
+    /// Compensation family override (`compensation = "lmc" | "top" | "none"`).
+    /// Training: must agree with the method (the method implies its
+    /// compensation; the knob exists for explicit configs and clear errors).
+    /// Serve: selects the cached-mode halo policy — unset defaults to the
+    /// Eq. 9 combination when `comp_beta > 0` and pure history otherwise.
+    pub compensation: Option<CompKind>,
     /// Eq. 9 β strength on the cached serve path (0 = pure history).
-    pub serve_beta: f32,
+    /// `serve_beta` is the deprecated TOML/CLI alias for this knob.
+    pub comp_beta: f32,
+    /// TOP: learning rate for the online transform fit (normalized
+    /// relaxation step; 1.0 ≈ jump to the per-batch least-squares fit).
+    pub top_lr: f32,
     /// TCP listen address (`host:port`) for the networked serve
     /// front-end; `None` (default) keeps the stdin/stdout transport.
     pub serve_listen: Option<String>,
@@ -127,7 +138,9 @@ impl Default for RunConfig {
             serve_mode: ServeMode::Cached,
             serve_max_batch: 256,
             serve_max_wait_ms: 4,
-            serve_beta: 0.0,
+            compensation: None,
+            comp_beta: 0.0,
+            top_lr: 0.25,
             serve_listen: None,
             loadtest_qps: 500.0,
             loadtest_conns: 8,
@@ -240,8 +253,24 @@ impl RunConfig {
         if let Some(v) = get("serve_max_wait_ms").and_then(|v| v.as_i64()) {
             self.serve_max_wait_ms = v.max(0) as u64;
         }
+        if let Some(v) = get("compensation").and_then(|v| v.as_str()) {
+            self.compensation =
+                Some(CompKind::parse(v).ok_or_else(|| anyhow!("unknown compensation {v}"))?);
+        }
         if let Some(v) = get("serve_beta").and_then(|v| v.as_f64()) {
-            self.serve_beta = v as f32;
+            // deprecated alias for comp_beta (pre-Compensation-trait name);
+            // applied first so an explicit comp_beta wins when both are set
+            eprintln!(
+                "warning: `serve_beta` is deprecated; use `comp_beta` (with \
+                 `compensation = \"lmc\"` to be explicit)"
+            );
+            self.comp_beta = v as f32;
+        }
+        if let Some(v) = get("comp_beta").and_then(|v| v.as_f64()) {
+            self.comp_beta = v as f32;
+        }
+        if let Some(v) = get("top_lr").and_then(|v| v.as_f64()) {
+            self.top_lr = v as f32;
         }
         if let Some(v) = get("serve_listen").and_then(|v| v.as_str()) {
             self.serve_listen = Some(v.to_string());
@@ -341,8 +370,21 @@ impl RunConfig {
         if let Some(v) = args.opt_usize("serve-max-wait-ms") {
             self.serve_max_wait_ms = v as u64;
         }
+        if let Some(v) = args.opt("compensation") {
+            self.compensation =
+                Some(CompKind::parse(v).ok_or_else(|| anyhow!("unknown compensation {v}"))?);
+        }
         if let Some(v) = args.opt_f64("serve-beta") {
-            self.serve_beta = v as f32;
+            // deprecated alias, applied before --comp-beta so the
+            // canonical flag wins when both are given
+            eprintln!("warning: `--serve-beta` is deprecated; use `--comp-beta`");
+            self.comp_beta = v as f32;
+        }
+        if let Some(v) = args.opt_f64("comp-beta") {
+            self.comp_beta = v as f32;
+        }
+        if let Some(v) = args.opt_f64("top-lr") {
+            self.top_lr = v as f32;
         }
         if let Some(v) = args.opt("listen") {
             self.serve_listen = Some(v.to_string());
@@ -463,17 +505,19 @@ mod tests {
     #[test]
     fn serve_knobs_parse() {
         let doc = toml_parse(
-            "serve_mode = \"exact\"\nserve_max_batch = 64\nserve_max_wait_ms = 9\nserve_beta = 0.25\n",
+            "serve_mode = \"exact\"\nserve_max_batch = 64\nserve_max_wait_ms = 9\ncomp_beta = 0.25\n",
         )
         .unwrap();
         let mut cfg = RunConfig::default();
-        assert_eq!(cfg.serve_mode, ServeMode::Cached); // default
-        assert_eq!(cfg.serve_beta, 0.0);
+        // these assert the *defaults*, before apply_toml runs — see the
+        // explicit precedence test below for the layering itself
+        assert_eq!(cfg.serve_mode, ServeMode::Cached);
+        assert_eq!(cfg.comp_beta, 0.0);
         cfg.apply_toml(&doc).unwrap();
         assert_eq!(cfg.serve_mode, ServeMode::Exact);
         assert_eq!(cfg.serve_max_batch, 64);
         assert_eq!(cfg.serve_max_wait_ms, 9);
-        assert!((cfg.serve_beta - 0.25).abs() < 1e-9);
+        assert!((cfg.comp_beta - 0.25).abs() < 1e-9);
         let args = Args::parse(
             [
                 "serve",
@@ -483,7 +527,7 @@ mod tests {
                 "512",
                 "--serve-max-wait-ms",
                 "2",
-                "--serve-beta",
+                "--comp-beta",
                 "0.1",
             ]
             .iter()
@@ -493,8 +537,77 @@ mod tests {
         assert_eq!(cfg.serve_mode, ServeMode::Cached);
         assert_eq!(cfg.serve_max_batch, 512);
         assert_eq!(cfg.serve_max_wait_ms, 2);
-        assert!((cfg.serve_beta - 0.1).abs() < 1e-6);
+        assert!((cfg.comp_beta - 0.1).abs() < 1e-6);
         assert!(ServeMode::parse("bogus").is_none());
+    }
+
+    /// Intended layering, pinned explicitly (ISSUE 9 satellite): defaults
+    /// < TOML (including a `--config FILE` named on the command line,
+    /// which `apply_cli` applies *first*) < explicit CLI flags. The old
+    /// `serve_knobs_parse` asserted `serve_beta == 0.0` *before* calling
+    /// `apply_toml` — that checks the default, not a precedence bug.
+    #[test]
+    fn serve_knob_precedence_is_defaults_then_toml_then_cli() {
+        // defaults
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.comp_beta, 0.0);
+        assert_eq!(cfg.serve_max_batch, 256);
+        // TOML layer overrides defaults
+        let doc = toml_parse("comp_beta = 0.25\nserve_max_batch = 64\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert!((cfg.comp_beta - 0.25).abs() < 1e-9);
+        assert_eq!(cfg.serve_max_batch, 64);
+        // --config file layer + explicit flags in one apply_cli call: the
+        // file is applied first, so the explicit flag wins over it
+        let dir = std::env::temp_dir().join(format!("lmc_cfg_prec_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prec.toml");
+        std::fs::write(&path, "comp_beta = 0.5\nserve_max_batch = 32\n").unwrap();
+        let args = Args::parse(
+            ["serve", "--config", path.to_str().unwrap(), "--comp-beta", "0.1"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert!((cfg.comp_beta - 0.1).abs() < 1e-6, "explicit flag beats --config file");
+        assert_eq!(cfg.serve_max_batch, 32, "--config file beats earlier layers");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compensation_knobs_and_deprecated_serve_beta_alias() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.compensation, None); // method decides by default
+        assert_eq!(cfg.top_lr, 0.25);
+        let doc = toml_parse("compensation = \"top\"\ntop_lr = 0.05\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.compensation, Some(CompKind::Top));
+        assert!((cfg.top_lr - 0.05).abs() < 1e-9);
+        // deprecated TOML alias still lands on comp_beta
+        let doc = toml_parse("serve_beta = 0.3\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert!((cfg.comp_beta - 0.3).abs() < 1e-9);
+        // canonical key wins when both are present in one document
+        let doc = toml_parse("serve_beta = 0.9\ncomp_beta = 0.2\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert!((cfg.comp_beta - 0.2).abs() < 1e-9);
+        // CLI: alias maps, canonical flag wins over the alias
+        let args = Args::parse(
+            ["serve", "--serve-beta", "0.4"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert!((cfg.comp_beta - 0.4).abs() < 1e-6);
+        let args = Args::parse(
+            ["serve", "--serve-beta", "0.4", "--comp-beta", "0.6", "--compensation", "lmc"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert!((cfg.comp_beta - 0.6).abs() < 1e-6);
+        assert_eq!(cfg.compensation, Some(CompKind::Lmc));
+        // bad names error instead of silently defaulting
+        let doc = toml_parse("compensation = \"bogus\"\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Training method policies (DESIGN.md §1 table): every subgraph-wise
 //! baseline is the same compiled train_step under a different policy.
+//! The compensation-shaped knobs live in one place —
+//! [`Method::compensation`] — instead of scattered boolean predicates.
 
+use crate::compensation::CompensationSpec;
 use crate::sampler::{AdjacencyPolicy, BetaScore};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,9 +25,17 @@ pub enum Method {
     /// LMC + SPIDER variance reduction (paper Appendix F): periodic exact
     /// full-batch anchor gradients with LMC correction steps in between.
     LmcSpider,
+    /// TOP message invariance (arXiv 2502.19693, the LMC authors'
+    /// follow-up): learned per-layer transforms synthesize out-of-batch
+    /// messages from fresh in-batch ones — no history store, no staleness.
+    Top,
 }
 
 impl Method {
+    /// Accepted names (all case-insensitive):
+    ///   lmc · gas · fm | graphfm | graphfm-ob · cluster | cluster-gcn ·
+    ///   gd | full | full-batch · lmc-spider | spider ·
+    ///   top | mi | message-invariance
     pub fn parse(s: &str) -> Option<Method> {
         Some(match s.to_ascii_lowercase().as_str() {
             "lmc" => Method::Lmc,
@@ -33,6 +44,7 @@ impl Method {
             "cluster" | "cluster-gcn" => Method::Cluster,
             "gd" | "full" | "full-batch" => Method::Gd,
             "lmc-spider" | "spider" => Method::LmcSpider,
+            "top" | "mi" | "message-invariance" => Method::Top,
             _ => return None,
         })
     }
@@ -45,6 +57,7 @@ impl Method {
             Method::Cluster => "CLUSTER",
             Method::Gd => "GD",
             Method::LmcSpider => "LMC-SPIDER",
+            Method::Top => "TOP",
         }
     }
 
@@ -55,34 +68,16 @@ impl Method {
         }
     }
 
-    /// Forward compensation on? (beta > 0 allowed)
-    pub fn uses_beta(&self) -> bool {
-        matches!(self, Method::Lmc | Method::LmcSpider)
-    }
-
-    /// Backward compensation C_b on? (Eqs. 11-13)
-    pub fn bwd_scale(&self) -> f32 {
+    /// The method's compensation policy — the single table that used to be
+    /// spread across `uses_beta` / `bwd_scale` / `uses_history` /
+    /// `stores_aux` / `halo_momentum` predicates.
+    pub fn compensation(&self) -> CompensationSpec {
         match self {
-            Method::Lmc | Method::LmcSpider => 1.0,
-            _ => 0.0,
-        }
-    }
-
-    /// Does the method read historical embeddings for the halo?
-    pub fn uses_history(&self) -> bool {
-        !matches!(self, Method::Cluster | Method::Gd)
-    }
-
-    /// Does the method store auxiliary-variable histories (Vbar)?
-    pub fn stores_aux(&self) -> bool {
-        matches!(self, Method::Lmc | Method::LmcSpider)
-    }
-
-    /// FM's momentum push to halo histories.
-    pub fn halo_momentum(&self) -> Option<f32> {
-        match self {
-            Method::Fm => Some(0.3),
-            _ => None,
+            Method::Lmc | Method::LmcSpider => CompensationSpec::lmc(),
+            Method::Gas => CompensationSpec::gas(),
+            Method::Fm => CompensationSpec::fm(),
+            Method::Cluster | Method::Gd => CompensationSpec::none(),
+            Method::Top => CompensationSpec::top(),
         }
     }
 
@@ -114,24 +109,61 @@ impl Default for BetaConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compensation::CompKind;
 
     #[test]
     fn policies_match_paper_table() {
         assert_eq!(Method::Cluster.adjacency_policy(), AdjacencyPolicy::LocalNoHalo);
         assert_eq!(Method::Lmc.adjacency_policy(), AdjacencyPolicy::GlobalWithHalo);
-        assert_eq!(Method::Gas.bwd_scale(), 0.0);
-        assert_eq!(Method::Lmc.bwd_scale(), 1.0);
-        assert!(!Method::Gas.uses_beta());
-        assert!(Method::Lmc.stores_aux());
-        assert!(!Method::Gas.stores_aux());
-        assert!(Method::Fm.halo_momentum().is_some());
+        assert_eq!(Method::Gas.compensation().bwd_scale, 0.0);
+        assert_eq!(Method::Lmc.compensation().bwd_scale, 1.0);
+        assert!(!Method::Gas.compensation().uses_beta);
+        assert!(Method::Lmc.compensation().stores_aux);
+        assert!(!Method::Gas.compensation().stores_aux);
+        assert!(Method::Fm.compensation().halo_momentum.is_some());
         assert!(!Method::Gd.is_minibatch());
+        // LMC-SPIDER shares the full LMC compensation policy
+        assert_eq!(Method::LmcSpider.compensation(), Method::Lmc.compensation());
+    }
+
+    #[test]
+    fn top_policy_is_fresh_transforms_no_history() {
+        let spec = Method::Top.compensation();
+        assert_eq!(spec.kind, CompKind::Top);
+        assert!(!spec.uses_history, "TOP reads no history store");
+        assert!(!spec.stores_aux);
+        assert!(!spec.uses_beta);
+        assert_eq!(spec.bwd_scale, 1.0, "TOP compensates the backward pass");
+        assert_eq!(Method::Top.adjacency_policy(), AdjacencyPolicy::GlobalWithHalo);
+        assert!(Method::Top.is_minibatch());
     }
 
     #[test]
     fn parse_names() {
-        for m in [Method::Lmc, Method::Gas, Method::Fm, Method::Cluster, Method::Gd] {
+        for m in [
+            Method::Lmc,
+            Method::Gas,
+            Method::Fm,
+            Method::Cluster,
+            Method::Gd,
+            Method::LmcSpider,
+            Method::Top,
+        ] {
             assert_eq!(Method::parse(&m.name().to_ascii_lowercase()), Some(m));
         }
+        // every documented alias resolves
+        for (alias, m) in [
+            ("graphfm", Method::Fm),
+            ("graphfm-ob", Method::Fm),
+            ("cluster-gcn", Method::Cluster),
+            ("full", Method::Gd),
+            ("full-batch", Method::Gd),
+            ("spider", Method::LmcSpider),
+            ("mi", Method::Top),
+            ("message-invariance", Method::Top),
+        ] {
+            assert_eq!(Method::parse(alias), Some(m), "{alias}");
+        }
+        assert!(Method::parse("nope").is_none());
     }
 }

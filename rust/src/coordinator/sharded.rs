@@ -292,7 +292,11 @@ impl ShardedTrainer {
         let stats: Vec<StepStats> =
             results.into_iter().map(|r| r.expect("all failures handled above")).collect();
         self.epochs_done += 1;
-        if self.cfg.sync_mode == SyncMode::HistoryExchange {
+        if self.cfg.sync_mode == SyncMode::HistoryExchange
+            && self.cfg.method.compensation().uses_history
+        {
+            // methods without a history store (TOP, CLUSTER) have no
+            // boundary rows to exchange
             failpoint::fire("sharded.exchange")?;
             self.exchange_boundary_histories();
         }

@@ -11,8 +11,9 @@ use super::memory;
 use super::methods::Method;
 use super::metrics::{EpochRecord, RunMetrics};
 use super::params::{sgd_step, Adam, AdamConfig, Params};
-use crate::backend::{Executor, ModelSpec, StepInputs, StepWorkspace};
+use crate::backend::{Executor, ModelSpec, StepInputs, StepWorkspace, TopStepInputs};
 use crate::checkpoint;
+use crate::compensation::{self, Compensation};
 use crate::config::RunConfig;
 use crate::graph::{load, Graph};
 use crate::history::History;
@@ -35,6 +36,11 @@ pub struct Trainer {
     pub params: Params,
     pub opt: Adam,
     pub history: History,
+    /// The method's compensation policy: per-step flags (what to gather,
+    /// what to write back) plus any learned state (TOP transforms). The
+    /// history *store* stays a trainer field — sharded workers exchange
+    /// boundary rows through it — the policy decides how it is used.
+    pub comp: Box<dyn Compensation>,
     pub batcher: Batcher,
     pub rng: Rng,
     pub n_train: usize,
@@ -138,6 +144,7 @@ impl Trainer {
         );
         let n_train = graph.split.iter().filter(|&&s| s == 0).count();
         let buckets = exec.buckets(&profile)?;
+        let comp = compensation::for_training(&cfg, &arch)?;
         let model = ModelSpec { profile, arch_name: cfg.arch.clone(), arch };
         // Fixed groups + unbounded buckets => subgraph construction is a
         // deterministic function of the (identical-every-epoch) batch, so
@@ -152,6 +159,7 @@ impl Trainer {
             params,
             opt,
             history,
+            comp,
             batcher,
             rng,
             n_train,
@@ -187,6 +195,17 @@ impl Trainer {
 
     pub fn arch_l(&self) -> usize {
         self.model.arch.l
+    }
+
+    /// Swap the training method — and with it the compensation policy —
+    /// in place. The controlled-comparison hook for gradient-error
+    /// measurement: same parameters, same histories, same batches, only
+    /// the policy differs. Learned compensation state (TOP transforms)
+    /// is freshly initialized, not carried over.
+    pub fn set_method(&mut self, method: Method) -> Result<()> {
+        self.cfg.method = method;
+        self.comp = compensation::for_training(&self.cfg, &self.model.arch)?;
+        Ok(())
     }
 
     /// Optimizer/SPIDER step counter (checkpointed).
@@ -282,22 +301,23 @@ impl Trainer {
         at_params: Option<&Params>,
         write_back: bool,
     ) -> Result<(StepStats, Vec<Tensor>)> {
-        let method = self.cfg.method;
+        let spec = self.comp.spec();
         let l_total = self.model.arch.l;
         let dims = self.model.arch.dims.clone();
 
         // History/beta gather buffers: from the workspace pool (recycled
         // after write-back) on the reuse path, plain allocations otherwise.
+        // Policies that skip history/beta get zero placeholder buffers.
         let (beta, hist_h, hist_v) = if self.reuse_workspace {
             let mut ws = self.ws.lock().unwrap();
             let mut beta = ws.grab(sb.bucket_h);
-            if method.uses_beta() {
+            if spec.uses_beta {
                 beta_vector_into(sb, self.cfg.beta.alpha, self.cfg.beta.score, &mut beta);
             }
             let mut hist_h: Vec<Vec<f32>> = Vec::with_capacity(l_total.saturating_sub(1));
             for l in 1..l_total {
                 let mut buf = ws.grab(sb.bucket_h * dims[l]);
-                if method.uses_history() {
+                if spec.uses_history {
                     self.history.gather_h_into(l, &sb.halo, &mut buf);
                 }
                 hist_h.push(buf);
@@ -305,21 +325,21 @@ impl Trainer {
             let mut hist_v: Vec<Vec<f32>> = Vec::with_capacity(l_total.saturating_sub(1));
             for l in 1..l_total {
                 let mut buf = ws.grab(sb.bucket_h * dims[l]);
-                if method.stores_aux() {
+                if spec.stores_aux {
                     self.history.gather_v_into(l, &sb.halo, &mut buf);
                 }
                 hist_v.push(buf);
             }
             (beta, hist_h, hist_v)
         } else {
-            let beta = if method.uses_beta() {
+            let beta = if spec.uses_beta {
                 beta_vector(sb, self.cfg.beta.alpha, self.cfg.beta.score)
             } else {
                 vec![0f32; sb.bucket_h]
             };
             let hist_h: Vec<Vec<f32>> = (1..l_total)
                 .map(|l| {
-                    if method.uses_history() {
+                    if spec.uses_history {
                         self.history.gather_h(l, &sb.halo, sb.bucket_h)
                     } else {
                         vec![0f32; sb.bucket_h * dims[l]]
@@ -328,7 +348,7 @@ impl Trainer {
                 .collect();
             let hist_v: Vec<Vec<f32>> = (1..l_total)
                 .map(|l| {
-                    if method.stores_aux() {
+                    if spec.stores_aux {
                         self.history.gather_v(l, &sb.halo, sb.bucket_h)
                     } else {
                         vec![0f32; sb.bucket_h * dims[l]]
@@ -346,30 +366,34 @@ impl Trainer {
             hist_h,
             hist_v,
             beta,
-            bwd_scale: if self.cfg.force_bwd_off { 0.0 } else { method.bwd_scale() },
+            bwd_scale: if self.cfg.force_bwd_off { 0.0 } else { spec.bwd_scale },
             vscale: 1.0 / self.n_train.max(1) as f32,
             grad_scale: self.batcher.grad_scale(),
+            top: self
+                .comp
+                .transforms()
+                .map(|(fwd, bwd)| TopStepInputs { fwd, bwd, fit: write_back }),
             ws: if self.reuse_workspace { Some(&self.ws) } else { None },
         };
         let mut outs = self.exec.forward_backward(&inputs)?;
 
         if write_back {
-            if method.uses_history() {
+            if spec.uses_history {
                 for l in 1..l_total {
                     self.history.scatter_h(l, &sb.batch, &outs.new_h[l - 1]);
                 }
             }
-            if method.stores_aux() {
+            if spec.stores_aux {
                 for l in 1..l_total {
                     self.history.scatter_v(l, &sb.batch, &outs.new_v[l - 1]);
                 }
             }
-            if let Some(m) = method.halo_momentum() {
+            if let Some(m) = spec.halo_momentum {
                 for l in 1..l_total {
                     self.history.momentum_h(l, &sb.halo, &outs.htilde[l - 1], m);
                 }
             }
-            if method.uses_history() {
+            if spec.uses_history {
                 self.history.tick(&sb.batch);
             }
         }
@@ -386,6 +410,15 @@ impl Trainer {
             ws.put_all(outs.new_h.drain(..));
             ws.put_all(outs.new_v.drain(..));
             ws.put_all(outs.htilde.drain(..));
+        }
+
+        // TOP transform update (the step's fit gradients, applied with the
+        // policy's own relaxation rate) — after the StepInputs borrow of
+        // the transforms has ended.
+        if write_back {
+            if let Some(f) = outs.top_fit.take() {
+                self.comp.fit(&f);
+            }
         }
 
         let labeled = sb

@@ -47,3 +47,49 @@ pub fn run_fig3(ctx: &Ctx) -> Result<Table> {
     t.save(&ctx.out, "fig3")?;
     Ok(t)
 }
+
+/// `lmc experiment grad-error`: the compensation-method shoot-out.
+/// Trains LMC, TOP, and GAS on the same arxiv-sim GCN task and reports
+/// each method's overall gradient error against the exact oracle, mean
+/// epoch wall time, and resident compensation-state bytes (history
+/// stores for LMC/GAS, learned transforms for TOP). The expected shape:
+/// TOP's error lands below GAS's (its synthesized halo messages track
+/// the fresh values instead of stale history) at a compensation-state
+/// footprint orders of magnitude below LMC's O(n · d) stores.
+pub fn run_grad_shootout(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Gradient-error shoot-out: LMC vs TOP vs GAS (arxiv-sim, GCN)",
+        &["method", "grad_err_overall", "epoch_secs", "comp_state_bytes"],
+    );
+    let warm = ctx.epochs(8);
+    for method in ["lmc", "top", "gas"] {
+        let cfg = {
+            let mut c = ctx.base_cfg("arxiv-sim", "gcn", method)?;
+            c.epochs = warm;
+            c.lr = 3e-3; // same regime as fig3
+            c
+        };
+        let mut trainer = crate::coordinator::Trainer::new(ctx.exec.clone(), cfg)?;
+        let mut secs = 0f64;
+        for _ in 0..warm {
+            let t0 = std::time::Instant::now();
+            trainer.train_epoch()?;
+            secs += t0.elapsed().as_secs_f64();
+        }
+        let epoch_secs = secs / warm.max(1) as f64;
+        let rep = grad_check::measure(&mut trainer)?;
+        let bytes = trainer.comp.state_bytes(&trainer.history);
+        t.row(vec![
+            method.to_uppercase(),
+            format!("{:.6}", rep.overall),
+            format!("{epoch_secs:.4}"),
+            bytes.to_string(),
+        ]);
+        println!(
+            "grad-error: {method} rel err {:.4} epoch {epoch_secs:.3}s comp state {bytes} bytes",
+            rep.overall
+        );
+    }
+    t.save(&ctx.out, "grad_error")?;
+    Ok(t)
+}

@@ -16,6 +16,7 @@
 
 pub mod backend;
 pub mod checkpoint;
+pub mod compensation;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

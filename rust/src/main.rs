@@ -77,12 +77,18 @@ message compensation. rust coordinator + pluggable execution backends
 usage: lmc <subcommand> [--flags]
 
 subcommands:
-  train            --dataset D --arch gcn|gcnii --method lmc|gas|fm|cluster|gd
+  train            --dataset D --arch gcn|gcnii
+                   --method lmc|gas|fm|cluster|gd|lmc-spider|top
+                   (aliases: graphfm|graphfm-ob=fm, cluster-gcn=cluster,
+                   full|full-batch=gd, spider=lmc-spider,
+                   mi|message-invariance=top)
                    [--backend native|pjrt] [--epochs N] [--lr F]
                    [--clusters-per-batch C] [--parts K]
                    [--shards S] [--sync-every K] [--sync-mode avg|hist]
                    [--worker-retries N]
                    [--beta-alpha F] [--beta-score x2|2x-x2|x|1|sinx]
+                   [--compensation lmc|top|none]   override the method's
+                   compensation policy   [--top-lr F] TOP transform fit rate
                    [--history-dtype f32|bf16|f16]
                    [--checkpoint-dir DIR] [--checkpoint-every N]
                    [--resume DIR]   continue from the last checkpoint in DIR
@@ -91,7 +97,9 @@ subcommands:
   eval             exact inference with fresh params (pipeline smoke test)
   predict          one-shot serve-engine inference: --nodes 1,2,3
                    [--dataset D] [--arch A] [--params FILE]
-                   [--serve-mode exact|cached] [--serve-beta F]
+                   [--serve-mode exact|cached]
+                   [--compensation lmc|none] [--comp-beta F]
+                   (--serve-beta is a deprecated alias for --comp-beta)
   serve            JSONL request loop ('[ids...]', '{\"id\":N,\"nodes\":[ids...]}',
                    or '{\"op\":\"shutdown\"}' per line; one JSON response per
                    request; on stdin EOF, SIGTERM, SIGINT, or a shutdown op
@@ -103,7 +111,8 @@ subcommands:
                    connections.
                    [--listen ADDR] [--params FILE] [--serve-mode exact|cached]
                    [--serve-max-batch N] [--serve-max-wait-ms MS]
-                   [--serve-beta F] [--history-dtype f32|bf16|f16]
+                   [--compensation lmc|none] [--comp-beta F]
+                   [--history-dtype f32|bf16|f16]
   loadtest         open-loop load generator against a serve server: spawns
                    an in-process `serve --listen` twin (or targets --addr),
                    sends --loadtest-qps requests/s over --loadtest-conns
@@ -121,7 +130,8 @@ subcommands:
   bench-gate       [--bench ../BENCH_step.json] [--baseline ../BENCH_baseline.json]
                    [--summary FILE]   diff gated phases, exit 1 on regression
   experiment ID    table1|table2|table3|table6|table7|table8|table9|
-                   fig2|fig3|fig4|fig5|sharded|all   [--out results/]
+                   fig2|fig3|fig4|fig5|sharded|grad-error|all
+                   [--out results/]
 
 environment:
   LMC_FAILPOINTS   fault-injection seam for crash-safety testing:

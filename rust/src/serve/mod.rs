@@ -41,16 +41,14 @@ use rayon::prelude::*;
 
 use crate::backend::native::{self, kind_of, Kind};
 use crate::backend::{gemm, Backend, Executor, ModelSpec, NativeExecutor, StepWorkspace};
+use crate::compensation::{self, Compensation, NoComp};
 use crate::config::RunConfig;
 use crate::coordinator::exact::argmax;
-use crate::coordinator::methods::BetaConfig;
 use crate::coordinator::params::Params;
 use crate::graph::{load, Graph};
 use crate::history::{HistDtype, History};
 use crate::runtime::ArchInfo;
-use crate::sampler::{
-    beta_vector, build_subgraph, gather_rows, AdjacencyPolicy, BetaScore, Buckets,
-};
+use crate::sampler::{build_subgraph, gather_rows, AdjacencyPolicy, Buckets};
 use crate::util::rng::Rng;
 
 pub use batcher::{BatchPolicy, MicroBatcher, ServeRequest};
@@ -90,10 +88,6 @@ pub struct ServeOptions {
     /// into this many-node tiles (each requested node lands in exactly
     /// one tile — `prop_serve_tiling_covers_each_requested_node_once`).
     pub tile_nodes: usize,
-    /// Eq. 9 combination for the cached path: `alpha = 0` (the default)
-    /// serves pure history for halo rows; `alpha > 0` mixes in the
-    /// incomplete fresh value with the training-side score function.
-    pub beta: BetaConfig,
     /// Storage dtype for the warm history rows (`history_dtype` knob):
     /// halo reads on the cached path decode through the same
     /// [`History`] seam training uses, so bf16/f16 serving halves the
@@ -106,7 +100,6 @@ impl Default for ServeOptions {
         ServeOptions {
             mode: ServeMode::Cached,
             tile_nodes: 256,
-            beta: BetaConfig { alpha: 0.0, score: BetaScore::TwoXMinusXSquared },
             history_dtype: HistDtype::F32,
         }
     }
@@ -138,6 +131,11 @@ pub struct ServeEngine {
     /// Warm per-layer embeddings Hbar^l (l = 1..L-1) for the cached path;
     /// refreshed wholesale from an exact full forward.
     history: History,
+    /// Compensation policy for the cached path's halo rows — it yields the
+    /// per-halo-node Eq. 9 coefficients (all-zero = pure history, the
+    /// default; the LMC policy mixes in the fresh incomplete value). This
+    /// replaces the former `serve_beta` special case.
+    comp: Box<dyn Compensation>,
     params_version: u64,
     /// The params version the history was last refreshed at; `None`
     /// until the first refresh and after every `set_params`.
@@ -215,13 +213,27 @@ impl TileWorkspace {
 
 impl ServeEngine {
     /// Engine over explicit parts (tests, embedding into other runtimes).
+    /// Serves with the `NoComp` policy — halo rows on the cached path read
+    /// pure warm history, the historical default.
     pub fn new(
         graph: Arc<Graph>,
         model: ModelSpec,
         params: Params,
         opts: ServeOptions,
     ) -> Result<ServeEngine> {
-        Self::with_exec(NativeExecutor::new(), graph, model, params, opts)
+        Self::with_exec(NativeExecutor::new(), graph, model, params, opts, Box::new(NoComp))
+    }
+
+    /// [`ServeEngine::new`] with an explicit compensation policy for the
+    /// cached path.
+    pub fn with_comp(
+        graph: Arc<Graph>,
+        model: ModelSpec,
+        params: Params,
+        opts: ServeOptions,
+        comp: Box<dyn Compensation>,
+    ) -> Result<ServeEngine> {
+        Self::with_exec(NativeExecutor::new(), graph, model, params, opts, comp)
     }
 
     fn with_exec(
@@ -230,6 +242,7 @@ impl ServeEngine {
         model: ModelSpec,
         params: Params,
         opts: ServeOptions,
+        comp: Box<dyn Compensation>,
     ) -> Result<ServeEngine> {
         validate_params(&model.arch, &params)?;
         let hist_dims: Vec<usize> = model.arch.dims[1..model.arch.l].to_vec();
@@ -241,6 +254,7 @@ impl ServeEngine {
             exec,
             params,
             history,
+            comp,
             params_version: 0,
             warm_version: None,
             ws: Mutex::new(StepWorkspace::new()),
@@ -282,10 +296,10 @@ impl ServeEngine {
         let opts = ServeOptions {
             mode: cfg.serve_mode,
             tile_nodes: cfg.serve_max_batch,
-            beta: BetaConfig { alpha: cfg.serve_beta, score: cfg.beta.score },
             history_dtype: cfg.history_dtype,
         };
-        Self::with_exec(exec, graph, model, params, opts)
+        let comp = compensation::for_serve(cfg)?;
+        Self::with_exec(exec, graph, model, params, opts, comp)
     }
 
     pub fn graph(&self) -> &Graph {
@@ -463,11 +477,7 @@ impl ServeEngine {
         let hist_h: Vec<Vec<f32>> = (1..l_total)
             .map(|l| self.history.gather_h(l, &sb.halo, sb.halo.len()))
             .collect();
-        let beta = if self.opts.beta.alpha > 0.0 {
-            beta_vector(&sb, self.opts.beta.alpha, self.opts.beta.score)
-        } else {
-            vec![0f32; sb.halo.len()]
-        };
+        let beta = self.comp.serve_beta(&sb);
         self.exec.forward_logits(
             self.graph.as_ref(),
             &sb,

@@ -80,7 +80,7 @@ fn lmc_gradient_bias_beats_gas_and_cluster() {
     }
     let mut errs = std::collections::HashMap::new();
     for method in [Method::Lmc, Method::Gas, Method::Cluster] {
-        t.cfg.method = method;
+        t.set_method(method).unwrap();
         errs.insert(method.name(), grad_check::measure_bias(&mut t).unwrap());
     }
     let (lmc, gas, cluster) = (errs["LMC"], errs["GAS"], errs["CLUSTER"]);

@@ -297,6 +297,7 @@ fn prop_native_full_batch_step_matches_exact_oracle() {
                 bwd_scale: 1.0,
                 vscale: 1.0 / n_train as f32,
                 grad_scale: 1.0,
+                top: None,
                 ws: None,
             };
             let step = exec.forward_backward(&inputs).unwrap();
@@ -706,6 +707,7 @@ fn prop_optimized_step_matches_reference_step() {
             bwd_scale: 1.0,
             vscale: 0.01,
             grad_scale: 1.5,
+            top: None,
             ws: if use_ws { Some(&ws) } else { None },
         };
         let baseline = slow.forward_backward(&mk_inputs(false)).unwrap();
