@@ -2,7 +2,7 @@
 
 use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, PartitionConfig};
-use lmc::sampler::{build_subgraph, gather_rows, AdjacencyPolicy, Buckets};
+use lmc::sampler::{build_subgraph, gather_rows, AdjacencyPolicy, Buckets, HaloSampler};
 use lmc::util::bench::{black_box, Bencher};
 use lmc::util::rng::Rng;
 
@@ -23,7 +23,7 @@ fn main() {
                 &format!("subgraph/{}/c{}(B~{})", id.name(), nclusters, batch.len()),
                 || {
                     black_box(
-                        build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets, &mut rng)
+                        build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets, &HaloSampler::none(), &mut rng)
                             .unwrap(),
                     );
                 },

@@ -10,7 +10,7 @@ use std::fmt::Write as _;
 
 use lmc::graph::{load, DatasetId};
 use lmc::partition::{partition, PartitionConfig};
-use lmc::sampler::{build_subgraph, AdjacencyPolicy, Buckets};
+use lmc::sampler::{build_subgraph, AdjacencyPolicy, Buckets, HaloSampler};
 use lmc::util::bench::{black_box, provenance, Bencher};
 use lmc::util::rng::Rng;
 
@@ -95,6 +95,7 @@ fn main() {
             &batch,
             AdjacencyPolicy::GlobalWithHalo,
             &Buckets(vec![(bb, bh)]),
+            &HaloSampler::none(),
             &mut rng,
         )
         .expect("bucket fits");

@@ -33,7 +33,7 @@ use lmc::history::{HistDtype, History};
 use lmc::partition::{partition, PartitionConfig};
 use lmc::runtime::ArchInfo;
 use lmc::sampler::{
-    beta_vector, beta_vector_into, build_subgraph, AdjacencyPolicy, BetaScore, Buckets,
+    beta_vector, beta_vector_into, build_subgraph, AdjacencyPolicy, BetaScore, Buckets, HaloSampler,
 };
 use lmc::util::bench::{black_box, provenance, BenchStats, Bencher};
 use lmc::util::perfgate::{GATED_METRICS, MEASURED_MAX_SLOWDOWN};
@@ -74,7 +74,7 @@ fn main() {
     let vscale = 1.0 / n_train as f32;
 
     let mut rng = Rng::new(7);
-    let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+    let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut rng)
         .expect("build_subgraph");
     let (nb, nh) = (sb.batch.len(), sb.halo.len());
     let m = nb + nh;
@@ -84,7 +84,7 @@ fn main() {
     let sample = b.run("phase/sample(build_subgraph)", || {
         let mut r = Rng::new(7);
         black_box(
-            build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r)
+            build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut r)
                 .unwrap(),
         );
     });
@@ -209,6 +209,7 @@ fn main() {
             &batch,
             AdjacencyPolicy::GlobalWithHalo,
             &Buckets::unbounded(),
+            &HaloSampler::none(),
             &mut rng_n,
         )
         .unwrap();

@@ -86,6 +86,9 @@ pub fn config_fingerprint(cfg: &RunConfig) -> String {
             cfg.compensation.map(|k| k.name()).unwrap_or("method")
         ),
         format!("toplr={}", cfg.top_lr),
+        // halo subsampling reshapes every mini-batch's blocks
+        format!("hsampler={}", cfg.halo_sampler.name()),
+        format!("hkeep={}", cfg.halo_keep),
     ];
     format!("v1;{}", fields.join(";"))
 }

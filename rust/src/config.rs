@@ -10,7 +10,7 @@ use crate::coordinator::methods::{BetaConfig, Method};
 use crate::coordinator::sharded::SyncMode;
 use crate::graph::DatasetId;
 use crate::history::HistDtype;
-use crate::sampler::{BatcherMode, BetaScore};
+use crate::sampler::{BatcherMode, BetaScore, HaloSampler, HaloSamplerKind};
 use crate::serve::ServeMode;
 use crate::util::cli::Args;
 use crate::util::toml::{parse as toml_parse, TomlDoc};
@@ -109,6 +109,16 @@ pub struct RunConfig {
     /// rolled back to the sync-barrier snapshot and retried before the
     /// run errors out. 0 disables recovery.
     pub worker_retries: usize,
+    /// Halo subsampling policy (`--halo-sampler`): "none" (full halo, the
+    /// bit-identical default), "uniform" (rescaled uniform cap), "labor"
+    /// (LABOR layer-dependent), or "importance" (FastGCN/LADIES). Every
+    /// policy except "none" keeps halo nodes with explicit inclusion
+    /// probabilities and rescales the surviving edges by 1/p, so the
+    /// expected aggregation matches the full halo.
+    pub halo_sampler: HaloSamplerKind,
+    /// Target keep fraction of each batch's halo (`--halo-keep`); only
+    /// active when `halo_sampler` is not "none". 1.0 is a passthrough.
+    pub halo_keep: f32,
 }
 
 impl Default for RunConfig {
@@ -152,11 +162,18 @@ impl Default for RunConfig {
             checkpoint_dir: None,
             checkpoint_every: 1,
             worker_retries: 2,
+            halo_sampler: HaloSamplerKind::None,
+            halo_keep: 0.5,
         }
     }
 }
 
 impl RunConfig {
+    /// The halo subsampling policy these knobs select.
+    pub fn halo_sampler(&self) -> HaloSampler {
+        HaloSampler::new(self.halo_sampler, self.halo_keep)
+    }
+
     pub fn parts_or_default(&self) -> usize {
         if self.parts > 0 {
             self.parts
@@ -299,6 +316,17 @@ impl RunConfig {
         if let Some(v) = get("worker_retries").and_then(|v| v.as_i64()) {
             self.worker_retries = v.max(0) as usize;
         }
+        if let Some(v) = get("halo_sampler").and_then(|v| v.as_str()) {
+            self.halo_sampler = HaloSamplerKind::parse(v).ok_or_else(|| {
+                anyhow!("unknown halo_sampler {v} (none | uniform | labor | importance)")
+            })?;
+        }
+        if let Some(v) = get("halo_keep").and_then(|v| v.as_f64()) {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(anyhow!("halo_keep must be in [0, 1], got {v}"));
+            }
+            self.halo_keep = v as f32;
+        }
         Ok(())
     }
 
@@ -412,6 +440,17 @@ impl RunConfig {
         }
         if let Some(v) = args.opt_usize("worker-retries") {
             self.worker_retries = v;
+        }
+        if let Some(v) = args.opt("halo-sampler") {
+            self.halo_sampler = HaloSamplerKind::parse(v).ok_or_else(|| {
+                anyhow!("unknown halo-sampler {v} (none | uniform | labor | importance)")
+            })?;
+        }
+        if let Some(v) = args.opt_f64("halo-keep") {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(anyhow!("--halo-keep must be in [0, 1], got {v}"));
+            }
+            self.halo_keep = v as f32;
         }
         if args.has_flag("fixed-batches") {
             self.batcher_mode = BatcherMode::Fixed;
@@ -713,6 +752,40 @@ mod tests {
         assert_eq!(cfg.checkpoint_dir.as_deref(), Some("other"));
         assert_eq!(cfg.checkpoint_every, 7);
         assert_eq!(cfg.worker_retries, 0);
+    }
+
+    #[test]
+    fn halo_sampler_knobs_parse() {
+        let mut cfg = RunConfig::default();
+        // bit-identical default: no subsampling policy
+        assert_eq!(cfg.halo_sampler, HaloSamplerKind::None);
+        assert!(!cfg.halo_sampler().is_subsampling());
+        let doc = toml_parse("halo_sampler = \"labor\"\nhalo_keep = 0.25\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.halo_sampler, HaloSamplerKind::Labor);
+        assert!((cfg.halo_keep - 0.25).abs() < 1e-6);
+        assert!(cfg.halo_sampler().is_subsampling());
+        // train.-scoped key works like every other knob
+        let doc = toml_parse("[train]\nhalo_sampler = \"importance\"\n").unwrap();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.halo_sampler, HaloSamplerKind::Importance);
+        let args = Args::parse(
+            ["train", "--halo-sampler", "uniform", "--halo-keep", "0.75"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_cli(&args).unwrap();
+        assert_eq!(cfg.halo_sampler, HaloSamplerKind::Uniform);
+        assert!((cfg.halo_keep - 0.75).abs() < 1e-6);
+        // bad names and out-of-range fractions error instead of defaulting
+        let doc = toml_parse("halo_sampler = \"bogus\"\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        let doc = toml_parse("halo_keep = 1.5\n").unwrap();
+        assert!(cfg.apply_toml(&doc).is_err());
+        let args = Args::parse(
+            ["train", "--halo-keep", "-0.1"].iter().map(|s| s.to_string()),
+        );
+        assert!(cfg.apply_cli(&args).is_err());
     }
 
     #[test]

@@ -51,8 +51,8 @@ pub fn measure(trainer: &mut Trainer) -> Result<GradErrorReport> {
     let nb = batches.len().max(1);
     let mut per_layer_acc = vec![0f64; l_total];
     let mut overall_acc = 0f64;
-    for batch in &batches {
-        let (_, grads) = trainer.compute_minibatch_grads(batch, None, false)?;
+    for (i, batch) in batches.iter().enumerate() {
+        let (_, grads) = trainer.compute_minibatch_grads_at(i, batch, None, false)?;
         overall_acc += grad_rel_err(&grads, &oracle.grads);
         for l in 1..=l_total {
             let sel: Vec<usize> = trainer
@@ -84,38 +84,48 @@ pub fn measure_after_warmup(trainer: &mut Trainer, warm_epochs: usize) -> Result
 }
 
 /// Gradient *bias*: the relative error of the partition-summed mini-batch
-/// gradient (per-batch grads divided by the Eq. 15 weight b/c, summed over
-/// one epoch's batches) against the exact full-batch gradient. The cluster
-/// sampling variance cancels in the sum (Theorem 1), isolating the bias
-/// term of Theorem 2 that LMC's compensations shrink.
+/// gradient (each batch's grads divided by its own Eq. 15 weight
+/// b/|chunk|, then summed over one epoch's batches) against the exact
+/// full-batch gradient. The cluster sampling variance cancels in the sum
+/// (Theorem 1), isolating the bias term of Theorem 2 that LMC's
+/// compensations shrink. Using the per-step weight (not the constant b/c)
+/// keeps a ragged last stochastic batch from skewing the sum.
 pub fn measure_bias(trainer: &mut Trainer) -> Result<f64> {
     let oracle = trainer
         .exec
         .full_grad(trainer.graph.as_ref(), &trainer.params, &trainer.model)?;
-    let gs = trainer.batcher.grad_scale();
     let batches = trainer.batcher.clone().epoch_batches();
     let mut sum: Option<Vec<Tensor>> = None;
-    for batch in &batches {
-        let (_, grads) = trainer.compute_minibatch_grads(batch, None, false)?;
+    for (i, batch) in batches.iter().enumerate() {
+        let (_, grads) = trainer.compute_minibatch_grads_at(i, batch, None, false)?;
+        let gs = trainer.batcher.grad_scale_at(i) as f64;
         sum = Some(match sum {
-            None => grads,
+            None => grads
+                .iter()
+                .map(|g| {
+                    Tensor::from_vec(
+                        &g.shape,
+                        g.data.iter().map(|x| (*x as f64 / gs) as f32).collect(),
+                    )
+                })
+                .collect(),
             Some(acc) => acc
                 .iter()
                 .zip(&grads)
                 .map(|(a, b)| {
                     Tensor::from_vec(
                         &a.shape,
-                        a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+                        a.data
+                            .iter()
+                            .zip(&b.data)
+                            .map(|(x, y)| x + (*y as f64 / gs) as f32)
+                            .collect(),
                     )
                 })
                 .collect(),
         });
     }
-    let mean: Vec<Tensor> = sum
-        .unwrap_or_else(|| trainer.params.zeros_like())
-        .iter()
-        .map(|s| Tensor::from_vec(&s.shape, s.data.iter().map(|x| x / gs).collect()))
-        .collect();
+    let mean = sum.unwrap_or_else(|| trainer.params.zeros_like());
     Ok(grad_rel_err(&mean, &oracle.grads))
 }
 

@@ -65,7 +65,11 @@ pub struct MessageAccounting {
     pub bwd_frac: f64,
 }
 
-pub fn reserved_messages(g: &Graph, batches: &[Vec<u32>], method: Method) -> MessageAccounting {
+pub fn reserved_messages<B: AsRef<[u32]>>(
+    g: &Graph,
+    batches: &[B],
+    method: Method,
+) -> MessageAccounting {
     let n = g.n();
     let arcs = g.csr.neighbors.len();
     let total = arcs + n; // + self-loops
@@ -78,6 +82,7 @@ pub fn reserved_messages(g: &Graph, batches: &[Vec<u32>], method: Method) -> Mes
     let mut bwd_self = vec![false; n];
     let mut mark = vec![0u8; n];
     for batch in batches {
+        let batch = batch.as_ref();
         for &u in batch {
             mark[u as usize] = 1;
         }

@@ -20,7 +20,8 @@ use crate::history::History;
 use crate::partition::{partition, PartitionConfig};
 use crate::runtime::Tensor;
 use crate::sampler::{
-    beta_vector, beta_vector_into, build_subgraph, Batcher, Buckets, SubgraphBatch, SubgraphCache,
+    beta_vector, beta_vector_into, build_subgraph, Batcher, Buckets, HaloSampler, SubgraphBatch,
+    SubgraphCache,
 };
 use crate::util::failpoint;
 use crate::util::rng::Rng;
@@ -149,7 +150,12 @@ impl Trainer {
         // Fixed groups + unbounded buckets => subgraph construction is a
         // deterministic function of the (identical-every-epoch) batch, so
         // blocks can be built once and reused (see SubgraphCache docs).
-        let cache_ok = SubgraphCache::applicable(cfg.subgraph_cache, batcher.mode(), &buckets);
+        let cache_ok = SubgraphCache::applicable(
+            cfg.subgraph_cache,
+            batcher.mode(),
+            &buckets,
+            &cfg.halo_sampler(),
+        );
         Ok(Trainer {
             exec,
             cfg,
@@ -241,31 +247,48 @@ impl Trainer {
     /// replacing them never changes results.
     pub(crate) fn reset_transient_state(&mut self) {
         self.ws = Mutex::new(StepWorkspace::new());
-        let cache_ok =
-            SubgraphCache::applicable(self.cfg.subgraph_cache, self.batcher.mode(), &self.buckets);
+        let cache_ok = SubgraphCache::applicable(
+            self.cfg.subgraph_cache,
+            self.batcher.mode(),
+            &self.buckets,
+            &self.cfg.halo_sampler(),
+        );
         self.sg_cache = SubgraphCache::new(cache_ok);
+    }
+
+    /// The configured halo subsampling policy (threaded into every
+    /// [`build_subgraph`] call this trainer makes).
+    pub fn halo_sampler(&self) -> HaloSampler {
+        self.cfg.halo_sampler()
     }
 
     /// Run one mini-batch step end-to-end (sample -> execute -> write-back ->
     /// optimize). Returns stats and the raw gradients (for diagnostics).
+    ///
+    /// Standalone-step entry (benches, ad-hoc probes): applies the constant
+    /// Eq. 14-15 factor b/c — outside an epoch loop there is no step index
+    /// to derive the ragged-chunk correction from. The epoch loop goes
+    /// through [`Trainer::step_on`] with [`Batcher::grad_scale_at`].
     pub fn step(&mut self, batch: &[u32]) -> Result<(StepStats, Vec<Tensor>)> {
         let sb = build_subgraph(
             &self.graph,
             batch,
             self.cfg.method.adjacency_policy(),
             &self.buckets,
+            &self.cfg.halo_sampler(),
             &mut self.rng,
         )?;
-        self.step_on(&sb)
+        self.step_on(&sb, self.batcher.grad_scale())
     }
 
-    /// Step on a pre-built subgraph: gradients, then the method's optimizer
-    /// update (Adam, or the SPIDER estimator for LMC-SPIDER).
-    fn step_on(&mut self, sb: &SubgraphBatch) -> Result<(StepStats, Vec<Tensor>)> {
+    /// Step on a pre-built subgraph: gradients at the given Eq. 14-15
+    /// scale, then the method's optimizer update (Adam, or the SPIDER
+    /// estimator for LMC-SPIDER).
+    fn step_on(&mut self, sb: &SubgraphBatch, grad_scale: f32) -> Result<(StepStats, Vec<Tensor>)> {
         failpoint::fire("trainer.step")?;
-        let (stats, grads) = self.grads_for_subgraph(sb, None, true)?;
+        let (stats, grads) = self.grads_for_subgraph(sb, None, true, grad_scale)?;
         if self.cfg.method == Method::LmcSpider {
-            self.spider_step(sb, &grads)?;
+            self.spider_step(sb, &grads, grad_scale)?;
         } else {
             self.opt.step(&mut self.params, &grads);
         }
@@ -274,21 +297,49 @@ impl Trainer {
     }
 
     /// Compute mini-batch gradients (optionally at explicitly-given params,
-    /// for SPIDER), with or without history write-back.
+    /// for SPIDER), with or without history write-back, at the constant
+    /// Eq. 14-15 scale. Step-indexed callers (the gradient-error probes)
+    /// use [`Trainer::compute_minibatch_grads_at`].
     pub fn compute_minibatch_grads(
         &mut self,
         batch: &[u32],
         at_params: Option<&Params>,
         write_back: bool,
     ) -> Result<(StepStats, Vec<Tensor>)> {
+        let gs = self.batcher.grad_scale();
+        self.minibatch_grads_scaled(batch, at_params, write_back, gs)
+    }
+
+    /// [`Trainer::compute_minibatch_grads`] with the per-step Eq. 14-15
+    /// factor for epoch step `step` — b/|chunk| instead of the constant
+    /// b/c, correcting the ragged last stochastic chunk.
+    pub fn compute_minibatch_grads_at(
+        &mut self,
+        step: usize,
+        batch: &[u32],
+        at_params: Option<&Params>,
+        write_back: bool,
+    ) -> Result<(StepStats, Vec<Tensor>)> {
+        let gs = self.batcher.grad_scale_at(step);
+        self.minibatch_grads_scaled(batch, at_params, write_back, gs)
+    }
+
+    fn minibatch_grads_scaled(
+        &mut self,
+        batch: &[u32],
+        at_params: Option<&Params>,
+        write_back: bool,
+        grad_scale: f32,
+    ) -> Result<(StepStats, Vec<Tensor>)> {
         let sb = build_subgraph(
             &self.graph,
             batch,
             self.cfg.method.adjacency_policy(),
             &self.buckets,
+            &self.cfg.halo_sampler(),
             &mut self.rng,
         )?;
-        self.grads_for_subgraph(&sb, at_params, write_back)
+        self.grads_for_subgraph(&sb, at_params, write_back, grad_scale)
     }
 
     /// Execute the fused train step for a pre-built subgraph through the
@@ -300,6 +351,7 @@ impl Trainer {
         sb: &SubgraphBatch,
         at_params: Option<&Params>,
         write_back: bool,
+        grad_scale: f32,
     ) -> Result<(StepStats, Vec<Tensor>)> {
         let spec = self.comp.spec();
         let l_total = self.model.arch.l;
@@ -368,7 +420,7 @@ impl Trainer {
             beta,
             bwd_scale: if self.cfg.force_bwd_off { 0.0 } else { spec.bwd_scale },
             vscale: 1.0 / self.n_train.max(1) as f32,
-            grad_scale: self.batcher.grad_scale(),
+            grad_scale,
             top: self
                 .comp
                 .transforms()
@@ -439,13 +491,21 @@ impl Trainer {
     /// SPIDER update (Appendix F): periodic anchors via the exact oracle;
     /// in between, v_k = g(W_k; B_k) - g(W_{k-1}; B_k) + v_{k-1}, evaluated
     /// on the *same* sampled subgraph B_k at both parameter points.
-    fn spider_step(&mut self, sb: &SubgraphBatch, grads_now: &[Tensor]) -> Result<()> {
+    fn spider_step(
+        &mut self,
+        sb: &SubgraphBatch,
+        grads_now: &[Tensor],
+        grad_scale: f32,
+    ) -> Result<()> {
         let anchor_due = self.step_count % self.cfg.spider_period as u64 == 0;
         let estimator: Vec<Tensor> = if anchor_due || self.spider_prev.is_none() {
             self.exec.full_grad(self.graph.as_ref(), &self.params, &self.model)?.grads
         } else {
             let (prev_params, prev_est) = self.spider_prev.take().unwrap();
-            let (_, grads_prev) = self.grads_for_subgraph(sb, Some(&prev_params), false)?;
+            // same subgraph, same scale as the step's own gradients — the
+            // estimator's difference term must be computed at one weight
+            let (_, grads_prev) =
+                self.grads_for_subgraph(sb, Some(&prev_params), false, grad_scale)?;
             grads_now
                 .iter()
                 .zip(&grads_prev)
@@ -503,7 +563,8 @@ impl Trainer {
                     .sg_cache
                     .get(i, b)
                     .ok_or_else(|| anyhow!("subgraph cache invalidated mid-run (step {i})"))?;
-                let (s, _) = self.step_on(sb.as_ref())?;
+                let gs = self.batcher.grad_scale_at(i);
+                let (s, _) = self.step_on(sb.as_ref(), gs)?;
                 agg.add(&s);
             }
             return Ok(agg.finish());
@@ -511,11 +572,12 @@ impl Trainer {
         if self.cfg.pipeline && batches.len() > 1 {
             let graph = self.graph.clone();
             let buckets = self.buckets.clone();
+            let sampler = self.cfg.halo_sampler();
             let batches_bg = batches.clone();
             let (tx, rx) = std::sync::mpsc::sync_channel::<Result<SubgraphBatch>>(2);
             let mut handle = Some(std::thread::spawn(move || {
                 for (i, b) in batches_bg.iter().enumerate() {
-                    let sb = build_subgraph(&graph, b, policy, &buckets, &mut rngs[i]);
+                    let sb = build_subgraph(&graph, b, policy, &buckets, &sampler, &mut rngs[i]);
                     if tx.send(sb).is_err() {
                         break;
                     }
@@ -537,7 +599,8 @@ impl Trainer {
                 if self.sg_cache.enabled() {
                     self.sg_cache.insert(i, sb.clone());
                 }
-                let (s, _) = self.step_on(sb.as_ref())?;
+                let gs = self.batcher.grad_scale_at(i);
+                let (s, _) = self.step_on(sb.as_ref(), gs)?;
                 agg.add(&s);
             }
             join_prefetch(handle.take())?;
@@ -551,13 +614,15 @@ impl Trainer {
                             b,
                             policy,
                             &self.buckets,
+                            &self.cfg.halo_sampler(),
                             &mut rngs[i],
                         )?);
                         self.sg_cache.insert(i, built.clone());
                         built
                     }
                 };
-                let (s, _) = self.step_on(sb.as_ref())?;
+                let gs = self.batcher.grad_scale_at(i);
+                let (s, _) = self.step_on(sb.as_ref(), gs)?;
                 agg.add(&s);
             }
         }

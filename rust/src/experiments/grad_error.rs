@@ -5,6 +5,7 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::coordinator::grad_check;
+use crate::sampler::HaloSamplerKind;
 use crate::util::table::Table;
 
 /// For each method, train on arxiv-sim (GCN) and record the per-layer
@@ -91,5 +92,66 @@ pub fn run_grad_shootout(ctx: &Ctx) -> Result<Table> {
         );
     }
     t.save(&ctx.out, "grad_error")?;
+    Ok(t)
+}
+
+/// `lmc experiment samplers`: the halo-sampler shoot-out. Each row trains
+/// the same arxiv-sim GCN task under one halo subsampling policy (keep
+/// fraction 0.5, plus the full-halo baseline) crossed with {LMC
+/// compensation, none} — "none" is the GAS historical fallback, i.e. stale
+/// history rows with no Eq. 9 correction — and reports the overall
+/// gradient error against the exact oracle plus mean epoch wall time.
+/// Expected shape: every rescaled policy stays close to the full-halo
+/// error of its compensation row (the Horvitz–Thompson rescale keeps the
+/// aggregation unbiased) while spending less time per epoch, and LMC rows
+/// sit below their "none" twins at every sampler.
+pub fn run_sampler_shootout(ctx: &Ctx) -> Result<Table> {
+    let mut t = Table::new(
+        "Halo-sampler shoot-out: gradient error vs wall-clock (arxiv-sim, GCN, keep 0.5)",
+        &["sampler", "compensation", "grad_err_overall", "epoch_secs", "dropped_halo"],
+    );
+    let warm = ctx.epochs(8);
+    let samplers = [
+        HaloSamplerKind::None,
+        HaloSamplerKind::Uniform,
+        HaloSamplerKind::Labor,
+        HaloSamplerKind::Importance,
+    ];
+    for kind in samplers {
+        for (comp_label, method) in [("lmc", "lmc"), ("none", "gas")] {
+            let cfg = {
+                let mut c = ctx.base_cfg("arxiv-sim", "gcn", method)?;
+                c.epochs = warm;
+                c.lr = 3e-3; // same regime as fig3 / grad-error
+                c.halo_sampler = kind;
+                c.halo_keep = 0.5;
+                c
+            };
+            let mut trainer = crate::coordinator::Trainer::new(ctx.exec.clone(), cfg)?;
+            let mut secs = 0f64;
+            let mut dropped = 0usize;
+            for _ in 0..warm {
+                let t0 = std::time::Instant::now();
+                let stats = trainer.train_epoch()?;
+                secs += t0.elapsed().as_secs_f64();
+                dropped = stats.dropped_halo;
+            }
+            let epoch_secs = secs / warm.max(1) as f64;
+            let rep = grad_check::measure(&mut trainer)?;
+            t.row(vec![
+                kind.name().to_string(),
+                comp_label.to_string(),
+                format!("{:.6}", rep.overall),
+                format!("{epoch_secs:.4}"),
+                dropped.to_string(),
+            ]);
+            println!(
+                "samplers: {} comp={comp_label} rel err {:.4} epoch {epoch_secs:.3}s dropped {dropped}",
+                kind.name(),
+                rep.overall
+            );
+        }
+    }
+    t.save(&ctx.out, "sampler_shootout")?;
     Ok(t)
 }

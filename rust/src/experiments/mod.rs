@@ -25,7 +25,7 @@ use crate::util::cli::Args;
 pub use ablation::{run_fig4, run_table8, run_table9};
 pub use curves::{run_fig2, run_fig5};
 pub use efficiency::{run_sharded, run_table2, run_table6, run_table7};
-pub use grad_error::{run_fig3, run_grad_shootout};
+pub use grad_error::{run_fig3, run_grad_shootout, run_sampler_shootout};
 pub use prediction::{run_table1, run_table3};
 
 /// Shared experiment context.
@@ -124,6 +124,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "fig2" => run_fig2(&ctx).map(|_| ()),
         "fig3" => run_fig3(&ctx).map(|_| ()),
         "grad-error" => run_grad_shootout(&ctx).map(|_| ()),
+        "samplers" => run_sampler_shootout(&ctx).map(|_| ()),
         "fig4" => run_fig4(&ctx).map(|_| ()),
         "fig5" => run_fig5(&ctx).map(|_| ()),
         "all" => {
@@ -138,6 +139,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
             run_fig2(&ctx)?;
             run_fig3(&ctx)?;
             run_grad_shootout(&ctx)?;
+            run_sampler_shootout(&ctx)?;
             run_fig4(&ctx)?;
             run_fig5(&ctx)?;
             Ok(())

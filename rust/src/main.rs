@@ -90,6 +90,8 @@ subcommands:
                    [--compensation lmc|top|none]   override the method's
                    compensation policy   [--top-lr F] TOP transform fit rate
                    [--history-dtype f32|bf16|f16]
+                   [--halo-sampler none|uniform|labor|importance]
+                   [--halo-keep F]   keep fraction for subsampling policies
                    [--checkpoint-dir DIR] [--checkpoint-every N]
                    [--resume DIR]   continue from the last checkpoint in DIR
                    [--target-acc F] [--config file.toml] [--seed N]
@@ -130,7 +132,7 @@ subcommands:
   bench-gate       [--bench ../BENCH_step.json] [--baseline ../BENCH_baseline.json]
                    [--summary FILE]   diff gated phases, exit 1 on regression
   experiment ID    table1|table2|table3|table6|table7|table8|table9|
-                   fig2|fig3|fig4|fig5|sharded|grad-error|all
+                   fig2|fig3|fig4|fig5|sharded|grad-error|samplers|all
                    [--out results/]
 
 environment:

@@ -9,6 +9,8 @@
 //!     epoch (paper §E.2: avoids per-step sampling cost; LMC's convergence
 //!     analysis covers this too).
 
+use std::sync::Arc;
+
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,7 +24,10 @@ pub struct Batcher {
     clusters: Vec<Vec<u32>>,
     clusters_per_batch: usize,
     mode: BatcherMode,
-    fixed_groups: Vec<Vec<u32>>,
+    /// Fixed-mode groups behind `Arc` so [`Batcher::epoch_batches`] hands
+    /// out shared references instead of deep-cloning every node list each
+    /// epoch — steady-state Fixed epochs allocate only the outer Vec.
+    fixed_groups: Vec<Arc<[u32]>>,
     rng: Rng,
 }
 
@@ -65,8 +70,33 @@ impl Batcher {
     }
 
     /// Normalization factor b/c of Eqs. (14)-(15): #parts / #parts-per-batch.
+    ///
+    /// This is the *constant* factor — exact for every step except a ragged
+    /// last stochastic batch; the training loop uses
+    /// [`Batcher::grad_scale_at`], which corrects that step.
     pub fn grad_scale(&self) -> f32 {
         self.clusters.len() as f32 / self.clusters_per_batch as f32
+    }
+
+    /// The Eq. 14-15 factor for step `step` of the current epoch:
+    /// b/|clusters in that step's chunk|. In `Stochastic` mode the shuffled
+    /// cluster list is chunked by `c`, so every chunk holds `c` clusters
+    /// except a ragged last one with `b mod c` — scaling *it* by the
+    /// constant b/c over-weights its gradient (each cluster must contribute
+    /// with weight b/|chunk| for the epoch-summed estimator to be
+    /// unbiased, Theorem 1). `Fixed` mode keeps the constant factor:
+    /// its groups were built once at preprocessing, and changing their
+    /// scaling would break bit-identical reproduction of existing runs.
+    pub fn grad_scale_at(&self, step: usize) -> f32 {
+        match self.mode {
+            BatcherMode::Fixed => self.grad_scale(),
+            BatcherMode::Stochastic => {
+                let b = self.clusters.len();
+                let c = self.clusters_per_batch;
+                let chunk = c.min(b.saturating_sub(step * c)).max(1);
+                b as f32 / chunk as f32
+            }
+        }
     }
 
     /// Raw RNG stream position — checkpointed so a resumed run replays
@@ -80,8 +110,11 @@ impl Batcher {
         self.rng = Rng::from_state(s);
     }
 
-    /// Mini-batches (node-id lists) for one epoch.
-    pub fn epoch_batches(&mut self) -> Vec<Vec<u32>> {
+    /// Mini-batches (node-id lists) for one epoch. `Fixed` mode returns
+    /// shared handles to the preprocessing-time groups (no per-epoch node
+    /// copies — `fixed_groups_are_shared_not_recopied`); `Stochastic` mode
+    /// assembles fresh groups from a reshuffle.
+    pub fn epoch_batches(&mut self) -> Vec<Arc<[u32]>> {
         match self.mode {
             BatcherMode::Fixed => self.fixed_groups.clone(),
             BatcherMode::Stochastic => {
@@ -95,7 +128,7 @@ impl Batcher {
                             nodes.extend_from_slice(&self.clusters[ci]);
                         }
                         nodes.sort_unstable();
-                        nodes
+                        Arc::from(nodes)
                     })
                     .collect()
             }
@@ -103,7 +136,7 @@ impl Batcher {
     }
 }
 
-fn group_once(clusters: &[Vec<u32>], c: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+fn group_once(clusters: &[Vec<u32>], c: usize, rng: &mut Rng) -> Vec<Arc<[u32]>> {
     let mut order: Vec<usize> = (0..clusters.len()).collect();
     rng.shuffle(&mut order);
     order
@@ -114,7 +147,7 @@ fn group_once(clusters: &[Vec<u32>], c: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
                 nodes.extend_from_slice(&clusters[ci]);
             }
             nodes.sort_unstable();
-            nodes
+            Arc::from(nodes)
         })
         .collect()
 }
@@ -135,7 +168,8 @@ mod tests {
     fn stochastic_epoch_covers_every_node_once() {
         let mut b = Batcher::new(clusters(100, 10), 3, BatcherMode::Stochastic, 7);
         assert_eq!(b.steps_per_epoch(), 4);
-        let mut seen: Vec<u32> = b.epoch_batches().into_iter().flatten().collect();
+        let mut seen: Vec<u32> =
+            b.epoch_batches().iter().flat_map(|g| g.iter().copied()).collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..100u32).collect::<Vec<_>>());
     }
@@ -154,14 +188,51 @@ mod tests {
         let e1 = b.epoch_batches();
         let e2 = b.epoch_batches();
         assert_eq!(e1, e2);
-        let mut seen: Vec<u32> = e1.into_iter().flatten().collect();
+        let mut seen: Vec<u32> = e1.iter().flat_map(|g| g.iter().copied()).collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..90u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fixed_groups_are_shared_not_recopied() {
+        // The allocation-stability pin: Fixed epochs hand out Arc clones of
+        // the same preprocessing-time groups, never fresh node-list copies.
+        let mut b = Batcher::new(clusters(90, 9), 2, BatcherMode::Fixed, 7);
+        let e1 = b.epoch_batches();
+        let e2 = b.epoch_batches();
+        assert_eq!(e1.len(), e2.len());
+        for (a, c) in e1.iter().zip(&e2) {
+            assert!(Arc::ptr_eq(a, c), "fixed groups must share one allocation");
+        }
+        // and a third epoch still points at the same buffers
+        for (a, c) in e1.iter().zip(&b.epoch_batches()) {
+            assert!(Arc::ptr_eq(a, c));
+        }
     }
 
     #[test]
     fn grad_scale_is_b_over_c() {
         let b = Batcher::new(clusters(100, 20), 5, BatcherMode::Stochastic, 0);
         assert!((b.grad_scale() - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_scale_at_corrects_ragged_last_stochastic_chunk() {
+        // 7 clusters, 3 per batch -> chunks of 3, 3, 1
+        let b = Batcher::new(clusters(70, 7), 3, BatcherMode::Stochastic, 0);
+        assert_eq!(b.steps_per_epoch(), 3);
+        assert!((b.grad_scale_at(0) - 7.0 / 3.0).abs() < 1e-6);
+        assert!((b.grad_scale_at(1) - 7.0 / 3.0).abs() < 1e-6);
+        assert!((b.grad_scale_at(2) - 7.0).abs() < 1e-6, "ragged chunk holds 1 cluster");
+        // evenly divisible: every step matches the constant factor
+        let e = Batcher::new(clusters(60, 6), 3, BatcherMode::Stochastic, 0);
+        for i in 0..e.steps_per_epoch() {
+            assert_eq!(e.grad_scale_at(i), e.grad_scale());
+        }
+        // Fixed mode intentionally keeps the constant factor on every step
+        let f = Batcher::new(clusters(70, 7), 3, BatcherMode::Fixed, 0);
+        for i in 0..f.steps_per_epoch() {
+            assert_eq!(f.grad_scale_at(i), f.grad_scale());
+        }
     }
 }

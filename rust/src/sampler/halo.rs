@@ -1,0 +1,296 @@
+//! Halo subsampling policies with explicit inclusion probabilities.
+//!
+//! The legacy bucket cap in [`crate::sampler::build_subgraph`] drops halo
+//! nodes uniformly *without* reweighting the surviving edges, so the
+//! expected batch-row aggregation shrinks by the keep fraction — a bias the
+//! paper's compensation cannot see. A [`HaloSampler`] instead subsamples
+//! halo nodes with a known per-node inclusion probability `p_i` and reports
+//! `1/p_i` so the sampler can rescale the kept `A_bh`/`A_hh` edge weights
+//! (Horvitz–Thompson): `E[sum_{i kept} w_i/p_i * x_i] = sum_i w_i * x_i`.
+//!
+//! Policies:
+//!   - `uniform`: exactly-k uniform without replacement, `p_i = k/n` —
+//!     the rescaled (unbiased) version of the legacy cap.
+//!   - `importance`: FastGCN/LADIES-style layer-dependent importance
+//!     `pi_i = sum_b w(b,i)^2` over in-batch neighbors (the column-sum
+//!     `pi = sum(L∘L)` idiom), Bernoulli coins with `p_i = min(1, c·pi_i)`
+//!     water-filled so `sum p_i = k`.
+//!   - `labor`: LABOR-style (Balın & Çatalyürek) with L1 importance
+//!     `pi_i = sum_b |w(b,i)|` and a *per-vertex* hashed coin shared across
+//!     the epoch's batches, so a vertex kept in one batch tends to be kept
+//!     in others — maximizing history/cache overlap at the same variance.
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HaloSamplerKind {
+    /// Legacy path: no policy subsampling; the bucket cap (if any) drops
+    /// uniformly without rescaling — bit-identical to pre-sampler-zoo
+    /// behaviour.
+    None,
+    /// Exactly-k uniform subsample with 1/p rescale (`p = k/n`).
+    Uniform,
+    /// LABOR layer-dependent: L1 importance + shared per-vertex coins.
+    Labor,
+    /// FastGCN/LADIES importance-weighted: L2 importance + fresh coins.
+    Importance,
+}
+
+impl HaloSamplerKind {
+    pub fn parse(s: &str) -> Option<HaloSamplerKind> {
+        Some(match s {
+            "none" => HaloSamplerKind::None,
+            "uniform" | "uniform-cap" => HaloSamplerKind::Uniform,
+            "labor" => HaloSamplerKind::Labor,
+            "importance" | "ladies" | "fastgcn" => HaloSamplerKind::Importance,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HaloSamplerKind::None => "none",
+            HaloSamplerKind::Uniform => "uniform",
+            HaloSamplerKind::Labor => "labor",
+            HaloSamplerKind::Importance => "importance",
+        }
+    }
+}
+
+/// A halo subsampling policy: which scheme, and what fraction of the halo
+/// to keep. `kind = None` or `frac >= 1` is a passthrough (no subsampling,
+/// no RNG consumption) — the bit-identical legacy path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HaloSampler {
+    pub kind: HaloSamplerKind,
+    /// Target keep fraction of the halo (budget `k = ceil(frac * n)`).
+    pub frac: f32,
+}
+
+impl Default for HaloSampler {
+    fn default() -> Self {
+        HaloSampler::none()
+    }
+}
+
+impl HaloSampler {
+    pub fn none() -> HaloSampler {
+        HaloSampler { kind: HaloSamplerKind::None, frac: 1.0 }
+    }
+
+    pub fn new(kind: HaloSamplerKind, frac: f32) -> HaloSampler {
+        HaloSampler { kind, frac }
+    }
+
+    /// True when this policy actually subsamples (and therefore consumes
+    /// RNG and varies per build). The negation is what keeps the
+    /// no-subsampling path bit-identical and the subgraph cache sound.
+    pub fn is_subsampling(&self) -> bool {
+        self.kind != HaloSamplerKind::None && self.frac < 1.0
+    }
+
+    /// Subsample `halo` (sorted node ids, membership in `mark`: 1 = batch,
+    /// 2 = halo). Returns the kept halo sorted ascending, the aligned
+    /// `1/p_i` rescale factors, and the dropped count.
+    pub(crate) fn subsample(
+        &self,
+        g: &Graph,
+        mark: &[u8],
+        halo: &[u32],
+        rng: &mut Rng,
+    ) -> (Vec<u32>, Vec<f32>, usize) {
+        let n = halo.len();
+        let k = ((self.frac as f64 * n as f64).ceil() as usize).clamp(1, n);
+        if k >= n {
+            return (halo.to_vec(), vec![1.0; n], 0);
+        }
+        match self.kind {
+            HaloSamplerKind::None => (halo.to_vec(), vec![1.0; n], 0),
+            HaloSamplerKind::Uniform => {
+                let p = k as f32 / n as f32;
+                let mut keep = rng.sample_indices(n, k);
+                keep.sort_unstable();
+                let kept: Vec<u32> = keep.iter().map(|&i| halo[i]).collect();
+                let inv_p = vec![1.0 / p; kept.len()];
+                (kept, inv_p, n - k)
+            }
+            HaloSamplerKind::Labor | HaloSamplerKind::Importance => {
+                let l1 = self.kind == HaloSamplerKind::Labor;
+                let pi: Vec<f64> = halo
+                    .iter()
+                    .map(|&u| batch_importance(g, mark, u as usize, l1))
+                    .collect();
+                let p = inclusion_probs(&pi, k);
+                // LABOR: one seed word per build, then per-vertex hashed
+                // coins — the same vertex draws the same coin in every batch
+                // of the epoch. Importance: fresh stream coins.
+                let seed_word = if l1 { rng.next_u64() } else { 0 };
+                let mut kept = Vec::with_capacity(k + k / 4 + 1);
+                let mut inv_p = Vec::with_capacity(k + k / 4 + 1);
+                for (i, &u) in halo.iter().enumerate() {
+                    let coin =
+                        if l1 { vertex_coin(seed_word, u) } else { rng.next_f64() };
+                    if coin < p[i] {
+                        kept.push(u);
+                        inv_p.push((1.0 / p[i]) as f32);
+                    }
+                }
+                let dropped = n - kept.len();
+                (kept, inv_p, dropped)
+            }
+        }
+    }
+}
+
+/// Importance of halo node `u` w.r.t. the current batch: the column sum of
+/// squared (L2, FastGCN/LADIES `pi = sum(L∘L)`) or absolute (L1, LABOR)
+/// normalized edge weights into in-batch rows.
+fn batch_importance(g: &Graph, mark: &[u8], u: usize, l1: bool) -> f64 {
+    let mut pi = 0f64;
+    for ei in g.csr.offsets[u] as usize..g.csr.offsets[u + 1] as usize {
+        let v = g.csr.neighbors[ei] as usize;
+        if mark[v] == 1 {
+            let w = g.edge_w[ei] as f64;
+            pi += if l1 { w.abs() } else { w * w };
+        }
+    }
+    pi
+}
+
+/// Water-filling solver for `p_i = min(1, c * pi_i)` with `sum p_i = k`:
+/// saturated nodes pin at 1, the scale `c` redistributes the remaining
+/// budget over the rest until no new node saturates. Terminates in at most
+/// `n` rounds (each round saturates at least one new node or stops).
+pub(crate) fn inclusion_probs(pi: &[f64], k: usize) -> Vec<f64> {
+    let n = pi.len();
+    if k >= n {
+        return vec![1.0; n];
+    }
+    let mut p = vec![0f64; n];
+    let mut saturated = vec![false; n];
+    loop {
+        let mut mass = 0f64;
+        let mut nsat = 0usize;
+        for i in 0..n {
+            if saturated[i] {
+                nsat += 1;
+            } else {
+                mass += pi[i];
+            }
+        }
+        let budget = k.saturating_sub(nsat) as f64;
+        if mass <= 0.0 || budget <= 0.0 {
+            // degenerate tail (all-zero importances): spread uniformly
+            let rem = (n - nsat) as f64;
+            for i in 0..n {
+                if !saturated[i] {
+                    p[i] = (budget / rem).clamp(0.0, 1.0);
+                }
+            }
+            return floor_probs(p);
+        }
+        let c = budget / mass;
+        let mut newly_saturated = false;
+        for i in 0..n {
+            if !saturated[i] {
+                let v = c * pi[i];
+                if v >= 1.0 {
+                    saturated[i] = true;
+                    p[i] = 1.0;
+                    newly_saturated = true;
+                } else {
+                    p[i] = v;
+                }
+            }
+        }
+        if !newly_saturated {
+            return floor_probs(p);
+        }
+    }
+}
+
+/// Floor inclusion probabilities away from zero so `1/p` edge rescales stay
+/// finite. The coin uses the floored probability too, so the estimator
+/// remains exactly unbiased.
+fn floor_probs(mut p: Vec<f64>) -> Vec<f64> {
+    for v in &mut p {
+        if *v < 1e-9 {
+            *v = 1e-9;
+        }
+    }
+    p
+}
+
+/// LABOR's shared per-vertex coin: a splitmix-style hash of (epoch seed
+/// word, vertex id) mapped to [0, 1). Deterministic per (seed, vertex), so
+/// the same vertex flips the same coin across all batches built with the
+/// same seed word.
+fn vertex_coin(seed_word: u64, u: u32) -> f64 {
+    let mut z = seed_word ^ (u as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [
+            HaloSamplerKind::None,
+            HaloSamplerKind::Uniform,
+            HaloSamplerKind::Labor,
+            HaloSamplerKind::Importance,
+        ] {
+            assert_eq!(HaloSamplerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(HaloSamplerKind::parse("uniform-cap"), Some(HaloSamplerKind::Uniform));
+        assert_eq!(HaloSamplerKind::parse("ladies"), Some(HaloSamplerKind::Importance));
+        assert!(HaloSamplerKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn passthrough_detection() {
+        assert!(!HaloSampler::none().is_subsampling());
+        assert!(!HaloSampler::new(HaloSamplerKind::Labor, 1.0).is_subsampling());
+        assert!(!HaloSampler::new(HaloSamplerKind::None, 0.5).is_subsampling());
+        assert!(HaloSampler::new(HaloSamplerKind::Uniform, 0.5).is_subsampling());
+    }
+
+    #[test]
+    fn inclusion_probs_sum_to_budget_and_cap_at_one() {
+        let pi = vec![10.0, 1.0, 1.0, 1.0, 0.5, 0.5];
+        let p = inclusion_probs(&pi, 3);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 3.0).abs() < 1e-9, "sum {sum}");
+        assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // the dominant node saturates; the rest split the remaining budget
+        // proportionally to their importance
+        assert_eq!(p[0], 1.0);
+        assert!((p[1] / p[4] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inclusion_probs_degenerate_importances() {
+        // all-zero importances fall back to uniform
+        let p = inclusion_probs(&[0.0; 5], 2);
+        assert!((p.iter().sum::<f64>() - 2.0).abs() < 1e-9);
+        assert!(p.iter().all(|&v| (v - 0.4).abs() < 1e-9));
+        // k >= n keeps everything
+        assert_eq!(inclusion_probs(&[1.0, 2.0], 5), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn vertex_coin_is_deterministic_and_uniformish() {
+        assert_eq!(vertex_coin(42, 7), vertex_coin(42, 7));
+        assert_ne!(vertex_coin(42, 7), vertex_coin(43, 7));
+        let n = 4000;
+        let mean: f64 = (0..n).map(|u| vertex_coin(9, u)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.03, "mean {mean}");
+        assert!((0..n).all(|u| (0.0..1.0).contains(&vertex_coin(9, u))));
+    }
+}

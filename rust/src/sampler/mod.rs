@@ -12,6 +12,7 @@
 //!     (paper §E.2 footnote).
 
 pub mod batcher;
+pub mod halo;
 pub mod sparse;
 
 use std::sync::Arc;
@@ -22,6 +23,7 @@ use crate::graph::{Csr, Graph};
 use crate::util::rng::Rng;
 
 pub use batcher::{Batcher, BatcherMode};
+pub use halo::{HaloSampler, HaloSamplerKind};
 pub use sparse::{CsrBlock, CsrBuilder};
 
 /// Below this many gathered elements `gather_rows` stays serial.
@@ -110,6 +112,12 @@ pub struct SubgraphBatch {
     pub a_hb: CsrBlock,
     /// Halo neighbors dropped by the bucket cap (0 in normal operation).
     pub dropped_halo: usize,
+    /// Horvitz–Thompson rescale factors `1/p_i` per kept halo node when a
+    /// subsampling [`HaloSampler`] built this batch; empty means all-ones
+    /// (the full halo survived, no rescale was applied). The factors are
+    /// already baked into the `a_bh`/`a_hh`/`a_hb` weights — this vector is
+    /// diagnostic (tests, experiments).
+    pub halo_inv_p: Vec<f32>,
     /// Degree of each halo node inside the sampled subgraph (for beta
     /// scores, paper §A.4) and in the full graph.
     pub halo_deg_local: Vec<u32>,
@@ -141,11 +149,20 @@ impl SubgraphBatch {
 ///
 /// `batch` must be sorted ascending (the batcher and the exact tiler both
 /// emit sorted node lists); this keeps every CSR row's columns sorted.
+///
+/// `sampler` selects the halo subsampling policy (see [`halo`]): a
+/// subsampling policy keeps each halo node with a known inclusion
+/// probability `p_i` and rescales that node's outgoing edge weights (its
+/// `A_bh`/`A_hh` columns) by `1/p_i`, so the *expected* aggregation into
+/// every surviving row equals the full-halo one. [`HaloSampler::none`] is
+/// bit-identical to the pre-policy behaviour, including the legacy
+/// unrescaled bucket cap and its RNG consumption.
 pub fn build_subgraph(
     g: &Graph,
     batch: &[u32],
     policy: AdjacencyPolicy,
     buckets: &Buckets,
+    sampler: &HaloSampler,
     rng: &mut Rng,
 ) -> anyhow::Result<SubgraphBatch> {
     debug_assert!(batch.windows(2).all(|w| w[0] < w[1]), "batch must be sorted");
@@ -169,21 +186,12 @@ pub fn build_subgraph(
         halo.sort_unstable();
     }
 
-    let (bucket_b, bucket_h) = buckets.pick(nb, halo.len()).ok_or_else(|| {
-        anyhow::anyhow!(
-            "no artifact bucket fits batch of {nb} nodes (buckets: {:?}); \
-             re-run `make artifacts` with a larger step bucket",
-            buckets.0
-        )
-    })?;
+    // Policy-driven halo subsampling (stage 1): explicit inclusion
+    // probabilities, Horvitz–Thompson rescale carried in `halo_inv_p`.
     let mut dropped = 0usize;
-    if halo.len() > bucket_h {
-        // cap halo by uniform subsampling (GAS-style buffer cap); dropped
-        // nodes' messages fall back to being discarded, like CLUSTER.
-        dropped = halo.len() - bucket_h;
-        let keep = rng.sample_indices(halo.len(), bucket_h);
-        let mut kept: Vec<u32> = keep.iter().map(|&i| halo[i]).collect();
-        kept.sort_unstable();
+    let mut halo_inv_p: Vec<f32> = Vec::new();
+    if sampler.is_subsampling() && !halo.is_empty() {
+        let (kept, inv_p, d) = sampler.subsample(g, &mark, &halo, rng);
         for &h in &halo {
             mark[h as usize] = 0;
         }
@@ -191,6 +199,51 @@ pub fn build_subgraph(
             mark[h as usize] = 2;
         }
         halo = kept;
+        halo_inv_p = inv_p;
+        dropped = d;
+    }
+
+    let (bucket_b, bucket_h) = buckets.pick(nb, halo.len()).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no artifact bucket fits batch of {nb} nodes (buckets: {:?}); \
+             re-run `make artifacts` with a larger step bucket",
+            buckets.0
+        )
+    })?;
+    if halo.len() > bucket_h {
+        // Bucket overflow (stage 2): uniform subsample down to the compiled
+        // shape. Under `HaloSampler::none` this is the legacy GAS-style
+        // buffer cap — dropped nodes' messages fall back to being
+        // discarded, like CLUSTER, with no rescale (the historical bias
+        // this PR's policies fix). When a policy already assigned
+        // probabilities, the second uniform stage multiplies them by
+        // bucket_h/n1, so the combined `1/p` stays conditionally unbiased.
+        let n1 = halo.len();
+        dropped += n1 - bucket_h;
+        let second_stage_inv = n1 as f32 / bucket_h as f32;
+        let keep = rng.sample_indices(n1, bucket_h);
+        let mut kept: Vec<(u32, f32)> = keep
+            .iter()
+            .map(|&i| {
+                let ip = if halo_inv_p.is_empty() {
+                    1.0
+                } else {
+                    halo_inv_p[i] * second_stage_inv
+                };
+                (halo[i], ip)
+            })
+            .collect();
+        kept.sort_unstable_by_key(|&(u, _)| u);
+        for &h in &halo {
+            mark[h as usize] = 0;
+        }
+        for &(h, _) in &kept {
+            mark[h as usize] = 2;
+        }
+        if !halo_inv_p.is_empty() {
+            halo_inv_p = kept.iter().map(|&(_, ip)| ip).collect();
+        }
+        halo = kept.into_iter().map(|(u, _)| u).collect();
     }
 
     // position maps
@@ -211,6 +264,23 @@ pub fn build_subgraph(
             (blk, CsrBlock::empty(nb, 0), CsrBlock::empty(0, 0))
         }
         AdjacencyPolicy::GlobalWithHalo => {
+            // Horvitz–Thompson rescale for edges whose message *source* is a
+            // subsampled halo node: the source's `A_bh`/`A_hh` column scales
+            // by 1/p. Self-loops are never scaled (the node's own state is
+            // not subsampled). `a_hb`, built below as the transpose of the
+            // scaled `a_bh`, inherits the factors, so the symmetric stacked
+            // operator the backend applies forward *and* backward sees one
+            // consistently rescaled coupling. `A_hh` becomes asymmetric
+            // under subsampling — each direction carries its own source's
+            // factor — which keeps every row's expected aggregation equal
+            // to the full-halo one.
+            let hscale = |j: u32| -> f32 {
+                if halo_inv_p.is_empty() {
+                    1.0
+                } else {
+                    halo_inv_p[j as usize]
+                }
+            };
             let mut bb = CsrBuilder::new(nb);
             let mut bh = CsrBuilder::new(nh);
             for (i, &u) in batch.iter().enumerate() {
@@ -233,7 +303,8 @@ pub fn build_subgraph(
                             nnz += 1;
                         }
                         2 => {
-                            bh.push(pos[v], w);
+                            let j = pos[v];
+                            bh.push(j, w * hscale(j));
                             nnz += 1;
                         }
                         _ => {}
@@ -258,7 +329,7 @@ pub fn build_subgraph(
                             hh.push(i as u32, g.self_w[u]);
                             diag_emitted = true;
                         }
-                        hh.push(j, g.edge_w[ei]);
+                        hh.push(j, g.edge_w[ei] * hscale(j));
                         nnz += 1;
                     }
                     // halo -> batch arcs are A_bh^T; the step transposes, so
@@ -303,6 +374,7 @@ pub fn build_subgraph(
         a_hh,
         a_hb,
         dropped_halo: dropped,
+        halo_inv_p,
         halo_deg_local,
         halo_deg_global,
         nnz_fwd: nnz,
@@ -396,7 +468,8 @@ pub fn beta_vector(sb: &SubgraphBatch, alpha: f32, score: BetaScore) -> Vec<f32>
 }
 
 /// [`beta_vector`] into a caller-provided buffer of at least `bucket_h`
-/// entries; `out[halo.len()..]` must already be zero (padding).
+/// entries. The padding tail `out[halo.len()..bucket_h]` is zeroed here —
+/// callers may hand in a dirty (reused) buffer.
 pub fn beta_vector_into(sb: &SubgraphBatch, alpha: f32, score: BetaScore, out: &mut [f32]) {
     debug_assert!(out.len() >= sb.bucket_h);
     for i in 0..sb.halo.len() {
@@ -407,6 +480,7 @@ pub fn beta_vector_into(sb: &SubgraphBatch, alpha: f32, score: BetaScore, out: &
         };
         out[i] = (alpha * score.eval(x)).clamp(0.0, 1.0);
     }
+    out[sb.halo.len()..sb.bucket_h].fill(0.0);
 }
 
 /// Gather rows of a [n, d] row-major array into a zero-padded [rows, d] buffer.
@@ -442,11 +516,12 @@ pub fn gather_rows_into(src: &[f32], d: usize, idx: &[u32], out: &mut [f32]) {
 ///
 /// Applicability (checked by the trainer at construction):
 ///
-/// | batcher mode | buckets       | cached? |
-/// |--------------|---------------|---------|
-/// | `Fixed`      | unbounded     | yes — identical groups every epoch and no halo subsampling, so blocks are bit-identical across epochs |
-/// | `Fixed`      | capped        | no — a bucket cap subsamples the halo through the per-batch RNG stream |
-/// | `Stochastic` | any           | no — groups reshuffle every epoch |
+/// | batcher mode | buckets       | halo sampler | cached? |
+/// |--------------|---------------|--------------|---------|
+/// | `Fixed`      | unbounded     | passthrough  | yes — identical groups every epoch and no halo subsampling, so blocks are bit-identical across epochs |
+/// | `Fixed`      | unbounded     | subsampling  | no — the policy redraws the halo subset every build |
+/// | `Fixed`      | capped        | any          | no — a bucket cap subsamples the halo through the per-batch RNG stream |
+/// | `Stochastic` | any           | any          | no — groups reshuffle every epoch |
 ///
 /// Entries are keyed by step index within the epoch and validated against
 /// the batch node list on every hit, so a schedule change falls back to a
@@ -468,11 +543,21 @@ impl SubgraphCache {
     }
 
     /// The trainer-side applicability gate for the table above: caching is
-    /// sound only when the schedule is deterministic — `Fixed` groups and
-    /// unbounded (exact-fit) buckets — and the config has not disabled it.
-    /// Every other combination must fall back to per-step rebuilds.
-    pub fn applicable(cfg_flag: bool, mode: BatcherMode, buckets: &Buckets) -> bool {
-        cfg_flag && mode == BatcherMode::Fixed && buckets.is_unbounded()
+    /// sound only when the schedule is deterministic — `Fixed` groups,
+    /// unbounded (exact-fit) buckets, and a passthrough halo sampler (a
+    /// subsampling policy redraws the halo every build) — and the config
+    /// has not disabled it. Every other combination must fall back to
+    /// per-step rebuilds.
+    pub fn applicable(
+        cfg_flag: bool,
+        mode: BatcherMode,
+        buckets: &Buckets,
+        sampler: &HaloSampler,
+    ) -> bool {
+        cfg_flag
+            && mode == BatcherMode::Fixed
+            && buckets.is_unbounded()
+            && !sampler.is_subsampling()
     }
 
     pub fn enabled(&self) -> bool {
@@ -541,7 +626,7 @@ impl SubgraphCache {
                     .iter()
                     .map(|b| b.offsets.len() * 4 + b.nnz() * 8)
                     .sum();
-                csr + (sb.batch.len() + sb.halo.len() * 3) * 4
+                csr + (sb.batch.len() + sb.halo.len() * 3 + sb.halo_inv_p.len()) * 4
             })
             .sum()
     }
@@ -571,7 +656,7 @@ mod tests {
         let g = test_graph();
         let mut rng = Rng::new(0);
         let batch: Vec<u32> = (0..100u32).collect();
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &HaloSampler::none(), &mut rng).unwrap();
         let batch_set: std::collections::HashSet<u32> = batch.iter().copied().collect();
         // every halo node neighbors the batch and is not in it
         for &h in &sb.halo {
@@ -593,7 +678,7 @@ mod tests {
         let g = test_graph();
         let mut rng = Rng::new(1);
         let batch: Vec<u32> = (40..160u32).collect();
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &HaloSampler::none(), &mut rng).unwrap();
         let (bb, bh) = (sb.bucket_b, sb.bucket_h);
         let (a_bb, a_bh, a_hh) = sb.to_dense();
         for (i, &u) in sb.batch.iter().enumerate() {
@@ -623,7 +708,7 @@ mod tests {
         let g = test_graph();
         let mut rng = Rng::new(7);
         let batch: Vec<u32> = (40..160u32).collect();
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &HaloSampler::none(), &mut rng).unwrap();
         for blk in [&sb.a_bb, &sb.a_bh, &sb.a_hh] {
             assert_eq!(blk.offsets.len(), blk.n_rows + 1);
             assert_eq!(blk.offsets[blk.n_rows] as usize, blk.nnz());
@@ -646,7 +731,7 @@ mod tests {
         let g = test_graph();
         let mut rng = Rng::new(2);
         let batch: Vec<u32> = (0..50u32).collect();
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &HaloSampler::none(), &mut rng).unwrap();
         let (bb, bh, nb, nh) = (sb.bucket_b, sb.bucket_h, sb.batch.len(), sb.halo.len());
         let (a_bb, a_bh, _) = sb.to_dense();
         for i in 0..bb {
@@ -670,7 +755,7 @@ mod tests {
         let g = test_graph();
         let mut rng = Rng::new(3);
         let batch: Vec<u32> = (0..80u32).collect();
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::LocalNoHalo, &buckets(), &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::LocalNoHalo, &buckets(), &HaloSampler::none(), &mut rng).unwrap();
         assert!(sb.halo.is_empty());
         assert_eq!(sb.a_bh.nnz(), 0);
         assert_eq!(sb.a_hh.nnz(), 0);
@@ -693,7 +778,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let batch: Vec<u32> = (0..100u32).collect();
         let tiny = Buckets(vec![(128, 16)]);
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &tiny, &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &tiny, &HaloSampler::none(), &mut rng).unwrap();
         assert_eq!(sb.halo.len(), 16);
         assert!(sb.dropped_halo > 0);
     }
@@ -704,7 +789,7 @@ mod tests {
         let mut rng = Rng::new(6);
         let batch: Vec<u32> = (0..100u32).collect();
         let sb =
-            build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+            build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut rng)
                 .unwrap();
         assert_eq!(sb.bucket_b, sb.batch.len());
         assert_eq!(sb.bucket_h, sb.halo.len());
@@ -716,7 +801,7 @@ mod tests {
         let g = test_graph();
         let mut rng = Rng::new(5);
         let batch: Vec<u32> = (0..120u32).collect();
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &HaloSampler::none(), &mut rng).unwrap();
         for score in [
             BetaScore::XSquared,
             BetaScore::TwoXMinusXSquared,
@@ -739,10 +824,10 @@ mod tests {
         let g = test_graph();
         let mut rng = Rng::new(8);
         let batch: Vec<u32> = (20..140u32).collect();
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &mut rng).unwrap();
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets(), &HaloSampler::none(), &mut rng).unwrap();
         assert_eq!(sb.a_hb, sb.a_bh.transpose());
         // CLUSTER policy: degenerate but well-formed transpose
-        let sbc = build_subgraph(&g, &batch, AdjacencyPolicy::LocalNoHalo, &buckets(), &mut rng).unwrap();
+        let sbc = build_subgraph(&g, &batch, AdjacencyPolicy::LocalNoHalo, &buckets(), &HaloSampler::none(), &mut rng).unwrap();
         assert_eq!(sbc.a_hb.n_rows, 0);
         assert_eq!(sbc.a_hb.nnz(), 0);
     }
@@ -770,11 +855,11 @@ mod tests {
         let b0: Vec<u32> = (0..60u32).collect();
         let b1: Vec<u32> = (60..120u32).collect();
         let sb0 = std::sync::Arc::new(
-            build_subgraph(&g, &b0, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+            build_subgraph(&g, &b0, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut rng)
                 .unwrap(),
         );
         let sb1 = std::sync::Arc::new(
-            build_subgraph(&g, &b1, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+            build_subgraph(&g, &b1, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut rng)
                 .unwrap(),
         );
         let mut cache = SubgraphCache::new(true);
@@ -803,14 +888,112 @@ mod tests {
     #[test]
     fn cache_applicability_matrix() {
         let capped = Buckets(vec![(128, 64)]);
-        assert!(SubgraphCache::applicable(true, BatcherMode::Fixed, &Buckets::unbounded()));
+        let none = HaloSampler::none();
+        let sub = HaloSampler::new(HaloSamplerKind::Uniform, 0.5);
+        assert!(SubgraphCache::applicable(true, BatcherMode::Fixed, &Buckets::unbounded(), &none));
         // a bucket cap subsamples the halo through the per-batch RNG stream
-        assert!(!SubgraphCache::applicable(true, BatcherMode::Fixed, &capped));
+        assert!(!SubgraphCache::applicable(true, BatcherMode::Fixed, &capped, &none));
         // stochastic groups reshuffle every epoch
-        assert!(!SubgraphCache::applicable(true, BatcherMode::Stochastic, &Buckets::unbounded()));
-        assert!(!SubgraphCache::applicable(true, BatcherMode::Stochastic, &capped));
+        assert!(!SubgraphCache::applicable(
+            true,
+            BatcherMode::Stochastic,
+            &Buckets::unbounded(),
+            &none
+        ));
+        assert!(!SubgraphCache::applicable(true, BatcherMode::Stochastic, &capped, &none));
+        // a subsampling policy redraws the halo subset every build
+        assert!(!SubgraphCache::applicable(true, BatcherMode::Fixed, &Buckets::unbounded(), &sub));
+        // a policy at frac = 1 is a passthrough, so caching stays sound
+        let full = HaloSampler::new(HaloSamplerKind::Labor, 1.0);
+        assert!(SubgraphCache::applicable(true, BatcherMode::Fixed, &Buckets::unbounded(), &full));
         // config off wins regardless
-        assert!(!SubgraphCache::applicable(false, BatcherMode::Fixed, &Buckets::unbounded()));
+        assert!(!SubgraphCache::applicable(false, BatcherMode::Fixed, &Buckets::unbounded(), &none));
+    }
+
+    #[test]
+    fn beta_vector_into_zeroes_dirty_padding_tail() {
+        // Regression: reuse one workspace across batches with a shrinking
+        // halo — the stale entries past halo.len() must be zeroed by the
+        // callee, not trusted to a caller-side pre-zero.
+        let g = test_graph();
+        let mut rng = Rng::new(13);
+        let big: Vec<u32> = (0..120u32).collect();
+        let small: Vec<u32> = (0..20u32).collect();
+        let pad = Buckets(vec![(128, 512)]);
+        let sb_big =
+            build_subgraph(&g, &big, AdjacencyPolicy::GlobalWithHalo, &pad, &HaloSampler::none(), &mut rng).unwrap();
+        let sb_small =
+            build_subgraph(&g, &small, AdjacencyPolicy::GlobalWithHalo, &pad, &HaloSampler::none(), &mut rng).unwrap();
+        assert!(sb_small.halo.len() < sb_big.halo.len(), "need a shrinking halo");
+        assert_eq!(sb_big.bucket_h, sb_small.bucket_h, "same compiled shape");
+        let mut ws = vec![f32::NAN; sb_big.bucket_h];
+        beta_vector_into(&sb_big, 0.8, BetaScore::X, &mut ws);
+        beta_vector_into(&sb_small, 0.8, BetaScore::X, &mut ws);
+        for i in sb_small.halo.len()..sb_small.bucket_h {
+            assert_eq!(ws[i], 0.0, "stale tail entry at {i} survived reuse");
+        }
+        assert_eq!(ws, beta_vector(&sb_small, 0.8, BetaScore::X));
+    }
+
+    #[test]
+    fn subsampled_build_rescales_source_columns() {
+        let g = test_graph();
+        let batch: Vec<u32> = (0..100u32).collect();
+        let mut rng = Rng::new(21);
+        let full = build_subgraph(
+            &g,
+            &batch,
+            AdjacencyPolicy::GlobalWithHalo,
+            &Buckets::unbounded(),
+            &HaloSampler::none(),
+            &mut rng,
+        )
+        .unwrap();
+        for kind in [HaloSamplerKind::Uniform, HaloSamplerKind::Labor, HaloSamplerKind::Importance] {
+            let sampler = HaloSampler::new(kind, 0.5);
+            let mut r = Rng::new(22);
+            let sb = build_subgraph(
+                &g,
+                &batch,
+                AdjacencyPolicy::GlobalWithHalo,
+                &Buckets::unbounded(),
+                &sampler,
+                &mut r,
+            )
+            .unwrap();
+            assert!(sb.halo.len() < full.halo.len(), "{kind:?} kept the whole halo");
+            assert_eq!(sb.halo_inv_p.len(), sb.halo.len());
+            assert_eq!(sb.dropped_halo, full.halo.len() - sb.halo.len());
+            assert!(sb.halo_inv_p.iter().all(|&ip| ip >= 1.0 - 1e-6 && ip.is_finite()));
+            // a_hb stays the exact transpose of the rescaled a_bh
+            assert_eq!(sb.a_hb, sb.a_bh.transpose());
+            // kept halo is a subset of the full halo, and each kept column of
+            // A_bh equals the unsampled weight times that node's 1/p
+            let full_idx: std::collections::HashMap<u32, usize> =
+                full.halo.iter().enumerate().map(|(i, &u)| (u, i)).collect();
+            for (i, &u) in sb.batch.iter().enumerate() {
+                let (cols, vals) = sb.a_bh.row(i);
+                for (&j, &w) in cols.iter().zip(vals) {
+                    let hj = sb.halo[j as usize];
+                    let fj = full_idx[&hj];
+                    let (fcols, fvals) = full.a_bh.row(i);
+                    let k = fcols.iter().position(|&c| c as usize == fj).unwrap();
+                    let base = fvals[k];
+                    let want = base * sb.halo_inv_p[j as usize];
+                    assert!(
+                        (w - want).abs() <= 1e-6 * want.abs().max(1.0),
+                        "{kind:?} batch {u} halo {hj}: got {w}, want {want}"
+                    );
+                }
+            }
+            // self-loops on A_hh's diagonal are never rescaled
+            for (i, &u) in sb.halo.iter().enumerate() {
+                let (cols, vals) = sb.a_hh.row(i);
+                if let Some(k) = cols.iter().position(|&c| c as usize == i) {
+                    assert_eq!(vals[k], g.self_w[u as usize], "{kind:?} scaled a self-loop");
+                }
+            }
+        }
     }
 
     #[test]
@@ -822,9 +1005,9 @@ mod tests {
         let batch: Vec<u32> = (10..170u32).collect();
         let mut r1 = Rng::new(1);
         let mut r2 = Rng::new(999); // different RNG stream: must not matter
-        let a = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r1)
+        let a = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut r1)
             .unwrap();
-        let b = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r2)
+        let b = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut r2)
             .unwrap();
         assert_eq!(a.batch, b.batch);
         assert_eq!(a.halo, b.halo);

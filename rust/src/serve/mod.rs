@@ -48,7 +48,7 @@ use crate::coordinator::params::Params;
 use crate::graph::{load, Graph};
 use crate::history::{HistDtype, History};
 use crate::runtime::ArchInfo;
-use crate::sampler::{build_subgraph, gather_rows, AdjacencyPolicy, Buckets};
+use crate::sampler::{build_subgraph, gather_rows, AdjacencyPolicy, Buckets, HaloSampler};
 use crate::util::rng::Rng;
 
 pub use batcher::{BatchPolicy, MicroBatcher, ServeRequest};
@@ -93,6 +93,13 @@ pub struct ServeOptions {
     /// [`History`] seam training uses, so bf16/f16 serving halves the
     /// resident bytes per node at a bounded per-element decode error.
     pub history_dtype: HistDtype,
+    /// Halo subsampling policy for the cached path's tile assembly
+    /// (`halo_sampler`/`halo_keep` knobs): a subsampling policy shrinks
+    /// each tile's halo with Horvitz–Thompson rescaled edges, trading a
+    /// little logit noise for smaller history gathers per tile. The
+    /// default passthrough serves with the full 1-hop halo, bit-identical
+    /// to the pre-sampler behaviour.
+    pub halo_sampler: HaloSampler,
 }
 
 impl Default for ServeOptions {
@@ -101,6 +108,7 @@ impl Default for ServeOptions {
             mode: ServeMode::Cached,
             tile_nodes: 256,
             history_dtype: HistDtype::F32,
+            halo_sampler: HaloSampler::none(),
         }
     }
 }
@@ -297,6 +305,7 @@ impl ServeEngine {
             mode: cfg.serve_mode,
             tile_nodes: cfg.serve_max_batch,
             history_dtype: cfg.history_dtype,
+            halo_sampler: cfg.halo_sampler(),
         };
         let comp = compensation::for_serve(cfg)?;
         Self::with_exec(exec, graph, model, params, opts, comp)
@@ -465,13 +474,18 @@ impl ServeEngine {
     /// entry.
     fn cached_tile_logits(&self, tile: &[u32]) -> Result<Vec<f32>> {
         let l_total = self.model.arch.l;
-        // unbounded buckets never consume randomness, so the stream is inert
-        let mut rng = Rng::new(0);
+        // With the default passthrough sampler and unbounded buckets the
+        // build never consumes randomness, so the fixed-seed stream is
+        // inert and a tile's logits are deterministic. A subsampling
+        // policy draws from this per-tile stream: seeding by the tile's
+        // first node keeps repeated requests for the same tile identical.
+        let mut rng = Rng::new(tile.first().copied().unwrap_or(0) as u64 ^ 0x5EED);
         let sb = build_subgraph(
             self.graph.as_ref(),
             tile,
             AdjacencyPolicy::GlobalWithHalo,
             &Buckets::unbounded(),
+            &self.opts.halo_sampler,
             &mut rng,
         )?;
         let hist_h: Vec<Vec<f32>> = (1..l_total)

@@ -16,7 +16,7 @@ use lmc::compensation::CompKind;
 use lmc::config::RunConfig;
 use lmc::coordinator::{grad_check, Method, Trainer};
 use lmc::graph::DatasetId;
-use lmc::sampler::{beta_vector, build_subgraph};
+use lmc::sampler::{beta_vector, build_subgraph, HaloSampler};
 
 fn exec() -> Arc<dyn Executor> {
     Arc::new(NativeExecutor::new())
@@ -67,6 +67,7 @@ fn lmc_through_trait_is_bit_identical_to_frozen_reference() {
             &batch,
             r.cfg.method.adjacency_policy(),
             &r.buckets,
+            &HaloSampler::none(),
             &mut r.rng,
         )
         .unwrap();

@@ -1,0 +1,252 @@
+//! Integration: the halo-sampler zoo and the per-step gradient scale.
+//!
+//! Three contracts from the sampler-zoo PR:
+//!   1. The no-subsampling path is bit-identical to pre-PR behaviour —
+//!      `halo_sampler = none` (any `halo_keep`) and any policy at keep
+//!      fraction 1.0 are inert passthroughs.
+//!   2. Every subsampling policy trains to finite losses and metrics
+//!      while actually dropping halo nodes (the rescale keeps the
+//!      aggregation unbiased; `proptest_invariants` pins the expectation).
+//!   3. The Eq. 14-15 gradient scale is per-step: the ragged last
+//!      stochastic chunk gets b/|chunk|, so the epoch-summed mini-batch
+//!      gradient matches the full-batch gradient on a zero-cut graph —
+//!      where the constant b/c scale is measurably biased.
+
+use std::sync::Arc;
+
+use lmc::backend::{Executor, NativeExecutor};
+use lmc::config::RunConfig;
+use lmc::coordinator::params::grad_rel_err;
+use lmc::coordinator::{grad_check, Method, Trainer};
+use lmc::graph::{disjoint_union, sbm, DatasetId, SbmSpec};
+use lmc::runtime::Tensor;
+use lmc::sampler::HaloSamplerKind;
+
+fn exec() -> Arc<dyn Executor> {
+    Arc::new(NativeExecutor::new())
+}
+
+fn cfg(method: Method, epochs: usize) -> RunConfig {
+    RunConfig {
+        dataset: DatasetId::CoraSim,
+        arch: "gcn".into(),
+        method,
+        epochs,
+        eval_every: epochs,
+        seed: 3,
+        ..Default::default()
+    }
+}
+
+fn param_bits(t: &Trainer) -> Vec<u32> {
+    let mut bits = Vec::new();
+    for p in &t.params.tensors {
+        bits.extend(p.data.iter().map(|x| x.to_bits()));
+    }
+    bits
+}
+
+/// Contract 1: `none` ignores `halo_keep`, and any policy at keep 1.0 is
+/// a passthrough — all three trainers must end bit-identical to the
+/// default configuration after full multi-epoch runs (same RNG stream:
+/// passthrough builds consume nothing from the per-batch forks).
+#[test]
+fn no_subsampling_paths_are_bit_identical() {
+    let mut base = Trainer::new(exec(), cfg(Method::Lmc, 3)).unwrap();
+    base.run().unwrap();
+    let want = param_bits(&base);
+
+    // `none` with a different keep fraction: the knob must be inert.
+    let mut inert = cfg(Method::Lmc, 3);
+    inert.halo_keep = 0.25;
+    let mut t = Trainer::new(exec(), inert).unwrap();
+    t.run().unwrap();
+    assert_eq!(param_bits(&t), want, "halo_keep must be inert under sampler none");
+
+    // Every policy at frac 1.0 keeps the whole halo and skips the RNG.
+    for kind in [
+        HaloSamplerKind::Uniform,
+        HaloSamplerKind::Labor,
+        HaloSamplerKind::Importance,
+    ] {
+        let mut passthrough = cfg(Method::Lmc, 3);
+        passthrough.halo_sampler = kind;
+        passthrough.halo_keep = 1.0;
+        let mut t = Trainer::new(exec(), passthrough).unwrap();
+        t.run().unwrap();
+        assert_eq!(
+            param_bits(&t),
+            want,
+            "{} at keep 1.0 must be a bit-identical passthrough",
+            kind.name()
+        );
+    }
+}
+
+/// Contract 2: each subsampling policy drops halo nodes yet still trains —
+/// finite losses, finite accuracies, and a nonzero drop count (CoraSim's
+/// partition cut guarantees halos exist to subsample).
+#[test]
+fn each_sampler_trains_finite_while_dropping_halo() {
+    for kind in [
+        HaloSamplerKind::Uniform,
+        HaloSamplerKind::Labor,
+        HaloSamplerKind::Importance,
+    ] {
+        let mut c = cfg(Method::Lmc, 2);
+        c.halo_sampler = kind;
+        c.halo_keep = 0.5;
+        let mut t = Trainer::new(exec(), c).unwrap();
+        let mut dropped = 0usize;
+        for _ in 0..2 {
+            let stats = t.train_epoch().unwrap();
+            assert!(stats.loss_mean.is_finite(), "{}: non-finite epoch loss", kind.name());
+            dropped += stats.dropped_halo;
+        }
+        assert!(dropped > 0, "{}: keep 0.5 never dropped a halo node", kind.name());
+        let ev = t.evaluate().unwrap();
+        assert!(ev.train_loss.is_finite(), "{}: non-finite eval loss", kind.name());
+        for (name, acc) in [("train", ev.train_acc), ("val", ev.val_acc), ("test", ev.test_acc)] {
+            assert!(
+                (0.0..=1.0).contains(&acc),
+                "{}: {name} accuracy {acc} out of range",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// Contract 3a (linearity): the backend applies `grad_scale` as a pure
+/// multiplier, so on the ragged last stochastic chunk the per-step
+/// gradients must equal the constant-scale gradients times
+/// `grad_scale_at / grad_scale`. CoraSim has 8 parts; 3 clusters per
+/// batch makes chunks of 3, 3, 2 — the last step's factor is 8/2, not
+/// the constant 8/3. Unbounded native buckets keep both builds
+/// deterministic (no RNG consumed), so the two calls see the same
+/// subgraph.
+#[test]
+fn ragged_last_chunk_uses_per_step_scale() {
+    let mut c = cfg(Method::Lmc, 1);
+    c.clusters_per_batch = 3;
+    let mut t = Trainer::new(exec(), c).unwrap();
+    assert_eq!(t.clusters.len(), 8, "cora-sim should default to 8 parts");
+
+    let batches = t.batcher.clone().epoch_batches();
+    assert_eq!(batches.len(), 3);
+    let last = batches.len() - 1;
+    let gs_const = t.batcher.grad_scale();
+    let gs_at = t.batcher.grad_scale_at(last);
+    assert!((gs_const - 8.0 / 3.0).abs() < 1e-6);
+    assert!((gs_at - 4.0).abs() < 1e-6, "ragged chunk of 2 clusters wants 8/2");
+
+    let (_, g_const) = t.compute_minibatch_grads(&batches[last], None, false).unwrap();
+    let (_, g_at) = t.compute_minibatch_grads_at(last, &batches[last], None, false).unwrap();
+    let ratio = gs_at / gs_const;
+    let scaled: Vec<Tensor> = g_const
+        .iter()
+        .map(|g| Tensor::from_vec(&g.shape, g.data.iter().map(|x| x * ratio).collect()))
+        .collect();
+    let err = grad_rel_err(&g_at, &scaled);
+    assert!(err < 1e-5, "per-step grads deviate from scaled constant grads: {err}");
+
+    // Non-ragged steps keep the constant factor.
+    assert!((t.batcher.grad_scale_at(0) - gs_const).abs() < 1e-6);
+    assert!((t.batcher.grad_scale_at(1) - gs_const).abs() < 1e-6);
+}
+
+/// Contract 3b (end-to-end): on a graph whose partition cut is zero the
+/// CLUSTER-GCN estimator is exact per batch, so the epoch-summed
+/// mini-batch gradient — each batch divided by its own per-step weight —
+/// must reproduce the full-batch gradient. The same sum weighted by the
+/// constant b/c must not: it triple-counts the ragged chunk. Seven
+/// disjoint SBM components with 3 clusters per batch give chunks of
+/// 3, 3, 1.
+///
+/// The partitioner is not *guaranteed* to recover components, so the
+/// bias assertions run only when the realized cut is zero (asserted via
+/// an explicit edge scan); the precondition has held for the pinned seed.
+#[test]
+fn epoch_summed_gradient_matches_full_batch_on_zero_cut_graph() {
+    // Dims must match CoraSim's planetoid profile (d_x = 48, 7 classes).
+    let comps: Vec<_> = (0..7)
+        .map(|i| {
+            sbm(&SbmSpec {
+                n: 60,
+                n_class: 7,
+                d_x: 48,
+                avg_deg_in: 2.5,
+                avg_deg_out: 1.5,
+                signal: 0.2,
+                train_frac: 1.0,
+                val_frac: 0.0,
+                seed: 1000 + i,
+                mu_seed: Some(1000),
+            })
+        })
+        .collect();
+    let raw = disjoint_union(comps, &[0; 7]);
+
+    let mut c = cfg(Method::Cluster, 1);
+    c.parts = 7;
+    c.clusters_per_batch = 3;
+    let mut t = Trainer::from_parent_graph(exec(), c, raw).unwrap();
+    assert_eq!(t.clusters.len(), 7);
+
+    // Verify the zero-cut precondition on the trainer's (relabeled) graph.
+    let n = t.graph.n();
+    let mut cluster_of = vec![u32::MAX; n];
+    for (ci, cl) in t.clusters.iter().enumerate() {
+        for &u in cl {
+            cluster_of[u as usize] = ci as u32;
+        }
+    }
+    let mut cut = 0usize;
+    for u in 0..n {
+        for &v in t.graph.csr.neighbors(u) {
+            if cluster_of[u] != cluster_of[v as usize] {
+                cut += 1;
+            }
+        }
+    }
+    if cut != 0 {
+        eprintln!("partitioner split a component (cut {cut}); skipping bias pin");
+        return;
+    }
+
+    // Per-step weights: the epoch sum reproduces the full-batch gradient.
+    let bias = grad_check::measure_bias(&mut t).unwrap();
+    assert!(bias < 2e-2, "per-step-weighted epoch sum is biased: {bias}");
+
+    // Constant b/c weights (the pre-fix behaviour) overweight the ragged
+    // single-cluster chunk by 3x and land far from the oracle.
+    let oracle = t.exec.full_grad(t.graph.as_ref(), &t.params, &t.model).unwrap();
+    let gs_const = t.batcher.grad_scale() as f64;
+    let batches = t.batcher.clone().epoch_batches();
+    assert_eq!(batches.len(), 3, "7 clusters / 3 per batch");
+    let mut sum: Vec<Vec<f64>> = Vec::new();
+    for (i, batch) in batches.iter().enumerate() {
+        let (_, grads) = t.compute_minibatch_grads_at(i, batch, None, false).unwrap();
+        if sum.is_empty() {
+            sum = grads.iter().map(|g| vec![0f64; g.data.len()]).collect();
+        }
+        for (acc, g) in sum.iter_mut().zip(&grads) {
+            for (a, x) in acc.iter_mut().zip(&g.data) {
+                *a += *x as f64 / gs_const;
+            }
+        }
+    }
+    let biased: Vec<Tensor> = sum
+        .iter()
+        .zip(&oracle.grads)
+        .map(|(acc, o)| Tensor::from_vec(&o.shape, acc.iter().map(|x| *x as f32).collect()))
+        .collect();
+    let const_bias = grad_rel_err(&biased, &oracle.grads);
+    assert!(
+        const_bias > 5e-2,
+        "constant-scale sum should be visibly biased on the ragged schedule, got {const_bias}"
+    );
+    assert!(
+        bias < const_bias / 2.0,
+        "per-step weighting ({bias}) should beat constant weighting ({const_bias})"
+    );
+}

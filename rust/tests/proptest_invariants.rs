@@ -16,7 +16,7 @@ use lmc::partition::{edge_cut, partition, quality::quality, shard_views, Partiti
 use lmc::runtime::ArchInfo;
 use lmc::sampler::{
     beta_vector, build_subgraph, AdjacencyPolicy, Batcher, BatcherMode, BetaScore, Buckets,
-    CsrBlock,
+    CsrBlock, HaloSampler, HaloSamplerKind,
 };
 use lmc::util::rng::Rng;
 
@@ -208,7 +208,7 @@ fn prop_sparse_blocks_roundtrip_to_old_dense_layout() {
         batch.sort_unstable();
         // padded bucket exercises the to_dense zero-padding path
         let buckets = Buckets(vec![(g.n(), g.n())]);
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets, &mut rng)
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &buckets, &HaloSampler::none(), &mut rng)
             .unwrap();
         assert_eq!(sb.dropped_halo, 0);
         let (abb, abh, ahh) = sb.to_dense();
@@ -281,6 +281,7 @@ fn prop_native_full_batch_step_matches_exact_oracle() {
                 &batch,
                 AdjacencyPolicy::GlobalWithHalo,
                 &Buckets::unbounded(),
+                &HaloSampler::none(),
                 &mut rng,
             )
             .unwrap();
@@ -333,7 +334,7 @@ fn prop_batcher_every_epoch_is_a_partition_of_nodes() {
         for mode in [BatcherMode::Stochastic, BatcherMode::Fixed] {
             let mut b = Batcher::new(clusters.clone(), c_per, mode, seed);
             for _ in 0..3 {
-                let mut seen: Vec<u32> = b.epoch_batches().into_iter().flatten().collect();
+                let mut seen: Vec<u32> = b.epoch_batches().iter().flat_map(|grp| grp.iter().copied()).collect();
                 seen.sort_unstable();
                 seen.dedup();
                 let expect: usize = clusters.iter().map(|c| c.len()).sum();
@@ -682,7 +683,7 @@ fn prop_optimized_step_matches_reference_step() {
         let mut prng = Rng::new(case ^ 0xF457);
         let params = Params::init(&model.arch, &mut prng);
         let batch: Vec<u32> = (0..(g.n() / 2) as u32).collect();
-        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut rng)
+        let sb = build_subgraph(&g, &batch, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut rng)
             .unwrap();
         assert!(!sb.halo.is_empty(), "test needs a halo");
         let nh = sb.halo.len();
@@ -782,10 +783,10 @@ fn prop_fixed_groups_rebuild_identically() {
             let mut r1 = Rng::new(seed * 3 + 1);
             let mut r2 = Rng::new(seed * 5 + 2); // different stream on purpose
             let sb1 =
-                build_subgraph(&g, b, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r1)
+                build_subgraph(&g, b, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut r1)
                     .unwrap();
             let sb2 =
-                build_subgraph(&g, b, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &mut r2)
+                build_subgraph(&g, b, AdjacencyPolicy::GlobalWithHalo, &Buckets::unbounded(), &HaloSampler::none(), &mut r2)
                     .unwrap();
             assert_eq!(sb1.batch, sb2.batch, "group {i}");
             assert_eq!(sb1.halo, sb2.halo, "group {i}");
@@ -1082,5 +1083,159 @@ fn prop_datasets_deterministic_across_loads() {
         assert_eq!(a.split, b.split);
         let c = load(id, 4);
         assert_ne!(a.csr, c.csr, "{} should vary with seed", id.name());
+    }
+}
+
+/// Horvitz–Thompson unbiasedness of the halo sampler zoo: for every
+/// subsampling policy, the seed-averaged subsampled batch-row aggregation
+/// `A_bh^(s) @ x` converges to the full-halo aggregation — while the legacy
+/// unrescaled bucket cap at the same keep fraction provably does not (its
+/// expectation shrinks by the keep fraction).
+#[test]
+fn prop_halo_samplers_unbiased_aggregation() {
+    let n_avg = 400;
+    for case in 0..2u64 {
+        let mut rng = Rng::new(case * 131 + 9);
+        let n = 120 + rng.below(120);
+        let csr = random_graph(n, 0.04, &mut rng);
+        let g = attr_graph(csr, case + 17);
+        let half = g.n() / 2;
+        let batch: Vec<u32> = (0..half as u32).collect();
+        // deterministic positive per-node signal (no cancellation, so the
+        // relative L1 error below is well-conditioned)
+        let x = |v: u32| 0.5 + (v % 7) as f32 * 0.1;
+
+        let full = build_subgraph(
+            &g,
+            &batch,
+            AdjacencyPolicy::GlobalWithHalo,
+            &Buckets::unbounded(),
+            &HaloSampler::none(),
+            &mut Rng::new(0),
+        )
+        .unwrap();
+        assert!(full.halo.len() >= 10, "case {case}: need a real halo");
+        let full_agg: Vec<f64> = (0..batch.len())
+            .map(|i| {
+                let (cols, vals) = full.a_bh.row(i);
+                cols.iter()
+                    .zip(vals)
+                    .map(|(&j, &w)| w as f64 * x(full.halo[j as usize]) as f64)
+                    .sum()
+            })
+            .collect();
+        let full_l1: f64 = full_agg.iter().map(|v| v.abs()).sum();
+        assert!(full_l1 > 0.0);
+
+        let rel_err_of = |sampler: &HaloSampler, buckets: &Buckets| -> f64 {
+            let mut acc = vec![0f64; batch.len()];
+            for s in 0..n_avg {
+                let mut r = Rng::new(case * 100_000 + s as u64 + 1);
+                let sb = build_subgraph(
+                    &g,
+                    &batch,
+                    AdjacencyPolicy::GlobalWithHalo,
+                    buckets,
+                    sampler,
+                    &mut r,
+                )
+                .unwrap();
+                // kept halo must always be a subset of the full halo, and
+                // core rows are never touched by halo subsampling
+                assert_eq!(sb.batch, batch);
+                for &h in &sb.halo {
+                    assert!(full.halo.binary_search(&h).is_ok());
+                }
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let (cols, vals) = sb.a_bh.row(i);
+                    *a += cols
+                        .iter()
+                        .zip(vals)
+                        .map(|(&j, &w)| w as f64 * x(sb.halo[j as usize]) as f64)
+                        .sum::<f64>();
+                }
+            }
+            acc.iter()
+                .zip(&full_agg)
+                .map(|(a, f)| (a / n_avg as f64 - f).abs())
+                .sum::<f64>()
+                / full_l1
+        };
+
+        for kind in
+            [HaloSamplerKind::Uniform, HaloSamplerKind::Labor, HaloSamplerKind::Importance]
+        {
+            let err = rel_err_of(&HaloSampler::new(kind, 0.5), &Buckets::unbounded());
+            assert!(err < 0.1, "case {case}: {} sampler biased: rel L1 err {err}", kind.name());
+        }
+
+        // The legacy path at the same keep fraction: an unrescaled bucket
+        // cap whose expected aggregation shrinks by ~the keep fraction.
+        let cap = full.halo.len() / 2;
+        let legacy_err =
+            rel_err_of(&HaloSampler::none(), &Buckets(vec![(g.n(), cap)]));
+        assert!(
+            legacy_err > 0.25,
+            "case {case}: legacy cap unexpectedly unbiased (rel L1 err {legacy_err})"
+        );
+    }
+}
+
+/// Every halo sampler preserves the epoch schedule: the batcher's groups
+/// cover each core node exactly once per epoch, and a subsampling policy
+/// only ever shrinks halos — core membership of every built subgraph is
+/// exactly its group.
+#[test]
+fn prop_sampled_epoch_serves_each_core_node_once() {
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed + 71);
+        let n = 100 + rng.below(150);
+        let csr = random_graph(n, 0.04, &mut rng);
+        let g = attr_graph(csr, seed);
+        let k = 5;
+        let mut clusters = vec![Vec::new(); k];
+        for u in 0..g.n() as u32 {
+            clusters[rng.below(k)].push(u);
+        }
+        clusters.retain(|c| !c.is_empty());
+        for kind in [
+            HaloSamplerKind::None,
+            HaloSamplerKind::Uniform,
+            HaloSamplerKind::Labor,
+            HaloSamplerKind::Importance,
+        ] {
+            let sampler = HaloSampler::new(kind, 0.5);
+            for mode in [BatcherMode::Stochastic, BatcherMode::Fixed] {
+                let mut b = Batcher::new(clusters.clone(), 2, mode, seed);
+                let mut served: Vec<u32> = Vec::new();
+                for (i, grp) in b.epoch_batches().iter().enumerate() {
+                    let mut r = rng.fork(i as u64);
+                    let sb = build_subgraph(
+                        &g,
+                        grp,
+                        AdjacencyPolicy::GlobalWithHalo,
+                        &Buckets::unbounded(),
+                        &sampler,
+                        &mut r,
+                    )
+                    .unwrap();
+                    assert_eq!(sb.batch.as_slice(), grp.as_ref(), "{} core drift", kind.name());
+                    assert!(
+                        sb.halo.iter().all(|h| !grp.contains(h)),
+                        "{}: core node leaked into halo",
+                        kind.name()
+                    );
+                    served.extend_from_slice(&sb.batch);
+                }
+                served.sort_unstable();
+                let expect: Vec<u32> = {
+                    let mut v: Vec<u32> =
+                        clusters.iter().flat_map(|c| c.iter().copied()).collect();
+                    v.sort_unstable();
+                    v
+                };
+                assert_eq!(served, expect, "{} {mode:?}: epoch coverage broken", kind.name());
+            }
+        }
     }
 }
